@@ -1,0 +1,73 @@
+//! Ablation (paper §5): cluster count k and split strategy.
+//!
+//! Sweeps k ∈ {2, 3, 4} and dynamic-k, plus the row-wise strategy, over
+//! the trained checkpoint at INT4, reporting the accuracy/model-size
+//! trade-off the paper's §5 discusses (k=2 shrinks the model at some
+//! accuracy cost; dynamic-k adapts per layer).
+//!
+//! Run: cargo run --release --example ablation_clusters
+
+use anyhow::Result;
+use splitquant::coordinator::{Arm, Coordinator, PipelineSpec};
+use splitquant::model::quantized::Method;
+use splitquant::quant::Bits;
+use splitquant::split::{DynamicK, SplitConfig, Strategy};
+use splitquant::util::fmt::{human_bytes, Table};
+use splitquant::util::timer::format_duration;
+
+fn main() -> Result<()> {
+    let spec = PipelineSpec::new(
+        "artifacts/picollama_eval.sqtz",
+        "artifacts/eval_problems.json",
+    );
+    let coord = Coordinator::new();
+    let ck = coord.load_model(&spec)?;
+    let problems = coord.load_problems(&spec)?;
+    let fp = coord.evaluate_fp(&ck, &problems, false)?;
+    println!("FP32 reference: {}", fp.accuracy_pct());
+
+    let mut configs: Vec<(String, Method)> = vec![
+        ("baseline (no split)".into(), Method::Baseline),
+    ];
+    for k in [2usize, 3, 4] {
+        configs.push((
+            format!("masked-sum k={k}"),
+            Method::SplitQuant(SplitConfig::with_k(k)),
+        ));
+    }
+    configs.push((
+        "dynamic-k (elbow, k≤4)".into(),
+        Method::SplitQuant(SplitConfig {
+            dynamic_k: Some(DynamicK::default()),
+            ..Default::default()
+        }),
+    ));
+    configs.push((
+        "row-wise k=3".into(),
+        Method::SplitQuant(SplitConfig {
+            strategy: Strategy::RowWise,
+            ..Default::default()
+        }),
+    ));
+    configs.push(("ocs ε=0.05".into(), Method::Ocs { expand_ratio: 0.05 }));
+
+    let mut table = Table::new(&["config", "accuracy", "d vs FP", "packed", "quantize"]);
+    for (label, method) in configs {
+        let arm = Arm {
+            bits: Bits::Int4,
+            method,
+        };
+        let res = coord.run_arm(&ck, &arm, &problems, &spec)?;
+        table.row(&[
+            label,
+            res.report.accuracy_pct(),
+            format!("{:+.2}%p", (res.report.accuracy - fp.accuracy) * 100.0),
+            human_bytes(res.packed_bytes),
+            format_duration(res.quantize_time),
+        ]);
+    }
+    println!("\nINT4 ablation over split configurations:\n{}", table.render());
+    println!("expected shape: k=3 ≈ k=4 > k=2 > row-wise/ocs > baseline;");
+    println!("size: k planes ≈ k/8 of FP32 for the linear layers (§5).");
+    Ok(())
+}

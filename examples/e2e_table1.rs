@@ -1,0 +1,101 @@
+//! END-TO-END driver (DESIGN.md E1): the full system on a real workload.
+//!
+//! Loads the *trained* picollama checkpoint (produced by `make artifacts`
+//! → python training at build time), applies the documented outlier
+//! amplification to recreate the LLM weight regime, then runs the
+//! complete Table-1 grid — Original + INT{8,4,2} × {baseline,
+//! SplitQuantV2} — through BOTH evaluation paths:
+//!
+//!   * the CPU reference forward, and
+//!   * the PJRT runtime executing the AOT-lowered HLO (Pallas kernels
+//!     inside), proving all three layers compose.
+//!
+//! Prints the Table-1 analogue and the paper-vs-measured deltas recorded
+//! in EXPERIMENTS.md.
+//!
+//! Run: cargo run --release --example e2e_table1
+//!      (requires `make artifacts` to have produced artifacts/)
+
+use anyhow::Result;
+use splitquant::coordinator::{Coordinator, PipelineSpec};
+use splitquant::split::SplitConfig;
+use splitquant::util::fmt::{human_bytes, Table};
+use splitquant::util::timer::format_duration;
+
+fn main() -> Result<()> {
+    let mut spec = PipelineSpec::new(
+        "artifacts/picollama_eval.sqtz",
+        "artifacts/eval_problems.json",
+    );
+    spec.amplify = Some((0.003, 4.0));
+
+    // CPU-reference coordinator + PJRT coordinator over the same model.
+    let coord = Coordinator::with_engine("artifacts", None)?;
+    let ck = coord.load_model(&spec)?;
+    let problems = coord.load_problems(&spec)?;
+    println!(
+        "model: {} params, {} problems, PJRT platform: {}",
+        splitquant::util::fmt::human_count(splitquant::model::n_params(&ck.config) as u64),
+        problems.len(),
+        coord.engine().map(|e| e.platform()).unwrap_or_default()
+    );
+
+    let fp_cpu = coord.evaluate_fp(&ck, &problems, false)?;
+    let fp_pjrt = coord.evaluate_fp(&ck, &problems, true)?;
+    println!(
+        "\nFP32: CPU {} | PJRT {}  (paths must agree)",
+        fp_cpu.accuracy_pct(),
+        fp_pjrt.accuracy_pct()
+    );
+    assert!(
+        (fp_cpu.accuracy - fp_pjrt.accuracy).abs() < 0.02,
+        "CPU and PJRT scoring disagree"
+    );
+
+    let mut table = Table::new(&[
+        "arm",
+        "acc (CPU)",
+        "acc (PJRT)",
+        "d vs FP",
+        "quantize",
+        "packed",
+    ]);
+    table.row(&[
+        "Original FP32".into(),
+        fp_cpu.accuracy_pct(),
+        fp_pjrt.accuracy_pct(),
+        "-".into(),
+        "-".into(),
+        human_bytes(ck.fp32_bytes()),
+    ]);
+
+    for arm in Coordinator::table1_arms(&SplitConfig::default()) {
+        let (qm, qtime) = coord.quantize_arm(&ck, &arm)?;
+        let cpu = coord.evaluate_qm(&qm, &problems, false)?;
+        let pjrt = coord.evaluate_qm(&qm, &problems, true)?;
+        assert!(
+            (cpu.accuracy - pjrt.accuracy).abs() < 0.02,
+            "{}: CPU {} vs PJRT {}",
+            arm.label(),
+            cpu.accuracy_pct(),
+            pjrt.accuracy_pct()
+        );
+        table.row(&[
+            arm.label(),
+            cpu.accuracy_pct(),
+            pjrt.accuracy_pct(),
+            format!("{:+.2}%p", (cpu.accuracy - fp_cpu.accuracy) * 100.0),
+            format_duration(qtime),
+            human_bytes(qm.packed_bytes()),
+        ]);
+    }
+    println!("\n{}", table.render());
+
+    println!("paper shape check:");
+    println!("  INT8 ≈ FP for both arms          (paper: 57.85% vs 57.94%)");
+    println!("  INT4 baseline degrades           (paper: 45.92%)");
+    println!("  INT4+SplitQuantV2 recovers to FP (paper: 57.68%, +11.76%p)");
+    println!("  INT2 both arms collapse          (paper: 0%)");
+    println!("\nstage profile:\n{}", coord.profiler.report());
+    Ok(())
+}

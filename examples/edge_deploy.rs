@@ -1,0 +1,111 @@
+//! Edge-deployment scenario: pack → export → load-back → serve.
+//!
+//! The paper's target user: an NPU/edge device that receives a packed
+//! SplitQuantV2 model and serves requests without any Python or GPU.
+//! This driver exercises the full deployment loop:
+//!
+//!   1. quantize the trained checkpoint with SplitQuantV2 (INT4, k=3),
+//!   2. export the packed container (what would be flashed to a device),
+//!   3. load it back (simulating the device side),
+//!   4. start the batched scoring server over the PJRT runtime,
+//!   5. fire MCQ requests and report accuracy, latency and throughput.
+//!
+//! Run: cargo run --release --example edge_deploy
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::Result;
+use splitquant::coordinator::server::{Server, ServerConfig};
+use splitquant::io::qmodel::{load_qmodel, save_qmodel};
+use splitquant::io::checkpoint::load_checkpoint;
+use splitquant::model::quantized::{quantize_model, Method};
+use splitquant::quant::Bits;
+use splitquant::runtime::scoring;
+use splitquant::split::SplitConfig;
+use splitquant::util::fmt::human_bytes;
+use splitquant::util::stats::Summary;
+use splitquant::util::timer::format_duration;
+
+fn main() -> Result<()> {
+    // 1. Quantize on the "build host".
+    let mut ck = load_checkpoint("artifacts/picollama_eval.sqtz")?;
+    ck.amplify_outliers(0.003, 4.0, 7);
+    let (problems, _) = splitquant::data::load_problems("artifacts/eval_problems.json")?;
+    let qm = quantize_model(&ck, Bits::Int4, &Method::SplitQuant(SplitConfig::default()))?;
+
+    // 2. Export the deployable container.
+    let packed_path = std::env::temp_dir().join("picollama_int4_sqv2.sqtz");
+    save_qmodel(&packed_path, &qm)?;
+    let disk = std::fs::metadata(&packed_path)?.len();
+    println!(
+        "exported {} ({} on disk, {} logical, FP32 was {})",
+        packed_path.display(),
+        human_bytes(disk),
+        human_bytes(qm.packed_bytes()),
+        human_bytes(ck.fp32_bytes())
+    );
+
+    // 3. "Device side": load the container back.
+    let device_qm = load_qmodel(&packed_path)?;
+    println!(
+        "device loaded: {} {} with {} linear layers",
+        device_qm.bits.name(),
+        device_qm.method_name,
+        device_qm.linears.len()
+    );
+
+    // 4. Start the batched scoring server (PJRT engine inside).
+    let weights = scoring::quant_args(&device_qm, 3)?;
+    let server = Server::start(
+        PathBuf::from("artifacts"),
+        weights,
+        ServerConfig::default(),
+    )?;
+
+    // 5. Fire requests: a burst (tests batching) then a trickle (tests
+    //    latency under low load).
+    let n_burst = 256.min(problems.len());
+    let t0 = Instant::now();
+    let pending: Vec<_> = problems[..n_burst]
+        .iter()
+        .map(|p| server.submit(p.clone()))
+        .collect();
+    let mut correct = 0;
+    let mut lat_ms = Vec::new();
+    let mut batches = Vec::new();
+    for rx in pending {
+        let resp = rx.recv()??;
+        correct += resp.result.is_correct() as usize;
+        lat_ms.push(resp.queue_time.as_secs_f64() * 1e3);
+        batches.push(resp.batch_size as f64);
+    }
+    let burst_wall = t0.elapsed();
+
+    let mut trickle_lat = Vec::new();
+    for p in problems[n_burst..n_burst + 20.min(problems.len() - n_burst)].iter() {
+        let t = Instant::now();
+        let resp = server.score(p.clone())?;
+        trickle_lat.push(t.elapsed().as_secs_f64() * 1e3);
+        correct += resp.result.is_correct() as usize;
+    }
+
+    let s = Summary::of(&lat_ms);
+    let ts = Summary::of(&trickle_lat);
+    println!("\n-- burst ({n_burst} requests) --");
+    println!(
+        "wall {}  throughput {:.1} req/s  mean batch {:.1}",
+        format_duration(burst_wall),
+        n_burst as f64 / burst_wall.as_secs_f64(),
+        Summary::of(&batches).mean
+    );
+    println!("queue latency p50 {:.1}ms  p95 {:.1}ms  max {:.1}ms", s.median, s.p95, s.max);
+    println!("\n-- trickle (20 sequential requests) --");
+    println!("end-to-end latency p50 {:.1}ms  p95 {:.1}ms", ts.median, ts.p95);
+    println!(
+        "\naccuracy over all served: {:.2}%",
+        100.0 * correct as f64 / (n_burst + trickle_lat.len()) as f64
+    );
+    std::fs::remove_file(&packed_path).ok();
+    Ok(())
+}

@@ -1,0 +1,184 @@
+"""AOT lowering: JAX → HLO text → artifacts/ for the rust PJRT runtime.
+
+Variants exported (see DESIGN.md §6):
+  * ``score_fp``        — FP32 scoring head: (tokens[B,3] i32, params…) →
+                          last-position logits [B, vocab].
+  * ``score_quant_k1``  — baseline linear quantization: every linear is
+                          one int8 plane through the Pallas split_matmul
+                          kernel (k=1).
+  * ``score_quant_k3``  — SplitQuantV2: k=3 planes per linear.
+  * ``linear_micro_k3`` — standalone split_matmul kernel (runtime micro
+                          benches of the L1 hot-spot).
+
+Interchange is HLO **text** (not serialized HloModuleProto): jax ≥0.5
+emits 64-bit instruction ids that the image's xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+Every variant is described in ``artifacts/manifest.json`` (file, ordered
+argument names/dtypes/shapes, output shape) — the contract the rust
+runtime loads.
+
+Run: python -m compile.aot --out ../artifacts [--batch 32]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import Config, forward_quant, param_shapes, score_fp_last
+
+PROMPT_LEN = 3  # synthetic-arc prompts are <bos> e a
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def arg_json(name, shape, dtype):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def export_score_fp(cfg: Config, batch: int):
+    shapes = param_shapes(cfg)
+    names = sorted(shapes)  # canonical: sorted param names after tokens
+
+    def fn(tokens, *flat):
+        params = dict(zip(names, flat))
+        return (score_fp_last(cfg, params, tokens),)
+
+    args = [spec((batch, PROMPT_LEN), jnp.int32)] + [
+        spec(shapes[n], jnp.float32) for n in names
+    ]
+    lowered = jax.jit(fn).lower(*args)
+    arg_manifest = [arg_json("tokens", (batch, PROMPT_LEN), "i32")] + [
+        arg_json(n, shapes[n], "f32") for n in names
+    ]
+    return to_hlo_text(lowered), arg_manifest, [batch, cfg.vocab]
+
+
+def quant_flat_args(cfg: Config, k: int):
+    """Ordered (name, shape, dtype) for the quantized variant."""
+    shapes = param_shapes(cfg)
+    out = [("tokens", (0, PROMPT_LEN), "i32"), ("embed.tok", shapes["embed.tok"], "f32")]
+    lin_names = []
+    for l in range(cfg.n_layers):
+        p = f"layers.{l}"
+        out.append((f"{p}.norm_attn", shapes[f"{p}.norm_attn"], "f32"))
+        for ln in ["attn.wq", "attn.wk", "attn.wv", "attn.wo"]:
+            lin_names.append(f"{p}.{ln}")
+            o, i = shapes[f"{p}.{ln}"]
+            out += [
+                (f"{p}.{ln}.planes", (k, o, i), "i8"),
+                (f"{p}.{ln}.scales", (k,), "f32"),
+                (f"{p}.{ln}.zps", (k,), "f32"),
+            ]
+        out.append((f"{p}.norm_mlp", shapes[f"{p}.norm_mlp"], "f32"))
+        for ln in ["mlp.gate", "mlp.up", "mlp.down"]:
+            lin_names.append(f"{p}.{ln}")
+            o, i = shapes[f"{p}.{ln}"]
+            out += [
+                (f"{p}.{ln}.planes", (k, o, i), "i8"),
+                (f"{p}.{ln}.scales", (k,), "f32"),
+                (f"{p}.{ln}.zps", (k,), "f32"),
+            ]
+    out.append(("norm.final", shapes["norm.final"], "f32"))
+    return out
+
+
+def export_score_quant(cfg: Config, batch: int, k: int):
+    flat = quant_flat_args(cfg, k)
+    arg_names = [f[0] for f in flat]
+
+    def fn(*args):
+        d = dict(zip(arg_names, args))
+        qargs = {n: a for n, a in d.items() if n not in ("tokens", "embed.tok")}
+        return (forward_quant(cfg, d["tokens"], d["embed.tok"], qargs),)
+
+    jax_args = []
+    manifest = []
+    for name, shape, dtype in flat:
+        shape = (batch, PROMPT_LEN) if name == "tokens" else shape
+        jd = {"i32": jnp.int32, "f32": jnp.float32, "i8": jnp.int8}[dtype]
+        jax_args.append(spec(shape, jd))
+        manifest.append(arg_json(name, shape, dtype))
+    lowered = jax.jit(fn).lower(*jax_args)
+    return to_hlo_text(lowered), manifest, [batch, cfg.vocab]
+
+
+def export_linear_micro(k: int, m: int = 128, n: int = 128, kd: int = 128):
+    from .kernels.split_matmul import split_matmul
+
+    def fn(x, planes, scales, zps):
+        return (split_matmul(x, planes, scales, zps),)
+
+    args = [
+        spec((m, kd), jnp.float32),
+        spec((k, n, kd), jnp.int8),
+        spec((k,), jnp.float32),
+        spec((k,), jnp.float32),
+    ]
+    lowered = jax.jit(fn).lower(*args)
+    manifest = [
+        arg_json("x", (m, kd), "f32"),
+        arg_json("planes", (k, n, kd), "i8"),
+        arg_json("scales", (k,), "f32"),
+        arg_json("zps", (k,), "f32"),
+    ]
+    return to_hlo_text(lowered), manifest, [m, n]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=32)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfg = Config()  # eval config
+    variants = {}
+
+    def emit(name, result):
+        hlo, arg_manifest, out_shape = result
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(hlo)
+        variants[name] = {
+            "file": fname,
+            "args": arg_manifest,
+            "out_shape": out_shape,
+            "out_dtype": "f32",
+        }
+        print(f"{name}: {len(hlo)/1e6:.2f} MB HLO, {len(arg_manifest)} args")
+
+    emit("score_fp", export_score_fp(cfg, args.batch))
+    emit("score_quant_k1", export_score_quant(cfg, args.batch, k=1))
+    emit("score_quant_k3", export_score_quant(cfg, args.batch, k=3))
+    emit("linear_micro_k3", export_linear_micro(k=3))
+
+    manifest = {
+        "format": "splitquant-artifacts-v1",
+        "batch": args.batch,
+        "prompt_len": PROMPT_LEN,
+        "config": cfg.to_json(),
+        "variants": variants,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(variants)} variants")
+
+
+if __name__ == "__main__":
+    main()

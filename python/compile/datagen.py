@@ -1,0 +1,141 @@
+"""Synthetic-ARC data generation — the build-time half of the DESIGN.md
+§3 substitution for the paper's ARC Challenge set.
+
+Generates, deterministically from seeds:
+  * a fact world: (entity, attribute) -> value over a small symbolic vocab,
+  * a training corpus of statements `<bos> e a v <eos>`,
+  * the canonical 1165-problem 4-choice eval set (mirroring the ARC set
+    size), scored by max continuation likelihood.
+
+Token layout mirrors rust/src/data/mod.rs:
+  0 <pad>  1 <bos>  2 <eos>  3 <sep>  4 <?>   then entities, attrs, values.
+
+Run: python -m compile.datagen --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+PAD, BOS, EOS, SEP, QMARK = 0, 1, 2, 3, 4
+N_SPECIAL = 5
+
+# Canonical world parameters — must agree with PicoLlamaConfig::eval()
+# (vocab = N_SPECIAL + N_ENTITIES + N_ATTRS + N_VALUES = 211).
+N_ENTITIES = 120
+N_ATTRS = 6
+N_VALUES = 80
+WORLD_SEED = 2026
+N_PROBLEMS = 1165  # = the ARC set prepared for Llama 3.2 (paper §4)
+PROBLEM_SEED = 31
+
+
+class FactWorld:
+    def __init__(self, n_entities=N_ENTITIES, n_attrs=N_ATTRS, n_values=N_VALUES, seed=WORLD_SEED):
+        self.n_entities = n_entities
+        self.n_attrs = n_attrs
+        self.n_values = n_values
+        self.seed = seed
+        rng = np.random.default_rng(seed)
+        self.facts = rng.integers(0, n_values, size=(n_entities, n_attrs))
+
+    @property
+    def vocab_size(self) -> int:
+        return N_SPECIAL + self.n_entities + self.n_attrs + self.n_values
+
+    def entity_token(self, e: int) -> int:
+        return N_SPECIAL + e
+
+    def attr_token(self, a: int) -> int:
+        return N_SPECIAL + self.n_entities + a
+
+    def value_token(self, v: int) -> int:
+        return N_SPECIAL + self.n_entities + self.n_attrs + v
+
+    def statement(self, e: int, a: int) -> list[int]:
+        return [
+            BOS,
+            self.entity_token(e),
+            self.attr_token(a),
+            self.value_token(int(self.facts[e, a])),
+            EOS,
+        ]
+
+    def corpus(self, repeats: int, seed: int) -> np.ndarray:
+        """All facts stated `repeats` times, shuffled: [n, 5] int32."""
+        rows = []
+        for _ in range(repeats):
+            for e in range(self.n_entities):
+                for a in range(self.n_attrs):
+                    rows.append(self.statement(e, a))
+        arr = np.asarray(rows, dtype=np.int32)
+        rng = np.random.default_rng(seed)
+        rng.shuffle(arr, axis=0)
+        return arr
+
+    def problems(self, n: int, seed: int) -> list[dict]:
+        rng = np.random.default_rng(seed)
+        out = []
+        for _ in range(n):
+            e = int(rng.integers(0, self.n_entities))
+            a = int(rng.integers(0, self.n_attrs))
+            v = int(self.facts[e, a])
+            opts = [v]
+            while len(opts) < 4:
+                d = int(rng.integers(0, self.n_values))
+                if d not in opts:
+                    opts.append(d)
+            opts = [opts[i] for i in rng.permutation(4)]
+            out.append(
+                {
+                    "prompt": [BOS, self.entity_token(e), self.attr_token(a)],
+                    "options": [[self.value_token(o)] for o in opts],
+                    "correct": opts.index(v),
+                }
+            )
+        return out
+
+
+def write_problems(path: str, problems: list[dict], vocab_size: int) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(
+            {"format": "synthetic-arc-v1", "vocab_size": vocab_size, "problems": problems},
+            f,
+            indent=1,
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--repeats", type=int, default=40)
+    ap.add_argument("--corpus-seed", type=int, default=7)
+    args = ap.parse_args()
+
+    world = FactWorld()
+    os.makedirs(args.out, exist_ok=True)
+
+    corpus = world.corpus(args.repeats, args.corpus_seed)
+    np.save(os.path.join(args.out, "corpus.npy"), corpus)
+
+    problems = world.problems(N_PROBLEMS, PROBLEM_SEED)
+    write_problems(os.path.join(args.out, "eval_problems.json"), problems, world.vocab_size)
+
+    # Calibration split (for GPTQ-lite / activation-split experiments):
+    # held-out statements, NOT the eval problems.
+    calib = world.corpus(1, 12345)[:256]
+    np.save(os.path.join(args.out, "calibration.npy"), calib)
+
+    print(
+        f"world: {world.n_entities}x{world.n_attrs} facts, vocab={world.vocab_size}; "
+        f"corpus={corpus.shape}, problems={len(problems)}, calib={calib.shape}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel — the correctness contract.
+
+Each `ref_*` function defines the semantics its kernel must match
+(allclose at f32 tolerance). pytest + hypothesis sweep shapes/values in
+python/tests/test_kernels.py.
+
+Dequantization convention (matches rust `quant::QuantParams`):
+    x̂ = (q − zero_point) / scale
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dequant(q, scale, zero_point):
+    """De-quantize integer levels (any int dtype) to f32."""
+    return (q.astype(jnp.float32) - jnp.float32(zero_point)) / jnp.float32(scale)
+
+
+def ref_quant_matmul(x, wq, scale, zero_point):
+    """y[M, N] = x[M, K] · dequant(wq[N, K])ᵀ   (per-tensor scale/zp)."""
+    w = dequant(wq, scale, zero_point)
+    return x @ w.T
+
+
+def ref_split_matmul(x, planes, scales, zero_points):
+    """SplitQuantV2 split-layer matmul.
+
+    y[M, N] = Σ_j  x[M, K] · dequant(planes[j], scales[j], zps[j])ᵀ
+
+    planes: int8 [k, N, K]; scales/zero_points: f32 [k].
+    """
+    y = jnp.zeros((x.shape[0], planes.shape[1]), dtype=jnp.float32)
+    for j in range(planes.shape[0]):
+        w = (planes[j].astype(jnp.float32) - zero_points[j]) / scales[j]
+        y = y + x @ w.T
+    return y
+
+
+def ref_rmsnorm(x, gamma, eps=1e-5):
+    """RMSNorm over the last axis: x·γ / sqrt(mean(x²)+eps)."""
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(ms + eps)) * gamma

@@ -1,0 +1,70 @@
+"""Pallas kernel: SplitQuantV2 split-layer matmul.
+
+Computes the masked-sum split layer in one fused kernel:
+
+    y[M, N] = Σ_{j<k}  x[M, K] · dequant(planes[j][N, K], s_j, z_j)ᵀ
+
+The k (=3) planes are a stacked int8 tensor [k, N, K]. Fusing the sum
+matters: the three planes share the same activation stripe, so the
+kernel reads x once per output block instead of three times, and the
+accumulator stays in VMEM/registers across planes (on TPU: three
+back-to-back MXU contractions into one accumulator; the per-plane
+dequant is VPU work overlapped with the MXU).
+
+VMEM per step ≈ BM·K·4 (x) + k·BN·K·1 (int8 planes) + BM·BN·4 (acc):
+at BM=BN=128, K=2048, k=3 → 1.0 MiB + 0.75 MiB + 64 KiB. The int8
+planes are ~4× cheaper to stream than one dequantized f32 plane — the
+bandwidth win that makes the 3-plane structure affordable at inference.
+`interpret=True` for CPU-PJRT executability (see quant_matmul.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, planes_ref, scales_ref, zps_ref, o_ref, *, k: int):
+    x = x_ref[...]  # (BM, K) f32
+    acc = jnp.zeros((x.shape[0], planes_ref.shape[1]), jnp.float32)
+    for j in range(k):  # k is static — unrolled into 3 MXU passes
+        w = (planes_ref[j].astype(jnp.float32) - zps_ref[j]) / scales_ref[j]
+        acc = acc + jax.lax.dot_general(
+            x,
+            w,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def split_matmul(x, planes, scales, zero_points, *, block_m: int = 128, block_n: int = 128):
+    """y[M, N] = Σ_j x · dequant(planes[j])ᵀ.
+
+    x: f32 [M, K]; planes: int8 [k, N, K]; scales, zero_points: f32 [k].
+    """
+    m, kdim = x.shape
+    nk, n, k2 = planes.shape
+    assert kdim == k2, f"inner dims {kdim} vs {k2}"
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn))
+    scales = jnp.asarray(scales, jnp.float32).reshape(nk)
+    zero_points = jnp.asarray(zero_points, jnp.float32).reshape(nk)
+    return pl.pallas_call(
+        functools.partial(_kernel, k=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, kdim), lambda i, j: (i, 0)),
+            pl.BlockSpec((nk, bn, kdim), lambda i, j: (0, j, 0)),
+            pl.BlockSpec((nk,), lambda i, j: (0,)),
+            pl.BlockSpec((nk,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, planes, scales, zero_points)

@@ -1,0 +1,269 @@
+"""L2: picollama — the Llama-3-family transformer in JAX.
+
+Mirrors rust/src/model exactly (same parameter names, same RoPE pairing,
+same GQA layout, weights `[out, in]` applied as `y = x · Wᵀ`), so logits
+from the CPU reference forward, this JAX forward, and the PJRT-executed
+HLO all agree to f32 tolerance.
+
+Three forward variants:
+  * ``forward_fp``    — plain jnp; used for training and the FP export.
+  * ``forward_quant`` — every linear is the Pallas ``split_matmul``
+    kernel consuming k stacked int8 planes + scales/zero-points
+    (k=1 reproduces baseline linear quantization, k=3 is SplitQuantV2).
+    RMSNorm runs through the Pallas ``rmsnorm`` kernel.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.rmsnorm import rmsnorm as rmsnorm_kernel
+from .kernels.split_matmul import split_matmul
+
+Params = Dict[str, jax.Array]
+
+
+class Config:
+    """Mirror of rust PicoLlamaConfig (defaults = the eval model)."""
+
+    def __init__(
+        self,
+        vocab=211,
+        d_model=128,
+        n_layers=4,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=352,
+        max_seq=64,
+        rope_theta=10_000.0,
+        norm_eps=1e-5,
+        tie_embeddings=True,
+    ):
+        self.vocab = vocab
+        self.d_model = d_model
+        self.n_layers = n_layers
+        self.n_heads = n_heads
+        self.n_kv_heads = n_kv_heads
+        self.d_ff = d_ff
+        self.max_seq = max_seq
+        self.rope_theta = rope_theta
+        self.norm_eps = norm_eps
+        self.tie_embeddings = tie_embeddings
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+    @property
+    def kv_dim(self):
+        return self.n_kv_heads * self.head_dim
+
+    def to_json(self) -> dict:
+        return {
+            "vocab": self.vocab,
+            "d_model": self.d_model,
+            "n_layers": self.n_layers,
+            "n_heads": self.n_heads,
+            "n_kv_heads": self.n_kv_heads,
+            "d_ff": self.d_ff,
+            "max_seq": self.max_seq,
+            "rope_theta": self.rope_theta,
+            "norm_eps": self.norm_eps,
+            "tie_embeddings": self.tie_embeddings,
+        }
+
+    @staticmethod
+    def test():
+        return Config(vocab=96, d_model=32, n_layers=2, n_heads=4, n_kv_heads=2,
+                      d_ff=64, max_seq=32)
+
+
+def param_shapes(cfg: Config) -> Dict[str, tuple]:
+    """Canonical inventory (must match rust `param_inventory`)."""
+    shapes = {"embed.tok": (cfg.vocab, cfg.d_model)}
+    for l in range(cfg.n_layers):
+        p = f"layers.{l}"
+        shapes[f"{p}.norm_attn"] = (cfg.d_model,)
+        shapes[f"{p}.attn.wq"] = (cfg.d_model, cfg.d_model)
+        shapes[f"{p}.attn.wk"] = (cfg.kv_dim, cfg.d_model)
+        shapes[f"{p}.attn.wv"] = (cfg.kv_dim, cfg.d_model)
+        shapes[f"{p}.attn.wo"] = (cfg.d_model, cfg.d_model)
+        shapes[f"{p}.norm_mlp"] = (cfg.d_model,)
+        shapes[f"{p}.mlp.gate"] = (cfg.d_ff, cfg.d_model)
+        shapes[f"{p}.mlp.up"] = (cfg.d_ff, cfg.d_model)
+        shapes[f"{p}.mlp.down"] = (cfg.d_model, cfg.d_ff)
+    shapes["norm.final"] = (cfg.d_model,)
+    if not cfg.tie_embeddings:
+        shapes["lm_head"] = (cfg.vocab, cfg.d_model)
+    return shapes
+
+
+def init_params(cfg: Config, seed: int = 0) -> Params:
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, shape in param_shapes(cfg).items():
+        if "norm" in name:
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[-1]
+            std = min((2.0 / fan_in) ** 0.5, 0.08)
+            params[name] = jnp.asarray(rng.normal(0.0, std, shape), jnp.float32)
+    return params
+
+
+def _rmsnorm_jnp(x, gamma, eps):
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(ms + eps)) * gamma
+
+
+def _rope(x, n_heads: int, head_dim: int, theta: float):
+    """x: [B, S, n_heads*head_dim] — rotate (2i, 2i+1) pairs per head.
+
+    Matches rust `forward::rope` exactly.
+    """
+    b, s, _ = x.shape
+    x = x.reshape(b, s, n_heads, head_dim // 2, 2)
+    i = jnp.arange(head_dim // 2, dtype=jnp.float32)
+    freq = 1.0 / (theta ** (2.0 * i / head_dim))  # [hd/2]
+    t = jnp.arange(s, dtype=jnp.float32)
+    ang = t[:, None] * freq[None, :]  # [S, hd/2]
+    sin = jnp.sin(ang)[None, :, None, :]
+    cos = jnp.cos(ang)[None, :, None, :]
+    a, bb = x[..., 0], x[..., 1]
+    ra = a * cos - bb * sin
+    rb = a * sin + bb * cos
+    out = jnp.stack([ra, rb], axis=-1)
+    return out.reshape(b, s, n_heads * head_dim)
+
+
+def _attention(cfg: Config, q, k, v):
+    """q: [B,S,d], k/v: [B,S,kv_dim] → [B,S,d]; causal GQA."""
+    b, s, _ = q.shape
+    hd = cfg.head_dim
+    groups = cfg.n_heads // cfg.n_kv_heads
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd)
+    # Expand kv heads to match q heads.
+    k = jnp.repeat(k, groups, axis=2)
+    v = jnp.repeat(v, groups, axis=2)
+    scores = jnp.einsum("bthd,bshd->bhts", q, k) / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", probs, v)
+    return out.reshape(b, s, cfg.n_heads * hd)
+
+
+def forward_fp(cfg: Config, params: Params, tokens) -> jax.Array:
+    """tokens: int32 [B, S] → logits f32 [B, S, vocab] (plain jnp)."""
+
+    def lin(name, x):
+        return x @ params[name].T
+
+    x = params["embed.tok"][tokens]
+    for l in range(cfg.n_layers):
+        p = f"layers.{l}"
+        xn = _rmsnorm_jnp(x, params[f"{p}.norm_attn"], cfg.norm_eps)
+        q = _rope(lin(f"{p}.attn.wq", xn), cfg.n_heads, cfg.head_dim, cfg.rope_theta)
+        k = _rope(lin(f"{p}.attn.wk", xn), cfg.n_kv_heads, cfg.head_dim, cfg.rope_theta)
+        v = lin(f"{p}.attn.wv", xn)
+        x = x + lin(f"{p}.attn.wo", _attention(cfg, q, k, v))
+        xn = _rmsnorm_jnp(x, params[f"{p}.norm_mlp"], cfg.norm_eps)
+        gate = lin(f"{p}.mlp.gate", xn)
+        up = lin(f"{p}.mlp.up", xn)
+        x = x + lin(f"{p}.mlp.down", jax.nn.silu(gate) * up)
+    xn = _rmsnorm_jnp(x, params["norm.final"], cfg.norm_eps)
+    head = params["embed.tok"] if cfg.tie_embeddings else params["lm_head"]
+    return xn @ head.T
+
+
+# ---------------------------------------------------------------------------
+# Quantized forward (Pallas kernels; k=1 baseline, k=3 SplitQuantV2)
+# ---------------------------------------------------------------------------
+
+LINEAR_NAMES = ["attn.wq", "attn.wk", "attn.wv", "attn.wo", "mlp.gate", "mlp.up", "mlp.down"]
+
+
+def quant_arg_names(cfg: Config) -> list:
+    """Flat ordered argument list of the quantized forward — the manifest
+    contract with the rust runtime. For each linear: (planes, scales,
+    zps); embedding + norms are f32 args."""
+    names = ["tokens", "embed.tok"]
+    for l in range(cfg.n_layers):
+        p = f"layers.{l}"
+        names.append(f"{p}.norm_attn")
+        for ln in LINEAR_NAMES[:4]:
+            names += [f"{p}.{ln}.planes", f"{p}.{ln}.scales", f"{p}.{ln}.zps"]
+        names.append(f"{p}.norm_mlp")
+        for ln in LINEAR_NAMES[4:]:
+            names += [f"{p}.{ln}.planes", f"{p}.{ln}.scales", f"{p}.{ln}.zps"]
+    names.append("norm.final")
+    return names
+
+
+def forward_quant(cfg: Config, tokens, embed, qargs: Dict[str, jax.Array]) -> jax.Array:
+    """Quantized forward: every linear is the Pallas split_matmul kernel.
+
+    qargs maps "<layer>.planes" (int8 [k, out, in]), ".scales", ".zps"
+    (f32 [k]) for every linear. `embed` is the dequantized embedding
+    (f32), which also serves as the tied LM head.
+    tokens: int32 [B, S] → logits at the LAST position only: [B, vocab].
+    """
+    b, s = tokens.shape
+
+    def qlin(name, x):
+        bb, ss, din = x.shape
+        y = split_matmul(
+            x.reshape(bb * ss, din),
+            qargs[f"{name}.planes"],
+            qargs[f"{name}.scales"],
+            qargs[f"{name}.zps"],
+        )
+        return y.reshape(bb, ss, -1)
+
+    def norm(gamma, x):
+        bb, ss, din = x.shape
+        return rmsnorm_kernel(x.reshape(bb * ss, din), gamma, eps=cfg.norm_eps).reshape(
+            bb, ss, din
+        )
+
+    x = embed[tokens]
+    for l in range(cfg.n_layers):
+        p = f"layers.{l}"
+        xn = norm(qargs[f"{p}.norm_attn"], x)
+        q = _rope(qlin(f"{p}.attn.wq", xn), cfg.n_heads, cfg.head_dim, cfg.rope_theta)
+        k = _rope(qlin(f"{p}.attn.wk", xn), cfg.n_kv_heads, cfg.head_dim, cfg.rope_theta)
+        v = qlin(f"{p}.attn.wv", xn)
+        x = x + qlin(f"{p}.attn.wo", _attention(cfg, q, k, v))
+        xn = norm(qargs[f"{p}.norm_mlp"], x)
+        gate = qlin(f"{p}.mlp.gate", xn)
+        up = qlin(f"{p}.mlp.up", xn)
+        x = x + qlin(f"{p}.mlp.down", jax.nn.silu(gate) * up)
+    xn = norm(qargs["norm.final"], x)
+    last = xn[:, -1, :]  # [B, d]
+    return last @ embed.T  # [B, vocab]
+
+
+def score_fp_last(cfg: Config, params: Params, tokens) -> jax.Array:
+    """FP scoring head: logits at the last position, [B, vocab]."""
+    return forward_fp(cfg, params, tokens)[:, -1, :]
+
+
+# ---------------------------------------------------------------------------
+# Training-loss helpers (used by train.py)
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(cfg: Config, params: Params, tokens) -> jax.Array:
+    """Next-token cross-entropy over positions 0..S-2 → scalar."""
+    logits = forward_fp(cfg, params, tokens)  # [B, S, V]
+    targets = tokens[:, 1:]
+    logits = logits[:, :-1, :]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)

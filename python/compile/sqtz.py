@@ -1,0 +1,131 @@
+"""SQTZ container — python mirror of rust/src/io/mod.rs.
+
+Layout (little-endian):
+    0   4   magic  b"SQTZ"
+    4   4   u32    version (1)
+    8   8   u64    header length H
+    16  H   JSON header
+    16+H ...       payload (tensor data at 16-byte-aligned offsets)
+
+Header: {"meta": {str: str}, "config": {...}?, "tensors":
+         {name: {"dtype": "f32|i8|u8|i32", "shape": [...],
+                 "offset": int, "nbytes": int}}}
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import struct
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+MAGIC = b"SQTZ"
+VERSION = 1
+ALIGN = 16
+
+_DTYPES = {
+    "f32": np.dtype("<f4"),
+    "i8": np.dtype("i1"),
+    "u8": np.dtype("u1"),
+    "i32": np.dtype("<i4"),
+}
+_NAMES = {v: k for k, v in _DTYPES.items()}
+
+
+def _dtype_name(arr: np.ndarray) -> str:
+    d = arr.dtype
+    if d == np.float32:
+        return "f32"
+    if d == np.int8:
+        return "i8"
+    if d == np.uint8:
+        return "u8"
+    if d == np.int32:
+        return "i32"
+    raise ValueError(f"unsupported dtype {d} (use f32/i8/u8/i32)")
+
+
+def to_bytes(
+    tensors: Dict[str, np.ndarray],
+    meta: Optional[Dict[str, str]] = None,
+    config: Optional[Dict[str, Any]] = None,
+) -> bytes:
+    """Serialize named arrays to SQTZ bytes."""
+    payload = bytearray()
+    tensor_specs = {}
+    for name, arr in tensors.items():
+        dname = _dtype_name(arr)
+        raw = np.ascontiguousarray(arr).tobytes()
+        while len(payload) % ALIGN != 0:
+            payload.append(0)
+        offset = len(payload)
+        payload.extend(raw)
+        tensor_specs[name] = {
+            "dtype": dname,
+            "shape": list(arr.shape),
+            "offset": offset,
+            "nbytes": len(raw),
+        }
+    header: Dict[str, Any] = {"meta": dict(meta or {}), "tensors": tensor_specs}
+    if config is not None:
+        header["config"] = config
+    hbytes = json.dumps(header, sort_keys=True).encode("utf-8")
+    out = bytearray()
+    out += MAGIC
+    out += struct.pack("<I", VERSION)
+    out += struct.pack("<Q", len(hbytes))
+    out += hbytes
+    out += payload
+    return bytes(out)
+
+
+def from_bytes(data: bytes) -> Tuple[Dict[str, np.ndarray], Dict[str, str], Optional[dict]]:
+    """Parse SQTZ bytes → (tensors, meta, config)."""
+    if len(data) < 16 or data[0:4] != MAGIC:
+        raise ValueError("not an SQTZ file (bad magic)")
+    (version,) = struct.unpack("<I", data[4:8])
+    if version != VERSION:
+        raise ValueError(f"unsupported SQTZ version {version}")
+    (hlen,) = struct.unpack("<Q", data[8:16])
+    if len(data) < 16 + hlen:
+        raise ValueError("truncated header")
+    header = json.loads(data[16 : 16 + hlen].decode("utf-8"))
+    payload = data[16 + hlen :]
+    tensors = {}
+    for name, spec in header["tensors"].items():
+        dt = _DTYPES[spec["dtype"]]
+        off, nb = spec["offset"], spec["nbytes"]
+        if off + nb > len(payload):
+            raise ValueError(f"tensor '{name}' exceeds payload")
+        flat = np.frombuffer(payload[off : off + nb], dtype=dt)
+        shape = spec["shape"]
+        if spec["dtype"] == "u8":
+            # Packed planes: free-form byte length; keep flat unless the
+            # shape's element count matches exactly.
+            if int(np.prod(shape)) == flat.size:
+                flat = flat.reshape(shape)
+        else:
+            flat = flat.reshape(shape)
+        tensors[name] = flat.copy()
+    return tensors, dict(header.get("meta", {})), header.get("config")
+
+
+def write_file(
+    path: str,
+    tensors: Dict[str, np.ndarray],
+    meta: Optional[Dict[str, str]] = None,
+    config: Optional[Dict[str, Any]] = None,
+) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    blob = to_bytes(tensors, meta, config)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(blob)
+    os.replace(tmp, path)
+
+
+def read_file(path: str):
+    with open(path, "rb") as f:
+        return from_bytes(f.read())

@@ -1,0 +1,167 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/values; every kernel must match its ref within
+f32 tolerance for all generated cases. This is the CORE correctness
+signal of the compile path — the HLO the rust runtime executes contains
+exactly these kernels.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.quant_matmul import quant_matmul
+from compile.kernels.rmsnorm import rmsnorm
+from compile.kernels.split_matmul import split_matmul
+
+DIM = st.integers(min_value=1, max_value=40)
+
+
+def rnd(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+def rnd_int8(rng, *shape, lo=-8, hi=8):
+    return jnp.asarray(rng.integers(lo, hi, size=shape), jnp.int8)
+
+
+class TestQuantMatmul:
+    @settings(max_examples=25, deadline=None)
+    @given(m=DIM, n=DIM, k=DIM, seed=st.integers(0, 2**31))
+    def test_matches_ref(self, m, n, k, seed):
+        rng = np.random.default_rng(seed)
+        x = rnd(rng, m, k)
+        wq = rnd_int8(rng, n, k)
+        scale = float(rng.uniform(0.5, 20.0))
+        zp = float(rng.integers(-8, 8))
+        got = quant_matmul(x, wq, scale, zp)
+        want = ref.ref_quant_matmul(x, wq, scale, zp)
+        # f32 accumulation order differs between the tiled kernel and the
+        # single jnp contraction — tolerance reflects that, not semantics.
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_blocking_boundaries(self):
+        # Shapes straddling the block size must tile correctly.
+        rng = np.random.default_rng(0)
+        for m, n in [(127, 129), (128, 128), (1, 256), (130, 1)]:
+            x = rnd(rng, m, 64)
+            wq = rnd_int8(rng, n, 64)
+            got = quant_matmul(x, wq, 2.0, 1.0)
+            want = ref.ref_quant_matmul(x, wq, 2.0, 1.0)
+            np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_int8_extremes(self):
+        rng = np.random.default_rng(1)
+        x = rnd(rng, 4, 8)
+        wq = jnp.asarray(np.full((3, 8), -128), jnp.int8)
+        got = quant_matmul(x, wq, 1.0, 0.0)
+        want = ref.ref_quant_matmul(x, wq, 1.0, 0.0)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+    def test_zero_scale_rejected_by_semantics(self):
+        # scale must be nonzero; dequant with scale=1, zp=q gives zeros.
+        x = jnp.ones((2, 3), jnp.float32)
+        wq = jnp.full((2, 3), 5, jnp.int8)
+        out = quant_matmul(x, wq, 1.0, 5.0)
+        np.testing.assert_allclose(out, np.zeros((2, 2)), atol=1e-6)
+
+
+class TestSplitMatmul:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=DIM, n=DIM, kd=DIM,
+        k=st.integers(1, 4),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_ref(self, m, n, kd, k, seed):
+        rng = np.random.default_rng(seed)
+        x = rnd(rng, m, kd)
+        planes = rnd_int8(rng, k, n, kd)
+        scales = jnp.asarray(rng.uniform(0.5, 30.0, k), jnp.float32)
+        zps = jnp.asarray(rng.integers(-8, 8, k), jnp.float32)
+        got = split_matmul(x, planes, scales, zps)
+        want = ref.ref_split_matmul(x, planes, scales, zps)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_k1_equals_quant_matmul(self):
+        rng = np.random.default_rng(2)
+        x = rnd(rng, 9, 17)
+        wq = rnd_int8(rng, 13, 17)
+        a = split_matmul(x, wq[None], jnp.asarray([3.0]), jnp.asarray([-1.0]))
+        b = quant_matmul(x, wq, 3.0, -1.0)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+    def test_masked_sum_reconstruction(self):
+        # The SplitQuantV2 invariant end-to-end: quantize 3 masked planes
+        # of a weight matrix; the split matmul must approximate the FP
+        # matmul better than single-plane quantization (outlier case).
+        rng = np.random.default_rng(3)
+        w = rng.normal(0.0, 0.05, size=(24, 16)).astype(np.float32)
+        w[0, 0], w[5, 7] = 3.0, -2.5  # outliers
+        x = rnd(rng, 8, 16)
+
+        def quantize(vals, lo, hi, bits=4):
+            lo, hi = min(lo, 0.0), max(hi, 0.0)
+            scale = (2**bits - 1) / (hi - lo)
+            zp = -(2 ** (bits - 1)) - round(scale * lo)
+            q = np.clip(np.round(scale * vals) + zp, -(2 ** (bits - 1)), 2 ** (bits - 1) - 1)
+            return q.astype(np.int8), scale, zp
+
+        # 3 value clusters by simple thresholds (mimic k-means output).
+        bounds = [-1.0, 1.0]
+        masks = [w <= bounds[0], (w > bounds[0]) & (w <= bounds[1]), w > bounds[1]]
+        planes, scales, zps = [], [], []
+        for mask in masks:
+            vals = np.where(mask, w, 0.0)
+            lo = float(vals.min()) if mask.any() else 0.0
+            hi = float(vals.max()) if mask.any() else 0.0
+            q, s, z = quantize(vals, lo, hi)
+            planes.append(q)
+            scales.append(s)
+            zps.append(z)
+        y_split = split_matmul(
+            jnp.asarray(x),
+            jnp.asarray(np.stack(planes)),
+            jnp.asarray(scales, jnp.float32),
+            jnp.asarray(zps, jnp.float32),
+        )
+        qb, sb, zb = quantize(w, float(w.min()), float(w.max()))
+        y_base = quant_matmul(jnp.asarray(x), jnp.asarray(qb), sb, zb)
+        y_fp = np.asarray(x) @ w.T
+        err_split = float(np.mean((np.asarray(y_split) - y_fp) ** 2))
+        err_base = float(np.mean((np.asarray(y_base) - y_fp) ** 2))
+        assert err_split < err_base * 0.5, (err_split, err_base)
+
+
+class TestRmsNorm:
+    @settings(max_examples=20, deadline=None)
+    @given(t=DIM, d=st.integers(2, 64), seed=st.integers(0, 2**31))
+    def test_matches_ref(self, t, d, seed):
+        rng = np.random.default_rng(seed)
+        x = rnd(rng, t, d)
+        g = rnd(rng, d)
+        np.testing.assert_allclose(
+            rmsnorm(x, g), ref.ref_rmsnorm(x, g), rtol=1e-5, atol=1e-5
+        )
+
+    def test_unit_gamma_preserves_direction(self):
+        rng = np.random.default_rng(4)
+        x = rnd(rng, 3, 16)
+        y = np.asarray(rmsnorm(x, jnp.ones(16)))
+        # Each row is a positive rescaling of the input row.
+        for i in range(3):
+            ratio = y[i] / np.asarray(x)[i]
+            ratio = ratio[np.abs(np.asarray(x)[i]) > 1e-4]
+            assert np.allclose(ratio, ratio[0], rtol=1e-4)
+            assert ratio[0] > 0
+
+    def test_rows_normalized_independently(self):
+        x = jnp.asarray([[1.0, 1.0], [100.0, 100.0]], jnp.float32)
+        y = np.asarray(rmsnorm(x, jnp.ones(2)))
+        np.testing.assert_allclose(y[0], y[1], rtol=1e-4)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,204 @@
+"""L2 correctness: model shapes, quantized-forward parity, SQTZ format."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import sqtz
+from compile.datagen import FactWorld
+from compile.model import (
+    Config,
+    forward_fp,
+    forward_quant,
+    init_params,
+    lm_loss,
+    param_shapes,
+    score_fp_last,
+)
+
+CFG = Config.test()
+
+
+def quantize_np(w, bits=8):
+    """Paper Eq. 1-3 with the zero-inclusive range (mirror of rust)."""
+    lo, hi = min(float(w.min()), 0.0), max(float(w.max()), 0.0)
+    if hi == lo:
+        return np.zeros_like(w, np.int8), 1.0, 0
+    scale = (2**bits - 1) / (hi - lo)
+    zp = int(-(2 ** (bits - 1)) - round(scale * lo))
+    q = np.clip(np.round(scale * w) + zp, -(2 ** (bits - 1)), 2 ** (bits - 1) - 1)
+    return q.astype(np.int8), scale, zp
+
+
+class TestForward:
+    def test_shapes_and_finite(self):
+        params = init_params(CFG, 0)
+        toks = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+        logits = forward_fp(CFG, params, toks)
+        assert logits.shape == (1, 4, CFG.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_causality(self):
+        params = init_params(CFG, 1)
+        a = forward_fp(CFG, params, jnp.asarray([[5, 6, 7, 8]], jnp.int32))
+        b = forward_fp(CFG, params, jnp.asarray([[5, 6, 7, 1]], jnp.int32))
+        np.testing.assert_allclose(a[0, :3], b[0, :3], atol=1e-5)
+        assert not np.allclose(a[0, 3], b[0, 3], atol=1e-5)
+
+    def test_loss_decreases_under_memorization_gradient(self):
+        params = init_params(CFG, 2)
+        batch = jnp.asarray([[1, 5, 6, 7, 2]] * 8, jnp.int32)
+        import jax
+
+        l0, g = jax.value_and_grad(lambda p: lm_loss(CFG, p, batch))(params)
+        params2 = {k: v - 0.1 * g[k] for k, v in params.items()}
+        l1 = lm_loss(CFG, params2, batch)
+        assert float(l1) < float(l0)
+
+    def test_score_last_matches_full_forward(self):
+        params = init_params(CFG, 3)
+        toks = jnp.asarray([[1, 2, 3]], jnp.int32)
+        full = forward_fp(CFG, params, toks)
+        last = score_fp_last(CFG, params, toks)
+        np.testing.assert_allclose(last[0], full[0, -1], atol=1e-6)
+
+
+class TestQuantForwardParity:
+    def test_int8_quant_forward_close_to_fp(self):
+        """k=1 INT8 quantized forward ≈ FP forward (high resolution)."""
+        params = init_params(CFG, 4)
+        toks = jnp.asarray([[1, 2, 3], [4, 5, 6]], jnp.int32)
+        qargs = {}
+        for name, shape in param_shapes(CFG).items():
+            if "norm" in name:
+                qargs[name] = params[name]
+            elif name != "embed.tok":
+                q, s, z = quantize_np(np.asarray(params[name]), bits=8)
+                qargs[f"{name}.planes"] = jnp.asarray(q[None])
+                qargs[f"{name}.scales"] = jnp.asarray([s], jnp.float32)
+                qargs[f"{name}.zps"] = jnp.asarray([float(z)], jnp.float32)
+        got = forward_quant(CFG, toks, params["embed.tok"], qargs)
+        want = score_fp_last(CFG, params, toks)
+        np.testing.assert_allclose(got, want, rtol=0.05, atol=0.05)
+
+    def test_identity_planes_exactly_match_fp(self):
+        """With scale=1, zp=0 and integer weights, quant == fp exactly."""
+        params = init_params(CFG, 5)
+        # Replace linears with small integer weights.
+        for name in list(params):
+            if "norm" in name or name == "embed.tok":
+                continue
+            rng = np.random.default_rng(hash(name) % 2**32)
+            w = rng.integers(-3, 4, size=params[name].shape).astype(np.float32)
+            params[name] = jnp.asarray(w)
+        toks = jnp.asarray([[1, 2, 3]], jnp.int32)
+        qargs = {}
+        for name, shape in param_shapes(CFG).items():
+            if "norm" in name:
+                qargs[name] = params[name]
+            elif name != "embed.tok":
+                qargs[f"{name}.planes"] = jnp.asarray(
+                    np.asarray(params[name], np.int8)[None]
+                )
+                qargs[f"{name}.scales"] = jnp.asarray([1.0], jnp.float32)
+                qargs[f"{name}.zps"] = jnp.asarray([0.0], jnp.float32)
+        got = forward_quant(CFG, toks, params["embed.tok"], qargs)
+        want = score_fp_last(CFG, params, toks)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+class TestSqtz:
+    def test_roundtrip(self, tmp_path):
+        tensors = {
+            "a": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "b": np.asarray([-8, 0, 7], np.int8),
+            "c": np.asarray([1, 2, 255], np.uint8),
+        }
+        p = str(tmp_path / "x.sqtz")
+        sqtz.write_file(p, tensors, {"k": "v"}, {"d_model": 32})
+        back, meta, cfg = sqtz.read_file(p)
+        assert meta["k"] == "v"
+        assert cfg["d_model"] == 32
+        for k in tensors:
+            np.testing.assert_array_equal(back[k], tensors[k])
+
+    def test_rejects_bad_magic(self):
+        with pytest.raises(ValueError):
+            sqtz.from_bytes(b"XXXX" + b"\0" * 32)
+
+    def test_matches_rust_reader_expectations(self, tmp_path):
+        # Byte-level pin: header fields in the exact layout rust parses.
+        p = str(tmp_path / "pin.sqtz")
+        sqtz.write_file(p, {"t": np.asarray([1.5], np.float32)})
+        blob = open(p, "rb").read()
+        assert blob[0:4] == b"SQTZ"
+        assert int.from_bytes(blob[4:8], "little") == 1
+        hlen = int.from_bytes(blob[8:16], "little")
+        header = json.loads(blob[16 : 16 + hlen])
+        spec = header["tensors"]["t"]
+        assert spec["dtype"] == "f32" and spec["shape"] == [1]
+        assert spec["offset"] % 16 == 0
+
+
+class TestDatagen:
+    def test_world_deterministic_and_sized(self):
+        a, b = FactWorld(), FactWorld()
+        assert np.array_equal(a.facts, b.facts)
+        assert a.vocab_size == 211  # must match PicoLlamaConfig::eval()
+
+    def test_problem_correctness(self):
+        w = FactWorld()
+        ps = w.problems(50, 3)
+        for p in ps:
+            e = p["prompt"][1] - 5
+            a = p["prompt"][2] - 5 - w.n_entities
+            v = int(w.facts[e, a])
+            assert p["options"][p["correct"]] == [w.value_token(v)]
+            assert len({tuple(o) for o in p["options"]}) == 4
+
+    def test_corpus_statement_grammar(self):
+        w = FactWorld()
+        c = w.corpus(1, 0)
+        assert c.shape == (w.n_entities * w.n_attrs, 5)
+        assert (c[:, 0] == 1).all() and (c[:, 4] == 2).all()
+        assert (c[:, 3] >= w.value_token(0)).all()
+
+
+class TestArtifacts:
+    """Validate the emitted artifacts (requires `make artifacts` ran)."""
+
+    ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+    @pytest.mark.skipif(
+        not os.path.exists(os.path.join(ART, "manifest.json")),
+        reason="artifacts not built",
+    )
+    def test_manifest_consistency(self):
+        with open(os.path.join(self.ART, "manifest.json")) as f:
+            m = json.load(f)
+        assert m["format"] == "splitquant-artifacts-v1"
+        for name, v in m["variants"].items():
+            path = os.path.join(self.ART, v["file"])
+            assert os.path.exists(path), name
+            text = open(path).read()
+            assert text.startswith("HloModule"), name
+            assert len(v["args"]) >= 4
+
+    @pytest.mark.skipif(
+        not os.path.exists(os.path.join(ART, "picollama_eval.sqtz")),
+        reason="checkpoint not trained",
+    )
+    def test_trained_checkpoint_loads_and_memorized(self):
+        tensors, meta, cfg = sqtz.read_file(
+            os.path.join(self.ART, "picollama_eval.sqtz")
+        )
+        assert cfg["vocab"] == 211
+        assert float(meta["fact_accuracy"]) > 0.9
+        assert tensors["embed.tok"].shape == (211, 128)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,109 @@
+//! E5 — §2.2 comparator: SplitQuantV2 vs a GPTQ-class advanced
+//! algorithm on the same hardware.
+//!
+//! The paper contrasts its 2m06s CPU-only run against ZeroQuant (3.1h on
+//! an A100) and GPTQ (2.9min on an A100), and stresses that advanced
+//! methods additionally require calibration data. This bench runs our
+//! faithful CPU GPTQ-lite on the same checkpoint and reports:
+//!   * wall time (SplitQuantV2 must be ≫ faster),
+//!   * accuracy (GPTQ is a strong comparator; SQv2 should be in range),
+//!   * the calibration-data requirement (GPTQ: yes, SQv2: no).
+
+use splitquant::bench::{banner, Bench, BenchConfig};
+use splitquant::coordinator::{Arm, Coordinator, PipelineSpec};
+use splitquant::gptq::gptq_quantize_model;
+use splitquant::model::quantized::Method;
+use splitquant::quant::Bits;
+use splitquant::split::SplitConfig;
+use splitquant::util::fmt::Table;
+use splitquant::util::timer::{format_duration, time_it};
+
+fn main() -> anyhow::Result<()> {
+    banner("E5: SplitQuantV2 vs GPTQ-lite (CPU, same checkpoint, INT4)");
+    let spec = PipelineSpec::new(
+        "artifacts/picollama_eval.sqtz",
+        "artifacts/eval_problems.json",
+    );
+    let coord = Coordinator::new();
+    let ck = coord.load_model(&spec)?;
+    let problems = coord.load_problems(&spec)?;
+    let bench = Bench::with_config("comparator", BenchConfig::once());
+
+    let fp = coord.evaluate_fp(&ck, &problems, false)?;
+
+    // Calibration data for GPTQ: held-out statements (datagen writes
+    // artifacts/calibration.npy; regenerate equivalent sequences here).
+    let world = splitquant::data::FactWorld::generate(120, 6, 80, 2026);
+    let calib: Vec<Vec<usize>> = world.corpus(1, 12345).into_iter().take(192).collect();
+
+    let mut table = Table::new(&[
+        "method",
+        "wall time",
+        "accuracy",
+        "d vs FP",
+        "needs calibration?",
+    ]);
+    table.row(&[
+        "Original FP32".into(),
+        "-".into(),
+        fp.accuracy_pct(),
+        "-".into(),
+        "-".into(),
+    ]);
+
+    // Baseline linear quant.
+    let arm = Arm {
+        bits: Bits::Int4,
+        method: Method::Baseline,
+    };
+    let res = coord.run_arm(&ck, &arm, &problems, &spec)?;
+    table.row(&[
+        "linear INT4 (baseline)".into(),
+        format_duration(res.quantize_time),
+        res.report.accuracy_pct(),
+        format!("{:+.2}%p", (res.report.accuracy - fp.accuracy) * 100.0),
+        "no".into(),
+    ]);
+
+    // SplitQuantV2.
+    let arm = Arm {
+        bits: Bits::Int4,
+        method: Method::SplitQuant(SplitConfig::default()),
+    };
+    let res_sq = coord.run_arm(&ck, &arm, &problems, &spec)?;
+    bench.record_metric("time_splitquant_s", res_sq.quantize_time.as_secs_f64(), "s");
+    table.row(&[
+        "SplitQuantV2 INT4".into(),
+        format_duration(res_sq.quantize_time),
+        res_sq.report.accuracy_pct(),
+        format!("{:+.2}%p", (res_sq.report.accuracy - fp.accuracy) * 100.0),
+        "no".into(),
+    ]);
+
+    // GPTQ-lite (timed including its mandatory calibration pass).
+    let (gptq_qm, gptq_time) = time_it(|| gptq_quantize_model(&ck, Bits::Int4, &calib, 0.01));
+    let gptq_qm = gptq_qm?;
+    let gptq_rep = coord.evaluate_qm(&gptq_qm, &problems, false)?;
+    bench.record_metric("time_gptq_s", gptq_time.as_secs_f64(), "s");
+    bench.record_metric("accuracy_gptq", gptq_rep.accuracy * 100.0, "%");
+    table.row(&[
+        "GPTQ-lite INT4".into(),
+        format_duration(gptq_time),
+        gptq_rep.accuracy_pct(),
+        format!("{:+.2}%p", (gptq_rep.accuracy - fp.accuracy) * 100.0),
+        "YES (192 seqs)".into(),
+    ]);
+
+    println!("\n{}", table.render());
+    let speedup = gptq_time.as_secs_f64() / res_sq.quantize_time.as_secs_f64();
+    bench.record_metric("speedup_vs_gptq", speedup, "x");
+    println!(
+        "SplitQuantV2 is {speedup:.1}x faster than GPTQ-lite on this CPU \
+         (paper's analogue: 2m06s CPU vs 2.9min-on-A100 GPTQ / 3.1h ZeroQuant)"
+    );
+    println!(
+        "shape check: SQv2 ≫ faster, no calibration, accuracy within a few\n\
+         points of the Hessian-based comparator."
+    );
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! E2 + E6 — Figure 1 and §4.1:
+//!
+//! * §4.1 functional preservation: the SplitQuantV2-processed FP model
+//!   must produce outputs identical to the original on **all** eval
+//!   problems (the paper verified all 1165 ARC problems).
+//! * Figure 1 resolution series: per-layer scaling factors of the
+//!   original layer vs the three split planes, and the quantization-MSE
+//!   gain — the quantities the paper's figure illustrates.
+
+use splitquant::bench::{banner, Bench, BenchConfig};
+use splitquant::coordinator::{Coordinator, PipelineSpec};
+use splitquant::model::{param_inventory, ParamKind};
+use splitquant::quant::Bits;
+use splitquant::split::{self, SplitConfig};
+use splitquant::tensor::Tensor;
+use splitquant::util::fmt::Table;
+
+fn main() -> anyhow::Result<()> {
+    banner("E2 (§4.1): functional preservation of the FP split model");
+    let spec = PipelineSpec::new(
+        "artifacts/picollama_eval.sqtz",
+        "artifacts/eval_problems.json",
+    );
+    let coord = Coordinator::new();
+    let ck = coord.load_model(&spec)?;
+    let problems = coord.load_problems(&spec)?;
+    let bench = Bench::with_config("figure1", BenchConfig::once());
+
+    // Build the FP split model: every linear replaced by its masked-sum
+    // reconstruction (exactly what an exported split FP model computes).
+    let mut split_ck = ck.clone();
+    let cfg = SplitConfig::default();
+    for info in param_inventory(&ck.config) {
+        if info.kind != ParamKind::Linear {
+            continue;
+        }
+        let w = ck.get(&info.name)?;
+        let sl = split::split_tensor(w, &cfg);
+        // Sum the planes in ascending-cluster order — the summation order
+        // the split runtime uses.
+        let mut acc = Tensor::zeros(w.shape());
+        for p in &sl.planes {
+            acc.add_assign(p);
+        }
+        split_ck.tensors.insert(info.name.clone(), acc);
+    }
+
+    let orig = coord.evaluate_fp(&ck, &problems, false)?;
+    let split_rep = coord.evaluate_fp(&split_ck, &problems, false)?;
+    println!(
+        "original {} vs split-FP {} over {} problems",
+        orig.accuracy_pct(),
+        split_rep.accuracy_pct(),
+        problems.len()
+    );
+    bench.record_metric("fp_accuracy_delta", (split_rep.accuracy - orig.accuracy).abs(), "frac");
+    assert_eq!(
+        orig.n_correct, split_rep.n_correct,
+        "split FP model must answer identically (paper §4.1)"
+    );
+    // Weight-space reconstruction is bit-exact:
+    for info in param_inventory(&ck.config) {
+        if info.kind == ParamKind::Linear {
+            assert_eq!(
+                split_ck.get(&info.name)?.data(),
+                ck.get(&info.name)?.data(),
+                "{} reconstruction",
+                info.name
+            );
+        }
+    }
+    println!("all {} linear layers reconstruct bit-exactly ✓", ck.config.n_layers * 7);
+
+    banner("E6 (Figure 1): per-layer resolution gain at INT4");
+    let mut table = Table::new(&[
+        "layer",
+        "orig S",
+        "plane S (lo/mid/hi)",
+        "orig MSE",
+        "split MSE",
+        "gain",
+    ]);
+    let mut worst_gain = f64::INFINITY;
+    for info in param_inventory(&ck.config) {
+        if info.kind != ParamKind::Linear {
+            continue;
+        }
+        let w = ck.get(&info.name)?;
+        let rep = split::resolution_report(w, &cfg, Bits::Int4);
+        worst_gain = worst_gain.min(rep.mse_gain);
+        table.row(&[
+            info.name.clone(),
+            format!("{:.1}", rep.original_scale),
+            rep.plane_scales
+                .iter()
+                .map(|s| format!("{s:.0}"))
+                .collect::<Vec<_>>()
+                .join("/"),
+            format!("{:.1e}", rep.original_mse),
+            format!("{:.1e}", rep.split_mse),
+            format!("{:.0}x", rep.mse_gain),
+        ]);
+        bench.record_metric(&format!("mse_gain[{}]", info.name), rep.mse_gain, "x");
+    }
+    println!("{}", table.render());
+    println!("worst per-layer MSE gain: {worst_gain:.1}x (must be ≥ 1)");
+    assert!(worst_gain >= 1.0);
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Runtime micro-benchmarks: the L1/L3 hot paths in isolation.
+//!
+//! * `split_matmul` through PJRT (the AOT Pallas kernel) vs the CPU
+//!   reference — the inference hot-spot.
+//! * k-means (exact DP vs histogram) and fused split+quantize — the
+//!   preprocessing hot-spot behind the paper's 2-minute claim.
+//! * pack/unpack throughput.
+//!
+//! These feed EXPERIMENTS.md §Perf (before/after per optimization).
+
+use splitquant::bench::{banner, black_box, Bench, BenchConfig};
+use splitquant::kmeans;
+use splitquant::quant::{pack, Bits};
+use splitquant::runtime::{ArgValue, Engine};
+use splitquant::split::{split_quantize, SplitConfig};
+use splitquant::tensor::Tensor;
+use splitquant::util::rng::Rng;
+use std::collections::BTreeMap;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(42);
+
+    banner("L3: k-means hot path (per 4.2M-value layer, k=3)");
+    let mut vals = vec![0.0f32; 1024 * 4096];
+    rng.fill_normal(&mut vals, 0.0, 0.05);
+    for _ in 0..4000 {
+        let i = rng.below(vals.len());
+        vals[i] = rng.uniform_in(-2.0, 2.0);
+    }
+    let mut b = Bench::with_config("kmeans", BenchConfig::heavy());
+    b.run("kmeans_hist[4.2M,4096 bins]", || {
+        black_box(kmeans::kmeans_hist(&vals, 3, kmeans::hist::DEFAULT_BINS))
+    });
+    let small: Vec<f32> = vals[..1 << 18].to_vec();
+    b.run("kmeans_exact_dp[262k]", || {
+        black_box(kmeans::kmeans_exact(&small, 3))
+    });
+
+    banner("L3: fused split+quantize (per layer)");
+    let w = Tensor::new(&[1024, 4096], vals.clone());
+    let cfg = SplitConfig::default();
+    b.run("split_quantize[1024x4096,INT4]", || {
+        black_box(split_quantize(&w, &cfg, Bits::Int4))
+    });
+
+    banner("L3: pack/unpack throughput (4.2M values)");
+    let levels: Vec<i8> = (0..vals.len()).map(|i| ((i % 16) as i32 - 8) as i8).collect();
+    b.run("pack[INT4,4.2M]", || black_box(pack::pack(&levels, Bits::Int4)));
+    let packed = pack::pack(&levels, Bits::Int4);
+    b.run("unpack[INT4,4.2M]", || {
+        black_box(pack::unpack(&packed, levels.len(), Bits::Int4).unwrap())
+    });
+
+    banner("L1 via PJRT: split_matmul kernel (128x128x128, k=3)");
+    match Engine::load("artifacts", Some(&["linear_micro_k3"])) {
+        Ok(engine) => {
+            let mut x = vec![0.0f32; 128 * 128];
+            rng.fill_normal(&mut x, 0.0, 1.0);
+            let planes: Vec<i8> = (0..3 * 128 * 128)
+                .map(|_| (rng.below(16) as i32 - 8) as i8)
+                .collect();
+            let mut args = BTreeMap::new();
+            args.insert("x".to_string(), ArgValue::F32(x));
+            args.insert("planes".to_string(), ArgValue::I8(planes));
+            args.insert("scales".to_string(), ArgValue::F32(vec![4.0, 1.5, 0.5]));
+            args.insert("zps".to_string(), ArgValue::F32(vec![-2.0, 0.0, 3.0]));
+            b.run("pjrt split_matmul[128^3,k=3]", || {
+                black_box(engine.execute("linear_micro_k3", &args).unwrap())
+            });
+            // FLOP accounting: 3 × 2·M·N·K.
+            let flops = 3.0 * 2.0 * 128f64.powi(3);
+            if let Some(last) = b.results().last() {
+                let gflops = flops / last.secs.mean / 1e9;
+                b.record_metric("pjrt_split_matmul_gflops", gflops, "GFLOP/s");
+                println!("  ≈ {gflops:.2} GFLOP/s (interpret-mode Pallas on CPU PJRT)");
+            }
+        }
+        Err(e) => println!("(skipping PJRT micro bench: {e})"),
+    }
+
+    banner("L3: CPU reference matmul (for comparison)");
+    let a = Tensor::new(&[128, 128], {
+        let mut v = vec![0.0f32; 128 * 128];
+        rng.fill_normal(&mut v, 0.0, 1.0);
+        v
+    });
+    let bt = a.clone();
+    b.run("cpu matmul[128^3]", || {
+        black_box(splitquant::tensor::matmul(&a, &bt))
+    });
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! E4 — §5 model size: FP32 → INT4 is 1/8; INT4 + SplitQuantV2(k=3) is
+//! 3/8 of the original (k dense planes). Measured from actual packed
+//! container bytes, including the on-disk container overhead, for the
+//! eval model and a Llama-1B-shaped inventory.
+
+use splitquant::bench::{banner, Bench, BenchConfig};
+use splitquant::io::qmodel::save_qmodel;
+use splitquant::model::quantized::{quantize_model, Method};
+use splitquant::model::{param_inventory, Checkpoint, ParamKind, PicoLlamaConfig};
+use splitquant::quant::{pack, Bits};
+use splitquant::split::SplitConfig;
+use splitquant::util::fmt::{human_bytes, Table};
+
+fn main() -> anyhow::Result<()> {
+    banner("E4: packed model size ratios (paper §5: 1/8 vs 3/8)");
+    let bench = Bench::with_config("model_size", BenchConfig::once());
+
+    let cfg = PicoLlamaConfig::eval();
+    let ck = Checkpoint::random_init(&cfg, 3);
+    let fp = ck.fp32_bytes();
+
+    let mut table = Table::new(&["arm", "packed", "ratio vs FP32", "linear-only ratio"]);
+    table.row(&["FP32".into(), human_bytes(fp), "1.000".into(), "1.000".into()]);
+
+    let lin_fp: u64 = param_inventory(&cfg)
+        .iter()
+        .filter(|p| p.kind == ParamKind::Linear)
+        .map(|p| p.numel() as u64 * 4)
+        .sum();
+
+    for (label, bits, method, k) in [
+        ("INT8 baseline", Bits::Int8, Method::Baseline, 1usize),
+        ("INT4 baseline", Bits::Int4, Method::Baseline, 1),
+        ("INT2 baseline", Bits::Int2, Method::Baseline, 1),
+        (
+            "INT4 + SQv2 k=3",
+            Bits::Int4,
+            Method::SplitQuant(SplitConfig::default()),
+            3,
+        ),
+        (
+            "INT4 + SQv2 k=2",
+            Bits::Int4,
+            Method::SplitQuant(SplitConfig::with_k(2)),
+            2,
+        ),
+        (
+            "INT2 + SQv2 k=3",
+            Bits::Int2,
+            Method::SplitQuant(SplitConfig::default()),
+            3,
+        ),
+    ] {
+        let qm = quantize_model(&ck, bits, &method)?;
+        let packed = qm.packed_bytes();
+        let lin: u64 = qm.linears.values().map(|q| q.packed_len() as u64).sum();
+        let ratio = packed as f64 / fp as f64;
+        let lin_ratio = lin as f64 / lin_fp as f64;
+        bench.record_metric(&format!("ratio[{label}]"), ratio, "x");
+        table.row(&[
+            label.into(),
+            human_bytes(packed),
+            format!("{ratio:.3}"),
+            format!("{lin_ratio:.3}"),
+        ]);
+        // Paper's exact claim is about the weight planes: k·bits/32.
+        let expect = k as f64 * bits.width() as f64 / 32.0;
+        assert!(
+            (lin_ratio - expect).abs() < 0.01,
+            "{label}: linear ratio {lin_ratio} != {expect}"
+        );
+    }
+    println!("\n{}", table.render());
+    println!("linear-only ratios must hit k·b/32 exactly: 1/8 (INT4), 3/8 (INT4 k=3), …");
+
+    // On-disk check including container overhead.
+    banner("on-disk container sizes (eval model)");
+    let dir = std::env::temp_dir().join("sq_size_bench");
+    std::fs::create_dir_all(&dir)?;
+    let mut disk_table = Table::new(&["arm", "logical", "on disk", "overhead"]);
+    for (label, bits, method) in [
+        ("INT4 baseline", Bits::Int4, Method::Baseline),
+        (
+            "INT4 + SQv2 k=3",
+            Bits::Int4,
+            Method::SplitQuant(SplitConfig::default()),
+        ),
+    ] {
+        let qm = quantize_model(&ck, bits, &method)?;
+        let path = dir.join(format!("{}.sqtz", label.replace([' ', '+', '='], "_")));
+        save_qmodel(&path, &qm)?;
+        let disk = std::fs::metadata(&path)?.len();
+        disk_table.row(&[
+            label.into(),
+            human_bytes(qm.packed_bytes()),
+            human_bytes(disk),
+            format!("{:.1}%", 100.0 * (disk as f64 / qm.packed_bytes() as f64 - 1.0)),
+        ]);
+    }
+    println!("{}", disk_table.render());
+    std::fs::remove_dir_all(&dir).ok();
+
+    // Packing itself: bytes math at 1B-shape without allocating 1B floats.
+    let n_1b = splitquant::model::n_params(&PicoLlamaConfig::llama32_1b());
+    println!(
+        "Llama-3.2-1B-shaped inventory: FP32 {} | INT4 {} | INT4+SQv2(k=3) {}",
+        human_bytes(n_1b as u64 * 4),
+        human_bytes(pack::packed_len(n_1b, Bits::Int4) as u64),
+        human_bytes(3 * pack::packed_len(n_1b, Bits::Int4) as u64),
+    );
+    Ok(())
+}

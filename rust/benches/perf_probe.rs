@@ -1,0 +1,29 @@
+// perf probe: decompose split_quantize stages
+use splitquant::bench::{black_box, Bench, BenchConfig};
+use splitquant::kmeans;
+use splitquant::quant::Bits;
+use splitquant::split::{split_quantize, SplitConfig};
+use splitquant::tensor::Tensor;
+use splitquant::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(42);
+    let mut vals = vec![0.0f32; 1024 * 4096];
+    rng.fill_normal(&mut vals, 0.0, 0.05);
+    for _ in 0..4000 { let i = rng.below(vals.len()); vals[i] = rng.uniform_in(-2.0, 2.0); }
+    let w = Tensor::new(&[1024, 4096], vals.clone());
+    let cfg = SplitConfig::default();
+    let mut b = Bench::with_config("probe", BenchConfig::heavy());
+    b.run("hist_kmeans", || black_box(kmeans::kmeans_hist(&vals, 3, 4096)));
+    let c = kmeans::kmeans_hist(&vals, 3, 4096);
+    b.run("assign_scan(ranges pass)", || {
+        let mut lo = [f32::INFINITY; 3]; let mut hi = [f32::NEG_INFINITY; 3];
+        for &v in &vals { let cl = c.assign(v); if v < lo[cl] {lo[cl]=v;} if v > hi[cl] {hi[cl]=v;} }
+        black_box((lo, hi))
+    });
+    b.run("plane_alloc_fill", || {
+        let planes: Vec<Vec<i8>> = (0..3).map(|j| vec![j as i8; vals.len()]).collect();
+        black_box(planes)
+    });
+    b.run("split_quantize_total", || black_box(split_quantize(&w, &cfg, Bits::Int4)));
+}

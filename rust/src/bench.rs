@@ -1,0 +1,216 @@
+//! Criterion-lite: the benchmark harness used by every `benches/*.rs`
+//! target (the offline build has no criterion crate). Provides warmup,
+//! repeated timed runs, summary statistics, and a `black_box` to defeat
+//! constant folding. Benches are `harness = false` binaries that call
+//! into this module and print both human tables and machine-readable
+//! `BENCH-JSON` lines that EXPERIMENTS.md extraction scripts consume.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use crate::util::timer::format_duration;
+
+/// Re-export of the std black box under the criterion name.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Configuration for a measured benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop early once this much time has been spent measuring.
+    pub target_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 100,
+            target_time: Duration::from_secs(2),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Fast profile for expensive end-to-end benches.
+    pub fn heavy() -> Self {
+        Self {
+            warmup_iters: 1,
+            min_iters: 2,
+            max_iters: 10,
+            target_time: Duration::from_secs(5),
+        }
+    }
+
+    /// One-shot (workloads that are themselves long experiments).
+    pub fn once() -> Self {
+        Self {
+            warmup_iters: 0,
+            min_iters: 1,
+            max_iters: 1,
+            target_time: Duration::ZERO,
+        }
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub secs: Summary,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> Duration {
+        Duration::from_secs_f64(self.secs.mean)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_s", Json::num(self.secs.mean)),
+            ("median_s", Json::num(self.secs.median)),
+            ("std_s", Json::num(self.secs.std)),
+            ("min_s", Json::num(self.secs.min)),
+            ("max_s", Json::num(self.secs.max)),
+        ])
+    }
+}
+
+/// A named group of benchmarks printed together.
+pub struct Bench {
+    group: String,
+    config: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        Self {
+            group: group.to_string(),
+            config: BenchConfig::default(),
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_config(group: &str, config: BenchConfig) -> Self {
+        Self {
+            group: group.to_string(),
+            config,
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f` repeatedly; returns the mean duration.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> Duration {
+        for _ in 0..self.config.warmup_iters {
+            black_box(f());
+        }
+        let mut samples = Vec::new();
+        let started = Instant::now();
+        while samples.len() < self.config.min_iters
+            || (samples.len() < self.config.max_iters && started.elapsed() < self.config.target_time)
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            secs: Summary::of(&samples),
+        };
+        let mean = res.mean();
+        println!(
+            "  {:<44} {:>12} ±{:>10}  ({} iters)",
+            name,
+            format_duration(mean),
+            format_duration(Duration::from_secs_f64(res.secs.std)),
+            res.iters
+        );
+        println!("BENCH-JSON {}", json_line(&self.group, &res));
+        self.results.push(res);
+        mean
+    }
+
+    /// Record an externally-measured scalar (e.g. accuracy) alongside the
+    /// timing results, in the same machine-readable stream.
+    pub fn record_metric(&self, name: &str, value: f64, unit: &str) {
+        let j = Json::obj(vec![
+            ("group", Json::str(self.group.clone())),
+            ("metric", Json::str(name)),
+            ("value", Json::num(value)),
+            ("unit", Json::str(unit)),
+        ]);
+        println!("BENCH-JSON {}", j.to_string());
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+fn json_line(group: &str, r: &BenchResult) -> String {
+    let mut j = r.to_json();
+    if let Json::Obj(m) = &mut j {
+        m.insert("group".into(), Json::str(group));
+    }
+    j.to_string()
+}
+
+/// Standard entry header so all bench binaries look alike.
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_summarizes() {
+        let mut b = Bench::with_config(
+            "t",
+            BenchConfig {
+                warmup_iters: 1,
+                min_iters: 3,
+                max_iters: 5,
+                target_time: Duration::from_millis(10),
+            },
+        );
+        let d = b.run("noop", || 1 + 1);
+        assert!(d < Duration::from_millis(50));
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].iters >= 3);
+    }
+
+    #[test]
+    fn once_config_runs_once() {
+        let mut b = Bench::with_config("t", BenchConfig::once());
+        let mut count = 0;
+        b.run("counted", || count += 1);
+        assert_eq!(count, 1);
+    }
+
+    #[test]
+    fn json_line_is_valid() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 3,
+            secs: Summary::of(&[1.0, 2.0, 3.0]),
+        };
+        let line = json_line("g", &r);
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("group").unwrap().as_str().unwrap(), "g");
+        assert_eq!(v.get("iters").unwrap().as_usize().unwrap(), 3);
+    }
+}

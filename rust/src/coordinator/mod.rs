@@ -1,0 +1,322 @@
+//! L3 coordinator: the pipeline that turns an FP checkpoint into packed
+//! quantized artifacts and evaluation reports — the paper's workflow
+//! (§3–§4) as a reproducible, instrumented program.
+//!
+//! Stages (each timed, reported via [`crate::util::timer::Profiler`]):
+//!
+//! ```text
+//!   load ─→ (outlier-amplify)? ─→ preprocess+quantize (per arm)
+//!        ─→ pack+export (SQTZ) ─→ evaluate (CPU ref / PJRT) ─→ report
+//! ```
+//!
+//! The multi-arm sweep (Table 1) fans out across the worker pool; each
+//! arm is independent (pure function of the FP checkpoint).
+
+pub mod server;
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use crate::data::McqProblem;
+use crate::eval::EvalReport;
+use crate::io::{checkpoint::load_checkpoint, qmodel::save_qmodel};
+use crate::model::quantized::{quantize_model, Method, QuantizedModel};
+use crate::model::Checkpoint;
+use crate::quant::Bits;
+use crate::runtime::{scoring, Engine};
+use crate::split::SplitConfig;
+use crate::util::pool::Pool;
+use crate::util::timer::Profiler;
+use crate::{log_debug, log_info};
+
+use anyhow::{Context, Result};
+
+/// One arm of the experiment grid.
+#[derive(Clone, Debug)]
+pub struct Arm {
+    pub bits: Bits,
+    pub method: Method,
+}
+
+impl Arm {
+    pub fn label(&self) -> String {
+        format!("{}/{}", self.bits.name(), self.method.name())
+    }
+}
+
+/// Result of quantizing + evaluating one arm.
+#[derive(Clone, Debug)]
+pub struct ArmResult {
+    pub label: String,
+    pub bits: Bits,
+    pub method_name: String,
+    pub quantize_time: Duration,
+    pub packed_bytes: u64,
+    pub report: EvalReport,
+}
+
+/// Pipeline configuration.
+#[derive(Clone, Debug)]
+pub struct PipelineSpec {
+    pub checkpoint: PathBuf,
+    pub problems: PathBuf,
+    pub out_dir: Option<PathBuf>,
+    /// Outlier amplification applied to the FP model *before* all arms
+    /// (DESIGN.md §3 substitution): (fraction, gain).
+    pub amplify: Option<(f64, f32)>,
+    /// Score through PJRT (`score_quant_k*` / `score_fp`) instead of the
+    /// CPU reference forward.
+    pub use_runtime: bool,
+    pub seed: u64,
+}
+
+impl PipelineSpec {
+    pub fn new(checkpoint: impl Into<PathBuf>, problems: impl Into<PathBuf>) -> Self {
+        Self {
+            checkpoint: checkpoint.into(),
+            problems: problems.into(),
+            out_dir: None,
+            amplify: Some((0.003, 4.0)),
+            use_runtime: false,
+            seed: 7,
+        }
+    }
+}
+
+/// The coordinator: owns the worker pool, the profiler and (lazily) the
+/// PJRT engine.
+pub struct Coordinator {
+    pub pool: Pool,
+    pub profiler: Profiler,
+    engine: Option<Engine>,
+}
+
+impl Coordinator {
+    pub fn new() -> Coordinator {
+        Coordinator {
+            pool: Pool::new_auto(),
+            profiler: Profiler::new(),
+            engine: None,
+        }
+    }
+
+    pub fn with_engine(artifacts_dir: impl AsRef<Path>, variants: Option<&[&str]>) -> Result<Self> {
+        let mut c = Coordinator::new();
+        c.engine = Some(Engine::load(artifacts_dir, variants)?);
+        Ok(c)
+    }
+
+    pub fn engine(&self) -> Option<&Engine> {
+        self.engine.as_ref()
+    }
+
+    /// Load + optionally perturb the FP checkpoint.
+    pub fn load_model(&self, spec: &PipelineSpec) -> Result<Checkpoint> {
+        let mut ck = self.profiler.section("load", || {
+            load_checkpoint(&spec.checkpoint)
+                .with_context(|| format!("loading {}", spec.checkpoint.display()))
+        })?;
+        if let Some((frac, gain)) = spec.amplify {
+            let touched = self
+                .profiler
+                .section("amplify_outliers", || ck.amplify_outliers(frac, gain, spec.seed));
+            log_info!("amplified {touched} outlier weights (frac={frac}, gain={gain})");
+        }
+        Ok(ck)
+    }
+
+    pub fn load_problems(&self, spec: &PipelineSpec) -> Result<Vec<McqProblem>> {
+        let (problems, _vocab) = crate::data::load_problems(&spec.problems)?;
+        log_info!("loaded {} problems", problems.len());
+        Ok(problems)
+    }
+
+    /// Quantize one arm (timed).
+    pub fn quantize_arm(&self, ck: &Checkpoint, arm: &Arm) -> Result<(QuantizedModel, Duration)> {
+        let label = arm.label();
+        let (qm, dur) = crate::util::timer::time_it(|| quantize_model(ck, arm.bits, &arm.method));
+        self.profiler.record(&format!("quantize[{label}]"), dur);
+        log_debug!("quantized {label} in {:?}", dur);
+        Ok((qm?, dur))
+    }
+
+    /// Evaluate a quantized model: PJRT when requested & compatible,
+    /// CPU reference otherwise.
+    pub fn evaluate_qm(
+        &self,
+        qm: &QuantizedModel,
+        problems: &[McqProblem],
+        use_runtime: bool,
+    ) -> Result<EvalReport> {
+        if use_runtime {
+            if let Some(engine) = &self.engine {
+                if scoring::is_int_plane_compatible(qm) {
+                    let k = scoring::plane_count(qm);
+                    let variant = if k <= 1 { "score_quant_k1" } else { "score_quant_k3" };
+                    if engine.variant(variant).is_ok() {
+                        let args = scoring::quant_args(qm, k.max(1))?;
+                        return self.profiler.section(&format!("eval_pjrt[{variant}]"), || {
+                            scoring::score_problems(engine, variant, &args, problems)
+                        });
+                    }
+                }
+                // Fall through to FP scoring of the effective checkpoint.
+                if engine.variant("score_fp").is_ok() {
+                    let eff = qm.effective_checkpoint();
+                    let args = scoring::fp_args(&eff);
+                    return self.profiler.section("eval_pjrt[score_fp]", || {
+                        scoring::score_problems(engine, "score_fp", &args, problems)
+                    });
+                }
+            }
+        }
+        let eff = qm.effective_checkpoint();
+        self.profiler
+            .section("eval_cpu", || crate::eval::evaluate(&eff, problems, &self.pool))
+    }
+
+    /// Evaluate an FP checkpoint.
+    pub fn evaluate_fp(
+        &self,
+        ck: &Checkpoint,
+        problems: &[McqProblem],
+        use_runtime: bool,
+    ) -> Result<EvalReport> {
+        if use_runtime {
+            if let Some(engine) = &self.engine {
+                if engine.variant("score_fp").is_ok() {
+                    let args = scoring::fp_args(ck);
+                    return self.profiler.section("eval_pjrt[score_fp]", || {
+                        scoring::score_problems(engine, "score_fp", &args, problems)
+                    });
+                }
+            }
+        }
+        self.profiler
+            .section("eval_cpu", || crate::eval::evaluate(ck, problems, &self.pool))
+    }
+
+    /// Run a full arm: quantize → (export) → evaluate.
+    pub fn run_arm(
+        &self,
+        ck: &Checkpoint,
+        arm: &Arm,
+        problems: &[McqProblem],
+        spec: &PipelineSpec,
+    ) -> Result<ArmResult> {
+        let (qm, quantize_time) = self.quantize_arm(ck, arm)?;
+        if let Some(dir) = &spec.out_dir {
+            let fname = format!(
+                "{}_{}.sqtz",
+                arm.bits.name().to_lowercase(),
+                qm.method_name
+                    .replace(['(', ')', '=', '≤', '.'], "_")
+            );
+            self.profiler
+                .section("export", || save_qmodel(dir.join(fname), &qm))?;
+        }
+        let report = self.evaluate_qm(&qm, problems, spec.use_runtime)?;
+        Ok(ArmResult {
+            label: arm.label(),
+            bits: arm.bits,
+            method_name: qm.method_name.clone(),
+            quantize_time,
+            packed_bytes: qm.packed_bytes(),
+            report,
+        })
+    }
+
+    /// The Table-1 grid: Original + {INT8, INT4, INT2} × {baseline, SQv2}.
+    pub fn table1_arms(split_cfg: &SplitConfig) -> Vec<Arm> {
+        let mut arms = Vec::new();
+        for bits in [Bits::Int8, Bits::Int4, Bits::Int2] {
+            arms.push(Arm {
+                bits,
+                method: Method::Baseline,
+            });
+            arms.push(Arm {
+                bits,
+                method: Method::SplitQuant(split_cfg.clone()),
+            });
+        }
+        arms
+    }
+}
+
+impl Default for Coordinator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_problems, FactWorld};
+    use crate::model::PicoLlamaConfig;
+
+    #[test]
+    fn arms_grid_is_complete() {
+        let arms = Coordinator::table1_arms(&SplitConfig::default());
+        assert_eq!(arms.len(), 6);
+        assert!(arms.iter().any(|a| a.label() == "INT4/splitquantv2(k=3)"));
+        assert!(arms.iter().any(|a| a.label() == "INT2/baseline"));
+    }
+
+    #[test]
+    fn run_arm_end_to_end_cpu() {
+        // Miniature end-to-end: random ckpt + tiny problem set.
+        let world = FactWorld::generate(16, 4, 8, 1);
+        let mut cfg = PicoLlamaConfig::test();
+        cfg.vocab = world.vocab_size();
+        let ck = Checkpoint::random_init(&cfg, 2);
+        let problems = generate_problems(&world, 12, 3);
+        let coord = Coordinator::new();
+        let spec = PipelineSpec {
+            checkpoint: PathBuf::from("unused"),
+            problems: PathBuf::from("unused"),
+            out_dir: None,
+            amplify: None,
+            use_runtime: false,
+            seed: 1,
+        };
+        let arm = Arm {
+            bits: Bits::Int8,
+            method: Method::SplitQuant(SplitConfig::default()),
+        };
+        let res = coord.run_arm(&ck, &arm, &problems, &spec).unwrap();
+        assert_eq!(res.report.n, 12);
+        assert!(res.packed_bytes > 0);
+        assert!(res.quantize_time.as_nanos() > 0);
+        // The profiler recorded the stages.
+        let report = coord.profiler.report();
+        assert!(report.contains("quantize["), "{report}");
+    }
+
+    #[test]
+    fn export_writes_files() {
+        let world = FactWorld::generate(8, 3, 6, 1);
+        let mut cfg = PicoLlamaConfig::test();
+        cfg.vocab = world.vocab_size();
+        let ck = Checkpoint::random_init(&cfg, 9);
+        let problems = generate_problems(&world, 4, 3);
+        let dir = std::env::temp_dir().join("sq_coord_export");
+        std::fs::create_dir_all(&dir).unwrap();
+        let coord = Coordinator::new();
+        let spec = PipelineSpec {
+            checkpoint: PathBuf::from("unused"),
+            problems: PathBuf::from("unused"),
+            out_dir: Some(dir.clone()),
+            amplify: None,
+            use_runtime: false,
+            seed: 1,
+        };
+        let arm = Arm {
+            bits: Bits::Int4,
+            method: Method::Baseline,
+        };
+        coord.run_arm(&ck, &arm, &problems, &spec).unwrap();
+        assert!(dir.join("int4_baseline.sqtz").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

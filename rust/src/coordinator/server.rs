@@ -1,0 +1,255 @@
+//! Batched inference server: the deployment-side driver (examples/
+//! edge_deploy.rs) that serves MCQ scoring requests from a quantized
+//! model with dynamic batching — the "edge AI device" role the paper
+//! targets, on the rust+PJRT runtime.
+//!
+//! Architecture (std threads; no tokio in the offline build):
+//!
+//! ```text
+//!   clients ──(mpsc)──▶ batcher ──(collect ≤B, ≤max_wait)──▶ executor
+//!                          ▲                                   │
+//!                          └──────── responses (per-request oneshot)
+//! ```
+//!
+//! The batcher groups pending requests up to the engine's compiled batch
+//! size or until `max_wait` expires — standard dynamic batching (the
+//! vLLM-router pattern, scaled to this workload).
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::data::McqProblem;
+use crate::eval::ProblemResult;
+use crate::runtime::{ArgValue, Engine};
+
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+/// One scoring request.
+pub struct Request {
+    pub problem: McqProblem,
+    /// Sender for the response.
+    respond: mpsc::Sender<Result<Response>>,
+    enqueued: Instant,
+}
+
+/// One scoring response with timing.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub result: ProblemResult,
+    pub queue_time: Duration,
+    pub batch_size: usize,
+}
+
+/// Server handle: submit requests, join on drop.
+pub struct Server {
+    tx: Option<mpsc::Sender<Request>>,
+    worker: Option<thread::JoinHandle<()>>,
+}
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Maximum time the batcher waits to fill a batch.
+    pub max_wait: Duration,
+    /// Variant to execute (e.g. "score_quant_k3").
+    pub variant: String,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            max_wait: Duration::from_millis(5),
+            variant: "score_quant_k3".to_string(),
+        }
+    }
+}
+
+impl Server {
+    /// Spawn the batcher/executor thread. The PJRT engine is constructed
+    /// *inside* the worker (the xla client is not Send); startup errors
+    /// are returned synchronously through a handshake channel.
+    pub fn start(
+        artifacts_dir: PathBuf,
+        weight_args: BTreeMap<String, ArgValue>,
+        config: ServerConfig,
+    ) -> Result<Server> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let variant = config.variant.clone();
+        let worker = thread::spawn(move || {
+            let engine = match Engine::load(&artifacts_dir, Some(&[variant.as_str()])) {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            batch_loop(&engine, &weight_args, &config, rx);
+        });
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("server thread died during startup"))??;
+        Ok(Server {
+            tx: Some(tx),
+            worker: Some(worker),
+        })
+    }
+
+    /// Submit a problem; returns a receiver for the response.
+    pub fn submit(&self, problem: McqProblem) -> mpsc::Receiver<Result<Response>> {
+        let (rtx, rrx) = mpsc::channel();
+        let req = Request {
+            problem,
+            respond: rtx,
+            enqueued: Instant::now(),
+        };
+        if let Some(tx) = &self.tx {
+            // A dropped batcher surfaces as a closed response channel.
+            let _ = tx.send(req);
+        }
+        rrx
+    }
+
+    /// Submit synchronously.
+    pub fn score(&self, problem: McqProblem) -> Result<Response> {
+        self.submit(problem)
+            .recv()
+            .map_err(|_| anyhow!("server stopped"))?
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // closes the queue → batcher exits
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn batch_loop(
+    engine: &Engine,
+    weight_args: &BTreeMap<String, ArgValue>,
+    config: &ServerConfig,
+    rx: mpsc::Receiver<Request>,
+) {
+    let max_batch = engine.batch;
+    loop {
+        // Block for the first request.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // queue closed
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + config.max_wait;
+        // Fill greedily until the batch is full or the deadline passes.
+        while batch.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        execute_batch(engine, weight_args, config, batch);
+    }
+}
+
+fn execute_batch(
+    engine: &Engine,
+    weight_args: &BTreeMap<String, ArgValue>,
+    config: &ServerConfig,
+    batch: Vec<Request>,
+) {
+    let problems: Vec<McqProblem> = batch.iter().map(|r| r.problem.clone()).collect();
+    let n = batch.len();
+    match per_problem_results(engine, weight_args, config, &problems) {
+        Ok(results) => {
+            for (req, result) in batch.into_iter().zip(results) {
+                let resp = Response {
+                    result,
+                    queue_time: req.enqueued.elapsed(),
+                    batch_size: n,
+                };
+                let _ = req.respond.send(Ok(resp));
+            }
+        }
+        Err(e) => fail_all(batch, &e),
+    }
+}
+
+fn fail_all(batch: Vec<Request>, e: &anyhow::Error) {
+    for req in batch {
+        let _ = req.respond.send(Err(anyhow!("batch failed: {e}")));
+    }
+}
+
+/// Execute one batch and return per-problem results.
+fn per_problem_results(
+    engine: &Engine,
+    weight_args: &BTreeMap<String, ArgValue>,
+    config: &ServerConfig,
+    problems: &[McqProblem],
+) -> Result<Vec<ProblemResult>> {
+    // score_problems pads internally; its report is aggregate only, so
+    // inline the batching here for per-problem outputs.
+    let b = engine.batch;
+    let plen = engine.prompt_len;
+    let mut results = Vec::with_capacity(problems.len());
+    for chunk in problems.chunks(b) {
+        let mut tokens = Vec::with_capacity(b * plen);
+        for p in chunk {
+            tokens.extend(p.prompt.iter().map(|&t| t as i32));
+        }
+        for _ in chunk.len()..b {
+            tokens.extend(chunk[0].prompt.iter().map(|&t| t as i32));
+        }
+        let mut args = (*weight_args).clone();
+        args.insert("tokens".to_string(), ArgValue::I32(tokens));
+        let logits = engine.execute(&config.variant, &args)?;
+        for (i, p) in chunk.iter().enumerate() {
+            let row = logits.row(i);
+            let lps: Vec<f64> = p
+                .options
+                .iter()
+                .map(|opt| crate::model::forward::log_prob(row, opt[0]))
+                .collect();
+            let chosen = lps
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap();
+            results.push(ProblemResult {
+                chosen,
+                correct: p.correct,
+                logprobs: lps,
+            });
+        }
+    }
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    // Server tests that need real artifacts live in rust/tests/
+    // integration; here we only test the queueing scaffolding compiles
+    // and the config defaults are sane.
+    use super::*;
+
+    #[test]
+    fn config_defaults() {
+        let c = ServerConfig::default();
+        assert!(c.max_wait <= Duration::from_millis(50));
+        assert!(c.variant.starts_with("score_"));
+    }
+}

@@ -1,0 +1,399 @@
+//! Synthetic-ARC: the evaluation workload substituting the paper's ARC
+//! Challenge set (DESIGN.md §3).
+//!
+//! A seeded "fact world" maps (entity, attribute) → value. The model is
+//! trained (in JAX, build time) on statements `<bos> e a v <eos>`; the
+//! evaluation presents 4-choice problems — prompt `<bos> e a`, options =
+//! {correct value, 3 distractors} — scored by max continuation
+//! likelihood, the same rule Meta's ARC harness uses for Llama 3.2.
+//!
+//! The generator lives in *both* languages: `python/compile/datagen.py`
+//! produces the training corpus + the canonical 1165-problem eval set
+//! consumed via `artifacts/`; this module generates structurally
+//! identical worlds for Rust-native tests and benches, and loads the
+//! canonical problem set (JSON) for the Table-1 harness.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, Result};
+
+/// Fixed special tokens (ids 0..=4). Entity/attr/value tokens follow.
+pub const PAD: usize = 0;
+pub const BOS: usize = 1;
+pub const EOS: usize = 2;
+pub const SEP: usize = 3;
+pub const QMARK: usize = 4;
+pub const N_SPECIAL: usize = 5;
+
+/// A deterministic fact world.
+#[derive(Clone, Debug)]
+pub struct FactWorld {
+    pub n_entities: usize,
+    pub n_attrs: usize,
+    pub n_values: usize,
+    /// facts[e * n_attrs + a] = value index.
+    pub facts: Vec<usize>,
+    pub seed: u64,
+}
+
+impl FactWorld {
+    pub fn generate(n_entities: usize, n_attrs: usize, n_values: usize, seed: u64) -> FactWorld {
+        assert!(n_values >= 4, "need ≥4 values for 4-choice MCQ");
+        let mut rng = Rng::new(seed);
+        let facts = (0..n_entities * n_attrs)
+            .map(|_| rng.below(n_values))
+            .collect();
+        FactWorld {
+            n_entities,
+            n_attrs,
+            n_values,
+            facts,
+            seed,
+        }
+    }
+
+    pub fn value_of(&self, entity: usize, attr: usize) -> usize {
+        self.facts[entity * self.n_attrs + attr]
+    }
+
+    /// Vocabulary size implied by this world.
+    pub fn vocab_size(&self) -> usize {
+        N_SPECIAL + self.n_entities + self.n_attrs + self.n_values
+    }
+
+    pub fn entity_token(&self, e: usize) -> usize {
+        N_SPECIAL + e
+    }
+
+    pub fn attr_token(&self, a: usize) -> usize {
+        N_SPECIAL + self.n_entities + a
+    }
+
+    pub fn value_token(&self, v: usize) -> usize {
+        N_SPECIAL + self.n_entities + self.n_attrs + v
+    }
+
+    /// One training statement: `<bos> e a v <eos>`.
+    pub fn statement(&self, entity: usize, attr: usize) -> Vec<usize> {
+        vec![
+            BOS,
+            self.entity_token(entity),
+            self.attr_token(attr),
+            self.value_token(self.value_of(entity, attr)),
+            EOS,
+        ]
+    }
+
+    /// Training corpus: every fact stated `repeats` times, shuffled.
+    pub fn corpus(&self, repeats: usize, seed: u64) -> Vec<Vec<usize>> {
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::with_capacity(self.n_entities * self.n_attrs * repeats);
+        for _ in 0..repeats {
+            for e in 0..self.n_entities {
+                for a in 0..self.n_attrs {
+                    out.push(self.statement(e, a));
+                }
+            }
+        }
+        rng.shuffle(&mut out);
+        out
+    }
+}
+
+/// One 4-choice problem.
+#[derive(Clone, Debug, PartialEq)]
+pub struct McqProblem {
+    /// Teacher-forced prompt, e.g. `<bos> e a`.
+    pub prompt: Vec<usize>,
+    /// Option continuations (single value token each).
+    pub options: Vec<Vec<usize>>,
+    /// Index of the correct option in `options`.
+    pub correct: usize,
+}
+
+/// Generate `n` problems (mirrors the ARC set's 1165) with 3 distractor
+/// values per question, deterministic in `seed`.
+pub fn generate_problems(world: &FactWorld, n: usize, seed: u64) -> Vec<McqProblem> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let e = rng.below(world.n_entities);
+        let a = rng.below(world.n_attrs);
+        let v = world.value_of(e, a);
+        // 3 distinct distractors ≠ v.
+        let mut opts = vec![v];
+        while opts.len() < 4 {
+            let d = rng.below(world.n_values);
+            if !opts.contains(&d) {
+                opts.push(d);
+            }
+        }
+        rng.shuffle(&mut opts);
+        let correct = opts.iter().position(|&x| x == v).unwrap();
+        out.push(McqProblem {
+            prompt: vec![BOS, world.entity_token(e), world.attr_token(a)],
+            options: opts
+                .iter()
+                .map(|&o| vec![world.value_token(o)])
+                .collect(),
+            correct,
+        });
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// JSON interchange with python/compile/datagen.py
+// ---------------------------------------------------------------------------
+
+fn tokens_json(toks: &[usize]) -> Json {
+    Json::usizes(toks)
+}
+
+fn tokens_from_json(j: &Json) -> Result<Vec<usize>> {
+    j.as_usize_vec()
+        .ok_or_else(|| anyhow!("expected token array"))
+}
+
+/// Serialize problems to the canonical JSON format.
+pub fn problems_to_json(problems: &[McqProblem], vocab_size: usize) -> Json {
+    Json::obj(vec![
+        ("format", Json::str("synthetic-arc-v1")),
+        ("vocab_size", Json::num(vocab_size as f64)),
+        (
+            "problems",
+            Json::Arr(
+                problems
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("prompt", tokens_json(&p.prompt)),
+                            (
+                                "options",
+                                Json::Arr(p.options.iter().map(|o| tokens_json(o)).collect()),
+                            ),
+                            ("correct", Json::num(p.correct as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Parse the canonical JSON format. Returns (problems, vocab_size).
+pub fn problems_from_json(j: &Json) -> Result<(Vec<McqProblem>, usize)> {
+    match j.get("format").and_then(|f| f.as_str()) {
+        Some("synthetic-arc-v1") => {}
+        other => bail!("unknown problems format {other:?}"),
+    }
+    let vocab_size = j
+        .req("vocab_size")?
+        .as_usize()
+        .ok_or_else(|| anyhow!("bad vocab_size"))?;
+    let mut problems = Vec::new();
+    for pj in j
+        .req("problems")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("problems not an array"))?
+    {
+        let prompt = tokens_from_json(pj.req("prompt")?)?;
+        let options = pj
+            .req("options")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("options not an array"))?
+            .iter()
+            .map(tokens_from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let correct = pj
+            .req("correct")?
+            .as_usize()
+            .ok_or_else(|| anyhow!("bad correct index"))?;
+        if correct >= options.len() {
+            bail!("correct index {correct} out of range");
+        }
+        if options.iter().any(|o| o.is_empty()) {
+            bail!("empty option continuation");
+        }
+        problems.push(McqProblem {
+            prompt,
+            options,
+            correct,
+        });
+    }
+    Ok((problems, vocab_size))
+}
+
+/// Load problems from a JSON file (as written by datagen.py or this crate).
+pub fn load_problems(path: impl AsRef<Path>) -> Result<(Vec<McqProblem>, usize)> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .map_err(|e| anyhow!("reading {}: {e}", path.as_ref().display()))?;
+    problems_from_json(&Json::parse(&text)?)
+}
+
+/// Save problems to a JSON file.
+pub fn save_problems(
+    path: impl AsRef<Path>,
+    problems: &[McqProblem],
+    vocab_size: usize,
+) -> Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(
+        path,
+        problems_to_json(problems, vocab_size).to_string_pretty(),
+    )?;
+    Ok(())
+}
+
+/// Human-readable token name (debugging / the INT2 text probe).
+pub fn token_name(world: &FactWorld, tok: usize) -> String {
+    match tok {
+        PAD => "<pad>".into(),
+        BOS => "<bos>".into(),
+        EOS => "<eos>".into(),
+        SEP => "<sep>".into(),
+        QMARK => "<?>".into(),
+        t if t < N_SPECIAL + world.n_entities => format!("e{}", t - N_SPECIAL),
+        t if t < N_SPECIAL + world.n_entities + world.n_attrs => {
+            format!("a{}", t - N_SPECIAL - world.n_entities)
+        }
+        t if t < world.vocab_size() => {
+            format!("v{}", t - N_SPECIAL - world.n_entities - world.n_attrs)
+        }
+        t => format!("<unk{t}>"),
+    }
+}
+
+/// Summary of a problem set (for reports).
+pub fn problem_stats(problems: &[McqProblem]) -> BTreeMap<String, f64> {
+    let mut m = BTreeMap::new();
+    m.insert("n_problems".into(), problems.len() as f64);
+    let avg_prompt =
+        problems.iter().map(|p| p.prompt.len()).sum::<usize>() as f64 / problems.len() as f64;
+    m.insert("avg_prompt_len".into(), avg_prompt);
+    let n_opts =
+        problems.iter().map(|p| p.options.len()).sum::<usize>() as f64 / problems.len() as f64;
+    m.insert("avg_options".into(), n_opts);
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn world() -> FactWorld {
+        FactWorld::generate(20, 5, 10, 42)
+    }
+
+    #[test]
+    fn world_is_deterministic() {
+        let a = FactWorld::generate(10, 4, 8, 7);
+        let b = FactWorld::generate(10, 4, 8, 7);
+        assert_eq!(a.facts, b.facts);
+    }
+
+    #[test]
+    fn token_spaces_disjoint() {
+        let w = world();
+        let e = w.entity_token(w.n_entities - 1);
+        let a = w.attr_token(0);
+        let v = w.value_token(0);
+        assert!(e < a && a < v);
+        assert!(w.value_token(w.n_values - 1) == w.vocab_size() - 1);
+    }
+
+    #[test]
+    fn statements_encode_facts() {
+        let w = world();
+        let s = w.statement(3, 2);
+        assert_eq!(s.len(), 5);
+        assert_eq!(s[0], BOS);
+        assert_eq!(s[4], EOS);
+        assert_eq!(s[3], w.value_token(w.value_of(3, 2)));
+    }
+
+    #[test]
+    fn corpus_covers_all_facts() {
+        let w = world();
+        let c = w.corpus(2, 1);
+        assert_eq!(c.len(), 2 * w.n_entities * w.n_attrs);
+        // Every fact appears exactly twice.
+        let mut counts = BTreeMap::new();
+        for s in &c {
+            *counts.entry((s[1], s[2])).or_insert(0usize) += 1;
+        }
+        assert!(counts.values().all(|&n| n == 2));
+    }
+
+    #[test]
+    fn problems_have_valid_structure() {
+        let w = world();
+        let ps = generate_problems(&w, 100, 3);
+        assert_eq!(ps.len(), 100);
+        for p in &ps {
+            assert_eq!(p.options.len(), 4);
+            assert!(p.correct < 4);
+            // Options distinct.
+            let mut o = p.options.clone();
+            o.sort();
+            o.dedup();
+            assert_eq!(o.len(), 4);
+            // The correct option matches the world's fact.
+            let e = p.prompt[1] - N_SPECIAL;
+            let a = p.prompt[2] - N_SPECIAL - w.n_entities;
+            let v = w.value_of(e, a);
+            assert_eq!(p.options[p.correct][0], w.value_token(v));
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let w = world();
+        let ps = generate_problems(&w, 25, 9);
+        let j = problems_to_json(&ps, w.vocab_size());
+        let (back, vs) = problems_from_json(&j).unwrap();
+        assert_eq!(vs, w.vocab_size());
+        assert_eq!(back, ps);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let w = world();
+        let ps = generate_problems(&w, 10, 9);
+        let dir = std::env::temp_dir().join("sq_problems");
+        let path = dir.join("p.json");
+        save_problems(&path, &ps, w.vocab_size()).unwrap();
+        let (back, _) = load_problems(&path).unwrap();
+        assert_eq!(back, ps);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_malformed_json() {
+        for bad in [
+            r#"{"format":"nope","vocab_size":5,"problems":[]}"#,
+            r#"{"format":"synthetic-arc-v1","problems":[]}"#,
+            r#"{"format":"synthetic-arc-v1","vocab_size":5,"problems":[{"prompt":[1],"options":[[2]],"correct":3}]}"#,
+        ] {
+            assert!(
+                problems_from_json(&Json::parse(bad).unwrap()).is_err(),
+                "{bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn token_names_cover_vocab() {
+        let w = world();
+        for t in 0..w.vocab_size() {
+            let name = token_name(&w, t);
+            assert!(!name.starts_with("<unk"), "token {t} => {name}");
+        }
+        assert!(token_name(&w, w.vocab_size()).starts_with("<unk"));
+    }
+}

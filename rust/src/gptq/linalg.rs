@@ -1,0 +1,224 @@
+//! Dense symmetric-positive-definite linear algebra for GPTQ-lite:
+//! Cholesky factorization, triangular inversion, and the upper-Cholesky
+//! factor of H⁻¹ that GPTQ's update rule consumes.
+
+/// Add GPTQ damping: H + λ·mean(diag(H))·I. Returns a copy.
+pub fn damped(h: &[f64], n: usize, lambda: f64) -> Vec<f64> {
+    assert_eq!(h.len(), n * n);
+    let mean_diag = (0..n).map(|i| h[i * n + i]).sum::<f64>() / n as f64;
+    let eps = (lambda * mean_diag).max(1e-10);
+    let mut out = h.to_vec();
+    for i in 0..n {
+        out[i * n + i] += eps;
+    }
+    out
+}
+
+/// In-place lower Cholesky: A = L·Lᵀ; lower triangle of `a` becomes L.
+/// Panics on non-PD input (damping prevents this in practice).
+pub fn cholesky_lower(a: &mut [f64], n: usize) {
+    assert_eq!(a.len(), n * n);
+    for j in 0..n {
+        let mut d = a[j * n + j];
+        for k in 0..j {
+            d -= a[j * n + k] * a[j * n + k];
+        }
+        assert!(d > 0.0, "matrix not positive definite at pivot {j} (d={d})");
+        let ljj = d.sqrt();
+        a[j * n + j] = ljj;
+        for i in (j + 1)..n {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= a[i * n + k] * a[j * n + k];
+            }
+            a[i * n + j] = s / ljj;
+        }
+        // Zero the upper part for cleanliness.
+        for k in (j + 1)..n {
+            a[j * n + k] = 0.0;
+        }
+    }
+}
+
+/// Invert a lower-triangular matrix in place (forward substitution
+/// column-by-column).
+pub fn invert_lower(l: &mut [f64], n: usize) {
+    for j in 0..n {
+        l[j * n + j] = 1.0 / l[j * n + j];
+        for i in (j + 1)..n {
+            let mut s = 0.0;
+            for k in j..i {
+                s += l[i * n + k] * l[k * n + j];
+            }
+            l[i * n + j] = -s / l[i * n + i];
+        }
+    }
+}
+
+/// The upper-triangular factor `U` with `H⁻¹ = Uᵀ·U` — what GPTQ's
+/// update rule consumes (torch's `cholesky(inv(H), upper=True)`).
+///
+/// Steps: H = L·Lᵀ → M = L⁻¹ → H⁻¹ = Mᵀ·M (dense symmetric) →
+/// lower-Cholesky H⁻¹ = L₂·L₂ᵀ → U = L₂ᵀ.
+/// Consumes `h` (damped Hessian), returns U row-major [n, n].
+pub fn cholesky_inverse_upper(h: &mut [f64], n: usize) -> Vec<f64> {
+    cholesky_lower(h, n);
+    invert_lower(h, n);
+    // Dense H⁻¹ = Mᵀ·M with M = L⁻¹ (lower): hinv[i][j] = Σ_k M[k][i]·M[k][j]
+    // where k ≥ max(i, j).
+    let mut hinv = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in i..n {
+            let mut s = 0.0;
+            for k in j..n {
+                s += h[k * n + i] * h[k * n + j];
+            }
+            hinv[i * n + j] = s;
+            hinv[j * n + i] = s;
+        }
+    }
+    cholesky_lower(&mut hinv, n);
+    // U = L₂ᵀ.
+    let mut u = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            u[j * n + i] = hinv[i * n + j];
+        }
+    }
+    u
+}
+
+/// Dense symmetric matrix–matrix check helper (tests): C = A·B.
+#[cfg(test)]
+pub fn matmul_f64(a: &[f64], b: &[f64], n: usize) -> Vec<f64> {
+    let mut c = vec![0.0f64; n * n];
+    for i in 0..n {
+        for k in 0..n {
+            let aik = a[i * n + k];
+            if aik == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                c[i * n + j] += aik * b[k * n + j];
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_spd(seed: u64, n: usize) -> Vec<f64> {
+        let mut r = Rng::new(seed);
+        // A = B·Bᵀ + n·I.
+        let b: Vec<f64> = (0..n * n).map(|_| r.normal()).collect();
+        let mut a = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += b[i * n + k] * b[j * n + k];
+                }
+                a[i * n + j] = s;
+            }
+            a[i * n + i] += n as f64;
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let n = 12;
+        let a = random_spd(1, n);
+        let mut l = a.clone();
+        cholesky_lower(&mut l, n);
+        // L·Lᵀ == A.
+        let mut lt = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                lt[i * n + j] = l[j * n + i];
+            }
+        }
+        let rec = matmul_f64(&l, &lt, n);
+        for (x, y) in rec.iter().zip(&a) {
+            assert!((x - y).abs() < 1e-8, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn invert_lower_gives_inverse() {
+        let n = 10;
+        let a = random_spd(2, n);
+        let mut l = a.clone();
+        cholesky_lower(&mut l, n);
+        let l_orig = l.clone();
+        invert_lower(&mut l, n);
+        let prod = matmul_f64(&l_orig, &l, n);
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (prod[i * n + j] - want).abs() < 1e-8,
+                    "({i},{j}): {}",
+                    prod[i * n + j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_inverse_upper_is_hinv_factor() {
+        let n = 8;
+        let a = random_spd(3, n);
+        let mut h = a.clone();
+        let u = cholesky_inverse_upper(&mut h, n);
+        // Uᵀ·U must equal A⁻¹, i.e. A·(Uᵀ·U) == I.
+        let mut ut = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                ut[i * n + j] = u[j * n + i];
+            }
+        }
+        let hinv = matmul_f64(&ut, &u, n);
+        let prod = matmul_f64(&a, &hinv, n);
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (prod[i * n + j] - want).abs() < 1e-7,
+                    "({i},{j}): {}",
+                    prod[i * n + j]
+                );
+            }
+        }
+        // And U is upper triangular.
+        for i in 0..n {
+            for j in 0..i {
+                assert_eq!(u[i * n + j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn damping_preserves_symmetry_and_grows_diag() {
+        let n = 6;
+        let a = random_spd(4, n);
+        let d = damped(&a, n, 0.01);
+        for i in 0..n {
+            assert!(d[i * n + i] > a[i * n + i]);
+            for j in 0..n {
+                assert_eq!(d[i * n + j], d[j * n + i]);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not positive definite")]
+    fn cholesky_rejects_indefinite() {
+        let mut a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        cholesky_lower(&mut a, 2);
+    }
+}

@@ -1,0 +1,88 @@
+//! Checkpoint (FP model) save/load on top of the SQTZ container.
+//!
+//! The trained eval checkpoint is produced by `python/compile/train.py`
+//! with the mirrored writer in `python/compile/sqtz.py`; golden-file
+//! tests in both languages pin the byte format.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::model::{Checkpoint, PicoLlamaConfig};
+
+use super::{read_file, write_file, Entry};
+use anyhow::{anyhow, Result};
+
+/// Save a checkpoint (config embedded in the header).
+pub fn save_checkpoint(path: impl AsRef<Path>, ck: &Checkpoint) -> Result<()> {
+    let entries: Vec<Entry> = ck
+        .tensors
+        .iter()
+        .map(|(name, t)| Entry::f32(name.clone(), t))
+        .collect();
+    write_file(path, &entries, &ck.meta, Some(&ck.config.to_json()))
+}
+
+/// Load a checkpoint and validate it against its embedded config.
+pub fn load_checkpoint(path: impl AsRef<Path>) -> Result<Checkpoint> {
+    let c = read_file(path)?;
+    let config = PicoLlamaConfig::from_json(
+        c.config
+            .as_ref()
+            .ok_or_else(|| anyhow!("checkpoint missing model config"))?,
+    )?;
+    let mut tensors = BTreeMap::new();
+    for name in c.names() {
+        tensors.insert(name.to_string(), c.f32(name)?);
+    }
+    let ck = Checkpoint {
+        config,
+        tensors,
+        meta: c.meta,
+    };
+    ck.validate()?;
+    Ok(ck)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let cfg = PicoLlamaConfig::test();
+        let mut ck = Checkpoint::random_init(&cfg, 5);
+        ck.meta.insert("trained_steps".into(), "0".into());
+        let dir = std::env::temp_dir().join("sqtz_ckpt_test");
+        let path = dir.join("m.sqtz");
+        save_checkpoint(&path, &ck).unwrap();
+        let back = load_checkpoint(&path).unwrap();
+        assert_eq!(back.config, ck.config);
+        assert_eq!(back.meta.get("trained_steps").unwrap(), "0");
+        for (name, t) in &ck.tensors {
+            assert_eq!(back.tensors.get(name).unwrap(), t, "{name}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_invalid_shapes() {
+        // Write a container whose tensor shapes do not match the config.
+        let cfg = PicoLlamaConfig::test();
+        let ck = Checkpoint::random_init(&cfg, 1);
+        let mut entries: Vec<Entry> = ck
+            .tensors
+            .iter()
+            .map(|(n, t)| Entry::f32(n.clone(), t))
+            .collect();
+        // Corrupt one shape.
+        entries[0] = Entry::f32(
+            entries[0].name.clone(),
+            &crate::tensor::Tensor::zeros(&[1, 1]),
+        );
+        let dir = std::env::temp_dir().join("sqtz_ckpt_bad");
+        let path = dir.join("bad.sqtz");
+        super::super::write_file(&path, &entries, &ck.meta, Some(&cfg.to_json())).unwrap();
+        assert!(load_checkpoint(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,381 @@
+//! SQTZ — the cross-language tensor container shared between the Python
+//! build path (`python/compile/sqtz.py`) and this crate.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//!   0      4  magic  b"SQTZ"
+//!   4      4  u32    version (1)
+//!   8      8  u64    header length H
+//!   16     H  bytes  JSON header (UTF-8)
+//!   16+H   …  bytes  tensor payload, each tensor at its header offset
+//! ```
+//!
+//! Header schema:
+//! ```json
+//! { "meta":    { "<key>": "<value>", ... },
+//!   "config":  { ...optional model config... },
+//!   "tensors": { "<name>": { "dtype": "f32|i8|u8|i32",
+//!                            "shape": [..],
+//!                            "offset": 0, "nbytes": 0 }, ... } }
+//! ```
+//!
+//! Offsets are relative to the start of the payload and 16-byte aligned
+//! (safetensors-style) so planes can be mmapped/zero-copied by NPU
+//! toolchains.
+
+pub mod checkpoint;
+pub mod qmodel;
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::tensor::DType;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+
+pub const MAGIC: &[u8; 4] = b"SQTZ";
+pub const VERSION: u32 = 1;
+const ALIGN: usize = 16;
+
+/// One tensor entry to be written.
+pub struct Entry {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub bytes: Vec<u8>,
+}
+
+impl Entry {
+    pub fn f32(name: impl Into<String>, t: &crate::tensor::Tensor) -> Entry {
+        Entry {
+            name: name.into(),
+            dtype: DType::F32,
+            shape: t.shape().to_vec(),
+            bytes: t.to_le_bytes(),
+        }
+    }
+
+    pub fn i8(name: impl Into<String>, t: &crate::tensor::TensorI8) -> Entry {
+        Entry {
+            name: name.into(),
+            dtype: DType::I8,
+            shape: t.shape().to_vec(),
+            bytes: t.data().iter().map(|&v| v as u8).collect(),
+        }
+    }
+
+    pub fn u8(name: impl Into<String>, shape: Vec<usize>, bytes: Vec<u8>) -> Entry {
+        Entry {
+            name: name.into(),
+            dtype: DType::U8,
+            shape,
+            bytes,
+        }
+    }
+}
+
+/// A parsed SQTZ file held in memory.
+pub struct Container {
+    pub meta: BTreeMap<String, String>,
+    pub config: Option<Json>,
+    tensors: BTreeMap<String, (DType, Vec<usize>, Vec<u8>)>,
+}
+
+impl Container {
+    pub fn names(&self) -> Vec<&str> {
+        self.tensors.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.tensors.contains_key(name)
+    }
+
+    pub fn raw(&self, name: &str) -> Result<(&DType, &[usize], &[u8])> {
+        let (d, s, b) = self
+            .tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("tensor '{name}' not in container"))?;
+        Ok((d, s, b))
+    }
+
+    pub fn f32(&self, name: &str) -> Result<crate::tensor::Tensor> {
+        let (d, s, b) = self.raw(name)?;
+        if *d != DType::F32 {
+            bail!("tensor '{name}' is {}, expected f32", d.name());
+        }
+        crate::tensor::Tensor::from_le_bytes(s, b)
+    }
+
+    pub fn i8(&self, name: &str) -> Result<crate::tensor::TensorI8> {
+        let (d, s, b) = self.raw(name)?;
+        if *d != DType::I8 {
+            bail!("tensor '{name}' is {}, expected i8", d.name());
+        }
+        Ok(crate::tensor::TensorI8::new(
+            s,
+            b.iter().map(|&v| v as i8).collect(),
+        ))
+    }
+
+    pub fn u8(&self, name: &str) -> Result<(&[usize], &[u8])> {
+        let (d, s, b) = self.raw(name)?;
+        if *d != DType::U8 {
+            bail!("tensor '{name}' is {}, expected u8", d.name());
+        }
+        Ok((s, b))
+    }
+}
+
+/// Serialize entries + metadata into SQTZ bytes.
+pub fn to_bytes(
+    entries: &[Entry],
+    meta: &BTreeMap<String, String>,
+    config: Option<&Json>,
+) -> Vec<u8> {
+    // Lay out payload with alignment.
+    let mut tensor_json = BTreeMap::new();
+    let mut payload: Vec<u8> = Vec::new();
+    for e in entries {
+        let numel: usize = e.shape.iter().product();
+        let expect = match e.dtype {
+            DType::U8 => e.bytes.len(), // packed planes: free-form length
+            d => numel * d.size_of(),
+        };
+        assert_eq!(
+            e.bytes.len(),
+            expect,
+            "entry '{}' byte length mismatch",
+            e.name
+        );
+        while payload.len() % ALIGN != 0 {
+            payload.push(0);
+        }
+        let offset = payload.len();
+        payload.extend_from_slice(&e.bytes);
+        tensor_json.insert(
+            e.name.clone(),
+            Json::obj(vec![
+                ("dtype", Json::str(e.dtype.name())),
+                ("shape", Json::usizes(&e.shape)),
+                ("offset", Json::num(offset as f64)),
+                ("nbytes", Json::num(e.bytes.len() as f64)),
+            ]),
+        );
+    }
+    let mut header = BTreeMap::new();
+    header.insert(
+        "meta".to_string(),
+        Json::Obj(
+            meta.iter()
+                .map(|(k, v)| (k.clone(), Json::str(v.clone())))
+                .collect(),
+        ),
+    );
+    if let Some(c) = config {
+        header.insert("config".to_string(), c.clone());
+    }
+    header.insert("tensors".to_string(), Json::Obj(tensor_json));
+    let header_bytes = Json::Obj(header).to_string().into_bytes();
+
+    let mut out = Vec::with_capacity(16 + header_bytes.len() + payload.len());
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(header_bytes.len() as u64).to_le_bytes());
+    out.extend_from_slice(&header_bytes);
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Parse SQTZ bytes.
+pub fn from_bytes(data: &[u8]) -> Result<Container> {
+    if data.len() < 16 || &data[0..4] != MAGIC {
+        bail!("not an SQTZ file (bad magic)");
+    }
+    let version = u32::from_le_bytes(data[4..8].try_into().unwrap());
+    if version != VERSION {
+        bail!("unsupported SQTZ version {version}");
+    }
+    let hlen = u64::from_le_bytes(data[8..16].try_into().unwrap()) as usize;
+    if data.len() < 16 + hlen {
+        bail!("truncated header");
+    }
+    let header = Json::parse(
+        std::str::from_utf8(&data[16..16 + hlen]).context("header not UTF-8")?,
+    )?;
+    let payload = &data[16 + hlen..];
+
+    let mut meta = BTreeMap::new();
+    if let Some(m) = header.get("meta").and_then(|m| m.as_obj()) {
+        for (k, v) in m {
+            meta.insert(
+                k.clone(),
+                v.as_str()
+                    .ok_or_else(|| anyhow!("meta '{k}' not a string"))?
+                    .to_string(),
+            );
+        }
+    }
+    let config = header.get("config").cloned();
+
+    let mut tensors = BTreeMap::new();
+    let tj = header
+        .req("tensors")?
+        .as_obj()
+        .ok_or_else(|| anyhow!("'tensors' not an object"))?;
+    for (name, spec) in tj {
+        let dtype = DType::parse(
+            spec.req("dtype")?
+                .as_str()
+                .ok_or_else(|| anyhow!("dtype not a string"))?,
+        )?;
+        let shape = spec
+            .req("shape")?
+            .as_usize_vec()
+            .ok_or_else(|| anyhow!("bad shape for '{name}'"))?;
+        let offset = spec
+            .req("offset")?
+            .as_usize()
+            .ok_or_else(|| anyhow!("bad offset"))?;
+        let nbytes = spec
+            .req("nbytes")?
+            .as_usize()
+            .ok_or_else(|| anyhow!("bad nbytes"))?;
+        if offset + nbytes > payload.len() {
+            bail!(
+                "tensor '{name}' [{offset}..{}) exceeds payload {}",
+                offset + nbytes,
+                payload.len()
+            );
+        }
+        tensors.insert(
+            name.clone(),
+            (dtype, shape, payload[offset..offset + nbytes].to_vec()),
+        );
+    }
+    Ok(Container {
+        meta,
+        config,
+        tensors,
+    })
+}
+
+/// Write SQTZ to a file (atomically via a temp sibling).
+pub fn write_file(
+    path: impl AsRef<Path>,
+    entries: &[Entry],
+    meta: &BTreeMap<String, String>,
+    config: Option<&Json>,
+) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir)?;
+    }
+    let bytes = to_bytes(entries, meta, config);
+    let tmp = path.with_extension("sqtz.tmp");
+    {
+        let mut f = fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(&bytes)?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Read SQTZ from a file.
+pub fn read_file(path: impl AsRef<Path>) -> Result<Container> {
+    let data =
+        fs::read(path.as_ref()).with_context(|| format!("reading {}", path.as_ref().display()))?;
+    from_bytes(&data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Tensor, TensorI8};
+
+    fn sample_entries() -> Vec<Entry> {
+        vec![
+            Entry::f32("a", &Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.])),
+            Entry::i8("b", &TensorI8::new(&[4], vec![-8, 0, 7, 1])),
+            Entry::u8("c", vec![5], vec![0xAB, 0xCD, 0x01, 0x02, 0x03]),
+        ]
+    }
+
+    #[test]
+    fn roundtrip_in_memory() {
+        let meta = BTreeMap::from([("k".to_string(), "v".to_string())]);
+        let cfg = Json::obj(vec![("d_model", Json::num(32.0))]);
+        let bytes = to_bytes(&sample_entries(), &meta, Some(&cfg));
+        let c = from_bytes(&bytes).unwrap();
+        assert_eq!(c.meta.get("k").unwrap(), "v");
+        assert_eq!(
+            c.config.as_ref().unwrap().get("d_model").unwrap().as_usize(),
+            Some(32)
+        );
+        let a = c.f32("a").unwrap();
+        assert_eq!(a.shape(), &[2, 3]);
+        assert_eq!(a.data()[4], 5.0);
+        assert_eq!(c.i8("b").unwrap().data(), &[-8, 0, 7, 1]);
+        let (shape, raw) = c.u8("c").unwrap();
+        assert_eq!(shape, &[5]);
+        assert_eq!(raw, &[0xAB, 0xCD, 0x01, 0x02, 0x03]);
+    }
+
+    #[test]
+    fn offsets_are_aligned() {
+        let bytes = to_bytes(&sample_entries(), &BTreeMap::new(), None);
+        let c = from_bytes(&bytes).unwrap();
+        // Check by parsing header manually through the container API: the
+        // payload copies are correct, which the roundtrip already checks;
+        // verify alignment via the raw header.
+        let hlen = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        let header = Json::parse(std::str::from_utf8(&bytes[16..16 + hlen]).unwrap()).unwrap();
+        for (_, spec) in header.get("tensors").unwrap().as_obj().unwrap() {
+            let off = spec.get("offset").unwrap().as_usize().unwrap();
+            assert_eq!(off % ALIGN, 0, "offset {off} unaligned");
+        }
+        assert!(c.contains("a") && !c.contains("zzz"));
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("sqtz_test");
+        let path = dir.join("x.sqtz");
+        write_file(&path, &sample_entries(), &BTreeMap::new(), None).unwrap();
+        let c = read_file(&path).unwrap();
+        assert_eq!(c.names().len(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let bytes = to_bytes(&sample_entries(), &BTreeMap::new(), None);
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(from_bytes(&bad).is_err());
+        // Bad version.
+        let mut bad = bytes.clone();
+        bad[4] = 99;
+        assert!(from_bytes(&bad).is_err());
+        // Truncated payload.
+        let bad = &bytes[..bytes.len() - 4];
+        assert!(from_bytes(bad).is_err());
+        // Truncated header.
+        assert!(from_bytes(&bytes[..20]).is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let bytes = to_bytes(&sample_entries(), &BTreeMap::new(), None);
+        let c = from_bytes(&bytes).unwrap();
+        assert!(c.f32("b").is_err());
+        assert!(c.i8("a").is_err());
+        assert!(c.u8("a").is_err());
+        assert!(c.f32("missing").is_err());
+    }
+}

@@ -1,0 +1,375 @@
+//! Quantized-model container: packed integer planes + quantization
+//! manifest, on top of SQTZ. This is the deployable artifact a target
+//! NPU toolchain would ingest (E4 measures its size on disk).
+//!
+//! Entry naming:
+//! * `lin.<param>.p<i>` — packed plane i of a linear layer (u8, bit-packed)
+//! * `lin.<param>.eff`  — OCS layers: folded effective weight (f32)
+//! * `emb.plane`        — packed embedding plane (u8)
+//! * `emb.scales` / `emb.zps` — per-row embedding params (f32)
+//! * `fp.<param>`       — FP32 passthrough (norm gains)
+//!
+//! The quantization manifest (scales, zero-points, cluster boundaries,
+//! strategy) lives in `meta["quant_manifest"]` as JSON.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::kmeans::Clustering1D;
+use crate::model::quantized::{QuantParam, QuantizedModel};
+use crate::model::PicoLlamaConfig;
+use crate::quant::{pack, Bits, Granularity, QuantParams, QuantizedTensor};
+use crate::split::{QuantizedSplitLayer, Strategy};
+use crate::tensor::{Tensor, TensorI8};
+use crate::util::json::Json;
+
+use super::{read_file, write_file, Entry};
+use anyhow::{anyhow, bail, Result};
+
+fn params_json(p: &QuantParams) -> Json {
+    Json::obj(vec![
+        ("scale", Json::num(p.scale)),
+        ("zero_point", Json::num(p.zero_point as f64)),
+    ])
+}
+
+fn params_from_json(j: &Json, bits: Bits) -> Result<QuantParams> {
+    Ok(QuantParams {
+        bits,
+        scale: j.req("scale")?.as_f64().ok_or_else(|| anyhow!("bad scale"))?,
+        zero_point: j
+            .req("zero_point")?
+            .as_i64()
+            .ok_or_else(|| anyhow!("bad zero_point"))? as i32,
+    })
+}
+
+fn clustering_json(c: &Clustering1D) -> Json {
+    Json::obj(vec![
+        (
+            "centroids",
+            Json::Arr(c.centroids.iter().map(|&v| Json::num(v)).collect()),
+        ),
+        (
+            "boundaries",
+            Json::Arr(c.boundaries.iter().map(|&v| Json::num(v)).collect()),
+        ),
+        ("inertia", Json::num(c.inertia)),
+        (
+            "sizes",
+            Json::Arr(c.sizes.iter().map(|&v| Json::num(v)).collect()),
+        ),
+    ])
+}
+
+fn clustering_from_json(j: &Json) -> Result<Clustering1D> {
+    let nums = |k: &str| -> Result<Vec<f64>> {
+        j.req(k)?
+            .as_arr()
+            .ok_or_else(|| anyhow!("bad '{k}'"))?
+            .iter()
+            .map(|v| v.as_f64().ok_or_else(|| anyhow!("bad number in '{k}'")))
+            .collect()
+    };
+    Ok(Clustering1D {
+        centroids: nums("centroids")?,
+        boundaries: nums("boundaries")?,
+        inertia: j.req("inertia")?.as_f64().unwrap_or(0.0),
+        sizes: nums("sizes")?,
+        member_ranges: None,
+    })
+}
+
+/// Save a quantized model.
+pub fn save_qmodel(path: impl AsRef<Path>, qm: &QuantizedModel) -> Result<()> {
+    let bits = qm.bits;
+    let mut entries = Vec::new();
+    let mut lin_manifest = BTreeMap::new();
+
+    for (name, qp) in &qm.linears {
+        match qp {
+            QuantParam::Plain(q) => {
+                entries.push(Entry::u8(
+                    format!("lin.{name}.p0"),
+                    q.plane.shape().to_vec(),
+                    pack::pack(q.plane.data(), bits),
+                ));
+                lin_manifest.insert(
+                    name.clone(),
+                    Json::obj(vec![
+                        ("kind", Json::str("plain")),
+                        ("planes", Json::Arr(vec![params_json(&q.params[0])])),
+                    ]),
+                );
+            }
+            QuantParam::Split(s) => {
+                let mut planes = Vec::new();
+                for (i, p) in s.planes.iter().enumerate() {
+                    entries.push(Entry::u8(
+                        format!("lin.{name}.p{i}"),
+                        p.plane.shape().to_vec(),
+                        pack::pack(p.plane.data(), bits),
+                    ));
+                    planes.push(params_json(&p.params[0]));
+                }
+                lin_manifest.insert(
+                    name.clone(),
+                    Json::obj(vec![
+                        ("kind", Json::str("split")),
+                        (
+                            "strategy",
+                            Json::str(match s.strategy {
+                                Strategy::MaskedSum => "masked_sum",
+                                Strategy::RowWise => "row_wise",
+                            }),
+                        ),
+                        ("planes", Json::Arr(planes)),
+                        ("clustering", clustering_json(&s.clustering)),
+                    ]),
+                );
+            }
+            QuantParam::OcsEffective {
+                effective,
+                packed_len,
+            } => {
+                entries.push(Entry::f32(format!("lin.{name}.eff"), effective));
+                lin_manifest.insert(
+                    name.clone(),
+                    Json::obj(vec![
+                        ("kind", Json::str("ocs")),
+                        ("packed_len", Json::num(*packed_len as f64)),
+                    ]),
+                );
+            }
+        }
+    }
+
+    // Embedding: per-row params.
+    let emb = &qm.embedding;
+    entries.push(Entry::u8(
+        "emb.plane".to_string(),
+        emb.plane.shape().to_vec(),
+        pack::pack(emb.plane.data(), bits),
+    ));
+    // Scales must round-trip losslessly (f64): raw little-endian bytes.
+    let mut scale_bytes = Vec::with_capacity(emb.params.len() * 8);
+    for p in &emb.params {
+        scale_bytes.extend_from_slice(&p.scale.to_le_bytes());
+    }
+    entries.push(Entry::u8(
+        "emb.scales64".to_string(),
+        vec![emb.params.len()],
+        scale_bytes,
+    ));
+    entries.push(Entry::f32(
+        "emb.zps",
+        &Tensor::from_vec(emb.params.iter().map(|p| p.zero_point as f32).collect()),
+    ));
+
+    for (name, t) in &qm.fp_tensors {
+        entries.push(Entry::f32(format!("fp.{name}"), t));
+    }
+
+    let manifest = Json::obj(vec![
+        ("bits", Json::num(bits.width() as f64)),
+        ("method", Json::str(qm.method_name.clone())),
+        ("linears", Json::Obj(lin_manifest)),
+    ]);
+    let meta = BTreeMap::from([
+        ("quant_manifest".to_string(), manifest.to_string()),
+        ("format".to_string(), "splitquant-qmodel".to_string()),
+    ]);
+    write_file(path, &entries, &meta, Some(&qm.config.to_json()))
+}
+
+/// Load a quantized model.
+pub fn load_qmodel(path: impl AsRef<Path>) -> Result<QuantizedModel> {
+    let c = read_file(path)?;
+    let config = PicoLlamaConfig::from_json(
+        c.config
+            .as_ref()
+            .ok_or_else(|| anyhow!("qmodel missing config"))?,
+    )?;
+    let manifest = Json::parse(
+        c.meta
+            .get("quant_manifest")
+            .ok_or_else(|| anyhow!("missing quant_manifest"))?,
+    )?;
+    let bits = Bits::from_width(
+        manifest
+            .req("bits")?
+            .as_usize()
+            .ok_or_else(|| anyhow!("bad bits"))?,
+    )?;
+    let method_name = manifest
+        .req("method")?
+        .as_str()
+        .ok_or_else(|| anyhow!("bad method"))?
+        .to_string();
+
+    let unpack_plane = |entry: &str| -> Result<TensorI8> {
+        let (shape, raw) = c.u8(entry)?;
+        let n: usize = shape.iter().product();
+        Ok(TensorI8::new(shape, pack::unpack(raw, n, bits)?))
+    };
+
+    let mut linears = BTreeMap::new();
+    for (name, spec) in manifest
+        .req("linears")?
+        .as_obj()
+        .ok_or_else(|| anyhow!("bad linears"))?
+    {
+        let kind = spec.req("kind")?.as_str().unwrap_or("");
+        let qp = match kind {
+            "plain" => {
+                let plane = unpack_plane(&format!("lin.{name}.p0"))?;
+                let params = params_from_json(&spec.req("planes")?.as_arr().unwrap()[0], bits)?;
+                QuantParam::Plain(QuantizedTensor {
+                    plane,
+                    granularity: Granularity::PerTensor,
+                    params: vec![params],
+                })
+            }
+            "split" => {
+                let plane_specs = spec.req("planes")?.as_arr().unwrap().to_vec();
+                let mut planes = Vec::new();
+                for (i, pj) in plane_specs.iter().enumerate() {
+                    planes.push(QuantizedTensor {
+                        plane: unpack_plane(&format!("lin.{name}.p{i}"))?,
+                        granularity: Granularity::PerTensor,
+                        params: vec![params_from_json(pj, bits)?],
+                    });
+                }
+                let strategy = match spec.req("strategy")?.as_str().unwrap_or("") {
+                    "masked_sum" => Strategy::MaskedSum,
+                    "row_wise" => Strategy::RowWise,
+                    s => bail!("unknown strategy '{s}'"),
+                };
+                QuantParam::Split(QuantizedSplitLayer {
+                    planes,
+                    clustering: clustering_from_json(spec.req("clustering")?)?,
+                    strategy,
+                })
+            }
+            "ocs" => QuantParam::OcsEffective {
+                effective: c.f32(&format!("lin.{name}.eff"))?,
+                packed_len: spec
+                    .req("packed_len")?
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("bad packed_len"))?,
+            },
+            k => bail!("unknown linear kind '{k}'"),
+        };
+        linears.insert(name.clone(), qp);
+    }
+
+    // Embedding.
+    let plane = unpack_plane("emb.plane")?;
+    let (sshape, sraw) = c.u8("emb.scales64")?;
+    let n_rows = sshape.iter().product::<usize>();
+    if sraw.len() != n_rows * 8 {
+        bail!("emb.scales64 length mismatch");
+    }
+    let scales: Vec<f64> = sraw
+        .chunks_exact(8)
+        .map(|b| f64::from_le_bytes(b.try_into().unwrap()))
+        .collect();
+    let zps = c.f32("emb.zps")?;
+    let params: Vec<QuantParams> = scales
+        .iter()
+        .zip(zps.data())
+        .map(|(&s, &z)| QuantParams {
+            bits,
+            scale: s,
+            zero_point: z as i32,
+        })
+        .collect();
+    let embedding = QuantizedTensor {
+        plane,
+        granularity: Granularity::PerChannel,
+        params,
+    };
+
+    let mut fp_tensors = BTreeMap::new();
+    for name in c.names() {
+        if let Some(stripped) = name.strip_prefix("fp.") {
+            fp_tensors.insert(stripped.to_string(), c.f32(name)?);
+        }
+    }
+
+    Ok(QuantizedModel {
+        config,
+        bits,
+        method_name,
+        linears,
+        embedding,
+        fp_tensors,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::quantized::{quantize_model, Method};
+    use crate::model::Checkpoint;
+    use crate::split::SplitConfig;
+
+    fn roundtrip(method: &Method, bits: Bits) {
+        let ck = Checkpoint::random_init(&PicoLlamaConfig::test(), 11);
+        let qm = quantize_model(&ck, bits, method).unwrap();
+        let dir = std::env::temp_dir().join(format!(
+            "sqtz_qm_{}_{}",
+            qm.method_name.replace(['(', ')', '=', '≤'], "_"),
+            bits.width()
+        ));
+        let path = dir.join("q.sqtz");
+        save_qmodel(&path, &qm).unwrap();
+        let back = load_qmodel(&path).unwrap();
+        assert_eq!(back.bits, qm.bits);
+        assert_eq!(back.method_name, qm.method_name);
+        // Effective checkpoints must be identical (quantization is the
+        // only lossy step; serialization is exact).
+        let a = qm.effective_checkpoint();
+        let b = back.effective_checkpoint();
+        for (name, t) in &a.tensors {
+            assert_eq!(b.tensors.get(name).unwrap(), t, "{name}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn roundtrip_baseline_all_bits() {
+        for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+            roundtrip(&Method::Baseline, bits);
+        }
+    }
+
+    #[test]
+    fn roundtrip_split() {
+        roundtrip(&Method::SplitQuant(SplitConfig::default()), Bits::Int4);
+        roundtrip(&Method::SplitQuant(SplitConfig::with_k(2)), Bits::Int2);
+    }
+
+    #[test]
+    fn roundtrip_ocs() {
+        roundtrip(&Method::Ocs { expand_ratio: 0.05 }, Bits::Int4);
+    }
+
+    #[test]
+    fn on_disk_size_tracks_packed_bytes() {
+        let ck = Checkpoint::random_init(&PicoLlamaConfig::test(), 12);
+        let qm = quantize_model(&ck, Bits::Int4, &Method::Baseline).unwrap();
+        let dir = std::env::temp_dir().join("sqtz_qm_size");
+        let path = dir.join("q.sqtz");
+        save_qmodel(&path, &qm).unwrap();
+        let disk = std::fs::metadata(&path).unwrap().len();
+        let logical = qm.packed_bytes();
+        // Disk = logical + header + alignment; must be within 25%.
+        assert!(disk >= logical, "disk {disk} < logical {logical}");
+        assert!(
+            (disk as f64) < logical as f64 * 1.25 + 4096.0,
+            "disk {disk} ≫ logical {logical}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

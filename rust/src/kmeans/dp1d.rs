@@ -1,0 +1,332 @@
+//! Exact 1-D k-means by dynamic programming.
+//!
+//! Optimal 1-D k-means clusters are contiguous intervals of the sorted
+//! input (a classical result; see Wang & Song, "Ckmeans.1d.dp"). With
+//! prefix sums the within-cluster cost of any interval is O(1), and the
+//! DP layer recurrence
+//!
+//!   D_k(i) = min_{m ≤ i} D_{k-1}(m) + cost(m, i)
+//!
+//! has monotone optimal split points, so each layer is computed with
+//! divide-and-conquer in O(n log n) — O(k·n log n) total, exact.
+//!
+//! Supports weighted points (the histogram path feeds bin centers with
+//! counts); the unweighted API wraps weights of 1.
+
+use super::Clustering1D;
+
+/// Weighted sorted-input DP. `xs` must be ascending; `ws[i] > 0`.
+pub fn kmeans_weighted_sorted(xs: &[f64], ws: &[f64], k: usize) -> Clustering1D {
+    assert_eq!(xs.len(), ws.len());
+    assert!(k >= 1, "k must be >= 1");
+    let n = xs.len();
+    assert!(n > 0, "kmeans on empty input");
+    debug_assert!(xs.windows(2).all(|w| w[0] <= w[1]), "input must be sorted");
+
+    // Effective k: cannot exceed the number of distinct values.
+    let distinct = {
+        let mut d = 1;
+        for w in xs.windows(2) {
+            if w[1] > w[0] {
+                d += 1;
+            }
+        }
+        d
+    };
+    let k = k.min(distinct);
+
+    // Prefix sums: weight, weight*x, weight*x^2.
+    let mut pw = vec![0.0f64; n + 1];
+    let mut ps = vec![0.0f64; n + 1];
+    let mut pss = vec![0.0f64; n + 1];
+    for i in 0..n {
+        pw[i + 1] = pw[i] + ws[i];
+        ps[i + 1] = ps[i] + ws[i] * xs[i];
+        pss[i + 1] = pss[i] + ws[i] * xs[i] * xs[i];
+    }
+    // Within-cluster sum of squares for half-open interval [a, b).
+    let cost = |a: usize, b: usize| -> f64 {
+        let w = pw[b] - pw[a];
+        if w <= 0.0 {
+            return 0.0;
+        }
+        let s = ps[b] - ps[a];
+        let ss = pss[b] - pss[a];
+        (ss - s * s / w).max(0.0) // clamp tiny negative fp residue
+    };
+
+    // D[i] = best cost of clustering the first i points into the current
+    // number of layers; splits[layer][i] = argmin split for backtracking.
+    let mut prev = vec![0.0f64; n + 1];
+    for i in 1..=n {
+        prev[i] = cost(0, i);
+    }
+    let mut splits: Vec<Vec<usize>> = Vec::with_capacity(k);
+    splits.push(vec![0; n + 1]); // layer 1: everything in one cluster
+
+    for _layer in 2..=k {
+        let mut cur = vec![f64::INFINITY; n + 1];
+        let mut arg = vec![0usize; n + 1];
+        cur[0] = 0.0;
+        // Divide and conquer over i in [layer, n], opt split in [layer-1, i].
+        dnc(&mut cur, &mut arg, &prev, &cost, 1, n, 1, n);
+        prev = cur;
+        splits.push(arg);
+    }
+
+    // Backtrack boundaries (indices where clusters split).
+    let mut edges = vec![n]; // exclusive end of last cluster
+    let mut i = n;
+    for layer in (1..k).rev() {
+        let m = splits[layer][i];
+        edges.push(m);
+        i = m;
+    }
+    edges.push(0);
+    edges.reverse(); // [0, m1, m2, ..., n]
+
+    let mut centroids = Vec::with_capacity(k);
+    let mut sizes = Vec::with_capacity(k);
+    let mut boundaries = Vec::with_capacity(k.saturating_sub(1));
+    let mut member_ranges = Vec::with_capacity(k);
+    for c in 0..k {
+        let (a, b) = (edges[c], edges[c + 1]);
+        let w = pw[b] - pw[a];
+        centroids.push(if w > 0.0 { (ps[b] - ps[a]) / w } else { xs[a] });
+        sizes.push(w);
+        // Clusters are contiguous intervals of the sorted input, so the
+        // member extremes are the interval edges (exact, no extra pass).
+        member_ranges.push((xs[a] as f32, xs[b - 1] as f32));
+        if c + 1 < k {
+            // Exact decision boundary between adjacent intervals: any value
+            // in (xs[b-1], xs[b]) separates them; use the midpoint.
+            boundaries.push(0.5 * (xs[b - 1] + xs[b]));
+        }
+    }
+
+    Clustering1D {
+        centroids,
+        boundaries,
+        inertia: prev[n],
+        sizes,
+        member_ranges: Some(member_ranges),
+    }
+}
+
+/// Divide-and-conquer DP layer fill: for i in [ilo, ihi], cur[i] =
+/// min over m in [mlo, mhi∩(0..i]] of prev[m] + cost(m, i); exploits
+/// monotonicity of the argmin.
+fn dnc(
+    cur: &mut [f64],
+    arg: &mut [usize],
+    prev: &[f64],
+    cost: &impl Fn(usize, usize) -> f64,
+    ilo: usize,
+    ihi: usize,
+    mlo: usize,
+    mhi: usize,
+) {
+    if ilo > ihi {
+        return;
+    }
+    let i = (ilo + ihi) / 2;
+    let mut best = f64::INFINITY;
+    let mut best_m = mlo;
+    let hi = mhi.min(i);
+    for m in mlo..=hi {
+        let v = prev[m] + cost(m, i);
+        if v < best {
+            best = v;
+            best_m = m;
+        }
+    }
+    cur[i] = best;
+    arg[i] = best_m;
+    if ilo < i {
+        dnc(cur, arg, prev, cost, ilo, i - 1, mlo, best_m);
+    }
+    if i < ihi {
+        dnc(cur, arg, prev, cost, i + 1, ihi, best_m, mhi);
+    }
+}
+
+/// Exact k-means of unsorted f32 values (sorts a copy).
+pub fn kmeans_exact(values: &[f32], k: usize) -> Clustering1D {
+    let mut xs: Vec<f64> = values.iter().map(|&v| v as f64).collect();
+    xs.sort_by(|a, b| a.partial_cmp(b).expect("NaN in k-means input"));
+    let ws = vec![1.0f64; xs.len()];
+    kmeans_weighted_sorted(&xs, &ws, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kmeans::inertia_of;
+    use crate::util::rng::Rng;
+
+    /// Brute-force optimal clustering by trying all contiguous partitions.
+    fn brute_force(values: &[f32], k: usize) -> f64 {
+        let mut xs: Vec<f64> = values.iter().map(|&v| v as f64).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let cost = |a: usize, b: usize| -> f64 {
+            let seg = &xs[a..b];
+            let m = seg.iter().sum::<f64>() / seg.len() as f64;
+            seg.iter().map(|x| (x - m) * (x - m)).sum()
+        };
+        // Enumerate split points.
+        fn rec(cost: &dyn Fn(usize, usize) -> f64, start: usize, n: usize, k: usize) -> f64 {
+            if k == 1 {
+                return cost(start, n);
+            }
+            let mut best = f64::INFINITY;
+            for m in start + 1..=n - (k - 1) {
+                let c = cost(start, m) + rec(cost, m, n, k - 1);
+                if c < best {
+                    best = c;
+                }
+            }
+            best
+        }
+        rec(&cost, 0, n, k.min(n))
+    }
+
+    #[test]
+    fn trivial_cases() {
+        let c = kmeans_exact(&[5.0], 3);
+        assert_eq!(c.k(), 1);
+        assert_eq!(c.centroids, vec![5.0]);
+        assert_eq!(c.inertia, 0.0);
+
+        let c = kmeans_exact(&[1.0, 1.0, 1.0], 3);
+        assert_eq!(c.k(), 1, "identical values collapse to one cluster");
+    }
+
+    #[test]
+    fn separates_obvious_blobs() {
+        let vals = [-10.0, -9.8, -10.2, 0.1, -0.1, 0.0, 9.9, 10.0, 10.1f32];
+        let c = kmeans_exact(&vals, 3);
+        assert_eq!(c.k(), 3);
+        assert!((c.centroids[0] + 10.0).abs() < 0.1);
+        assert!(c.centroids[1].abs() < 0.1);
+        assert!((c.centroids[2] - 10.0).abs() < 0.1);
+        // Every point lands in its blob.
+        for &v in &vals {
+            let cl = c.assign(v);
+            let expected = if v < -5.0 {
+                0
+            } else if v < 5.0 {
+                1
+            } else {
+                2
+            };
+            assert_eq!(cl, expected, "value {v}");
+        }
+    }
+
+    #[test]
+    fn matches_brute_force_on_random_inputs() {
+        let mut r = Rng::new(123);
+        for trial in 0..30 {
+            let n = 4 + r.below(12);
+            let k = 1 + r.below(4.min(n));
+            let vals: Vec<f32> = (0..n).map(|_| r.normal_f32(0.0, 3.0)).collect();
+            let dp = kmeans_weighted_sorted(
+                &{
+                    let mut s: Vec<f64> = vals.iter().map(|&v| v as f64).collect();
+                    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    s
+                },
+                &vec![1.0; n],
+                k,
+            );
+            let bf = brute_force(&vals, k);
+            assert!(
+                (dp.inertia - bf).abs() < 1e-6 * (1.0 + bf),
+                "trial {trial}: dp={} bf={} (n={n}, k={k})",
+                dp.inertia,
+                bf
+            );
+        }
+    }
+
+    #[test]
+    fn inertia_matches_assignment_inertia() {
+        let mut r = Rng::new(7);
+        let vals: Vec<f32> = (0..500).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let c = kmeans_exact(&vals, 3);
+        let recomputed = inertia_of(&vals, &c);
+        assert!(
+            (c.inertia - recomputed).abs() < 1e-6 * (1.0 + c.inertia),
+            "dp inertia {} vs recomputed {}",
+            c.inertia,
+            recomputed
+        );
+    }
+
+    #[test]
+    fn weights_scale_like_duplication() {
+        // Weighted points == duplicated points.
+        let xs = [1.0, 2.0, 10.0];
+        let ws = [3.0, 1.0, 2.0];
+        let dup: Vec<f32> = vec![1.0, 1.0, 1.0, 2.0, 10.0, 10.0];
+        let a = kmeans_weighted_sorted(&xs, &ws, 2);
+        let b = kmeans_exact(&dup, 2);
+        assert!((a.inertia - b.inertia).abs() < 1e-9);
+        for (x, y) in a.centroids.iter().zip(&b.centroids) {
+            assert!((x - y).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn monotone_inertia_in_k() {
+        let mut r = Rng::new(99);
+        let vals: Vec<f32> = (0..300).map(|_| r.heavy_tailed(3.0) as f32).collect();
+        let mut last = f64::INFINITY;
+        for k in 1..=5 {
+            let c = kmeans_exact(&vals, k);
+            assert!(c.inertia <= last + 1e-9, "k={k}");
+            last = c.inertia;
+        }
+    }
+
+    #[test]
+    fn centroids_strictly_ascending() {
+        let mut r = Rng::new(5);
+        let vals: Vec<f32> = (0..1000).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let c = kmeans_exact(&vals, 4);
+        for w in c.centroids.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        assert_eq!(c.boundaries.len(), c.k() - 1);
+    }
+
+    #[test]
+    fn outliers_get_isolated() {
+        // The paper's motivating case: a dense middle + a few extreme
+        // outliers. k=3 must put outliers in the edge clusters.
+        let mut r = Rng::new(31);
+        let mut vals: Vec<f32> = (0..2000).map(|_| r.normal_f32(0.0, 0.05)).collect();
+        vals.push(12.0);
+        vals.push(13.0);
+        vals.push(-11.0);
+        let c = kmeans_exact(&vals, 3);
+        assert_eq!(c.k(), 3);
+        assert_eq!(c.assign(-11.0), 0);
+        assert_eq!(c.assign(12.5), 2);
+        assert_eq!(c.assign(0.0), 1);
+        // Middle cluster holds the overwhelming majority.
+        assert!(c.sizes[1] > 1990.0);
+        // The members of the middle cluster span a tiny range versus the
+        // full data range (this is the resolution win the paper is about).
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &v in &vals {
+            if c.assign(v) == 1 {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+        }
+        let mid_width = (hi - lo) as f64;
+        assert!(mid_width < 24.0 * 0.05, "mid width {mid_width}");
+    }
+}

@@ -1,0 +1,201 @@
+//! Histogram-compressed 1-D k-means — the production path for layers with
+//! millions of weights.
+//!
+//! Weight values are bucketed into `bins` equal-width bins over
+//! [min, max]; each non-empty bin contributes one weighted point (its
+//! *mean*, not its center, so first moments are exact) to the exact DP of
+//! [`super::dp1d`]. Complexity: one O(n) pass + O(k·B log B) DP with
+//! B = bins. Error versus exact k-means is bounded by the bin width,
+//! which at the default 4096 bins is orders of magnitude below the INT4
+//! quantization step the clusters feed into.
+
+use super::dp1d::kmeans_weighted_sorted;
+use super::Clustering1D;
+
+pub const DEFAULT_BINS: usize = 4096;
+
+/// Histogram k-means of raw values.
+pub fn kmeans_hist(values: &[f32], k: usize, bins: usize) -> Clustering1D {
+    assert!(!values.is_empty(), "kmeans on empty input");
+    assert!(bins >= 2);
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &v in values {
+        let v = v as f64;
+        if v < lo {
+            lo = v;
+        }
+        if v > hi {
+            hi = v;
+        }
+    }
+    if lo == hi {
+        // Constant input: single cluster.
+        return Clustering1D {
+            centroids: vec![lo],
+            boundaries: vec![],
+            inertia: 0.0,
+            sizes: vec![values.len() as f64],
+            member_ranges: Some(vec![(lo as f32, hi as f32)]),
+        };
+    }
+
+    let inv_width = bins as f64 / (hi - lo);
+    let mut count = vec![0.0f64; bins];
+    let mut sum = vec![0.0f64; bins];
+    let mut sumsq = vec![0.0f64; bins];
+    // Per-bin member extremes (f32): lets the split hot path derive exact
+    // per-cluster quantization ranges without re-scanning the weights.
+    let mut bmin = vec![f32::INFINITY; bins];
+    let mut bmax = vec![f32::NEG_INFINITY; bins];
+    for &vf in values {
+        let v = vf as f64;
+        let b = (((v - lo) * inv_width) as usize).min(bins - 1);
+        count[b] += 1.0;
+        sum[b] += v;
+        sumsq[b] += v * v;
+        if vf < bmin[b] {
+            bmin[b] = vf;
+        }
+        if vf > bmax[b] {
+            bmax[b] = vf;
+        }
+    }
+
+    // Non-empty bins → weighted points at bin means (ascending because
+    // bins are ordered and means lie inside their bins).
+    let mut xs = Vec::with_capacity(bins);
+    let mut ws = Vec::with_capacity(bins);
+    let mut pmin = Vec::with_capacity(bins); // per-point member extremes
+    let mut pmax = Vec::with_capacity(bins);
+    let mut resid = 0.0f64; // within-bin variance, an exact inertia floor
+    for b in 0..bins {
+        if count[b] > 0.0 {
+            let m = sum[b] / count[b];
+            xs.push(m);
+            ws.push(count[b]);
+            pmin.push(bmin[b]);
+            pmax.push(bmax[b]);
+            resid += (sumsq[b] - sum[b] * m).max(0.0);
+        }
+    }
+
+    let mut c = kmeans_weighted_sorted(&xs, &ws, k);
+    // The DP's inertia is between bin means; add the within-bin residual
+    // so the reported inertia approximates the true value-level inertia.
+    c.inertia += resid;
+
+    // Rewrite boundaries + member ranges at *value* granularity: the DP
+    // clusters whole bins, so the separator between clusters c and c+1 is
+    // any value between the last member of c and the first member of c+1
+    // — use the midpoint of the tracked extremes so `assign(v)` agrees
+    // exactly with bin membership for every observed value, and the
+    // member ranges are the exact per-cluster min/max (§Perf opt #3).
+    let kk = c.k();
+    if kk >= 1 {
+        // Recover the bin partition from the DP boundaries (bin means are
+        // the DP points, correctly separated by its midpoint boundaries).
+        let mut ranges = vec![(f32::INFINITY, f32::NEG_INFINITY); kk];
+        let mut cur = 0usize;
+        let mut last_max: Vec<f32> = vec![f32::NEG_INFINITY; kk];
+        let mut first_min: Vec<f32> = vec![f32::INFINITY; kk];
+        for (i, &x) in xs.iter().enumerate() {
+            while cur < kk - 1 && x > c.boundaries[cur] {
+                cur += 1;
+            }
+            let r = &mut ranges[cur];
+            if pmin[i] < r.0 {
+                r.0 = pmin[i];
+            }
+            if pmax[i] > r.1 {
+                r.1 = pmax[i];
+            }
+            if pmin[i] < first_min[cur] {
+                first_min[cur] = pmin[i];
+            }
+            if pmax[i] > last_max[cur] {
+                last_max[cur] = pmax[i];
+            }
+        }
+        for j in 0..kk - 1 {
+            c.boundaries[j] = 0.5 * (last_max[j] as f64 + first_min[j + 1] as f64);
+        }
+        c.member_ranges = Some(ranges);
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kmeans::{dp1d::kmeans_exact, inertia_of};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn constant_input() {
+        let c = kmeans_hist(&[2.5; 100], 3, 64);
+        assert_eq!(c.k(), 1);
+        assert_eq!(c.centroids, vec![2.5]);
+    }
+
+    #[test]
+    fn close_to_exact_on_gaussian() {
+        let mut r = Rng::new(42);
+        let vals: Vec<f32> = (0..20_000).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let exact = kmeans_exact(&vals, 3);
+        let hist = kmeans_hist(&vals, 3, DEFAULT_BINS);
+        assert_eq!(hist.k(), 3);
+        for (a, b) in exact.centroids.iter().zip(&hist.centroids) {
+            assert!((a - b).abs() < 0.02, "centroid {a} vs {b}");
+        }
+        // Inertia within 1% of exact.
+        assert!(
+            (hist.inertia - exact.inertia).abs() < 0.01 * exact.inertia,
+            "exact={} hist={}",
+            exact.inertia,
+            hist.inertia
+        );
+    }
+
+    #[test]
+    fn assignment_quality_on_heavy_tails() {
+        // LLM-like weight distribution (heavy tails): the hist clustering
+        // must yield near-exact assignment inertia.
+        let mut r = Rng::new(7);
+        let vals: Vec<f32> = (0..50_000).map(|_| (r.heavy_tailed(4.0) * 0.02) as f32).collect();
+        let exact = kmeans_exact(&vals, 3);
+        let hist = kmeans_hist(&vals, 3, DEFAULT_BINS);
+        let i_exact = inertia_of(&vals, &exact);
+        let i_hist = inertia_of(&vals, &hist);
+        assert!(
+            i_hist <= i_exact * 1.05 + 1e-12,
+            "hist assignment inertia {} vs exact {}",
+            i_hist,
+            i_exact
+        );
+    }
+
+    #[test]
+    fn outlier_isolation_survives_binning() {
+        let mut r = Rng::new(3);
+        let mut vals: Vec<f32> = (0..100_000).map(|_| r.normal_f32(0.0, 0.02)).collect();
+        vals.push(8.0);
+        vals.push(-7.5);
+        let c = kmeans_hist(&vals, 3, DEFAULT_BINS);
+        assert_eq!(c.assign(8.0), 2);
+        assert_eq!(c.assign(-7.5), 0);
+        assert_eq!(c.assign(0.0), 1);
+        assert!(c.sizes[1] > 99_000.0);
+    }
+
+    #[test]
+    fn more_bins_never_hurt_much() {
+        let mut r = Rng::new(11);
+        let vals: Vec<f32> = (0..30_000).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let coarse = kmeans_hist(&vals, 3, 256);
+        let fine = kmeans_hist(&vals, 3, 8192);
+        let i_coarse = inertia_of(&vals, &coarse);
+        let i_fine = inertia_of(&vals, &fine);
+        assert!(i_fine <= i_coarse * 1.01);
+    }
+}

@@ -1,0 +1,266 @@
+//! Lloyd's algorithm with k-means++ seeding, for n-dimensional points.
+//!
+//! Used by the activation-splitting extension (§5 of the paper): simulated
+//! activation vectors from a calibration batch are clustered to derive the
+//! masking partition. Also serves as an independent reference for the 1-D
+//! DP solver in tests (Lloyd can only do as well or worse — the DP is
+//! globally optimal).
+
+use crate::util::rng::Rng;
+
+/// Result of an n-D clustering.
+#[derive(Clone, Debug)]
+pub struct ClusteringND {
+    /// k × dim centroid matrix, row-major.
+    pub centroids: Vec<f64>,
+    pub dim: usize,
+    pub inertia: f64,
+    pub sizes: Vec<usize>,
+    pub iterations: usize,
+}
+
+impl ClusteringND {
+    pub fn k(&self) -> usize {
+        if self.dim == 0 {
+            0
+        } else {
+            self.centroids.len() / self.dim
+        }
+    }
+
+    /// Nearest-centroid assignment.
+    pub fn assign(&self, point: &[f64]) -> usize {
+        assert_eq!(point.len(), self.dim);
+        let mut best = 0;
+        let mut best_d = f64::INFINITY;
+        for c in 0..self.k() {
+            let d = dist2(&self.centroids[c * self.dim..(c + 1) * self.dim], point);
+            if d < best_d {
+                best_d = d;
+                best = c;
+            }
+        }
+        best
+    }
+}
+
+#[inline]
+fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| (x - y) * (x - y))
+        .sum()
+}
+
+/// Lloyd's k-means. `points` is n × dim row-major. Deterministic given
+/// the seed. Converges when assignments stop changing or `max_iters` hit.
+pub fn kmeans_lloyd(
+    points: &[f64],
+    dim: usize,
+    k: usize,
+    max_iters: usize,
+    seed: u64,
+) -> ClusteringND {
+    assert!(dim > 0);
+    assert_eq!(points.len() % dim, 0);
+    let n = points.len() / dim;
+    assert!(n > 0, "kmeans on empty input");
+    let k = k.min(n).max(1);
+    let mut rng = Rng::new(seed);
+
+    // k-means++ seeding.
+    let mut centroids = Vec::with_capacity(k * dim);
+    let first = rng.below(n);
+    centroids.extend_from_slice(&points[first * dim..(first + 1) * dim]);
+    let mut d2: Vec<f64> = (0..n)
+        .map(|i| dist2(&points[i * dim..(i + 1) * dim], &centroids[0..dim]))
+        .collect();
+    for _ in 1..k {
+        let total: f64 = d2.iter().sum();
+        let pick = if total <= 0.0 {
+            rng.below(n)
+        } else {
+            let mut target = rng.uniform() * total;
+            let mut idx = n - 1;
+            for (i, &d) in d2.iter().enumerate() {
+                if target < d {
+                    idx = i;
+                    break;
+                }
+                target -= d;
+            }
+            idx
+        };
+        let new_c = &points[pick * dim..(pick + 1) * dim];
+        centroids.extend_from_slice(new_c);
+        for i in 0..n {
+            let d = dist2(&points[i * dim..(i + 1) * dim], new_c);
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+    }
+
+    // Lloyd iterations.
+    let mut assign = vec![usize::MAX; n];
+    let mut iterations = 0;
+    for it in 0..max_iters {
+        iterations = it + 1;
+        let mut changed = false;
+        for i in 0..n {
+            let p = &points[i * dim..(i + 1) * dim];
+            let mut best = 0;
+            let mut best_d = f64::INFINITY;
+            for c in 0..k {
+                let d = dist2(&centroids[c * dim..(c + 1) * dim], p);
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            if assign[i] != best {
+                assign[i] = best;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+        // Recompute centroids; empty clusters re-seeded at the farthest point.
+        let mut sums = vec![0.0f64; k * dim];
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            let c = assign[i];
+            counts[c] += 1;
+            for d in 0..dim {
+                sums[c * dim + d] += points[i * dim + d];
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // Re-seed at the point farthest from its centroid.
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        let da = dist2(
+                            &points[a * dim..(a + 1) * dim],
+                            &centroids[assign[a] * dim..(assign[a] + 1) * dim],
+                        );
+                        let db = dist2(
+                            &points[b * dim..(b + 1) * dim],
+                            &centroids[assign[b] * dim..(assign[b] + 1) * dim],
+                        );
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                centroids[c * dim..(c + 1) * dim]
+                    .copy_from_slice(&points[far * dim..(far + 1) * dim]);
+            } else {
+                for d in 0..dim {
+                    centroids[c * dim + d] = sums[c * dim + d] / counts[c] as f64;
+                }
+            }
+        }
+    }
+
+    // Final stats.
+    let mut inertia = 0.0;
+    let mut sizes = vec![0usize; k];
+    for i in 0..n {
+        let p = &points[i * dim..(i + 1) * dim];
+        let c = assign[i];
+        sizes[c] += 1;
+        inertia += dist2(&centroids[c * dim..(c + 1) * dim], p);
+    }
+
+    ClusteringND {
+        centroids,
+        dim,
+        inertia,
+        sizes,
+        iterations,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kmeans::dp1d::kmeans_exact;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn clusters_separated_2d_blobs() {
+        let mut r = Rng::new(1);
+        let mut pts = Vec::new();
+        let blobs = [(-5.0, -5.0), (5.0, 5.0), (5.0, -5.0)];
+        for &(cx, cy) in &blobs {
+            for _ in 0..50 {
+                pts.push(cx + r.normal() * 0.2);
+                pts.push(cy + r.normal() * 0.2);
+            }
+        }
+        let c = kmeans_lloyd(&pts, 2, 3, 100, 7);
+        assert_eq!(c.k(), 3);
+        assert_eq!(c.sizes.iter().sum::<usize>(), 150);
+        // Every blob center has a nearby centroid.
+        for &(cx, cy) in &blobs {
+            let found = (0..3).any(|i| {
+                dist2(&c.centroids[i * 2..i * 2 + 2], &[cx, cy]) < 0.5
+            });
+            assert!(found, "no centroid near ({cx},{cy})");
+        }
+    }
+
+    #[test]
+    fn lloyd_never_beats_exact_dp_in_1d() {
+        let mut r = Rng::new(2);
+        for trial in 0..10 {
+            let vals: Vec<f32> = (0..200).map(|_| r.normal_f32(0.0, 2.0)).collect();
+            let pts: Vec<f64> = vals.iter().map(|&v| v as f64).collect();
+            let dp = kmeans_exact(&vals, 3);
+            let ll = kmeans_lloyd(&pts, 1, 3, 200, trial as u64);
+            assert!(
+                ll.inertia >= dp.inertia - 1e-6,
+                "trial {trial}: lloyd {} < dp {}",
+                ll.inertia,
+                dp.inertia
+            );
+            // And with a good seed it should usually be close.
+            assert!(ll.inertia <= dp.inertia * 2.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let pts: Vec<f64> = (0..60).map(|i| (i % 7) as f64).collect();
+        let a = kmeans_lloyd(&pts, 2, 3, 50, 9);
+        let b = kmeans_lloyd(&pts, 2, 3, 50, 9);
+        assert_eq!(a.centroids, b.centroids);
+        assert_eq!(a.sizes, b.sizes);
+    }
+
+    #[test]
+    fn k_clamped_to_n() {
+        let pts = [1.0, 2.0];
+        let c = kmeans_lloyd(&pts, 1, 5, 10, 0);
+        assert!(c.k() <= 2);
+        assert!(c.inertia < 1e-12);
+    }
+
+    #[test]
+    fn assign_matches_training_partition() {
+        let mut r = Rng::new(4);
+        let mut pts = Vec::new();
+        for _ in 0..40 {
+            pts.push(r.normal() - 6.0);
+        }
+        for _ in 0..40 {
+            pts.push(r.normal() + 6.0);
+        }
+        let c = kmeans_lloyd(&pts, 1, 2, 100, 5);
+        let lo_c = c.assign(&[-6.0]);
+        let hi_c = c.assign(&[6.0]);
+        assert_ne!(lo_c, hi_c);
+        assert_eq!(c.assign(&[-8.0]), lo_c);
+        assert_eq!(c.assign(&[7.0]), hi_c);
+    }
+}

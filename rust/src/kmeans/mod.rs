@@ -1,0 +1,228 @@
+//! K-means clustering — the analytical core of SplitQuantV2.
+//!
+//! The paper clusters the scalar weight values of each layer into k=3
+//! (lower / middle / upper) groups. In one dimension, optimal k-means
+//! clusters are *contiguous intervals* of the sorted values, so the
+//! problem is solved **exactly** by dynamic programming — no Lloyd
+//! iteration, no initialization sensitivity. Three implementations:
+//!
+//! * [`dp1d::kmeans_exact`] — exact O(k·n log n) divide-and-conquer DP on
+//!   sorted (optionally weighted) values. Ground truth; used directly for
+//!   layers up to ~262k values.
+//! * [`hist::kmeans_hist`] — histogram-compressed DP: values are bucketed
+//!   into a fixed number of bins and the *weighted* exact DP runs on the
+//!   bins. This is the production path for multi-million-parameter layers
+//!   (the 1B-in-2-minutes hot loop); resolution is bounded by the bin
+//!   width, which at 4096 bins is far below quantization step size.
+//! * [`lloyd::kmeans_lloyd`] — classic Lloyd's with k-means++ seeding for
+//!   n-dimensional data; used by the activation-splitting extension (§5
+//!   of the paper) where calibration activations are clustered.
+//!
+//! All three return a [`Clustering1D`] (or [`lloyd::ClusteringND`]) whose
+//! `boundaries` let callers assign values in O(log k).
+
+pub mod dp1d;
+pub mod hist;
+pub mod lloyd;
+
+pub use dp1d::kmeans_exact;
+pub use hist::kmeans_hist;
+pub use lloyd::kmeans_lloyd;
+
+/// Result of a 1-D clustering: `centroids` ascending, `boundaries[i]` is
+/// the threshold between cluster i and i+1 (value `x` belongs to cluster
+/// `i` iff `boundaries[i-1] < x <= boundaries[i]` with sentinels ±inf).
+#[derive(Clone, Debug)]
+pub struct Clustering1D {
+    pub centroids: Vec<f64>,
+    pub boundaries: Vec<f64>,
+    /// Sum of squared distances to assigned centroids.
+    pub inertia: f64,
+    /// Number of points (total weight) per cluster.
+    pub sizes: Vec<f64>,
+    /// Exact (min, max) of the *member values* of each cluster, when the
+    /// solver can provide it for free (exact DP: cluster edges of the
+    /// sorted input; histogram DP: tracked per-bin extremes). Lets the
+    /// split hot path skip a full re-scan of the weights (§Perf opt #3).
+    pub member_ranges: Option<Vec<(f32, f32)>>,
+}
+
+impl Clustering1D {
+    /// Number of clusters actually produced (≤ requested k when there are
+    /// fewer distinct values).
+    pub fn k(&self) -> usize {
+        self.centroids.len()
+    }
+
+    /// Cluster index for a value (O(k); k is 2..4 in practice so this
+    /// compiles to a couple of compares).
+    #[inline]
+    pub fn assign(&self, x: f32) -> usize {
+        let x = x as f64;
+        let mut i = 0;
+        while i < self.boundaries.len() && x > self.boundaries[i] {
+            i += 1;
+        }
+        i
+    }
+
+    /// Midpoint boundaries derived from consecutive centroids. (The DP
+    /// returns exact interval edges; Lloyd-style midpoints are equivalent
+    /// for assignment of *new* points.)
+    pub fn from_centroids(mut centroids: Vec<f64>, inertia: f64, sizes: Vec<f64>) -> Self {
+        centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let boundaries = centroids
+            .windows(2)
+            .map(|w| 0.5 * (w[0] + w[1]))
+            .collect();
+        Clustering1D {
+            centroids,
+            boundaries,
+            inertia,
+            sizes,
+            member_ranges: None,
+        }
+    }
+
+    /// Value range (min..max gap) covered by each cluster given the data
+    /// extremes — used to report the per-split quantization ranges.
+    pub fn cluster_ranges(&self, data_min: f64, data_max: f64) -> Vec<(f64, f64)> {
+        let k = self.k();
+        let mut out = Vec::with_capacity(k);
+        for i in 0..k {
+            let lo = if i == 0 { data_min } else { self.boundaries[i - 1] };
+            let hi = if i == k - 1 { data_max } else { self.boundaries[i] };
+            out.push((lo, hi));
+        }
+        out
+    }
+}
+
+/// Strategy selector used by the split pipeline: exact DP below the
+/// threshold, histogram DP above it.
+pub const EXACT_DP_MAX_N: usize = 1 << 18;
+
+/// Cluster `values` into `k` groups using the best method for the size.
+pub fn kmeans_auto(values: &[f32], k: usize) -> Clustering1D {
+    if values.len() <= EXACT_DP_MAX_N {
+        dp1d::kmeans_exact(values, k)
+    } else {
+        hist::kmeans_hist(values, k, hist::DEFAULT_BINS)
+    }
+}
+
+/// Inertia of assigning `values` to fixed `clustering` (for tests and for
+/// dynamic-k elbow scoring on subsamples).
+pub fn inertia_of(values: &[f32], c: &Clustering1D) -> f64 {
+    values
+        .iter()
+        .map(|&v| {
+            let d = v as f64 - c.centroids[c.assign(v)];
+            d * d
+        })
+        .sum()
+}
+
+/// Dynamic-k selection (§5 future work): largest k in `1..=k_max` such
+/// that every step up to k improved inertia by at least `elbow`
+/// (relative). Returns (k, clusterings tried).
+pub fn choose_k(values: &[f32], k_max: usize, elbow: f64) -> (usize, Vec<Clustering1D>) {
+    assert!(k_max >= 1);
+    let mut tried = Vec::new();
+    let mut prev_inertia = f64::INFINITY;
+    let mut chosen = 1;
+    for k in 1..=k_max {
+        let c = kmeans_auto(values, k);
+        let inertia = c.inertia;
+        if k > 1 {
+            let improvement = if prev_inertia > 0.0 {
+                1.0 - inertia / prev_inertia
+            } else {
+                0.0
+            };
+            if chosen == k - 1 && improvement >= elbow {
+                chosen = k;
+            }
+        }
+        prev_inertia = inertia;
+        tried.push(c);
+    }
+    (chosen, tried)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assign_respects_boundaries() {
+        let c = Clustering1D {
+            centroids: vec![-5.0, 0.0, 5.0],
+            boundaries: vec![-2.5, 2.5],
+            inertia: 0.0,
+            sizes: vec![1.0, 1.0, 1.0],
+            member_ranges: None,
+        };
+        assert_eq!(c.assign(-10.0), 0);
+        assert_eq!(c.assign(-2.5), 0); // boundary inclusive on the left
+        assert_eq!(c.assign(0.0), 1);
+        assert_eq!(c.assign(2.6), 2);
+    }
+
+    #[test]
+    fn cluster_ranges_partition_data_range() {
+        let c = Clustering1D {
+            centroids: vec![-5.0, 0.0, 5.0],
+            boundaries: vec![-2.5, 2.5],
+            inertia: 0.0,
+            sizes: vec![1.0, 1.0, 1.0],
+            member_ranges: None,
+        };
+        let r = c.cluster_ranges(-9.0, 9.0);
+        assert_eq!(r, vec![(-9.0, -2.5), (-2.5, 2.5), (2.5, 9.0)]);
+    }
+
+    #[test]
+    fn auto_dispatches_consistently() {
+        // Small vector: exact and hist agree on well-separated clusters.
+        let mut vals = Vec::new();
+        for i in 0..50 {
+            vals.push(-10.0 + (i as f32) * 0.01);
+            vals.push(10.0 + (i as f32) * 0.01);
+        }
+        let exact = kmeans_exact(&vals, 2);
+        let auto = kmeans_auto(&vals, 2);
+        assert_eq!(exact.k(), 2);
+        for (a, b) in exact.centroids.iter().zip(&auto.centroids) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn choose_k_prefers_structure() {
+        // Three well-separated blobs: inertia drops hugely up to k=3 and
+        // barely after, so the elbow picks 3.
+        let mut vals = Vec::new();
+        for i in 0..200 {
+            let j = (i % 17) as f32 * 0.001;
+            vals.push(-8.0 + j);
+            vals.push(0.0 + j);
+            vals.push(8.0 + j);
+        }
+        let (k, tried) = choose_k(&vals, 4, 0.25);
+        assert_eq!(k, 3);
+        assert_eq!(tried.len(), 4);
+        // Inertia is monotone nonincreasing in k.
+        for w in tried.windows(2) {
+            assert!(w[1].inertia <= w[0].inertia + 1e-9);
+        }
+    }
+
+    #[test]
+    fn choose_k_on_uniform_prefers_small() {
+        // A single tight blob with a near-impossible elbow: stays at 1.
+        let vals: Vec<f32> = (0..300).map(|i| 5.0 + (i as f32) * 1e-4).collect();
+        let (k, _) = choose_k(&vals, 4, 0.9999);
+        assert_eq!(k, 1);
+    }
+}

@@ -1,0 +1,32 @@
+//! # splitquant — SplitQuantV2 reproduction
+//!
+//! A production-grade implementation of *SplitQuantV2: Enhancing Low-Bit
+//! Quantization of LLMs Without GPUs* (Song & Lin, 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: CPU-only model
+//!   preprocessing (k-means weight clustering → functionally-equivalent
+//!   layer splitting → linear quantization), plus the full toolchain
+//!   around it: model IR, checkpoint I/O, evaluation harness, baselines
+//!   (plain linear quant, OCS, GPTQ-lite) and the PJRT runtime that
+//!   executes AOT-lowered model graphs.
+//! * **L2 (python/compile/model.py)** — the picollama transformer in JAX,
+//!   lowered once to HLO text at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the quantized
+//!   matmul hot-spot, verified against pure-jnp oracles.
+//!
+//! See DESIGN.md for the experiment index and EXPERIMENTS.md for results.
+
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod gptq;
+pub mod io;
+pub mod kmeans;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod split;
+pub mod tensor;
+pub mod util;

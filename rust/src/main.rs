@@ -1,0 +1,325 @@
+//! `splitquant` — CLI for the SplitQuantV2 reproduction.
+//!
+//! Subcommands:
+//!   quantize   preprocess + quantize a checkpoint, write packed SQTZ
+//!   eval       Table-1 grid (Original + INT{8,4,2} × baseline/SQv2)
+//!   serve      batched MCQ scoring server demo over PJRT
+//!   inspect    dump a checkpoint / quantized container
+//!   report     per-layer resolution report (Figure 1 numbers)
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+use splitquant::coordinator::{Coordinator, PipelineSpec};
+use splitquant::io::{checkpoint::load_checkpoint, qmodel, read_file};
+use splitquant::model::quantized::Method;
+use splitquant::model::{param_inventory, ParamKind};
+use splitquant::quant::Bits;
+use splitquant::split::{DynamicK, SplitConfig, Strategy};
+use splitquant::util::cli::{App, Command, Matches};
+use splitquant::util::fmt::{human_bytes, human_count, Table};
+use splitquant::util::logging;
+use splitquant::util::timer::format_duration;
+use splitquant::{log_error, log_info};
+
+fn app() -> App {
+    App::new("splitquant", "SplitQuantV2: low-bit LLM quantization without GPUs")
+        .command(
+            Command::new("quantize", "preprocess + linearly quantize a checkpoint")
+                .req("ckpt", "input FP checkpoint (.sqtz)")
+                .req("out", "output quantized model (.sqtz)")
+                .opt("bits", "4", "bit width (2|4|8)")
+                .opt("method", "splitquant", "baseline|splitquant|ocs")
+                .opt("k", "3", "clusters per layer (splitquant)")
+                .opt("strategy", "masked", "masked|rowwise split structure")
+                .opt("ocs-ratio", "0.05", "OCS channel expansion ratio")
+                .flag("dynamic-k", "choose k per layer by inertia elbow")
+                .opt("log", "info", "log level"),
+        )
+        .command(
+            Command::new("eval", "run the Table-1 grid on a checkpoint")
+                .opt("ckpt", "artifacts/picollama_eval.sqtz", "FP checkpoint")
+                .opt("problems", "artifacts/eval_problems.json", "problem set")
+                .opt("k", "3", "clusters for the SplitQuantV2 arm")
+                .opt("amplify-frac", "0.003", "outlier amplification fraction")
+                .opt("amplify-gain", "4", "outlier amplification gain")
+                .flag("no-amplify", "skip outlier amplification")
+                .flag("runtime", "score through PJRT instead of the CPU reference")
+                .opt("export-dir", "", "also export packed arms to this dir")
+                .opt("log", "info", "log level"),
+        )
+        .command(
+            Command::new("serve", "batched scoring server demo (PJRT)")
+                .opt("ckpt", "artifacts/picollama_eval.sqtz", "FP checkpoint")
+                .opt("problems", "artifacts/eval_problems.json", "problem set")
+                .opt("artifacts", "artifacts", "artifacts dir (HLO + manifest)")
+                .opt("bits", "4", "bit width")
+                .opt("requests", "200", "number of requests to fire")
+                .opt("log", "info", "log level"),
+        )
+        .command(
+            Command::new("inspect", "describe an .sqtz container")
+                .pos("file", "checkpoint or quantized model"),
+        )
+        .command(
+            Command::new("report", "per-layer resolution report (Figure 1)")
+                .opt("ckpt", "artifacts/picollama_eval.sqtz", "FP checkpoint")
+                .opt("bits", "4", "bit width")
+                .opt("k", "3", "clusters")
+                .opt("layer", "", "single layer name (default: all linear)"),
+        )
+}
+
+fn parse_bits(m: &Matches) -> Result<Bits> {
+    Bits::from_width(m.get_usize("bits")?)
+}
+
+fn split_cfg(m: &Matches) -> Result<SplitConfig> {
+    let mut cfg = SplitConfig::with_k(m.get_usize("k")?);
+    if m.get_opt("strategy") == Some("rowwise") {
+        cfg.strategy = Strategy::RowWise;
+    }
+    if m.flag("dynamic-k") {
+        cfg.dynamic_k = Some(DynamicK::default());
+    }
+    Ok(cfg)
+}
+
+fn cmd_quantize(m: &Matches) -> Result<()> {
+    let ck = load_checkpoint(m.get("ckpt")?)?;
+    let bits = parse_bits(m)?;
+    let method = match m.get("method")? {
+        "baseline" => Method::Baseline,
+        "splitquant" => Method::SplitQuant(split_cfg(m)?),
+        "ocs" => Method::Ocs {
+            expand_ratio: m.get_f64("ocs-ratio")?,
+        },
+        other => bail!("unknown method '{other}'"),
+    };
+    log_info!(
+        "quantizing {} ({} params) to {} via {}",
+        m.get("ckpt")?,
+        human_count(splitquant::model::n_params(&ck.config) as u64),
+        bits.name(),
+        method.name()
+    );
+    let (qm, dur) = splitquant::util::timer::time_it(|| {
+        splitquant::model::quantized::quantize_model(&ck, bits, &method)
+    });
+    let qm = qm?;
+    qmodel::save_qmodel(m.get("out")?, &qm)?;
+    println!(
+        "{} → {} [{}] in {}   packed={}  (fp32 was {})",
+        m.get("ckpt")?,
+        m.get("out")?,
+        qm.method_name,
+        format_duration(dur),
+        human_bytes(qm.packed_bytes()),
+        human_bytes(ck.fp32_bytes()),
+    );
+    Ok(())
+}
+
+fn cmd_eval(m: &Matches) -> Result<()> {
+    let mut spec = PipelineSpec::new(m.get("ckpt")?, m.get("problems")?);
+    spec.use_runtime = m.flag("runtime");
+    if m.flag("no-amplify") {
+        spec.amplify = None;
+    } else {
+        spec.amplify = Some((m.get_f64("amplify-frac")?, m.get_f64("amplify-gain")? as f32));
+    }
+    if let Some(dir) = m.get_opt("export-dir") {
+        if !dir.is_empty() {
+            std::fs::create_dir_all(dir)?;
+            spec.out_dir = Some(PathBuf::from(dir));
+        }
+    }
+    let coord = if spec.use_runtime {
+        Coordinator::with_engine("artifacts", None)?
+    } else {
+        Coordinator::new()
+    };
+    let ck = coord.load_model(&spec)?;
+    let problems = coord.load_problems(&spec)?;
+
+    let fp = coord.evaluate_fp(&ck, &problems, spec.use_runtime)?;
+    let mut table = Table::new(&["arm", "accuracy", "d vs FP", "quantize", "packed"]);
+    table.row(&[
+        "Original (FP32)".to_string(),
+        fp.accuracy_pct(),
+        "-".into(),
+        "-".into(),
+        human_bytes(ck.fp32_bytes()),
+    ]);
+    let split = SplitConfig::with_k(m.get_usize("k")?);
+    for arm in Coordinator::table1_arms(&split) {
+        let res = coord.run_arm(&ck, &arm, &problems, &spec)?;
+        table.row(&[
+            res.label.clone(),
+            res.report.accuracy_pct(),
+            format!("{:+.2}%p", (res.report.accuracy - fp.accuracy) * 100.0),
+            format_duration(res.quantize_time),
+            human_bytes(res.packed_bytes),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("--- stage profile ---\n{}", coord.profiler.report());
+    Ok(())
+}
+
+fn cmd_serve(m: &Matches) -> Result<()> {
+    use splitquant::coordinator::server::{Server, ServerConfig};
+    use splitquant::runtime::scoring;
+    use std::time::Instant;
+
+    let bits = parse_bits(m)?;
+    let ck = load_checkpoint(m.get("ckpt")?)?;
+    let (problems, _) = splitquant::data::load_problems(m.get("problems")?)?;
+    let n_requests = m.get_usize("requests")?.min(problems.len());
+
+    let qm = splitquant::model::quantized::quantize_model(
+        &ck,
+        bits,
+        &Method::SplitQuant(SplitConfig::default()),
+    )?;
+    let weights = scoring::quant_args(&qm, 3)?;
+    log_info!("serving {} [{}]", m.get("ckpt")?, qm.method_name);
+
+    let server = Server::start(
+        PathBuf::from(m.get("artifacts")?),
+        weights,
+        ServerConfig::default(),
+    )?;
+    let t0 = Instant::now();
+    let mut rx = Vec::new();
+    for p in problems.iter().take(n_requests) {
+        rx.push(server.submit(p.clone()));
+    }
+    let mut correct = 0usize;
+    let mut lat = Vec::new();
+    let mut batch_sizes = Vec::new();
+    for r in rx {
+        let resp = r.recv()??;
+        if resp.result.is_correct() {
+            correct += 1;
+        }
+        lat.push(resp.queue_time.as_secs_f64() * 1e3);
+        batch_sizes.push(resp.batch_size as f64);
+    }
+    let wall = t0.elapsed();
+    let s = splitquant::util::stats::Summary::of(&lat);
+    println!(
+        "served {n_requests} requests in {}  ({:.1} req/s)",
+        format_duration(wall),
+        n_requests as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "accuracy {:.2}%  latency p50 {:.1}ms p95 {:.1}ms  mean batch {:.1}",
+        100.0 * correct as f64 / n_requests as f64,
+        s.median,
+        s.p95,
+        splitquant::util::stats::Summary::of(&batch_sizes).mean
+    );
+    Ok(())
+}
+
+fn cmd_inspect(m: &Matches) -> Result<()> {
+    let path = m.get("file")?;
+    let c = read_file(path)?;
+    println!("{} — {} tensors", path, c.names().len());
+    for (k, v) in &c.meta {
+        let v_short = if v.len() > 64 {
+            format!("{}…", &v[..64])
+        } else {
+            v.clone()
+        };
+        println!("  meta {k} = {v_short}");
+    }
+    if let Some(cfg) = &c.config {
+        println!("  config: {}", cfg.to_string());
+    }
+    let mut names = c.names();
+    names.sort();
+    for name in names.iter().take(50) {
+        let (d, s, b) = c.raw(name)?;
+        println!(
+            "  {name:40} {} {:?} ({})",
+            d.name(),
+            s,
+            human_bytes(b.len() as u64)
+        );
+    }
+    if names.len() > 50 {
+        println!("  … and {} more", names.len() - 50);
+    }
+    Ok(())
+}
+
+fn cmd_report(m: &Matches) -> Result<()> {
+    let ck = load_checkpoint(m.get("ckpt")?)?;
+    let bits = parse_bits(m)?;
+    let cfg = SplitConfig::with_k(m.get_usize("k")?);
+    let filter = m.get_opt("layer").filter(|s| !s.is_empty());
+    let mut table = Table::new(&[
+        "layer",
+        "orig scale",
+        "plane scales",
+        "orig MSE",
+        "split MSE",
+        "gain",
+    ]);
+    for info in param_inventory(&ck.config) {
+        if info.kind != ParamKind::Linear {
+            continue;
+        }
+        if let Some(f) = filter {
+            if info.name != f {
+                continue;
+            }
+        }
+        let w = ck.get(&info.name)?;
+        let rep = splitquant::split::resolution_report(w, &cfg, bits);
+        table.row(&[
+            info.name.clone(),
+            format!("{:.1}", rep.original_scale),
+            rep.plane_scales
+                .iter()
+                .map(|s| format!("{s:.1}"))
+                .collect::<Vec<_>>()
+                .join("/"),
+            format!("{:.2e}", rep.original_mse),
+            format!("{:.2e}", rep.split_mse),
+            format!("{:.1}x", rep.mse_gain),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn main() {
+    logging::init_from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let app = app();
+    let m = match app.parse(&argv) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if let Some(level) = m.get_opt("log").and_then(logging::Level::parse) {
+        logging::set_level(level);
+    }
+    let result = match m.command {
+        "quantize" => cmd_quantize(&m),
+        "eval" => cmd_eval(&m),
+        "serve" => cmd_serve(&m),
+        "inspect" => cmd_inspect(&m),
+        "report" => cmd_report(&m),
+        other => Err(anyhow::anyhow!("unhandled command {other}")),
+    };
+    if let Err(e) = result {
+        log_error!("{e:#}");
+        std::process::exit(1);
+    }
+}

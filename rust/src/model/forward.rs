@@ -1,0 +1,427 @@
+//! CPU reference forward pass of picollama.
+//!
+//! This is the runtime-independent evaluation path: it runs the exact
+//! Llama-3 computation (RMSNorm → RoPE GQA attention → SwiGLU, residual
+//! streams, tied LM head) in plain f32 on the CPU. It is used by
+//!
+//! * the Table-1 accuracy harness (scores every quantization arm without
+//!   needing PJRT),
+//! * the §4.1 functional-preservation check (original vs split FP model),
+//! * calibration for GPTQ-lite and activation splitting,
+//! * cross-validation of the PJRT/HLO path (`runtime` executes the same
+//!   checkpoint; logits must agree to FP tolerance).
+//!
+//! Weight convention matches the JAX model: all linear weights are
+//! `[out, in]` and apply as `y = x · Wᵀ`.
+
+use crate::tensor::Tensor;
+
+use super::{Checkpoint, PicoLlamaConfig};
+use anyhow::Result;
+
+/// Scratch buffers reused across layers/positions to keep the forward
+/// allocation-light (matters when scoring 4×1165 sequences).
+pub struct Workspace {
+    x: Vec<f32>,        // [seq, d]
+    xn: Vec<f32>,       // [seq, d]
+    q: Vec<f32>,        // [seq, d]
+    k: Vec<f32>,        // [seq, kv_dim]
+    v: Vec<f32>,        // [seq, kv_dim]
+    attn_out: Vec<f32>, // [seq, d]
+    scores: Vec<f32>,   // [seq]
+    gate: Vec<f32>,     // [seq, d_ff]
+    up: Vec<f32>,       // [seq, d_ff]
+    mlp_out: Vec<f32>,  // [seq, d]
+}
+
+impl Workspace {
+    pub fn new(cfg: &PicoLlamaConfig, max_seq: usize) -> Workspace {
+        let d = cfg.d_model;
+        Workspace {
+            x: vec![0.0; max_seq * d],
+            xn: vec![0.0; max_seq * d],
+            q: vec![0.0; max_seq * d],
+            k: vec![0.0; max_seq * cfg.kv_dim()],
+            v: vec![0.0; max_seq * cfg.kv_dim()],
+            attn_out: vec![0.0; max_seq * d],
+            scores: vec![0.0; max_seq],
+            gate: vec![0.0; max_seq * cfg.d_ff],
+            up: vec![0.0; max_seq * cfg.d_ff],
+            mlp_out: vec![0.0; max_seq * d],
+        }
+    }
+}
+
+/// RMSNorm: x · γ / rms(x).
+fn rmsnorm(out: &mut [f32], x: &[f32], gamma: &[f32], eps: f64, seq: usize, d: usize) {
+    for t in 0..seq {
+        let row = &x[t * d..(t + 1) * d];
+        let ms: f64 = row.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / d as f64;
+        let inv = 1.0 / (ms + eps).sqrt();
+        let orow = &mut out[t * d..(t + 1) * d];
+        for i in 0..d {
+            orow[i] = (row[i] as f64 * inv) as f32 * gamma[i];
+        }
+    }
+}
+
+/// In-place rotary position embedding over `[seq, n_heads*head_dim]`,
+/// pairing dimension (2i, 2i+1) within each head — matches the JAX model.
+fn rope(x: &mut [f32], seq: usize, n_heads: usize, head_dim: usize, theta: f64) {
+    let half = head_dim / 2;
+    for t in 0..seq {
+        for h in 0..n_heads {
+            let base = t * n_heads * head_dim + h * head_dim;
+            for i in 0..half {
+                let freq = 1.0 / theta.powf(2.0 * i as f64 / head_dim as f64);
+                let ang = t as f64 * freq;
+                let (sin, cos) = ang.sin_cos();
+                let a = x[base + 2 * i] as f64;
+                let b = x[base + 2 * i + 1] as f64;
+                x[base + 2 * i] = (a * cos - b * sin) as f32;
+                x[base + 2 * i + 1] = (a * sin + b * cos) as f32;
+            }
+        }
+    }
+}
+
+/// y[seq, out] = x[seq, in] · W[out, in]ᵀ.
+fn linear(y: &mut [f32], x: &[f32], w: &Tensor, seq: usize) {
+    let (out_dim, in_dim) = (w.shape()[0], w.shape()[1]);
+    debug_assert_eq!(x.len(), seq * in_dim);
+    debug_assert_eq!(y.len(), seq * out_dim);
+    // x[seq,in] · Wᵀ[in,out]: use matmul_into with B = Wᵀ... avoiding the
+    // transpose copy: compute y[t,o] = Σ_i x[t,i]·W[o,i] row-by-row with
+    // the blocked kernel over W directly (W rows are contiguous).
+    y.iter_mut().for_each(|v| *v = 0.0);
+    for t in 0..seq {
+        let xr = &x[t * in_dim..(t + 1) * in_dim];
+        let yr = &mut y[t * out_dim..(t + 1) * out_dim];
+        for o in 0..out_dim {
+            let wrow = &w.data()[o * in_dim..(o + 1) * in_dim];
+            let mut acc = 0.0f32;
+            let chunks = in_dim / 4 * 4;
+            let mut i = 0;
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            while i < chunks {
+                s0 += xr[i] * wrow[i];
+                s1 += xr[i + 1] * wrow[i + 1];
+                s2 += xr[i + 2] * wrow[i + 2];
+                s3 += xr[i + 3] * wrow[i + 3];
+                i += 4;
+            }
+            acc += s0 + s1 + s2 + s3;
+            while i < in_dim {
+                acc += xr[i] * wrow[i];
+                i += 1;
+            }
+            yr[o] = acc;
+        }
+    }
+}
+
+/// Numerically-stable softmax in place.
+fn softmax(xs: &mut [f32]) {
+    let max = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f64;
+    for v in xs.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v as f64;
+    }
+    let inv = (1.0 / sum) as f32;
+    for v in xs.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Full forward: token ids → logits `[seq, vocab]`.
+///
+/// O(seq²·d) attention without KV caching — fine for the ≤64-token MCQ
+/// sequences this crate evaluates.
+pub fn forward(ck: &Checkpoint, tokens: &[usize], ws: &mut Workspace) -> Result<Tensor> {
+    forward_tapped(ck, tokens, ws, &mut |_, _, _| {})
+}
+
+/// Forward with an activation tap: `tap(linear_name, input, seq)` fires
+/// with the `[seq, in]` input of every linear layer. Used by GPTQ-lite
+/// Hessian accumulation and activation-split calibration.
+pub fn forward_tapped(
+    ck: &Checkpoint,
+    tokens: &[usize],
+    ws: &mut Workspace,
+    tap: &mut dyn FnMut(&str, &[f32], usize),
+) -> Result<Tensor> {
+    let cfg = &ck.config;
+    let seq = tokens.len();
+    assert!(seq > 0 && seq <= cfg.max_seq, "seq {seq} out of range");
+    let d = cfg.d_model;
+    let hd = cfg.head_dim();
+    let kvd = cfg.kv_dim();
+    let groups = cfg.n_heads / cfg.n_kv_heads;
+
+    // Embedding lookup.
+    let emb = ck.get("embed.tok")?;
+    for (t, &tok) in tokens.iter().enumerate() {
+        assert!(tok < cfg.vocab, "token {tok} out of vocab");
+        ws.x[t * d..(t + 1) * d].copy_from_slice(emb.row(tok));
+    }
+
+    for l in 0..cfg.n_layers {
+        let pre = format!("layers.{l}");
+        // --- Attention block ---
+        let gamma = ck.get(&format!("{pre}.norm_attn"))?;
+        rmsnorm(&mut ws.xn, &ws.x, gamma.data(), cfg.norm_eps, seq, d);
+
+        tap(&format!("{pre}.attn.wq"), &ws.xn[..seq * d], seq);
+        tap(&format!("{pre}.attn.wk"), &ws.xn[..seq * d], seq);
+        tap(&format!("{pre}.attn.wv"), &ws.xn[..seq * d], seq);
+        linear(&mut ws.q[..seq * d], &ws.xn[..seq * d], ck.get(&format!("{pre}.attn.wq"))?, seq);
+        linear(&mut ws.k[..seq * kvd], &ws.xn[..seq * d], ck.get(&format!("{pre}.attn.wk"))?, seq);
+        linear(&mut ws.v[..seq * kvd], &ws.xn[..seq * d], ck.get(&format!("{pre}.attn.wv"))?, seq);
+
+        rope(&mut ws.q[..seq * d], seq, cfg.n_heads, hd, cfg.rope_theta);
+        rope(&mut ws.k[..seq * kvd], seq, cfg.n_kv_heads, hd, cfg.rope_theta);
+
+        // Causal attention per head.
+        let scale = 1.0 / (hd as f64).sqrt();
+        for h in 0..cfg.n_heads {
+            let kvh = h / groups;
+            for t in 0..seq {
+                let qv = &ws.q[t * d + h * hd..t * d + (h + 1) * hd];
+                for s in 0..=t {
+                    let kv = &ws.k[s * kvd + kvh * hd..s * kvd + (kvh + 1) * hd];
+                    let dot: f32 = qv.iter().zip(kv).map(|(&a, &b)| a * b).sum();
+                    ws.scores[s] = (dot as f64 * scale) as f32;
+                }
+                softmax(&mut ws.scores[..=t]);
+                let out = &mut ws.attn_out[t * d + h * hd..t * d + (h + 1) * hd];
+                out.iter_mut().for_each(|v| *v = 0.0);
+                for s in 0..=t {
+                    let w = ws.scores[s];
+                    let vv = &ws.v[s * kvd + kvh * hd..s * kvd + (kvh + 1) * hd];
+                    for i in 0..hd {
+                        out[i] += w * vv[i];
+                    }
+                }
+            }
+        }
+
+        // Output projection + residual.
+        tap(&format!("{pre}.attn.wo"), &ws.attn_out[..seq * d], seq);
+        linear(&mut ws.xn[..seq * d], &ws.attn_out[..seq * d], ck.get(&format!("{pre}.attn.wo"))?, seq);
+        for i in 0..seq * d {
+            ws.x[i] += ws.xn[i];
+        }
+
+        // --- MLP block (SwiGLU) ---
+        let gamma = ck.get(&format!("{pre}.norm_mlp"))?;
+        rmsnorm(&mut ws.xn, &ws.x, gamma.data(), cfg.norm_eps, seq, d);
+        let dff = cfg.d_ff;
+        tap(&format!("{pre}.mlp.gate"), &ws.xn[..seq * d], seq);
+        tap(&format!("{pre}.mlp.up"), &ws.xn[..seq * d], seq);
+        linear(&mut ws.gate[..seq * dff], &ws.xn[..seq * d], ck.get(&format!("{pre}.mlp.gate"))?, seq);
+        linear(&mut ws.up[..seq * dff], &ws.xn[..seq * d], ck.get(&format!("{pre}.mlp.up"))?, seq);
+        for i in 0..seq * dff {
+            let g = ws.gate[i];
+            // SiLU(g) * up
+            let silu = g / (1.0 + (-g).exp());
+            ws.gate[i] = silu * ws.up[i];
+        }
+        tap(&format!("{pre}.mlp.down"), &ws.gate[..seq * dff], seq);
+        linear(&mut ws.mlp_out[..seq * d], &ws.gate[..seq * dff], ck.get(&format!("{pre}.mlp.down"))?, seq);
+        for i in 0..seq * d {
+            ws.x[i] += ws.mlp_out[i];
+        }
+    }
+
+    // Final norm + LM head.
+    let gamma = ck.get("norm.final")?;
+    rmsnorm(&mut ws.xn, &ws.x, gamma.data(), cfg.norm_eps, seq, d);
+    let head = if ck.config.tie_embeddings {
+        ck.get("embed.tok")?
+    } else {
+        ck.get("lm_head")?
+    };
+    let mut logits = vec![0.0f32; seq * cfg.vocab];
+    linear(&mut logits, &ws.xn[..seq * d], head, seq);
+    Ok(Tensor::new(&[seq, cfg.vocab], logits))
+}
+
+/// Log-softmax of one logits row, returning log P(token) for `tok`.
+pub fn log_prob(logits_row: &[f32], tok: usize) -> f64 {
+    let max = logits_row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let lse: f64 = logits_row
+        .iter()
+        .map(|&v| ((v as f64) - max).exp())
+        .sum::<f64>()
+        .ln()
+        + max;
+    logits_row[tok] as f64 - lse
+}
+
+/// Sum of log-probs of `continuation` tokens given `prompt` (teacher-
+/// forced). The MCQ scoring rule (same as Meta's eval harness: pick the
+/// option with the highest likelihood).
+pub fn continuation_logprob(
+    ck: &Checkpoint,
+    prompt: &[usize],
+    continuation: &[usize],
+    ws: &mut Workspace,
+) -> Result<f64> {
+    assert!(!continuation.is_empty());
+    let mut seq = prompt.to_vec();
+    seq.extend_from_slice(continuation);
+    let logits = forward(ck, &seq, ws)?;
+    let mut total = 0.0;
+    for (i, &tok) in continuation.iter().enumerate() {
+        // Token at position p is predicted by logits at p-1.
+        let pos = prompt.len() + i - 1;
+        total += log_prob(logits.row(pos), tok);
+    }
+    Ok(total)
+}
+
+/// Greedy generation (used by the INT2 "random characters" probe, E11).
+pub fn generate_greedy(
+    ck: &Checkpoint,
+    prompt: &[usize],
+    n_new: usize,
+    ws: &mut Workspace,
+) -> Result<Vec<usize>> {
+    let mut seq = prompt.to_vec();
+    for _ in 0..n_new {
+        if seq.len() >= ck.config.max_seq {
+            break;
+        }
+        let logits = forward(ck, &seq, ws)?;
+        let last = logits.row(seq.len() - 1);
+        let next = last
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        seq.push(next);
+    }
+    Ok(seq[prompt.len()..].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::PicoLlamaConfig;
+
+    fn test_ck() -> Checkpoint {
+        Checkpoint::random_init(&PicoLlamaConfig::test(), 42)
+    }
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        let ck = test_ck();
+        let mut ws = Workspace::new(&ck.config, 16);
+        let logits = forward(&ck, &[1, 2, 3, 4, 5], &mut ws).unwrap();
+        assert_eq!(logits.shape(), &[5, ck.config.vocab]);
+        assert!(logits.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn forward_is_deterministic() {
+        let ck = test_ck();
+        let mut ws = Workspace::new(&ck.config, 16);
+        let a = forward(&ck, &[7, 8, 9], &mut ws).unwrap();
+        let b = forward(&ck, &[7, 8, 9], &mut ws).unwrap();
+        assert_eq!(a, b, "workspace reuse must not change results");
+    }
+
+    #[test]
+    fn causality_prefix_invariance() {
+        // Logits at position t must not depend on tokens after t.
+        let ck = test_ck();
+        let mut ws = Workspace::new(&ck.config, 16);
+        let full = forward(&ck, &[3, 1, 4, 1, 5], &mut ws).unwrap();
+        let prefix = forward(&ck, &[3, 1, 4], &mut ws).unwrap();
+        for t in 0..3 {
+            for v in 0..ck.config.vocab {
+                let d = (full.at2(t, v) - prefix.at2(t, v)).abs();
+                assert!(d < 1e-4, "pos {t} vocab {v}: {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn rope_rotation_properties() {
+        // t=0 is the identity; t>0 rotates; norms are preserved.
+        let head_dim = 8;
+        let orig: Vec<f32> = (0..head_dim).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut x0 = orig.clone();
+        rope(&mut x0, 1, 1, head_dim, 10_000.0);
+        assert_eq!(x0, orig, "position 0 must be identity");
+
+        let mut x = [orig.clone(), orig.clone()].concat();
+        rope(&mut x, 2, 1, head_dim, 10_000.0);
+        let rotated = &x[head_dim..];
+        assert!(
+            crate::util::stats::max_abs_diff(rotated, &orig) > 1e-3,
+            "position 1 must rotate"
+        );
+        let norm = |v: &[f32]| v.iter().map(|&a| (a as f64).powi(2)).sum::<f64>().sqrt();
+        assert!((norm(rotated) - norm(&orig)).abs() < 1e-5, "rotation preserves norm");
+    }
+
+    #[test]
+    fn relative_position_sensitivity() {
+        // Swapping two distinct prompt tokens changes the final logits
+        // (positional information flows through attention).
+        let ck = test_ck();
+        let mut ws = Workspace::new(&ck.config, 16);
+        let a = forward(&ck, &[5, 9, 3], &mut ws).unwrap();
+        let b = forward(&ck, &[9, 5, 3], &mut ws).unwrap();
+        let d = crate::util::stats::max_abs_diff(a.row(2), b.row(2));
+        assert!(d > 1e-6, "token order ignored");
+    }
+
+    #[test]
+    fn log_prob_normalizes() {
+        let ck = test_ck();
+        let mut ws = Workspace::new(&ck.config, 16);
+        let logits = forward(&ck, &[1, 2], &mut ws).unwrap();
+        let total: f64 = (0..ck.config.vocab)
+            .map(|v| log_prob(logits.row(1), v).exp())
+            .sum();
+        assert!((total - 1.0).abs() < 1e-6, "probs sum to {total}");
+    }
+
+    #[test]
+    fn continuation_logprob_is_negative_and_additive() {
+        let ck = test_ck();
+        let mut ws = Workspace::new(&ck.config, 16);
+        let lp = continuation_logprob(&ck, &[1, 2, 3], &[4, 5], &mut ws).unwrap();
+        assert!(lp < 0.0);
+        // One-token continuations compose.
+        let lp1 = continuation_logprob(&ck, &[1, 2, 3], &[4], &mut ws).unwrap();
+        let lp2 = continuation_logprob(&ck, &[1, 2, 3, 4], &[5], &mut ws).unwrap();
+        assert!((lp - (lp1 + lp2)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn generate_respects_length() {
+        let ck = test_ck();
+        let mut ws = Workspace::new(&ck.config, 32);
+        let out = generate_greedy(&ck, &[1, 2], 6, &mut ws).unwrap();
+        assert_eq!(out.len(), 6);
+        assert!(out.iter().all(|&t| t < ck.config.vocab));
+    }
+
+    #[test]
+    fn gqa_differs_from_zeroed_kv_heads() {
+        // Sanity that the GQA head mapping is actually used: zeroing wk
+        // changes the output.
+        let mut ck = test_ck();
+        let mut ws = Workspace::new(&ck.config, 16);
+        let base = forward(&ck, &[1, 2, 3], &mut ws).unwrap();
+        let name = "layers.0.attn.wk";
+        ck.tensors.insert(name.into(), Tensor::zeros(&[ck.config.kv_dim(), ck.config.d_model]));
+        let changed = forward(&ck, &[1, 2, 3], &mut ws).unwrap();
+        assert!(crate::util::stats::max_abs_diff(base.data(), changed.data()) > 1e-6);
+    }
+}

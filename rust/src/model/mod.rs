@@ -1,0 +1,416 @@
+//! Model IR: the `picollama` transformer family (Llama-3 architecture —
+//! RMSNorm, RoPE, grouped-query attention, SwiGLU) and the parameter
+//! inventory that drives the quantization pipeline.
+//!
+//! The paper evaluates on Llama 3.2 1B Instruct; this crate substitutes a
+//! configurable model of the *same architecture family* (see DESIGN.md
+//! §3) whose layer inventory matches 1:1: per block `wq/wk/wv/wo` +
+//! `gate/up/down`, token embedding, RMSNorm gains, LM head. Splitting
+//! eligibility follows the paper's §3 rules: **linear layers are split;
+//! embeddings (lookup tables) and normalization gains are not.**
+
+pub mod forward;
+pub mod quantized;
+
+use std::collections::BTreeMap;
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+
+/// Architecture hyperparameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PicoLlamaConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// Grouped-query attention: number of KV heads (divides `n_heads`).
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub rope_theta: f64,
+    pub norm_eps: f64,
+    /// Share the embedding matrix with the LM head (Llama 3.2 1B does).
+    pub tie_embeddings: bool,
+}
+
+impl PicoLlamaConfig {
+    /// Tiny config for unit tests (sub-second everything).
+    pub fn test() -> Self {
+        Self {
+            vocab: 96,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_ff: 64,
+            max_seq: 32,
+            rope_theta: 10_000.0,
+            norm_eps: 1e-5,
+            tie_embeddings: true,
+        }
+    }
+
+    /// The evaluation model (~0.8M params): its vocab matches the
+    /// synthetic-arc world of `python/compile/datagen.py`
+    /// (5 special + 120 entities + 6 attributes + 80 values = 211);
+    /// large enough to learn the fact world and show quantization
+    /// degradation, small enough to sweep INT2/4/8 × all arms quickly.
+    pub fn eval() -> Self {
+        Self {
+            vocab: 211,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_ff: 352,
+            max_seq: 64,
+            rope_theta: 10_000.0,
+            norm_eps: 1e-5,
+            tie_embeddings: true,
+        }
+    }
+
+    /// Llama-3.2-1B-shaped config (for size/time accounting benches; not
+    /// trained here).
+    pub fn llama32_1b() -> Self {
+        Self {
+            vocab: 128_256,
+            d_model: 2048,
+            n_layers: 16,
+            n_heads: 32,
+            n_kv_heads: 8,
+            d_ff: 8192,
+            max_seq: 131_072,
+            rope_theta: 500_000.0,
+            norm_eps: 1e-5,
+            tie_embeddings: true,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.d_model % self.n_heads != 0 {
+            bail!("d_model {} not divisible by n_heads {}", self.d_model, self.n_heads);
+        }
+        if self.n_heads % self.n_kv_heads != 0 {
+            bail!("n_heads {} not divisible by n_kv_heads {}", self.n_heads, self.n_kv_heads);
+        }
+        if self.head_dim() % 2 != 0 {
+            bail!("head_dim {} must be even for RoPE", self.head_dim());
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("vocab", Json::num(self.vocab as f64)),
+            ("d_model", Json::num(self.d_model as f64)),
+            ("n_layers", Json::num(self.n_layers as f64)),
+            ("n_heads", Json::num(self.n_heads as f64)),
+            ("n_kv_heads", Json::num(self.n_kv_heads as f64)),
+            ("d_ff", Json::num(self.d_ff as f64)),
+            ("max_seq", Json::num(self.max_seq as f64)),
+            ("rope_theta", Json::num(self.rope_theta)),
+            ("norm_eps", Json::num(self.norm_eps)),
+            ("tie_embeddings", Json::Bool(self.tie_embeddings)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let u = |k: &str| -> Result<usize> {
+            j.req(k)?
+                .as_usize()
+                .ok_or_else(|| anyhow!("config field '{k}' must be an unsigned integer"))
+        };
+        let f = |k: &str| -> Result<f64> {
+            j.req(k)?
+                .as_f64()
+                .ok_or_else(|| anyhow!("config field '{k}' must be a number"))
+        };
+        let c = Self {
+            vocab: u("vocab")?,
+            d_model: u("d_model")?,
+            n_layers: u("n_layers")?,
+            n_heads: u("n_heads")?,
+            n_kv_heads: u("n_kv_heads")?,
+            d_ff: u("d_ff")?,
+            max_seq: u("max_seq")?,
+            rope_theta: f("rope_theta")?,
+            norm_eps: f("norm_eps")?,
+            tie_embeddings: j
+                .req("tie_embeddings")?
+                .as_bool()
+                .ok_or_else(|| anyhow!("tie_embeddings must be bool"))?,
+        };
+        c.validate()?;
+        Ok(c)
+    }
+}
+
+/// What a parameter *is* — drives split eligibility (§3 of the paper).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParamKind {
+    /// Linear weight matrix `[out, in]` — split + quantized.
+    Linear,
+    /// Embedding lookup table — quantized (rows are looked up, ranges are
+    /// benign) but never split.
+    Embedding,
+    /// Normalization gain vector — kept in FP (negligible size).
+    Norm,
+}
+
+impl ParamKind {
+    /// Per the paper's §3: only linear (and conv) layers are split.
+    pub fn splittable(self) -> bool {
+        matches!(self, ParamKind::Linear)
+    }
+}
+
+/// One entry of the model's parameter inventory.
+#[derive(Clone, Debug)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub kind: ParamKind,
+}
+
+impl ParamInfo {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Full parameter inventory in a canonical order.
+pub fn param_inventory(cfg: &PicoLlamaConfig) -> Vec<ParamInfo> {
+    let mut v = Vec::new();
+    let p = |name: String, shape: Vec<usize>, kind: ParamKind| ParamInfo { name, shape, kind };
+    v.push(p("embed.tok".into(), vec![cfg.vocab, cfg.d_model], ParamKind::Embedding));
+    for l in 0..cfg.n_layers {
+        let pre = format!("layers.{l}");
+        v.push(p(format!("{pre}.norm_attn"), vec![cfg.d_model], ParamKind::Norm));
+        v.push(p(format!("{pre}.attn.wq"), vec![cfg.d_model, cfg.d_model], ParamKind::Linear));
+        v.push(p(format!("{pre}.attn.wk"), vec![cfg.kv_dim(), cfg.d_model], ParamKind::Linear));
+        v.push(p(format!("{pre}.attn.wv"), vec![cfg.kv_dim(), cfg.d_model], ParamKind::Linear));
+        v.push(p(format!("{pre}.attn.wo"), vec![cfg.d_model, cfg.d_model], ParamKind::Linear));
+        v.push(p(format!("{pre}.norm_mlp"), vec![cfg.d_model], ParamKind::Norm));
+        v.push(p(format!("{pre}.mlp.gate"), vec![cfg.d_ff, cfg.d_model], ParamKind::Linear));
+        v.push(p(format!("{pre}.mlp.up"), vec![cfg.d_ff, cfg.d_model], ParamKind::Linear));
+        v.push(p(format!("{pre}.mlp.down"), vec![cfg.d_model, cfg.d_ff], ParamKind::Linear));
+    }
+    v.push(p("norm.final".into(), vec![cfg.d_model], ParamKind::Norm));
+    if !cfg.tie_embeddings {
+        v.push(p("lm_head".into(), vec![cfg.vocab, cfg.d_model], ParamKind::Linear));
+    }
+    v
+}
+
+/// Total parameter count.
+pub fn n_params(cfg: &PicoLlamaConfig) -> usize {
+    param_inventory(cfg).iter().map(|p| p.numel()).sum()
+}
+
+/// A floating-point model: config + named tensors.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub config: PicoLlamaConfig,
+    pub tensors: BTreeMap<String, Tensor>,
+    pub meta: BTreeMap<String, String>,
+}
+
+impl Checkpoint {
+    /// Validate every inventory entry is present with the right shape.
+    pub fn validate(&self) -> Result<()> {
+        self.config.validate()?;
+        for info in param_inventory(&self.config) {
+            let t = self
+                .tensors
+                .get(&info.name)
+                .ok_or_else(|| anyhow!("missing tensor '{}'", info.name))?;
+            if t.shape() != info.shape.as_slice() {
+                bail!(
+                    "tensor '{}' shape {:?} != expected {:?}",
+                    info.name,
+                    t.shape(),
+                    info.shape
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("missing tensor '{name}'"))
+    }
+
+    /// Random-init model (He-style scaled normals) — used by tests and by
+    /// the synthetic timing benches; the *trained* eval checkpoint comes
+    /// from python/compile/train.py via SQTZ.
+    pub fn random_init(cfg: &PicoLlamaConfig, seed: u64) -> Checkpoint {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut tensors = BTreeMap::new();
+        for info in param_inventory(cfg) {
+            let t = match info.kind {
+                ParamKind::Norm => Tensor::full(&info.shape, 1.0),
+                _ => {
+                    let fan_in = *info.shape.last().unwrap() as f32;
+                    let std = (2.0 / fan_in).sqrt().min(0.08);
+                    let mut data = vec![0.0f32; info.numel()];
+                    rng.fill_normal(&mut data, 0.0, std);
+                    Tensor::new(&info.shape, data)
+                }
+            };
+            tensors.insert(info.name, t);
+        }
+        Checkpoint {
+            config: cfg.clone(),
+            tensors,
+            meta: BTreeMap::new(),
+        }
+    }
+
+    /// Amplify weight outliers (DESIGN.md §3 substitution: recreate the
+    /// LLM-scale outlier regime on a small trained model). Scales the
+    /// largest `frac` fraction of |values| in every *linear* tensor by
+    /// `gain`. Returns the number of values touched.
+    pub fn amplify_outliers(&mut self, frac: f64, gain: f32, seed: u64) -> usize {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut touched = 0;
+        for info in param_inventory(&self.config) {
+            if info.kind != ParamKind::Linear {
+                continue;
+            }
+            let t = self.tensors.get_mut(&info.name).unwrap();
+            let n = t.len();
+            let n_amp = ((n as f64 * frac).ceil() as usize).max(1).min(n);
+            // Find the magnitude threshold of the top-n_amp values.
+            let mut mags: Vec<f32> = t.data().iter().map(|v| v.abs()).collect();
+            mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let thresh = mags[n_amp - 1];
+            for v in t.data_mut().iter_mut() {
+                if v.abs() >= thresh && touched < usize::MAX {
+                    // Slight jitter so amplified values do not collide.
+                    *v *= gain * rng.uniform_in(0.9, 1.1);
+                    touched += 1;
+                }
+            }
+        }
+        touched
+    }
+
+    /// Bytes of an FP32 export (E4 size table baseline).
+    pub fn fp32_bytes(&self) -> u64 {
+        self.tensors.values().map(|t| t.len() as u64 * 4).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn configs_validate() {
+        for c in [
+            PicoLlamaConfig::test(),
+            PicoLlamaConfig::eval(),
+            PicoLlamaConfig::llama32_1b(),
+        ] {
+            c.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn llama_1b_param_count_is_about_1b() {
+        // Real Llama 3.2 1B has ~1.24B params; the shape clone must land
+        // in the same ballpark (tied embeddings).
+        let n = n_params(&PicoLlamaConfig::llama32_1b());
+        assert!(
+            (1_100_000_000..1_400_000_000).contains(&n),
+            "n_params = {n}"
+        );
+    }
+
+    #[test]
+    fn inventory_kinds() {
+        let cfg = PicoLlamaConfig::test();
+        let inv = param_inventory(&cfg);
+        let linear = inv.iter().filter(|p| p.kind == ParamKind::Linear).count();
+        let norm = inv.iter().filter(|p| p.kind == ParamKind::Norm).count();
+        let emb = inv.iter().filter(|p| p.kind == ParamKind::Embedding).count();
+        assert_eq!(linear, cfg.n_layers * 7); // q,k,v,o,gate,up,down
+        assert_eq!(norm, cfg.n_layers * 2 + 1);
+        assert_eq!(emb, 1);
+        assert!(ParamKind::Linear.splittable());
+        assert!(!ParamKind::Embedding.splittable());
+        assert!(!ParamKind::Norm.splittable());
+    }
+
+    #[test]
+    fn random_init_validates() {
+        let cfg = PicoLlamaConfig::test();
+        let ck = Checkpoint::random_init(&cfg, 1);
+        ck.validate().unwrap();
+        assert_eq!(ck.fp32_bytes(), n_params(&cfg) as u64 * 4);
+    }
+
+    #[test]
+    fn config_json_roundtrip() {
+        let cfg = PicoLlamaConfig::eval();
+        let j = cfg.to_json();
+        let back = PicoLlamaConfig::from_json(&j).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = PicoLlamaConfig::test();
+        c.n_heads = 3; // does not divide d_model=32
+        assert!(c.validate().is_err());
+        let mut c = PicoLlamaConfig::test();
+        c.n_kv_heads = 3; // does not divide n_heads=4
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn amplify_outliers_touches_linear_only() {
+        let cfg = PicoLlamaConfig::test();
+        let mut ck = Checkpoint::random_init(&cfg, 2);
+        let emb_before = ck.get("embed.tok").unwrap().clone();
+        let norm_before = ck.get("layers.0.norm_attn").unwrap().clone();
+        let touched = ck.amplify_outliers(0.001, 20.0, 3);
+        assert!(touched > 0);
+        assert_eq!(ck.get("embed.tok").unwrap(), &emb_before);
+        assert_eq!(ck.get("layers.0.norm_attn").unwrap(), &norm_before);
+        // Linear absmax grew.
+        let w = ck.get("layers.0.attn.wq").unwrap();
+        let w0 = Checkpoint::random_init(&cfg, 2);
+        assert!(w.abs_max() > w0.get("layers.0.attn.wq").unwrap().abs_max() * 5.0);
+    }
+
+    #[test]
+    fn missing_tensor_fails_validation() {
+        let cfg = PicoLlamaConfig::test();
+        let mut ck = Checkpoint::random_init(&cfg, 1);
+        ck.tensors.remove("layers.0.attn.wq");
+        assert!(ck.validate().is_err());
+    }
+
+    #[test]
+    fn wrong_shape_fails_validation() {
+        let cfg = PicoLlamaConfig::test();
+        let mut ck = Checkpoint::random_init(&cfg, 1);
+        ck.tensors
+            .insert("layers.0.attn.wq".into(), Tensor::zeros(&[2, 2]));
+        assert!(ck.validate().is_err());
+    }
+}

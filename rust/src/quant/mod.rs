@@ -1,0 +1,392 @@
+//! Linear (affine) quantization — the paper's Eq. (1)–(3), plus packing,
+//! per-channel granularity and the container types the pipeline moves
+//! around.
+//!
+//!   Q(x) = INT(S·x) + Z            (1)
+//!   S    = (2^b − 1) / (α − β)     (2)
+//!   Z    = −2^(b−1) − INT(S·β)     (3)
+//!
+//! with `INT` = round-half-away-from-zero, values clamped to the signed
+//! b-bit range [−2^(b−1), 2^(b−1)−1], and dequantization x̂ = (Q − Z)/S.
+//!
+//! One deliberate deviation from a literal reading of the paper: the
+//! quantization range is widened to include 0 (`β ← min(β, 0)`,
+//! `α ← max(α, 0)`). Q(0) = Z then dequantizes to exactly 0.0, which the
+//! SplitQuantV2 masked-sum split depends on (split planes are ~2/3 zeros;
+//! any error on them would inject dense noise). For full-tensor baseline
+//! quantization of real weight matrices this is a no-op (ranges always
+//! straddle 0).
+
+pub mod pack;
+
+use crate::tensor::{Tensor, TensorI8};
+use anyhow::{bail, Result};
+
+/// Supported bit widths.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Bits {
+    Int2,
+    Int4,
+    Int8,
+}
+
+impl Bits {
+    pub fn width(self) -> u32 {
+        match self {
+            Bits::Int2 => 2,
+            Bits::Int4 => 4,
+            Bits::Int8 => 8,
+        }
+    }
+
+    pub fn from_width(w: usize) -> Result<Bits> {
+        Ok(match w {
+            2 => Bits::Int2,
+            4 => Bits::Int4,
+            8 => Bits::Int8,
+            _ => bail!("unsupported bit width {w} (supported: 2, 4, 8)"),
+        })
+    }
+
+    /// qmin = −2^(b−1).
+    pub fn qmin(self) -> i32 {
+        -(1 << (self.width() - 1))
+    }
+
+    /// qmax = 2^(b−1) − 1.
+    pub fn qmax(self) -> i32 {
+        (1 << (self.width() - 1)) - 1
+    }
+
+    /// Number of representable levels, 2^b.
+    pub fn levels(self) -> u32 {
+        1 << self.width()
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Bits::Int2 => "INT2",
+            Bits::Int4 => "INT4",
+            Bits::Int8 => "INT8",
+        }
+    }
+}
+
+/// Round half away from zero — the `INT()` of the paper. (Rust's
+/// `f32::round` already rounds half away from zero.)
+#[inline]
+pub fn int_round(x: f64) -> i64 {
+    x.round() as i64
+}
+
+/// Affine quantization parameters for one tensor (or one channel).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantParams {
+    pub bits: Bits,
+    /// Scaling factor S (Eq. 2). Larger S = finer resolution.
+    pub scale: f64,
+    /// Zero point Z (Eq. 3).
+    pub zero_point: i32,
+}
+
+impl QuantParams {
+    /// Derive parameters from a value range (Eq. 2–3), widening the range
+    /// to include zero. `lo == hi == 0` degenerates to scale 1.
+    pub fn from_range(bits: Bits, lo: f32, hi: f32) -> QuantParams {
+        debug_assert!(lo <= hi, "invalid range [{lo}, {hi}]");
+        let beta = (lo as f64).min(0.0);
+        let alpha = (hi as f64).max(0.0);
+        let width = alpha - beta;
+        if width == 0.0 {
+            // All-zero tensor: any scale represents it exactly via Q=Z.
+            return QuantParams {
+                bits,
+                scale: 1.0,
+                zero_point: 0,
+            };
+        }
+        let scale = ((bits.levels() - 1) as f64) / width;
+        let zero_point = (-(1i64 << (bits.width() - 1)) - int_round(scale * beta)) as i32;
+        QuantParams {
+            bits,
+            scale,
+            zero_point,
+        }
+    }
+
+    /// Parameters covering a whole tensor.
+    pub fn of_tensor(bits: Bits, t: &Tensor) -> QuantParams {
+        QuantParams::from_range(bits, t.min(), t.max())
+    }
+
+    /// Quantize one value (Eq. 1), clamped to the representable range.
+    #[inline]
+    pub fn quantize(&self, x: f32) -> i8 {
+        let q = int_round(self.scale * x as f64) + self.zero_point as i64;
+        q.clamp(self.bits.qmin() as i64, self.bits.qmax() as i64) as i8
+    }
+
+    /// Dequantize one level: x̂ = (Q − Z)/S.
+    #[inline]
+    pub fn dequantize(&self, q: i8) -> f32 {
+        ((q as i64 - self.zero_point as i64) as f64 / self.scale) as f32
+    }
+
+    /// The quantization step (resolution): 1/S. Half of this bounds the
+    /// rounding error for in-range values.
+    pub fn step(&self) -> f64 {
+        1.0 / self.scale
+    }
+}
+
+/// Quantization granularity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    /// One (scale, zero_point) for the whole tensor — what the paper's
+    /// baseline and SplitQuantV2 evaluation use.
+    PerTensor,
+    /// One (scale, zero_point) per output channel (row of a [out, in]
+    /// weight matrix) — provided for ablations.
+    PerChannel,
+}
+
+/// A quantized tensor: integer plane + parameters. The integer plane is
+/// kept unpacked (i8) in memory for compute; [`pack`] produces the
+/// storage representation.
+#[derive(Clone, Debug)]
+pub struct QuantizedTensor {
+    pub plane: TensorI8,
+    pub granularity: Granularity,
+    /// One entry for PerTensor; `rows` entries for PerChannel.
+    pub params: Vec<QuantParams>,
+}
+
+impl QuantizedTensor {
+    pub fn bits(&self) -> Bits {
+        self.params[0].bits
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        self.plane.shape()
+    }
+
+    /// Dequantize back to f32.
+    pub fn dequantize(&self) -> Tensor {
+        let shape = self.plane.shape().to_vec();
+        let data = self.plane.data();
+        match self.granularity {
+            Granularity::PerTensor => {
+                let p = self.params[0];
+                Tensor::new(&shape, data.iter().map(|&q| p.dequantize(q)).collect())
+            }
+            Granularity::PerChannel => {
+                assert_eq!(shape.len(), 2);
+                let cols = shape[1];
+                let mut out = Vec::with_capacity(data.len());
+                for (r, chunk) in data.chunks_exact(cols).enumerate() {
+                    let p = self.params[r];
+                    out.extend(chunk.iter().map(|&q| p.dequantize(q)));
+                }
+                Tensor::new(&shape, out)
+            }
+        }
+    }
+
+    /// Bytes this tensor occupies when bit-packed for storage
+    /// (plane only; params add a handful of bytes).
+    pub fn packed_len(&self) -> usize {
+        pack::packed_len(self.plane.len(), self.bits())
+    }
+}
+
+/// Quantize a tensor with one scale/zero-point (the paper's scheme).
+pub fn quantize_per_tensor(t: &Tensor, bits: Bits) -> QuantizedTensor {
+    let p = QuantParams::of_tensor(bits, t);
+    let plane = TensorI8::new(
+        t.shape(),
+        t.data().iter().map(|&x| p.quantize(x)).collect(),
+    );
+    QuantizedTensor {
+        plane,
+        granularity: Granularity::PerTensor,
+        params: vec![p],
+    }
+}
+
+/// Quantize a 2-D tensor row-wise (per output channel).
+pub fn quantize_per_channel(t: &Tensor, bits: Bits) -> QuantizedTensor {
+    assert_eq!(t.ndim(), 2, "per-channel requires a matrix");
+    let (rows, cols) = (t.rows(), t.cols());
+    let mut params = Vec::with_capacity(rows);
+    let mut plane = Vec::with_capacity(rows * cols);
+    for r in 0..rows {
+        let row = t.row(r);
+        let lo = row.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let p = QuantParams::from_range(bits, lo, hi);
+        plane.extend(row.iter().map(|&x| p.quantize(x)));
+        params.push(p);
+    }
+    QuantizedTensor {
+        plane: TensorI8::new(t.shape(), plane),
+        granularity: Granularity::PerChannel,
+        params,
+    }
+}
+
+/// Fake-quantization: quantize then dequantize (the standard simulated-
+/// quantization used for accuracy evaluation; identical numerics to
+/// executing the integer plane with dequant-on-load).
+pub fn fake_quantize(t: &Tensor, bits: Bits) -> Tensor {
+    quantize_per_tensor(t, bits).dequantize()
+}
+
+/// Quantization mean-squared-error of a tensor at a bit width — the
+/// resolution metric Figure 1 visualizes.
+pub fn quant_mse(t: &Tensor, bits: Bits) -> f64 {
+    let q = fake_quantize(t, bits);
+    crate::util::stats::mse(t.data(), q.data())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bits_ranges() {
+        assert_eq!(Bits::Int8.qmin(), -128);
+        assert_eq!(Bits::Int8.qmax(), 127);
+        assert_eq!(Bits::Int4.qmin(), -8);
+        assert_eq!(Bits::Int4.qmax(), 7);
+        assert_eq!(Bits::Int2.qmin(), -2);
+        assert_eq!(Bits::Int2.qmax(), 1);
+        assert_eq!(Bits::Int4.levels(), 16);
+        assert!(Bits::from_width(3).is_err());
+        assert_eq!(Bits::from_width(4).unwrap(), Bits::Int4);
+    }
+
+    #[test]
+    fn paper_formulas_hold() {
+        // For range [-1, 3] at INT4: S = 15/4, Z = -8 - INT(-15/4) = -4.
+        let p = QuantParams::from_range(Bits::Int4, -1.0, 3.0);
+        assert!((p.scale - 15.0 / 4.0).abs() < 1e-12);
+        assert_eq!(p.zero_point, -8 - (-(15.0f64 / 4.0)).round() as i32);
+        // Extremes map to qmin/qmax.
+        assert_eq!(p.quantize(-1.0), -8);
+        assert_eq!(p.quantize(3.0), 7);
+    }
+
+    #[test]
+    fn zero_is_exact_for_all_bit_widths() {
+        let mut r = Rng::new(1);
+        for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+            for _ in 0..50 {
+                let lo = r.uniform_in(-5.0, 0.0);
+                let hi = r.uniform_in(0.0, 5.0);
+                let p = QuantParams::from_range(bits, lo, hi);
+                assert_eq!(p.dequantize(p.quantize(0.0)), 0.0, "{bits:?} [{lo},{hi}]");
+            }
+            // Positive-only and negative-only ranges (widened to include 0).
+            let p = QuantParams::from_range(bits, 2.0, 5.0);
+            assert_eq!(p.dequantize(p.quantize(0.0)), 0.0);
+            let p = QuantParams::from_range(bits, -5.0, -2.0);
+            assert_eq!(p.dequantize(p.quantize(0.0)), 0.0);
+        }
+    }
+
+    #[test]
+    fn all_zero_tensor_roundtrips() {
+        let t = Tensor::zeros(&[4, 4]);
+        let q = quantize_per_tensor(&t, Bits::Int4);
+        assert_eq!(q.dequantize(), t);
+    }
+
+    #[test]
+    fn rounding_error_bounded_by_half_step() {
+        let mut r = Rng::new(2);
+        for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+            let data: Vec<f32> = (0..1000).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            let t = Tensor::from_vec(data);
+            let p = QuantParams::of_tensor(bits, &t);
+            let q = quantize_per_tensor(&t, bits);
+            let dq = q.dequantize();
+            let bound = 0.5 * p.step() + 1e-6;
+            for (a, b) in t.data().iter().zip(dq.data()) {
+                assert!(
+                    ((a - b) as f64).abs() <= bound,
+                    "{bits:?}: |{a} - {b}| > {bound}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn int8_nearly_lossless_int2_lossy() {
+        let mut r = Rng::new(3);
+        let data: Vec<f32> = (0..2000).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let t = Tensor::from_vec(data);
+        let e8 = quant_mse(&t, Bits::Int8);
+        let e4 = quant_mse(&t, Bits::Int4);
+        let e2 = quant_mse(&t, Bits::Int2);
+        assert!(e8 < e4 && e4 < e2, "e8={e8} e4={e4} e2={e2}");
+        assert!(e8 < 1e-3);
+        assert!(e2 > 1e-2);
+    }
+
+    #[test]
+    fn outliers_destroy_resolution() {
+        // The paper's core motivation: one outlier inflates (α−β) and the
+        // MSE of everything else. Removing it shrinks the step ~50x.
+        let mut r = Rng::new(4);
+        let mut data: Vec<f32> = (0..1000).map(|_| r.normal_f32(0.0, 0.1)).collect();
+        let clean_step = QuantParams::of_tensor(Bits::Int4, &Tensor::from_vec(data.clone())).step();
+        data.push(25.0);
+        let dirty_step = QuantParams::of_tensor(Bits::Int4, &Tensor::from_vec(data)).step();
+        assert!(dirty_step > clean_step * 20.0);
+    }
+
+    #[test]
+    fn per_channel_no_worse_than_per_tensor() {
+        let mut r = Rng::new(5);
+        // Rows with very different scales.
+        let mut data = Vec::new();
+        for row in 0..8 {
+            let s = 0.01 * (10.0f32).powi(row % 3);
+            for _ in 0..32 {
+                data.push(r.normal_f32(0.0, s));
+            }
+        }
+        let t = Tensor::new(&[8, 32], data);
+        let pt = quantize_per_tensor(&t, Bits::Int4).dequantize();
+        let pc = quantize_per_channel(&t, Bits::Int4).dequantize();
+        let mse_pt = crate::util::stats::mse(t.data(), pt.data());
+        let mse_pc = crate::util::stats::mse(t.data(), pc.data());
+        assert!(mse_pc <= mse_pt + 1e-12, "pc={mse_pc} pt={mse_pt}");
+        assert!(mse_pc < mse_pt * 0.5, "per-channel should win big here");
+    }
+
+    #[test]
+    fn quantize_clamps_out_of_range() {
+        let p = QuantParams::from_range(Bits::Int4, -1.0, 1.0);
+        assert_eq!(p.quantize(100.0), 7);
+        assert_eq!(p.quantize(-100.0), -8);
+    }
+
+    #[test]
+    fn dequantize_shape_preserved_per_channel() {
+        let t = Tensor::new(&[3, 4], (0..12).map(|i| i as f32).collect());
+        let q = quantize_per_channel(&t, Bits::Int8);
+        assert_eq!(q.dequantize().shape(), &[3, 4]);
+        assert_eq!(q.params.len(), 3);
+        assert!(q.dequantize().allclose(&t, 0.05));
+    }
+
+    #[test]
+    fn int_round_half_away_from_zero() {
+        assert_eq!(int_round(0.5), 1);
+        assert_eq!(int_round(-0.5), -1);
+        assert_eq!(int_round(2.4), 2);
+        assert_eq!(int_round(-2.6), -3);
+    }
+}

@@ -1,0 +1,136 @@
+//! Bit-packing of quantized planes for storage.
+//!
+//! Signed b-bit levels are stored offset-binary (`q − qmin`, an unsigned
+//! value in [0, 2^b)) and packed little-endian within each byte:
+//! INT8 → 1 value/byte, INT4 → 2 values/byte (low nibble first), INT2 →
+//! 4 values/byte (lowest 2 bits first). This is the on-disk and
+//! reported-model-size representation (E4: the 1/8-vs-3/8 size table);
+//! compute paths unpack to i8.
+
+use super::Bits;
+use anyhow::{bail, Result};
+
+/// Bytes needed to pack `n` values at a bit width.
+pub fn packed_len(n: usize, bits: Bits) -> usize {
+    let per_byte = 8 / bits.width() as usize;
+    n.div_ceil(per_byte)
+}
+
+/// Pack signed levels into bytes. Values must be within the bit width's
+/// representable range.
+pub fn pack(values: &[i8], bits: Bits) -> Vec<u8> {
+    let qmin = bits.qmin();
+    let width = bits.width() as usize;
+    let per_byte = 8 / width;
+    let mask = ((1u32 << width) - 1) as u8;
+    let mut out = vec![0u8; packed_len(values.len(), bits)];
+    for (i, &v) in values.iter().enumerate() {
+        debug_assert!(
+            (v as i32) >= qmin && (v as i32) <= bits.qmax(),
+            "value {v} out of {bits:?} range"
+        );
+        let u = ((v as i32 - qmin) as u8) & mask;
+        let byte = i / per_byte;
+        let shift = (i % per_byte) * width;
+        out[byte] |= u << shift;
+    }
+    out
+}
+
+/// Unpack `n` signed levels from packed bytes.
+pub fn unpack(bytes: &[u8], n: usize, bits: Bits) -> Result<Vec<i8>> {
+    let expect = packed_len(n, bits);
+    if bytes.len() != expect {
+        bail!(
+            "packed length {} != expected {} for n={} at {:?}",
+            bytes.len(),
+            expect,
+            n,
+            bits
+        );
+    }
+    let qmin = bits.qmin();
+    let width = bits.width() as usize;
+    let per_byte = 8 / width;
+    let mask = ((1u32 << width) - 1) as u8;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let byte = bytes[i / per_byte];
+        let shift = (i % per_byte) * width;
+        let u = (byte >> shift) & mask;
+        out.push((u as i32 + qmin) as i8);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn lengths() {
+        assert_eq!(packed_len(8, Bits::Int8), 8);
+        assert_eq!(packed_len(8, Bits::Int4), 4);
+        assert_eq!(packed_len(8, Bits::Int2), 2);
+        // Ragged tails round up.
+        assert_eq!(packed_len(9, Bits::Int4), 5);
+        assert_eq!(packed_len(5, Bits::Int2), 2);
+        assert_eq!(packed_len(0, Bits::Int2), 0);
+    }
+
+    #[test]
+    fn roundtrip_all_values_all_widths() {
+        for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+            let all: Vec<i8> = (bits.qmin()..=bits.qmax()).map(|v| v as i8).collect();
+            let packed = pack(&all, bits);
+            let back = unpack(&packed, all.len(), bits).unwrap();
+            assert_eq!(back, all, "{bits:?}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_random_at_all_alignments() {
+        let mut r = Rng::new(1);
+        for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+            for n in 0..35 {
+                let vals: Vec<i8> = (0..n)
+                    .map(|_| {
+                        (bits.qmin() + r.below((bits.qmax() - bits.qmin() + 1) as usize) as i32)
+                            as i8
+                    })
+                    .collect();
+                let packed = pack(&vals, bits);
+                assert_eq!(packed.len(), packed_len(n, bits));
+                assert_eq!(unpack(&packed, n, bits).unwrap(), vals, "{bits:?} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn int4_nibble_order_is_low_first() {
+        // values [-8, 7]: offsets [0, 15] -> byte 0xF0.
+        let packed = pack(&[-8, 7], Bits::Int4);
+        assert_eq!(packed, vec![0xF0]);
+    }
+
+    #[test]
+    fn int2_bit_order() {
+        // offsets of [-2,-1,0,1] are [0,1,2,3] -> 0b11_10_01_00 = 0xE4.
+        let packed = pack(&[-2, -1, 0, 1], Bits::Int2);
+        assert_eq!(packed, vec![0xE4]);
+    }
+
+    #[test]
+    fn unpack_rejects_wrong_length() {
+        assert!(unpack(&[0u8; 3], 8, Bits::Int4).is_err());
+    }
+
+    #[test]
+    fn compression_ratios_match_paper() {
+        // FP32 -> INT4 is 1/8 of the bytes; INT2 is 1/16.
+        let n = 1024;
+        assert_eq!(packed_len(n, Bits::Int4) * 8, n * 4);
+        assert_eq!(packed_len(n, Bits::Int2) * 16, n * 4);
+    }
+}

@@ -1,0 +1,304 @@
+//! PJRT runtime: loads the AOT-lowered HLO text from `artifacts/`,
+//! compiles each variant once on the CPU PJRT client, and executes them
+//! from the rust request path. Python never runs here.
+//!
+//! The contract with `python/compile/aot.py` is `manifest.json`: each
+//! variant lists its HLO file and the ordered argument specs (name,
+//! dtype, shape). [`Engine::execute`] takes a name→tensor map, assembles
+//! the positional literals, runs, and returns the f32 output.
+
+pub mod scoring;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Argument spec from the manifest.
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i8" | "i32"
+}
+
+/// One compiled variant.
+pub struct Variant {
+    pub name: String,
+    pub args: Vec<ArgSpec>,
+    pub out_shape: Vec<usize>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// A runtime argument value.
+#[derive(Clone, Debug)]
+pub enum ArgValue {
+    F32(Vec<f32>),
+    I8(Vec<i8>),
+    I32(Vec<i32>),
+}
+
+impl ArgValue {
+    pub fn from_tensor(t: &Tensor) -> ArgValue {
+        ArgValue::F32(t.data().to_vec())
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            ArgValue::F32(v) => v.len(),
+            ArgValue::I8(v) => v.len(),
+            ArgValue::I32(v) => v.len(),
+        }
+    }
+
+    fn dtype(&self) -> &'static str {
+        match self {
+            ArgValue::F32(_) => "f32",
+            ArgValue::I8(_) => "i8",
+            ArgValue::I32(_) => "i32",
+        }
+    }
+
+    fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            ArgValue::F32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+            ArgValue::I32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+            ArgValue::I8(v) => {
+                // The crate's `vec1` NativeType set excludes i8; build an
+                // S8 literal of the right shape and copy raw bytes in.
+                let mut lit =
+                    xla::Literal::create_from_shape(xla::PrimitiveType::S8, shape);
+                lit.copy_raw_from(v)
+                    .map_err(|e| anyhow!("copying i8 literal: {e:?}"))?;
+                lit
+            }
+        };
+        Ok(lit)
+    }
+}
+
+/// The PJRT engine: client + compiled variants.
+pub struct Engine {
+    client: xla::PjRtClient,
+    variants: BTreeMap<String, Variant>,
+    pub artifacts_dir: PathBuf,
+    pub batch: usize,
+    pub prompt_len: usize,
+}
+
+impl Engine {
+    /// Load `manifest.json` and compile every variant (or a subset).
+    pub fn load(artifacts_dir: impl AsRef<Path>, only: Option<&[&str]>) -> Result<Engine> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let manifest = Json::parse(&text)?;
+        if manifest.req("format")?.as_str() != Some("splitquant-artifacts-v1") {
+            bail!("unexpected manifest format");
+        }
+        let batch = manifest.req("batch")?.as_usize().unwrap_or(32);
+        let prompt_len = manifest.req("prompt_len")?.as_usize().unwrap_or(3);
+
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let mut variants = BTreeMap::new();
+        for (name, spec) in manifest
+            .req("variants")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("bad variants"))?
+        {
+            if let Some(filter) = only {
+                if !filter.contains(&name.as_str()) {
+                    continue;
+                }
+            }
+            let file = spec.req("file")?.as_str().unwrap_or_default();
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            let mut args = Vec::new();
+            for aj in spec
+                .req("args")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("bad args"))?
+            {
+                args.push(ArgSpec {
+                    name: aj.req("name")?.as_str().unwrap_or_default().to_string(),
+                    shape: aj
+                        .req("shape")?
+                        .as_usize_vec()
+                        .ok_or_else(|| anyhow!("bad shape"))?,
+                    dtype: aj.req("dtype")?.as_str().unwrap_or_default().to_string(),
+                });
+            }
+            let out_shape = spec
+                .req("out_shape")?
+                .as_usize_vec()
+                .ok_or_else(|| anyhow!("bad out_shape"))?;
+            variants.insert(
+                name.clone(),
+                Variant {
+                    name: name.clone(),
+                    args,
+                    out_shape,
+                    exe,
+                },
+            );
+        }
+        Ok(Engine {
+            client,
+            variants,
+            artifacts_dir: dir,
+            batch,
+            prompt_len,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn variant_names(&self) -> Vec<&str> {
+        self.variants.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&Variant> {
+        self.variants
+            .get(name)
+            .ok_or_else(|| anyhow!("variant '{name}' not loaded"))
+    }
+
+    /// Execute a variant with named arguments. Returns the f32 output
+    /// tensor shaped per the manifest.
+    pub fn execute(&self, name: &str, args: &BTreeMap<String, ArgValue>) -> Result<Tensor> {
+        let var = self.variant(name)?;
+        let mut literals = Vec::with_capacity(var.args.len());
+        for spec in &var.args {
+            let val = args
+                .get(&spec.name)
+                .ok_or_else(|| anyhow!("missing argument '{}' for {name}", spec.name))?;
+            let numel: usize = spec.shape.iter().product();
+            if val.len() != numel {
+                bail!(
+                    "argument '{}': {} values, shape {:?} needs {numel}",
+                    spec.name,
+                    val.len(),
+                    spec.shape
+                );
+            }
+            if val.dtype() != spec.dtype {
+                bail!(
+                    "argument '{}': dtype {} != manifest {}",
+                    spec.name,
+                    val.dtype(),
+                    spec.dtype
+                );
+            }
+            literals.push(val.to_literal(&spec.shape)?);
+        }
+        let result = var
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untupling result: {e:?}"))?;
+        let values = out
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("result to f32: {e:?}"))?;
+        Ok(Tensor::new(&var.out_shape, values))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn engine_loads_micro_variant() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let eng = Engine::load(&dir, Some(&["linear_micro_k3"])).unwrap();
+        assert_eq!(eng.variant_names(), vec!["linear_micro_k3"]);
+        assert!(eng.platform().to_lowercase().contains("cpu") || !eng.platform().is_empty());
+    }
+
+    #[test]
+    fn micro_kernel_matches_cpu_reference() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let eng = Engine::load(&dir, Some(&["linear_micro_k3"])).unwrap();
+        let mut rng = crate::util::rng::Rng::new(7);
+        let (m, n, k) = (128usize, 128usize, 128usize);
+        let mut x = vec![0.0f32; m * k];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let planes: Vec<i8> = (0..3 * n * k)
+            .map(|_| (rng.below(16) as i32 - 8) as i8)
+            .collect();
+        let scales = vec![4.0f32, 1.5, 0.5];
+        let zps = vec![-2.0f32, 0.0, 3.0];
+
+        let mut args = BTreeMap::new();
+        args.insert("x".to_string(), ArgValue::F32(x.clone()));
+        args.insert("planes".to_string(), ArgValue::I8(planes.clone()));
+        args.insert("scales".to_string(), ArgValue::F32(scales.clone()));
+        args.insert("zps".to_string(), ArgValue::F32(zps.clone()));
+        let got = eng.execute("linear_micro_k3", &args).unwrap();
+
+        // CPU reference: y = Σ_j x · dequant(plane_j)ᵀ.
+        let xt = Tensor::new(&[m, k], x);
+        let mut want = Tensor::zeros(&[m, n]);
+        for j in 0..3 {
+            let w: Vec<f32> = planes[j * n * k..(j + 1) * n * k]
+                .iter()
+                .map(|&q| (q as f32 - zps[j]) / scales[j])
+                .collect();
+            let wt = Tensor::new(&[n, k], w);
+            want.add_assign(&crate::tensor::matmul(&xt, &wt.transpose()));
+        }
+        assert!(
+            got.allclose(&want, 2e-2),
+            "max diff {}",
+            crate::util::stats::max_abs_diff(got.data(), want.data())
+        );
+    }
+
+    #[test]
+    fn execute_validates_args() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let eng = Engine::load(&dir, Some(&["linear_micro_k3"])).unwrap();
+        // Missing args.
+        let err = eng.execute("linear_micro_k3", &BTreeMap::new());
+        assert!(err.is_err());
+        // Wrong shape.
+        let mut args = BTreeMap::new();
+        args.insert("x".to_string(), ArgValue::F32(vec![0.0; 3]));
+        assert!(eng.execute("linear_micro_k3", &args).is_err());
+        // Unknown variant.
+        assert!(eng.execute("nope", &BTreeMap::new()).is_err());
+    }
+}

@@ -1,0 +1,225 @@
+//! MCQ scoring through the PJRT runtime: assembles weight arguments for
+//! the exported variants, batches the problem set, and returns choices.
+//!
+//! Variant/arm mapping:
+//! * FP checkpoint            → `score_fp`
+//! * Baseline linear quant    → `score_quant_k1` (one int8 plane/linear)
+//! * SplitQuantV2 (k=3)       → `score_quant_k3` (stacked planes)
+//! * GPTQ (per-channel) / OCS → `score_fp` on the *effective* checkpoint
+//!   (their grids are not per-tensor, so the int-plane executable does
+//!   not apply; numerics are identical by construction).
+//!
+//! Options in the synthetic-arc set are single tokens, so ranking
+//! continuation likelihood reduces to comparing last-position logits at
+//! the option token ids (softmax is monotone).
+
+use std::collections::BTreeMap;
+
+use crate::data::McqProblem;
+use crate::eval::{EvalReport, ProblemResult};
+use crate::model::quantized::{QuantParam, QuantizedModel};
+use crate::model::Checkpoint;
+
+use super::{ArgValue, Engine};
+use anyhow::{bail, Result};
+
+/// Weight arguments for `score_fp`.
+pub fn fp_args(ck: &Checkpoint) -> BTreeMap<String, ArgValue> {
+    ck.tensors
+        .iter()
+        .map(|(name, t)| (name.clone(), ArgValue::F32(t.data().to_vec())))
+        .collect()
+}
+
+/// Weight arguments for `score_quant_k{k}` from a quantized model whose
+/// linears are per-tensor planes (baseline k=1 or split k=3).
+///
+/// Layers whose effective plane count is below `k` (degenerate splits)
+/// are padded with zero planes (scale 1, zp 0 → dequantizes to 0).
+pub fn quant_args(qm: &QuantizedModel, k: usize) -> Result<BTreeMap<String, ArgValue>> {
+    let mut args = BTreeMap::new();
+    // Dequantized embedding doubles as the tied LM head.
+    args.insert(
+        "embed.tok".to_string(),
+        ArgValue::F32(qm.embedding.dequantize().data().to_vec()),
+    );
+    for (name, t) in &qm.fp_tensors {
+        args.insert(name.clone(), ArgValue::F32(t.data().to_vec()));
+    }
+    for (name, qp) in &qm.linears {
+        let (planes, scales, zps): (Vec<&[i8]>, Vec<f32>, Vec<f32>) = match qp {
+            QuantParam::Plain(q) => {
+                if q.params.len() != 1 {
+                    bail!("'{name}' is per-channel; use the effective-checkpoint path");
+                }
+                (
+                    vec![q.plane.data()],
+                    vec![q.params[0].scale as f32],
+                    vec![q.params[0].zero_point as f32],
+                )
+            }
+            QuantParam::Split(s) => (
+                s.planes.iter().map(|p| p.plane.data()).collect(),
+                s.planes.iter().map(|p| p.params[0].scale as f32).collect(),
+                s.planes
+                    .iter()
+                    .map(|p| p.params[0].zero_point as f32)
+                    .collect(),
+            ),
+            QuantParam::OcsEffective { .. } => {
+                bail!("'{name}' is OCS-effective; use the effective-checkpoint path")
+            }
+        };
+        if planes.len() > k {
+            bail!("'{name}' has {} planes > variant k={k}", planes.len());
+        }
+        let numel = planes[0].len();
+        let mut stacked: Vec<i8> = Vec::with_capacity(k * numel);
+        let mut s_out = Vec::with_capacity(k);
+        let mut z_out = Vec::with_capacity(k);
+        for (i, p) in planes.iter().enumerate() {
+            stacked.extend_from_slice(p);
+            s_out.push(scales[i]);
+            z_out.push(zps[i]);
+        }
+        for _ in planes.len()..k {
+            stacked.extend(std::iter::repeat(0i8).take(numel));
+            s_out.push(1.0);
+            z_out.push(0.0);
+        }
+        args.insert(format!("{name}.planes"), ArgValue::I8(stacked));
+        args.insert(format!("{name}.scales"), ArgValue::F32(s_out));
+        args.insert(format!("{name}.zps"), ArgValue::F32(z_out));
+    }
+    Ok(args)
+}
+
+/// Check that a quantized model is runnable through an int-plane variant.
+pub fn is_int_plane_compatible(qm: &QuantizedModel) -> bool {
+    qm.linears.values().all(|qp| match qp {
+        QuantParam::Plain(q) => q.params.len() == 1,
+        QuantParam::Split(_) => true,
+        QuantParam::OcsEffective { .. } => false,
+    })
+}
+
+/// Max plane count across linears (→ which variant to use).
+pub fn plane_count(qm: &QuantizedModel) -> usize {
+    qm.linears.values().map(|q| q.n_planes()).max().unwrap_or(1)
+}
+
+/// Score a problem set through a variant. `weight_args` are the
+/// non-token arguments; prompts are batched to the manifest batch size
+/// (last batch padded by repetition).
+pub fn score_problems(
+    engine: &Engine,
+    variant: &str,
+    weight_args: &BTreeMap<String, ArgValue>,
+    problems: &[McqProblem],
+) -> Result<EvalReport> {
+    let b = engine.batch;
+    let plen = engine.prompt_len;
+    let mut results = Vec::with_capacity(problems.len());
+    for chunk in problems.chunks(b) {
+        let mut tokens = Vec::with_capacity(b * plen);
+        for p in chunk {
+            if p.prompt.len() != plen {
+                bail!("prompt length {} != exported {plen}", p.prompt.len());
+            }
+            tokens.extend(p.prompt.iter().map(|&t| t as i32));
+        }
+        // Pad the final chunk by repeating the first prompt.
+        for _ in chunk.len()..b {
+            tokens.extend(chunk[0].prompt.iter().map(|&t| t as i32));
+        }
+        let mut args = weight_args.clone();
+        args.insert("tokens".to_string(), ArgValue::I32(tokens));
+        let logits = engine.execute(variant, &args)?; // [B, vocab]
+        let vocab = logits.shape()[1];
+        for (i, p) in chunk.iter().enumerate() {
+            let row = logits.row(i);
+            let mut lps = Vec::with_capacity(p.options.len());
+            for opt in &p.options {
+                if opt.len() != 1 {
+                    bail!("multi-token options need the CPU scoring path");
+                }
+                if opt[0] >= vocab {
+                    bail!("option token {} out of vocab {vocab}", opt[0]);
+                }
+                lps.push(crate::model::forward::log_prob(row, opt[0]));
+            }
+            let chosen = lps
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap();
+            results.push(ProblemResult {
+                chosen,
+                correct: p.correct,
+                logprobs: lps,
+            });
+        }
+    }
+    Ok(EvalReport::from_results(&results))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::quantized::{quantize_model, Method};
+    use crate::model::PicoLlamaConfig;
+    use crate::quant::Bits;
+    use crate::split::SplitConfig;
+
+    #[test]
+    fn quant_args_shapes() {
+        let ck = Checkpoint::random_init(&PicoLlamaConfig::test(), 1);
+        let qm = quantize_model(&ck, Bits::Int4, &Method::SplitQuant(SplitConfig::default()))
+            .unwrap();
+        let args = quant_args(&qm, 3).unwrap();
+        // Every linear contributes 3 args; embedding + norms present.
+        let n_linear = ck
+            .tensors
+            .keys()
+            .filter(|k| k.contains("attn.") || k.contains("mlp."))
+            .count();
+        assert_eq!(
+            args.len(),
+            1 + qm.fp_tensors.len() + 3 * n_linear,
+            "arg count"
+        );
+        let ArgValue::I8(p) = &args["layers.0.attn.wq.planes"] else {
+            panic!("planes must be i8");
+        };
+        let d = ck.config.d_model;
+        assert_eq!(p.len(), 3 * d * d);
+        assert!(is_int_plane_compatible(&qm));
+        assert_eq!(plane_count(&qm), 3);
+    }
+
+    #[test]
+    fn quant_args_pads_degenerate_layers() {
+        let ck = Checkpoint::random_init(&PicoLlamaConfig::test(), 2);
+        // Baseline (1 plane) padded up to k=3 must dequantize identically.
+        let qm = quantize_model(&ck, Bits::Int8, &Method::Baseline).unwrap();
+        let args = quant_args(&qm, 3).unwrap();
+        let ArgValue::F32(scales) = &args["layers.0.attn.wq.scales"] else {
+            panic!()
+        };
+        assert_eq!(scales.len(), 3);
+        assert_eq!(scales[1], 1.0);
+        let ArgValue::F32(zps) = &args["layers.0.attn.wq.zps"] else {
+            panic!()
+        };
+        assert_eq!(zps[2], 0.0);
+    }
+
+    #[test]
+    fn ocs_rejected_from_int_path() {
+        let ck = Checkpoint::random_init(&PicoLlamaConfig::test(), 3);
+        let qm = quantize_model(&ck, Bits::Int4, &Method::Ocs { expand_ratio: 0.05 }).unwrap();
+        assert!(!is_int_plane_compatible(&qm));
+        assert!(quant_args(&qm, 1).is_err());
+    }
+}

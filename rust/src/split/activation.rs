@@ -1,0 +1,158 @@
+//! Activation splitting with a calibration dataset — the paper's §5
+//! future-work extension, implemented.
+//!
+//! When calibration data *is* available, the same clustering idea applies
+//! to activations: simulated activation values from a calibration batch
+//! are clustered into k groups; at inference each activation value is
+//! quantized with the parameters of its cluster (selected by the cluster
+//! boundaries — the "masking layers" of §5). This is piecewise linear
+//! quantization with data-derived breakpoints; resolution inside the
+//! dense cluster improves exactly as for weights.
+
+use crate::kmeans::{kmeans_auto, Clustering1D};
+use crate::quant::{Bits, QuantParams};
+
+/// Calibrated piecewise activation quantizer.
+#[derive(Clone, Debug)]
+pub struct ActivationSplitter {
+    pub clustering: Clustering1D,
+    pub params: Vec<QuantParams>,
+    pub bits: Bits,
+    /// Calibration range, used to clamp unseen values.
+    pub cal_min: f32,
+    pub cal_max: f32,
+}
+
+impl ActivationSplitter {
+    /// Calibrate from sampled activation values.
+    pub fn calibrate(samples: &[f32], k: usize, bits: Bits) -> ActivationSplitter {
+        assert!(!samples.is_empty(), "calibration requires samples");
+        let clustering = kmeans_auto(samples, k);
+        let cal_min = samples.iter().cloned().fold(f32::INFINITY, f32::min);
+        let cal_max = samples.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let ranges = clustering.cluster_ranges(cal_min as f64, cal_max as f64);
+        let params = ranges
+            .iter()
+            .map(|&(lo, hi)| QuantParams::from_range(bits, lo as f32, hi as f32))
+            .collect();
+        ActivationSplitter {
+            clustering,
+            params,
+            bits,
+            cal_min,
+            cal_max,
+        }
+    }
+
+    /// Cluster index + quantized level for a value (clamped to the
+    /// calibration range, as all static activation quantizers must).
+    #[inline]
+    pub fn quantize(&self, x: f32) -> (usize, i8) {
+        let x = x.clamp(self.cal_min, self.cal_max);
+        let c = self.clustering.assign(x);
+        (c, self.params[c].quantize(x))
+    }
+
+    /// Fake-quantize one value through the splitter.
+    #[inline]
+    pub fn fake_quantize(&self, x: f32) -> f32 {
+        let (c, q) = self.quantize(x);
+        self.params[c].dequantize(q)
+    }
+
+    /// Fake-quantize a slice (the masked-activation path applied densely).
+    pub fn fake_quantize_all(&self, xs: &[f32]) -> Vec<f32> {
+        xs.iter().map(|&x| self.fake_quantize(x)).collect()
+    }
+}
+
+/// Baseline single-range activation quantizer (what you get without
+/// splitting), for comparison in E9.
+pub fn baseline_activation_quantizer(samples: &[f32], bits: Bits) -> QuantParams {
+    let lo = samples.iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = samples.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    QuantParams::from_range(bits, lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::mse;
+
+    /// GELU-ish activation distribution: mostly near zero, long positive
+    /// tail (post-nonlinearity activations in transformers look like this).
+    fn activation_samples(seed: u64, n: usize) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let x = r.normal_f32(0.0, 1.0);
+                // softplus-like: small negatives, heavy positive tail
+                if x > 0.0 {
+                    x * x * 0.8
+                } else {
+                    0.1 * x
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn split_beats_single_range_on_skewed_activations() {
+        let cal = activation_samples(1, 20_000);
+        let test = activation_samples(2, 5_000);
+        let splitter = ActivationSplitter::calibrate(&cal, 3, Bits::Int4);
+        let baseline = baseline_activation_quantizer(&cal, Bits::Int4);
+
+        let split_q = splitter.fake_quantize_all(&test);
+        let base_q: Vec<f32> = test
+            .iter()
+            .map(|&x| {
+                baseline.dequantize(baseline.quantize(x.clamp(
+                    splitter.cal_min,
+                    splitter.cal_max,
+                )))
+            })
+            .collect();
+        let mse_split = mse(&test, &split_q);
+        let mse_base = mse(&test, &base_q);
+        assert!(
+            mse_split < mse_base * 0.6,
+            "split {mse_split} vs baseline {mse_base}"
+        );
+    }
+
+    #[test]
+    fn quantize_clamps_unseen_values() {
+        let cal = vec![0.0f32, 1.0, 2.0, 3.0, 4.0, 5.0];
+        let s = ActivationSplitter::calibrate(&cal, 2, Bits::Int8);
+        // Far outside calibration: clamps rather than exploding.
+        let v = s.fake_quantize(100.0);
+        assert!(v <= 5.0 + 0.1);
+        let v = s.fake_quantize(-100.0);
+        assert!(v >= -0.1);
+    }
+
+    #[test]
+    fn roundtrip_error_within_cluster_step() {
+        let cal = activation_samples(3, 10_000);
+        let s = ActivationSplitter::calibrate(&cal, 3, Bits::Int8);
+        for &x in cal.iter().take(500) {
+            let (c, _) = s.quantize(x);
+            let err = (x - s.fake_quantize(x)).abs() as f64;
+            assert!(err <= 0.5 * s.params[c].step() + 1e-6);
+        }
+    }
+
+    #[test]
+    fn k1_equals_baseline() {
+        let cal = activation_samples(4, 5_000);
+        let s = ActivationSplitter::calibrate(&cal, 1, Bits::Int4);
+        let b = baseline_activation_quantizer(&cal, Bits::Int4);
+        for &x in cal.iter().take(200) {
+            let via_split = s.fake_quantize(x);
+            let via_base = b.dequantize(b.quantize(x));
+            assert!((via_split - via_base).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! Biased-linear-layer splitting — the paper's §3 "weights *and biases*
+//! are partitioned using k-means clustering".
+//!
+//! picollama (like Llama) has bias-free linears, so the LLM pipeline
+//! never exercises this; it exists for the general library contract
+//! (conv/linear layers of CV models in the SplitQuant lineage do carry
+//! biases). Semantics: the weight values and bias values are clustered
+//! *jointly* (one shared value-space partition), each plane gets the
+//! masked weights AND the masked bias of its cluster, and
+//!
+//!   y = Σⱼ (Wⱼ x + bⱼ)  ==  W x + b     (exact: masks are disjoint)
+//!
+//! so each plane's quantizer covers a narrow range for both its weights
+//! and its bias entries.
+
+use crate::quant::{self, Bits, QuantParams, QuantizedTensor};
+use crate::tensor::Tensor;
+
+use super::{QuantizedSplitLayer, SplitConfig, SplitLayer, Strategy};
+
+/// A split biased layer: planes of weights + matching bias planes.
+#[derive(Clone, Debug)]
+pub struct SplitBiasedLayer {
+    pub weights: SplitLayer,
+    /// One bias plane per weight plane (same length as the bias).
+    pub biases: Vec<Tensor>,
+}
+
+impl SplitBiasedLayer {
+    pub fn k(&self) -> usize {
+        self.weights.k()
+    }
+
+    /// Reconstruct (W, b) exactly.
+    pub fn reconstruct(&self) -> (Tensor, Tensor) {
+        let w = self.weights.reconstruct();
+        let mut b = self.biases[0].clone();
+        for p in &self.biases[1..] {
+            b.add_assign(p);
+        }
+        (w, b)
+    }
+}
+
+/// Split a biased linear layer with *joint* weight+bias clustering.
+pub fn split_biased(w: &Tensor, bias: &Tensor, cfg: &SplitConfig) -> SplitBiasedLayer {
+    assert_eq!(
+        cfg.strategy,
+        Strategy::MaskedSum,
+        "bias splitting is defined for the masked-sum structure"
+    );
+    // Joint value pool: weights ++ bias.
+    let mut pool = Vec::with_capacity(w.len() + bias.len());
+    pool.extend_from_slice(w.data());
+    pool.extend_from_slice(bias.data());
+    let clustering = match cfg.dynamic_k {
+        Some(d) => {
+            let (k, mut tried) = crate::kmeans::choose_k(&pool, d.k_max, d.elbow);
+            tried.swap_remove(k - 1)
+        }
+        None => crate::kmeans::kmeans_auto(&pool, cfg.k),
+    };
+    let k = clustering.k();
+    let mut wplanes = vec![Tensor::zeros(w.shape()); k];
+    for (i, &v) in w.data().iter().enumerate() {
+        wplanes[clustering.assign(v)].data_mut()[i] = v;
+    }
+    let mut bplanes = vec![Tensor::zeros(bias.shape()); k];
+    for (i, &v) in bias.data().iter().enumerate() {
+        bplanes[clustering.assign(v)].data_mut()[i] = v;
+    }
+    SplitBiasedLayer {
+        weights: SplitLayer {
+            planes: wplanes,
+            clustering,
+            strategy: Strategy::MaskedSum,
+        },
+        biases: bplanes,
+    }
+}
+
+/// Quantized biased split layer: each plane's weights and bias share the
+/// plane's quantizer (ranges widened over both).
+#[derive(Clone, Debug)]
+pub struct QuantizedBiasedLayer {
+    pub weights: QuantizedSplitLayer,
+    pub biases: Vec<QuantizedTensor>,
+}
+
+impl QuantizedBiasedLayer {
+    /// Effective (dequantized) (W, b).
+    pub fn effective(&self) -> (Tensor, Tensor) {
+        let w = self.weights.effective_weight();
+        let mut b = self.biases[0].dequantize();
+        for p in &self.biases[1..] {
+            b.add_assign(&p.dequantize());
+        }
+        (w, b)
+    }
+}
+
+/// Split + quantize a biased layer.
+pub fn split_quantize_biased(
+    w: &Tensor,
+    bias: &Tensor,
+    cfg: &SplitConfig,
+    bits: Bits,
+) -> QuantizedBiasedLayer {
+    let sl = split_biased(w, bias, cfg);
+    let mut qw = Vec::with_capacity(sl.k());
+    let mut qb = Vec::with_capacity(sl.k());
+    for (wp, bp) in sl.weights.planes.iter().zip(&sl.biases) {
+        // Shared params across the plane's weights and bias values.
+        let lo = wp.min().min(bp.min());
+        let hi = wp.max().max(bp.max());
+        let p = QuantParams::from_range(bits, lo, hi);
+        let quantize = |t: &Tensor| QuantizedTensor {
+            plane: crate::tensor::TensorI8::new(
+                t.shape(),
+                t.data().iter().map(|&x| p.quantize(x)).collect(),
+            ),
+            granularity: quant::Granularity::PerTensor,
+            params: vec![p],
+        };
+        qw.push(quantize(wp));
+        qb.push(quantize(bp));
+    }
+    QuantizedBiasedLayer {
+        weights: QuantizedSplitLayer {
+            planes: qw,
+            clustering: sl.weights.clustering.clone(),
+            strategy: Strategy::MaskedSum,
+        },
+        biases: qb,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::mse;
+
+    fn layer(seed: u64) -> (Tensor, Tensor) {
+        let mut r = Rng::new(seed);
+        let mut wd: Vec<f32> = (0..32 * 24).map(|_| r.normal_f32(0.0, 0.05)).collect();
+        wd[7] = 1.9;
+        wd[300] = -2.2;
+        let bd: Vec<f32> = (0..32).map(|_| r.normal_f32(0.0, 0.1)).collect();
+        (Tensor::new(&[32, 24], wd), Tensor::from_vec(bd))
+    }
+
+    #[test]
+    fn biased_split_reconstructs_exactly() {
+        let (w, b) = layer(1);
+        let sl = split_biased(&w, &b, &SplitConfig::default());
+        assert_eq!(sl.k(), 3);
+        let (rw, rb) = sl.reconstruct();
+        assert_eq!(rw.data(), w.data());
+        assert_eq!(rb.data(), b.data());
+    }
+
+    #[test]
+    fn bias_values_partition_like_weights() {
+        let (w, mut b) = layer(2);
+        b.data_mut()[0] = 1.9; // bias outlier lands in the upper cluster
+        let sl = split_biased(&w, &b, &SplitConfig::default());
+        let upper = sl.k() - 1;
+        assert_eq!(sl.biases[upper].data()[0], 1.9);
+        // And it is zero in the other planes.
+        for j in 0..upper {
+            assert_eq!(sl.biases[j].data()[0], 0.0);
+        }
+    }
+
+    #[test]
+    fn quantized_biased_beats_baseline() {
+        let (w, b) = layer(3);
+        let q = split_quantize_biased(&w, &b, &SplitConfig::default(), Bits::Int4);
+        let (ew, eb) = q.effective();
+        let base_w = quant::fake_quantize(&w, Bits::Int4);
+        let e_split = mse(w.data(), ew.data());
+        let e_base = mse(w.data(), base_w.data());
+        assert!(e_split < e_base * 0.3, "split {e_split} vs base {e_base}");
+        // Bias error bounded by its plane's step.
+        for (i, &v) in b.data().iter().enumerate() {
+            let c = q.weights.clustering.assign(v);
+            let step = q.biases[c].params[0].step();
+            assert!(((v - eb.data()[i]) as f64).abs() <= 0.5 * step + 1e-6);
+        }
+    }
+
+    #[test]
+    fn zero_bias_stays_exact() {
+        let (w, _) = layer(4);
+        let b = Tensor::zeros(&[32]);
+        let q = split_quantize_biased(&w, &b, &SplitConfig::default(), Bits::Int2);
+        let (_, eb) = q.effective();
+        assert_eq!(eb.data(), b.data(), "masked zeros must stay exact");
+    }
+}

@@ -1,0 +1,124 @@
+//! Normalization folding — the paper's §3 note: "normalization layers
+//! can be easily folded into the preceding linear or convolution layers
+//! to simplify DNNs before applying SplitQuantV2."
+//!
+//! For an RMSNorm/LayerNorm-style gain γ applied *before* a linear layer
+//! (`y = W(γ ⊙ x̂)`), the gain folds into the columns of W:
+//! `W' = W · diag(γ)`; for a gain applied *after* (`y = γ ⊙ (Wx)`), it
+//! folds into the rows. Folding widens some weight rows/columns — which
+//! is exactly when the SplitQuantV2 clustering pays for itself, since
+//! the widened values land in the outer clusters.
+
+use crate::tensor::Tensor;
+
+/// Fold a pre-norm gain γ (length = in_features) into `W[out, in]`:
+/// returns `W · diag(γ)` so that `W' x̂ == W (γ ⊙ x̂)`.
+pub fn fold_pre_gain(w: &Tensor, gamma: &Tensor) -> Tensor {
+    assert_eq!(w.ndim(), 2);
+    assert_eq!(gamma.len(), w.cols(), "gain length must equal in_features");
+    let (rows, cols) = (w.rows(), w.cols());
+    let mut out = w.clone();
+    let g = gamma.data();
+    for r in 0..rows {
+        let row = &mut out.data_mut()[r * cols..(r + 1) * cols];
+        for c in 0..cols {
+            row[c] *= g[c];
+        }
+    }
+    out
+}
+
+/// Fold a post-norm gain γ (length = out_features) into `W[out, in]`:
+/// returns `diag(γ) · W` so that `W' x == γ ⊙ (W x)`.
+pub fn fold_post_gain(w: &Tensor, gamma: &Tensor) -> Tensor {
+    assert_eq!(w.ndim(), 2);
+    assert_eq!(gamma.len(), w.rows(), "gain length must equal out_features");
+    let (rows, cols) = (w.rows(), w.cols());
+    let mut out = w.clone();
+    let g = gamma.data();
+    for r in 0..rows {
+        let row = &mut out.data_mut()[r * cols..(r + 1) * cols];
+        for v in row.iter_mut() {
+            *v *= g[r];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul;
+    use crate::util::rng::Rng;
+
+    fn rand(seed: u64, r_: usize, c: usize) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let mut d = vec![0.0f32; r_ * c];
+        rng.fill_normal(&mut d, 0.0, 1.0);
+        Tensor::new(&[r_, c], d)
+    }
+
+    #[test]
+    fn pre_gain_fold_is_function_preserving() {
+        let w = rand(1, 6, 4);
+        let gamma = rand(2, 1, 4).reshape(&[4]);
+        let x = rand(3, 4, 3); // columns = 3 input vectors
+        // y1 = W (diag(γ) x); y2 = (W diag(γ)) x — must match.
+        let gx = {
+            let mut m = x.clone();
+            for r in 0..4 {
+                for c in 0..3 {
+                    m.set2(r, c, m.at2(r, c) * gamma.data()[r]);
+                }
+            }
+            m
+        };
+        let y1 = matmul(&w, &gx);
+        let y2 = matmul(&fold_pre_gain(&w, &gamma), &x);
+        assert!(y1.allclose(&y2, 1e-5));
+    }
+
+    #[test]
+    fn post_gain_fold_is_function_preserving() {
+        let w = rand(4, 5, 4);
+        let gamma = rand(5, 1, 5).reshape(&[5]);
+        let x = rand(6, 4, 2);
+        let y1 = {
+            let mut m = matmul(&w, &x);
+            for r in 0..5 {
+                for c in 0..2 {
+                    m.set2(r, c, m.at2(r, c) * gamma.data()[r]);
+                }
+            }
+            m
+        };
+        let y2 = matmul(&fold_post_gain(&w, &gamma), &x);
+        assert!(y1.allclose(&y2, 1e-5));
+    }
+
+    #[test]
+    fn unit_gain_is_identity() {
+        let w = rand(7, 6, 4);
+        let ones = Tensor::full(&[4], 1.0);
+        assert_eq!(fold_pre_gain(&w, &ones), w);
+        let ones = Tensor::full(&[6], 1.0);
+        assert_eq!(fold_post_gain(&w, &ones), w);
+    }
+
+    #[test]
+    fn folding_widens_range_then_split_recovers() {
+        // A spiky gain inflates some columns; baseline quantization
+        // degrades, splitting isolates the inflated values.
+        let w = rand(8, 16, 16).scale(0.05);
+        let mut gd = vec![1.0f32; 16];
+        gd[3] = 30.0;
+        let gamma = Tensor::new(&[16], gd);
+        let folded = fold_pre_gain(&w, &gamma);
+        use crate::quant::{quant_mse, Bits};
+        use crate::split::{split_fake_quantize, SplitConfig};
+        let base = quant_mse(&folded, Bits::Int4);
+        let eff = split_fake_quantize(&folded, &SplitConfig::default(), Bits::Int4);
+        let split = crate::util::stats::mse(folded.data(), eff.data());
+        assert!(split < base * 0.2, "split {split} vs base {base}");
+    }
+}

@@ -1,0 +1,648 @@
+//! SplitQuantV2 — functionally-equivalent layer splitting for
+//! quantization-resolution recovery (the paper's §3).
+//!
+//! For a weight tensor `W`, the scalar weight values are clustered into
+//! k = 3 (lower / middle / upper) groups by **exact 1-D k-means**; the
+//! layer is replaced by k parallel layers whose weight planes are the
+//! cluster-masked copies of `W`:
+//!
+//! ```text
+//!   W_j[p] = W[p]  if assign(W[p]) == j  else  0
+//!   ⇒  ΣWⱼ == W  (bit-exact; each position nonzero in exactly one plane)
+//!   ⇒  y = W₁x + W₂x + W₃x + b  ==  Wx + b  (up to FP summation order)
+//! ```
+//!
+//! Each plane is then linearly quantized **independently**. Because each
+//! plane's value range is only its cluster's range (outliers live alone in
+//! the lower/upper planes), the scaling factor S of each plane is far
+//! larger than the original layer's, and the quantization resolution of
+//! the middle plane — which holds ~99% of the mass — improves by the ratio
+//! of ranges. Masked zeros are exactly representable (see `quant`), so
+//! they contribute no noise.
+//!
+//! Strategies:
+//! * [`Strategy::MaskedSum`] — the paper's structure (Figure 1): k dense
+//!   planes, outputs summed. Quantized size is k× the baseline plane
+//!   (hence the paper's 3/8-of-FP32 figure for INT4, §5).
+//! * [`Strategy::RowWise`] — ablation: rows (output channels) are
+//!   partitioned by row-absmax clustering; equivalent to splitting into k
+//!   smaller layers + concat, keeping size at 1/8 but with coarser
+//!   per-cluster ranges.
+//!
+//! Submodules: [`ocs`] (Outlier Channel Splitting baseline, §2.3),
+//! [`activation`] (calibrated activation splitting, §5 future work).
+
+pub mod activation;
+pub mod bias;
+pub mod fold;
+pub mod ocs;
+
+use crate::kmeans::{self, Clustering1D};
+use crate::quant::{self, Bits, Granularity, QuantParams, QuantizedTensor};
+use crate::tensor::{Tensor, TensorI8};
+
+/// How rows/values are partitioned into split layers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Cluster scalar weight values; k dense masked planes summed (paper).
+    MaskedSum,
+    /// Cluster rows by absmax; planes hold disjoint row sets (ablation).
+    RowWise,
+}
+
+/// Dynamic per-layer cluster-count selection (§5 future work).
+#[derive(Clone, Copy, Debug)]
+pub struct DynamicK {
+    pub k_max: usize,
+    /// Minimum relative inertia improvement to accept k over k−1.
+    pub elbow: f64,
+}
+
+impl Default for DynamicK {
+    fn default() -> Self {
+        Self {
+            k_max: 4,
+            elbow: 0.25,
+        }
+    }
+}
+
+/// Configuration of the SplitQuantV2 preprocessing pass.
+#[derive(Clone, Debug)]
+pub struct SplitConfig {
+    /// Number of clusters (the paper fixes 3; 2 trades accuracy for size).
+    pub k: usize,
+    pub strategy: Strategy,
+    /// Skip layers with fewer elements (embedding/norm layers are excluded
+    /// by *kind* in the model pipeline; this additionally guards tiny
+    /// tensors where splitting cannot pay for its overhead).
+    pub min_elems: usize,
+    /// If set, choose k per layer by inertia elbow instead of `k`.
+    pub dynamic_k: Option<DynamicK>,
+}
+
+impl Default for SplitConfig {
+    fn default() -> Self {
+        Self {
+            k: 3,
+            strategy: Strategy::MaskedSum,
+            min_elems: 64,
+            dynamic_k: None,
+        }
+    }
+}
+
+impl SplitConfig {
+    pub fn with_k(k: usize) -> Self {
+        Self {
+            k,
+            ..Default::default()
+        }
+    }
+}
+
+/// A split layer in floating point: masked planes that sum to the
+/// original tensor. Produced by [`split_tensor`]; used by the functional-
+/// equivalence checks and by FP export.
+#[derive(Clone, Debug)]
+pub struct SplitLayer {
+    pub planes: Vec<Tensor>,
+    pub clustering: Clustering1D,
+    pub strategy: Strategy,
+}
+
+impl SplitLayer {
+    pub fn k(&self) -> usize {
+        self.planes.len()
+    }
+
+    /// Reconstruct the original tensor (exact for MaskedSum/RowWise).
+    pub fn reconstruct(&self) -> Tensor {
+        let mut acc = self.planes[0].clone();
+        for p in &self.planes[1..] {
+            acc.add_assign(p);
+        }
+        acc
+    }
+}
+
+/// A split layer in quantized form: one independently-quantized plane per
+/// cluster. This is what the packed model container stores and what the
+/// runtime's `split_matmul` kernel consumes.
+#[derive(Clone, Debug)]
+pub struct QuantizedSplitLayer {
+    pub planes: Vec<QuantizedTensor>,
+    pub clustering: Clustering1D,
+    pub strategy: Strategy,
+}
+
+impl QuantizedSplitLayer {
+    pub fn k(&self) -> usize {
+        self.planes.len()
+    }
+
+    /// The dequantized effective weight: Σⱼ dequant(Qⱼ). Masked zeros
+    /// dequantize to exactly 0, so position p carries exactly its own
+    /// cluster's quantization of W[p].
+    pub fn effective_weight(&self) -> Tensor {
+        let mut acc = self.planes[0].dequantize();
+        for p in &self.planes[1..] {
+            acc.add_assign(&p.dequantize());
+        }
+        acc
+    }
+
+    /// Total packed bytes of all planes (E4 size accounting).
+    pub fn packed_len(&self) -> usize {
+        self.planes.iter().map(|p| p.packed_len()).sum()
+    }
+}
+
+/// Choose the clustering for a tensor under a config.
+fn cluster_values(values: &[f32], cfg: &SplitConfig) -> Clustering1D {
+    match cfg.dynamic_k {
+        Some(d) => {
+            let (k, mut tried) = kmeans::choose_k(values, d.k_max, d.elbow);
+            tried.swap_remove(k - 1)
+        }
+        None => kmeans::kmeans_auto(values, cfg.k),
+    }
+}
+
+/// Per-row representative statistic for the RowWise strategy.
+fn row_absmax(w: &Tensor) -> Vec<f32> {
+    (0..w.rows())
+        .map(|r| w.row(r).iter().fold(0.0f32, |m, &v| m.max(v.abs())))
+        .collect()
+}
+
+/// Split a tensor into FP masked planes (Figure 1 structure).
+///
+/// Returns a single-plane `SplitLayer` (identity split) when the tensor is
+/// smaller than `cfg.min_elems` or the clustering degenerates to k=1.
+pub fn split_tensor(w: &Tensor, cfg: &SplitConfig) -> SplitLayer {
+    if w.len() < cfg.min_elems {
+        return identity_split(w, cfg.strategy);
+    }
+    match cfg.strategy {
+        Strategy::MaskedSum => {
+            let clustering = cluster_values(w.data(), cfg);
+            let k = clustering.k();
+            if k <= 1 {
+                return identity_split(w, cfg.strategy);
+            }
+            let mut planes = vec![Tensor::zeros(w.shape()); k];
+            for (i, &v) in w.data().iter().enumerate() {
+                let c = clustering.assign(v);
+                planes[c].data_mut()[i] = v;
+            }
+            SplitLayer {
+                planes,
+                clustering,
+                strategy: Strategy::MaskedSum,
+            }
+        }
+        Strategy::RowWise => {
+            assert_eq!(w.ndim(), 2, "RowWise split requires a matrix");
+            let stats = row_absmax(w);
+            let clustering = cluster_values(&stats, cfg);
+            let k = clustering.k();
+            if k <= 1 {
+                return identity_split(w, cfg.strategy);
+            }
+            let mut planes = vec![Tensor::zeros(w.shape()); k];
+            let cols = w.cols();
+            for r in 0..w.rows() {
+                let c = clustering.assign(stats[r]);
+                planes[c].data_mut()[r * cols..(r + 1) * cols].copy_from_slice(w.row(r));
+            }
+            SplitLayer {
+                planes,
+                clustering,
+                strategy: Strategy::RowWise,
+            }
+        }
+    }
+}
+
+fn identity_split(w: &Tensor, strategy: Strategy) -> SplitLayer {
+    SplitLayer {
+        planes: vec![w.clone()],
+        clustering: Clustering1D {
+            centroids: vec![w.mean()],
+            boundaries: vec![],
+            inertia: 0.0,
+            sizes: vec![w.len() as f64],
+            member_ranges: Some(vec![(w.min(), w.max())]),
+        },
+        strategy,
+    }
+}
+
+/// Quantize an FP split layer: each plane independently per-tensor.
+pub fn quantize_split(sl: &SplitLayer, bits: Bits) -> QuantizedSplitLayer {
+    QuantizedSplitLayer {
+        planes: sl
+            .planes
+            .iter()
+            .map(|p| quant::quantize_per_tensor(p, bits))
+            .collect(),
+        clustering: sl.clustering.clone(),
+        strategy: sl.strategy,
+    }
+}
+
+/// **Fused split + quantize** — the production hot path (the paper's
+/// 2-minute preprocessing claim). Never materializes FP planes: one pass
+/// clusters, a second pass writes each value's quantized level directly
+/// into its cluster's i8 plane (other planes get that cluster's exact-zero
+/// level). Numerically identical to `quantize_split(split_tensor(...))`.
+pub fn split_quantize(w: &Tensor, cfg: &SplitConfig, bits: Bits) -> QuantizedSplitLayer {
+    if w.len() < cfg.min_elems {
+        return QuantizedSplitLayer {
+            planes: vec![quant::quantize_per_tensor(w, bits)],
+            clustering: identity_split(w, cfg.strategy).clustering,
+            strategy: cfg.strategy,
+        };
+    }
+    match cfg.strategy {
+        Strategy::MaskedSum => {
+            let clustering = cluster_values(w.data(), cfg);
+            let k = clustering.k();
+            if k <= 1 {
+                return QuantizedSplitLayer {
+                    planes: vec![quant::quantize_per_tensor(w, bits)],
+                    clustering,
+                    strategy: cfg.strategy,
+                };
+            }
+            // Per-cluster quantization params from the cluster ranges
+            // (identical to plane min/max: the plane's nonzeros span the
+            // cluster range and `from_range` widens to 0 — the masked
+            // value — itself).
+            let ranges = per_cluster_ranges(w.data(), &clustering, k);
+            let params: Vec<QuantParams> = ranges
+                .iter()
+                .map(|&(lo, hi)| QuantParams::from_range(bits, lo, hi))
+                .collect();
+            let zero_levels: Vec<i8> = params.iter().map(|p| p.quantize(0.0)).collect();
+            let mut planes: Vec<Vec<i8>> = zero_levels
+                .iter()
+                .map(|&z| vec![z; w.len()])
+                .collect();
+            for (i, &v) in w.data().iter().enumerate() {
+                let c = clustering.assign(v);
+                planes[c][i] = params[c].quantize(v);
+            }
+            QuantizedSplitLayer {
+                planes: planes
+                    .into_iter()
+                    .zip(&params)
+                    .map(|(plane, &p)| QuantizedTensor {
+                        plane: TensorI8::new(w.shape(), plane),
+                        granularity: Granularity::PerTensor,
+                        params: vec![p],
+                    })
+                    .collect(),
+                clustering,
+                strategy: cfg.strategy,
+            }
+        }
+        Strategy::RowWise => quantize_split(&split_tensor(w, cfg), bits),
+    }
+}
+
+/// Min/max of the values assigned to each cluster. Uses the solver's
+/// tracked member extremes when available (no re-scan — §Perf opt #3);
+/// falls back to a scan otherwise.
+fn per_cluster_ranges(values: &[f32], clustering: &Clustering1D, k: usize) -> Vec<(f32, f32)> {
+    if let Some(r) = &clustering.member_ranges {
+        if r.len() == k {
+            return r.clone();
+        }
+    }
+    let mut lo = vec![f32::INFINITY; k];
+    let mut hi = vec![f32::NEG_INFINITY; k];
+    for &v in values {
+        let c = clustering.assign(v);
+        if v < lo[c] {
+            lo[c] = v;
+        }
+        if v > hi[c] {
+            hi[c] = v;
+        }
+    }
+    (0..k)
+        .map(|c| {
+            if lo[c] > hi[c] {
+                (0.0, 0.0) // empty cluster (cannot happen with exact DP)
+            } else {
+                (lo[c], hi[c])
+            }
+        })
+        .collect()
+}
+
+/// One-call evaluation path: the effective (dequantized) weight of
+/// SplitQuantV2 at `bits`. Compare against `quant::fake_quantize` for the
+/// baseline arm of Table 1.
+pub fn split_fake_quantize(w: &Tensor, cfg: &SplitConfig, bits: Bits) -> Tensor {
+    split_quantize(w, cfg, bits).effective_weight()
+}
+
+/// Per-plane resolution report (Figure 1 / E6): scaling factors, steps,
+/// and the end-to-end quantization MSE with and without splitting.
+#[derive(Clone, Debug)]
+pub struct ResolutionReport {
+    pub bits: Bits,
+    pub original_scale: f64,
+    pub original_mse: f64,
+    pub plane_scales: Vec<f64>,
+    pub plane_sizes: Vec<f64>,
+    pub split_mse: f64,
+    /// original_mse / split_mse (≥ 1 when splitting helps).
+    pub mse_gain: f64,
+}
+
+pub fn resolution_report(w: &Tensor, cfg: &SplitConfig, bits: Bits) -> ResolutionReport {
+    let original = QuantParams::of_tensor(bits, w);
+    let original_mse = quant::quant_mse(w, bits);
+    let qsl = split_quantize(w, cfg, bits);
+    let eff = qsl.effective_weight();
+    let split_mse = crate::util::stats::mse(w.data(), eff.data());
+    ResolutionReport {
+        bits,
+        original_scale: original.scale,
+        original_mse,
+        plane_scales: qsl.planes.iter().map(|p| p.params[0].scale).collect(),
+        plane_sizes: qsl.clustering.sizes.clone(),
+        split_mse,
+        mse_gain: if split_mse > 0.0 {
+            original_mse / split_mse
+        } else {
+            f64::INFINITY
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn heavy_tensor(seed: u64, rows: usize, cols: usize) -> Tensor {
+        // LLM-like weights: mostly small values, a few big outliers.
+        let mut r = Rng::new(seed);
+        let mut data: Vec<f32> = (0..rows * cols)
+            .map(|_| r.normal_f32(0.0, 0.05))
+            .collect();
+        let n_out = (data.len() / 100).max(2);
+        for _ in 0..n_out {
+            let i = r.below(data.len());
+            data[i] = r.uniform_in(1.5, 3.0) * if r.uniform() < 0.5 { -1.0 } else { 1.0 };
+        }
+        Tensor::new(&[rows, cols], data)
+    }
+
+    #[test]
+    fn planes_sum_to_original_bit_exact() {
+        let w = heavy_tensor(1, 16, 32);
+        let sl = split_tensor(&w, &SplitConfig::default());
+        assert_eq!(sl.k(), 3);
+        let rec = sl.reconstruct();
+        assert_eq!(rec.data(), w.data(), "masked-sum must be bit-exact");
+    }
+
+    #[test]
+    fn each_position_nonzero_in_exactly_one_plane() {
+        let w = heavy_tensor(2, 8, 16);
+        let sl = split_tensor(&w, &SplitConfig::default());
+        for i in 0..w.len() {
+            let nz = sl
+                .planes
+                .iter()
+                .filter(|p| p.data()[i] != 0.0)
+                .count();
+            let expected = if w.data()[i] != 0.0 { 1 } else { 0 };
+            assert_eq!(nz, expected, "position {i}");
+        }
+    }
+
+    #[test]
+    fn rowwise_planes_partition_rows() {
+        let mut r = Rng::new(3);
+        let mut data = Vec::new();
+        for row in 0..12 {
+            let s = if row % 4 == 0 { 2.0 } else { 0.05 };
+            for _ in 0..8 {
+                data.push(r.normal_f32(0.0, s));
+            }
+        }
+        let w = Tensor::new(&[12, 8], data);
+        let cfg = SplitConfig {
+            strategy: Strategy::RowWise,
+            k: 2,
+            ..Default::default()
+        };
+        let sl = split_tensor(&w, &cfg);
+        assert_eq!(sl.reconstruct().data(), w.data());
+        // Every row lives wholly in one plane.
+        for row in 0..12 {
+            let owners = sl
+                .planes
+                .iter()
+                .filter(|p| p.row(row).iter().any(|&v| v != 0.0))
+                .count();
+            assert!(owners <= 1, "row {row} split across planes");
+        }
+    }
+
+    #[test]
+    fn fused_equals_unfused() {
+        let w = heavy_tensor(4, 24, 24);
+        let cfg = SplitConfig::default();
+        for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+            let fused = split_quantize(&w, &cfg, bits);
+            let unfused = quantize_split(&split_tensor(&w, &cfg), bits);
+            assert_eq!(fused.k(), unfused.k(), "{bits:?}");
+            for (a, b) in fused.planes.iter().zip(&unfused.planes) {
+                assert_eq!(a.params[0], b.params[0], "{bits:?} params");
+                assert_eq!(a.plane.data(), b.plane.data(), "{bits:?} plane");
+            }
+        }
+    }
+
+    #[test]
+    fn split_improves_int4_resolution_with_outliers() {
+        let w = heavy_tensor(5, 32, 32);
+        let rep = resolution_report(&w, &SplitConfig::default(), Bits::Int4);
+        // Middle plane must have a much larger scaling factor than the
+        // original layer (= the Figure 1 claim).
+        let max_plane_scale = rep
+            .plane_scales
+            .iter()
+            .cloned()
+            .fold(0.0f64, f64::max);
+        assert!(
+            max_plane_scale > rep.original_scale * 5.0,
+            "plane scale {max_plane_scale} vs original {}",
+            rep.original_scale
+        );
+        // And the end-to-end MSE gain is large.
+        assert!(rep.mse_gain > 10.0, "mse gain {}", rep.mse_gain);
+    }
+
+    #[test]
+    fn split_never_hurts_mse() {
+        // Even on outlier-free Gaussians, narrower ranges can only help.
+        let mut r = Rng::new(6);
+        let w = Tensor::new(
+            &[16, 16],
+            (0..256).map(|_| r.normal_f32(0.0, 1.0)).collect(),
+        );
+        for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+            let rep = resolution_report(&w, &SplitConfig::default(), bits);
+            assert!(
+                rep.split_mse <= rep.original_mse * 1.0 + 1e-12,
+                "{bits:?}: split {} > original {}",
+                rep.split_mse,
+                rep.original_mse
+            );
+        }
+    }
+
+    #[test]
+    fn masked_zeros_do_not_leak_noise() {
+        let w = heavy_tensor(7, 16, 16);
+        let qsl = split_quantize(&w, &SplitConfig::default(), Bits::Int4);
+        for (j, p) in qsl.planes.iter().enumerate() {
+            let dq = p.dequantize();
+            for i in 0..w.len() {
+                let c = qsl.clustering.assign(w.data()[i]);
+                if c != j {
+                    assert_eq!(dq.data()[i], 0.0, "plane {j} leaked at {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_tensor_skipped() {
+        let w = Tensor::from_vec(vec![1.0, -1.0, 2.0]);
+        let sl = split_tensor(&w, &SplitConfig::default());
+        assert_eq!(sl.k(), 1);
+        assert_eq!(sl.planes[0].data(), w.data());
+    }
+
+    #[test]
+    fn constant_tensor_degenerates_gracefully() {
+        let w = Tensor::full(&[16, 16], 0.7);
+        let cfg = SplitConfig::default();
+        let sl = split_tensor(&w, &cfg);
+        assert_eq!(sl.k(), 1);
+        let q = split_quantize(&w, &cfg, Bits::Int4);
+        assert_eq!(q.k(), 1);
+        assert!(q.effective_weight().allclose(&w, 0.05));
+    }
+
+    #[test]
+    fn dynamic_k_uses_structure() {
+        // Strong 3-blob structure → dynamic-k picks 3.
+        let mut r = Rng::new(8);
+        let mut data = Vec::new();
+        for _ in 0..300 {
+            data.push(r.normal_f32(-4.0, 0.02));
+            data.push(r.normal_f32(0.0, 0.02));
+            data.push(r.normal_f32(4.0, 0.02));
+        }
+        let w = Tensor::from_vec(data);
+        let cfg = SplitConfig {
+            dynamic_k: Some(DynamicK {
+                k_max: 4,
+                elbow: 0.25,
+            }),
+            ..Default::default()
+        };
+        let sl = split_tensor(&w, &cfg);
+        assert_eq!(sl.k(), 3);
+    }
+
+    #[test]
+    fn k2_config_produces_two_planes() {
+        let w = heavy_tensor(9, 16, 16);
+        let qsl = split_quantize(&w, &SplitConfig::with_k(2), Bits::Int4);
+        assert_eq!(qsl.k(), 2);
+        // k=2 still beats no split on outliers, but (typically) not k=3.
+        let r2 = resolution_report(&w, &SplitConfig::with_k(2), Bits::Int4);
+        let r3 = resolution_report(&w, &SplitConfig::with_k(3), Bits::Int4);
+        assert!(r2.split_mse < r2.original_mse);
+        assert!(r3.split_mse <= r2.split_mse * 1.5);
+    }
+
+    #[test]
+    fn packed_size_is_k_times_baseline() {
+        let w = heavy_tensor(10, 32, 32);
+        let qsl = split_quantize(&w, &SplitConfig::default(), Bits::Int4);
+        let baseline = quant::quantize_per_tensor(&w, Bits::Int4).packed_len();
+        assert_eq!(qsl.packed_len(), 3 * baseline);
+    }
+
+    #[test]
+    fn conv_kernel_tensors_split_positionally() {
+        // The CV lineage of SplitQuant: 4-D conv weights [out, in, kh, kw]
+        // split via the same positional masking (DESIGN.md §1).
+        let mut r = Rng::new(21);
+        let mut data: Vec<f32> = (0..16 * 8 * 3 * 3).map(|_| r.normal_f32(0.0, 0.05)).collect();
+        data[10] = 2.0;
+        data[700] = -1.8;
+        let w = Tensor::new(&[16, 8, 3, 3], data);
+        let sl = split_tensor(&w, &SplitConfig::default());
+        assert_eq!(sl.k(), 3);
+        assert_eq!(sl.planes[0].shape(), &[16, 8, 3, 3]);
+        assert_eq!(sl.reconstruct().data(), w.data());
+        let q = split_quantize(&w, &SplitConfig::default(), Bits::Int4);
+        let rep_mse = crate::util::stats::mse(w.data(), q.effective_weight().data());
+        let base_mse = quant::quant_mse(&w, Bits::Int4);
+        assert!(rep_mse < base_mse * 0.25, "conv split {rep_mse} vs base {base_mse}");
+    }
+
+    #[test]
+    fn member_ranges_match_scanned_ranges() {
+        // §Perf opt #3 exactness contract: solver-tracked member ranges
+        // equal a full re-scan for both the exact-DP and histogram paths.
+        for (seed, n) in [(31u64, 5_000usize), (32, 300_000)] {
+            let mut r = Rng::new(seed);
+            let vals: Vec<f32> = (0..n).map(|_| (r.heavy_tailed(3.0) * 0.05) as f32).collect();
+            let c = crate::kmeans::kmeans_auto(&vals, 3);
+            let tracked = c.member_ranges.clone().expect("solver must track ranges");
+            let mut lo = vec![f32::INFINITY; c.k()];
+            let mut hi = vec![f32::NEG_INFINITY; c.k()];
+            for &v in &vals {
+                let cl = c.assign(v);
+                lo[cl] = lo[cl].min(v);
+                hi[cl] = hi[cl].max(v);
+            }
+            for j in 0..c.k() {
+                assert_eq!(tracked[j].0, lo[j], "n={n} cluster {j} min");
+                assert_eq!(tracked[j].1, hi[j], "n={n} cluster {j} max");
+            }
+        }
+    }
+
+    #[test]
+    fn effective_weight_error_bounded_by_cluster_step() {
+        let w = heavy_tensor(11, 16, 16);
+        let qsl = split_quantize(&w, &SplitConfig::default(), Bits::Int4);
+        let eff = qsl.effective_weight();
+        for i in 0..w.len() {
+            let c = qsl.clustering.assign(w.data()[i]);
+            let step = qsl.planes[c].params[0].step();
+            let err = ((w.data()[i] - eff.data()[i]) as f64).abs();
+            assert!(
+                err <= 0.5 * step + 1e-6,
+                "i={i}: err {err} > half-step {}",
+                0.5 * step
+            );
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! Outlier Channel Splitting (OCS) — the Zhao et al. 2019 baseline the
+//! paper's §2.3 compares against.
+//!
+//! OCS mitigates outliers by *duplicating* the input channel that holds
+//! the largest-magnitude weight and *halving* both copies: the layer's
+//! function is preserved (the duplicated activation feeds both halves),
+//! while the layer's absmax shrinks. Repeating this with an expansion
+//! budget ε (fraction of extra channels) reduces the quantization range
+//! at the cost of a wider layer.
+//!
+//! We evaluate OCS the same way we evaluate SplitQuantV2: by the
+//! *effective* dequantized weight — quantize the expanded matrix, then
+//! fold duplicated columns back together. This is exactly the numerics an
+//! OCS-expanded network would exhibit; the structural expansion (the
+//! previous layer emitting duplicated outputs) is captured by the fold.
+
+use crate::quant::{self, Bits};
+use crate::tensor::Tensor;
+
+/// Result of an OCS expansion of a `[out, in]` weight matrix.
+#[derive(Clone, Debug)]
+pub struct OcsExpansion {
+    /// Expanded matrix `[out, in + extra]`.
+    pub expanded: Tensor,
+    /// For each expanded column, the original column it came from.
+    pub origin: Vec<usize>,
+    pub extra_cols: usize,
+}
+
+/// Expand by duplicate-and-halve until `extra = ceil(ε·in)` extra columns
+/// exist. Each step targets the column containing the current global
+/// absmax (Zhao et al.'s weight-split criterion).
+pub fn ocs_expand(w: &Tensor, expand_ratio: f64) -> OcsExpansion {
+    assert_eq!(w.ndim(), 2, "OCS requires a matrix");
+    let (rows, cols) = (w.rows(), w.cols());
+    let extra = ((cols as f64 * expand_ratio).ceil() as usize).min(cols * 4);
+    // Column-major working copy for cheap column ops.
+    let mut columns: Vec<Vec<f32>> = (0..cols)
+        .map(|c| (0..rows).map(|r| w.at2(r, c)).collect())
+        .collect();
+    let mut origin: Vec<usize> = (0..cols).collect();
+
+    for _ in 0..extra {
+        // Column with the global max |w|.
+        let (mut best_col, mut best_val) = (0usize, -1.0f32);
+        for (ci, col) in columns.iter().enumerate() {
+            for &v in col {
+                if v.abs() > best_val {
+                    best_val = v.abs();
+                    best_col = ci;
+                }
+            }
+        }
+        // Halve in place and append the duplicate.
+        for v in columns[best_col].iter_mut() {
+            *v *= 0.5;
+        }
+        let dup = columns[best_col].clone();
+        let org = origin[best_col];
+        columns.push(dup);
+        origin.push(org);
+    }
+
+    let ncols = columns.len();
+    let mut data = vec![0.0f32; rows * ncols];
+    for (ci, col) in columns.iter().enumerate() {
+        for r in 0..rows {
+            data[r * ncols + ci] = col[r];
+        }
+    }
+    OcsExpansion {
+        expanded: Tensor::new(&[rows, ncols], data),
+        origin,
+        extra_cols: extra,
+    }
+}
+
+impl OcsExpansion {
+    /// Fold an expanded-shape matrix back to the original shape by summing
+    /// duplicated columns into their origin.
+    pub fn fold(&self, m: &Tensor) -> Tensor {
+        assert_eq!(m.shape(), self.expanded.shape());
+        let rows = m.rows();
+        let orig_cols = self.origin.iter().copied().max().unwrap() + 1;
+        let mut out = Tensor::zeros(&[rows, orig_cols]);
+        for (ci, &oc) in self.origin.iter().enumerate() {
+            for r in 0..rows {
+                let v = out.at2(r, oc) + m.at2(r, ci);
+                out.set2(r, oc, v);
+            }
+        }
+        out
+    }
+
+    /// Exact functional check: fold(expanded) == original.
+    pub fn reconstruct(&self) -> Tensor {
+        self.fold(&self.expanded)
+    }
+}
+
+/// OCS fake-quantization: the effective weight after expanding, linearly
+/// quantizing the expanded matrix, and folding back.
+pub fn ocs_fake_quantize(w: &Tensor, expand_ratio: f64, bits: Bits) -> Tensor {
+    let exp = ocs_expand(w, expand_ratio);
+    let q = quant::fake_quantize(&exp.expanded, bits);
+    exp.fold(&q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::mse;
+
+    fn outlier_matrix(seed: u64) -> Tensor {
+        let mut r = Rng::new(seed);
+        let mut data: Vec<f32> = (0..32 * 32).map(|_| r.normal_f32(0.0, 0.05)).collect();
+        data[5] = 4.0;
+        data[777] = -3.5;
+        Tensor::new(&[32, 32], data)
+    }
+
+    #[test]
+    fn expansion_preserves_function() {
+        let w = outlier_matrix(1);
+        let exp = ocs_expand(&w, 0.05);
+        assert!(exp.extra_cols > 0);
+        assert_eq!(exp.expanded.cols(), 32 + exp.extra_cols);
+        let rec = exp.reconstruct();
+        assert!(
+            rec.allclose(&w, 1e-6),
+            "fold(expand(W)) must equal W"
+        );
+    }
+
+    #[test]
+    fn halving_shrinks_absmax() {
+        let w = outlier_matrix(2);
+        let exp = ocs_expand(&w, 0.1);
+        assert!(exp.expanded.abs_max() < w.abs_max());
+    }
+
+    #[test]
+    fn ocs_reduces_quant_error_on_outliers() {
+        let w = outlier_matrix(3);
+        let base = quant::fake_quantize(&w, Bits::Int4);
+        let ocs = ocs_fake_quantize(&w, 0.1, Bits::Int4);
+        let mse_base = mse(w.data(), base.data());
+        let mse_ocs = mse(w.data(), ocs.data());
+        assert!(
+            mse_ocs < mse_base,
+            "ocs {mse_ocs} should beat baseline {mse_base}"
+        );
+    }
+
+    #[test]
+    fn splitquant_beats_ocs_without_outliers() {
+        // §2.3: SplitQuantV2 improves resolution even absent outliers,
+        // OCS primarily addresses outliers.
+        let mut r = Rng::new(4);
+        let w = Tensor::new(
+            &[24, 24],
+            (0..576).map(|_| r.normal_f32(0.0, 1.0)).collect(),
+        );
+        let ocs = ocs_fake_quantize(&w, 0.05, Bits::Int4);
+        let sq = crate::split::split_fake_quantize(
+            &w,
+            &crate::split::SplitConfig::default(),
+            Bits::Int4,
+        );
+        let mse_ocs = mse(w.data(), ocs.data());
+        let mse_sq = mse(w.data(), sq.data());
+        assert!(
+            mse_sq < mse_ocs,
+            "splitquant {mse_sq} should beat ocs {mse_ocs} on gaussians"
+        );
+    }
+
+    #[test]
+    fn zero_ratio_is_identity() {
+        let w = outlier_matrix(5);
+        let exp = ocs_expand(&w, 0.0);
+        assert_eq!(exp.extra_cols, 0);
+        assert_eq!(exp.expanded.data(), w.data());
+    }
+}

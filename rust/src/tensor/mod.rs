@@ -1,0 +1,450 @@
+//! A small dense-tensor library (ndarray-lite) — the numeric substrate for
+//! the quantization toolchain. Row-major, owned storage, f32 and i8
+//! element types, with exactly the operations the pipeline needs:
+//! construction, views over 2-D matrices, matmul, elementwise maps,
+//! reductions and (de)serialization helpers.
+//!
+//! Deliberately *not* a general autodiff/NDArray framework: training runs
+//! in JAX at build time; this crate only transforms and executes weights.
+
+mod matmul;
+
+pub use matmul::{matmul, matmul_into};
+
+use anyhow::{bail, Result};
+
+/// Element dtype of a stored tensor (the SQTZ container supports these).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I8,
+    /// Raw bytes (bit-packed INT4/INT2 planes).
+    U8,
+    I32,
+}
+
+impl DType {
+    pub fn size_of(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 | DType::U8 => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I8 => "i8",
+            DType::U8 => "u8",
+            DType::I32 => "i32",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" | "float32" => DType::F32,
+            "i8" | "int8" => DType::I8,
+            "u8" | "uint8" => DType::U8,
+            "i32" | "int32" => DType::I32,
+            _ => bail!("unknown dtype '{s}'"),
+        })
+    }
+}
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data length {}",
+            shape,
+            data.len()
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![v; shape.iter().product()],
+        }
+    }
+
+    pub fn from_vec(data: Vec<f32>) -> Tensor {
+        let n = data.len();
+        Tensor::new(&[n], data)
+    }
+
+    /// Identity matrix [n, n].
+    pub fn eye(n: usize) -> Tensor {
+        let mut t = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    // -- Introspection ----------------------------------------------------
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Number of rows / cols for a 2-D tensor.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.ndim(), 2, "rows() on non-matrix");
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.ndim(), 2, "cols() on non-matrix");
+        self.shape[1]
+    }
+
+    pub fn at2(&self, r: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.ndim(), 2);
+        self.data[r * self.shape[1] + c]
+    }
+
+    pub fn set2(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert_eq!(self.ndim(), 2);
+        let c_len = self.shape[1];
+        self.data[r * c_len + c] = v;
+    }
+
+    /// Row slice of a 2-D tensor.
+    pub fn row(&self, r: usize) -> &[f32] {
+        assert_eq!(self.ndim(), 2);
+        let c = self.shape[1];
+        &self.data[r * c..(r + 1) * c]
+    }
+
+    // -- Transforms -------------------------------------------------------
+
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape {:?} -> {:?} size mismatch",
+            self.shape,
+            shape
+        );
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Transposed copy of a 2-D tensor.
+    pub fn transpose(&self) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j * r + i] = self.data[i * c + j];
+            }
+        }
+        Tensor::new(&[c, r], out)
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+    }
+
+    /// Elementwise binary op; shapes must match exactly.
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape, other.shape, "zip shape mismatch");
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    /// In-place `self += other`.
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    // -- Reductions -------------------------------------------------------
+
+    pub fn min(&self) -> f32 {
+        self.data.iter().cloned().fold(f32::INFINITY, f32::min)
+    }
+
+    pub fn max(&self) -> f32 {
+        self.data.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.sum() / self.data.len() as f64
+        }
+    }
+
+    /// Frobenius / L2 norm.
+    pub fn norm(&self) -> f64 {
+        self.data
+            .iter()
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    pub fn count(&self, pred: impl Fn(f32) -> bool) -> usize {
+        self.data.iter().filter(|&&x| pred(x)).count()
+    }
+
+    // -- Comparisons ------------------------------------------------------
+
+    pub fn allclose(&self, other: &Tensor, atol: f32) -> bool {
+        self.shape == other.shape
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(&a, &b)| (a - b).abs() <= atol || (a.is_nan() && b.is_nan()))
+    }
+
+    // -- Bytes ------------------------------------------------------------
+
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.data.len() * 4);
+        for v in &self.data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_le_bytes(shape: &[usize], bytes: &[u8]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if bytes.len() != n * 4 {
+            bail!("byte length {} != 4*{}", bytes.len(), n);
+        }
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Tensor::new(shape, data))
+    }
+}
+
+/// Dense row-major i8 tensor — quantized planes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI8 {
+    shape: Vec<usize>,
+    data: Vec<i8>,
+}
+
+impl TensorI8 {
+    pub fn new(shape: &[usize], data: Vec<i8>) -> TensorI8 {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        TensorI8 {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn zeros(shape: &[usize]) -> TensorI8 {
+        TensorI8 {
+            shape: shape.to_vec(),
+            data: vec![0; shape.iter().product()],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[i8] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [i8] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<i8> {
+        self.data
+    }
+
+    /// Widen to f32 (no dequantization — raw integer values).
+    pub fn to_f32(&self) -> Tensor {
+        Tensor::new(
+            &self.shape,
+            self.data.iter().map(|&v| v as f32).collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+        assert_eq!(t.at2(1, 2), 6.0);
+        assert_eq!(t.row(0), &[1., 2., 3.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(&[2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn eye_and_transpose() {
+        let i = Tensor::eye(3);
+        assert_eq!(i.transpose(), i);
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let tt = t.transpose();
+        assert_eq!(tt.shape(), &[3, 2]);
+        assert_eq!(tt.at2(2, 1), 6.0);
+        assert_eq!(tt.transpose(), t);
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let a = Tensor::from_vec(vec![1., 2., 3.]);
+        let b = Tensor::from_vec(vec![4., 5., 6.]);
+        assert_eq!(a.add(&b).data(), &[5., 7., 9.]);
+        assert_eq!(b.sub(&a).data(), &[3., 3., 3.]);
+        assert_eq!(a.scale(2.0).data(), &[2., 4., 6.]);
+        let mut c = a.clone();
+        c.add_assign(&b);
+        assert_eq!(c.data(), &[5., 7., 9.]);
+    }
+
+    #[test]
+    fn reductions() {
+        let t = Tensor::from_vec(vec![-3., 1., 2.]);
+        assert_eq!(t.min(), -3.0);
+        assert_eq!(t.max(), 2.0);
+        assert_eq!(t.abs_max(), 3.0);
+        assert_eq!(t.sum(), 0.0);
+        assert_eq!(t.mean(), 0.0);
+        assert!((t.norm() - (14.0f64).sqrt()).abs() < 1e-12);
+        assert_eq!(t.count(|x| x > 0.0), 2);
+    }
+
+    #[test]
+    fn byte_roundtrip() {
+        let t = Tensor::new(&[2, 2], vec![1.5, -2.25, 0.0, f32::MIN_POSITIVE]);
+        let b = t.to_le_bytes();
+        let back = Tensor::from_le_bytes(&[2, 2], &b).unwrap();
+        assert_eq!(back, t);
+        assert!(Tensor::from_le_bytes(&[3], &b).is_err());
+    }
+
+    #[test]
+    fn allclose_tolerates() {
+        let a = Tensor::from_vec(vec![1.0, 2.0]);
+        let b = Tensor::from_vec(vec![1.0 + 1e-6, 2.0 - 1e-6]);
+        assert!(a.allclose(&b, 1e-5));
+        assert!(!a.allclose(&b, 1e-8));
+    }
+
+    #[test]
+    fn i8_tensor() {
+        let t = TensorI8::new(&[2, 2], vec![-128, -1, 0, 127]);
+        assert_eq!(t.to_f32().data(), &[-128., -1., 0., 127.]);
+    }
+
+    #[test]
+    fn dtype_parse_roundtrip() {
+        for d in [DType::F32, DType::I8, DType::U8, DType::I32] {
+            assert_eq!(DType::parse(d.name()).unwrap(), d);
+        }
+        assert!(DType::parse("f64").is_err());
+    }
+}

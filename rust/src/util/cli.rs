@@ -1,0 +1,342 @@
+//! A small declarative command-line parser (the offline build has no
+//! `clap`). Supports subcommands, `--flag`, `--key value`, `--key=value`,
+//! positional arguments, defaults, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+    pub required: bool,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub args: Vec<ArgSpec>,
+    pub positionals: Vec<ArgSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            args: Vec::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec {
+            name,
+            help,
+            default: Some(default),
+            is_flag: false,
+            required: false,
+        });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+            required: true,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+            required: false,
+        });
+        self
+    }
+
+    pub fn pos(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+            required: true,
+        });
+        self
+    }
+
+    fn usage(&self, prog: &str) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {prog} {}", self.name, self.about, self.name);
+        for p in &self.positionals {
+            s += &format!(" <{}>", p.name);
+        }
+        s += " [OPTIONS]\n";
+        if !self.positionals.is_empty() {
+            s += "\nARGS:\n";
+            for p in &self.positionals {
+                s += &format!("  <{}>  {}\n", p.name, p.help);
+            }
+        }
+        if !self.args.is_empty() {
+            s += "\nOPTIONS:\n";
+            for a in &self.args {
+                let lhs = if a.is_flag {
+                    format!("--{}", a.name)
+                } else {
+                    format!("--{} <v>", a.name)
+                };
+                let def = match a.default {
+                    Some(d) => format!(" [default: {d}]"),
+                    None if a.required => " [required]".to_string(),
+                    None => String::new(),
+                };
+                s += &format!("  {lhs:24} {}{def}\n", a.help);
+            }
+        }
+        s
+    }
+}
+
+/// Parsed arguments for one subcommand invocation.
+#[derive(Debug)]
+pub struct Matches {
+    pub command: &'static str,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> Result<&str> {
+        self.values
+            .get(name)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("missing argument --{name}"))
+    }
+
+    pub fn get_opt(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        self.get(name)?
+            .parse()
+            .map_err(|_| anyhow!("--{name} must be an unsigned integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        self.get(name)?
+            .parse()
+            .map_err(|_| anyhow!("--{name} must be an unsigned integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        self.get(name)?
+            .parse()
+            .map_err(|_| anyhow!("--{name} must be a number"))
+    }
+
+    /// Comma-separated list of usizes, e.g. `--bits 2,4,8`.
+    pub fn get_usize_list(&self, name: &str) -> Result<Vec<usize>> {
+        self.get(name)?
+            .split(',')
+            .map(|p| {
+                p.trim()
+                    .parse()
+                    .map_err(|_| anyhow!("--{name}: '{p}' is not an unsigned integer"))
+            })
+            .collect()
+    }
+}
+
+/// Top-level application: subcommands + global help.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+impl App {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            commands: Vec::new(),
+        }
+    }
+
+    pub fn command(mut self, c: Command) -> Self {
+        self.commands.push(c);
+        self
+    }
+
+    pub fn overview(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <COMMAND> [OPTIONS]\n\nCOMMANDS:\n",
+            self.name, self.about, self.name);
+        for c in &self.commands {
+            s += &format!("  {:18} {}\n", c.name, c.about);
+        }
+        s += &format!("\nRun '{} <COMMAND> --help' for command options.\n", self.name);
+        s
+    }
+
+    /// Parse a raw argv (without the program name). Returns Err with the
+    /// help text for `--help` / unknown commands so main can print & exit.
+    pub fn parse(&self, argv: &[String]) -> Result<Matches> {
+        let Some(cmd_name) = argv.first() else {
+            bail!("{}", self.overview());
+        };
+        if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+            bail!("{}", self.overview());
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name.as_str())
+            .ok_or_else(|| anyhow!("unknown command '{cmd_name}'\n\n{}", self.overview()))?;
+
+        let mut values = BTreeMap::new();
+        let mut flags = BTreeMap::new();
+        for a in &cmd.args {
+            if let Some(d) = a.default {
+                values.insert(a.name.to_string(), d.to_string());
+            }
+        }
+
+        let mut pos_iter = cmd.positionals.iter();
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                bail!("{}", cmd.usage(self.name));
+            }
+            if let Some(rest) = tok.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let spec = cmd
+                    .args
+                    .iter()
+                    .find(|a| a.name == key)
+                    .ok_or_else(|| anyhow!("unknown option '--{key}'\n\n{}", cmd.usage(self.name)))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        bail!("flag --{key} takes no value");
+                    }
+                    flags.insert(key.to_string(), true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow!("option --{key} needs a value"))?
+                        }
+                    };
+                    values.insert(key.to_string(), val);
+                }
+            } else {
+                let spec = pos_iter
+                    .next()
+                    .ok_or_else(|| anyhow!("unexpected positional '{tok}'\n\n{}", cmd.usage(self.name)))?;
+                values.insert(spec.name.to_string(), tok.clone());
+            }
+            i += 1;
+        }
+
+        for a in cmd.args.iter().chain(cmd.positionals.iter()) {
+            if a.required && !a.is_flag && !values.contains_key(a.name) {
+                bail!("missing required argument --{}\n\n{}", a.name, cmd.usage(self.name));
+            }
+        }
+
+        Ok(Matches {
+            command: cmd.name,
+            values,
+            flags,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App::new("sq", "test app").command(
+            Command::new("run", "run things")
+                .req("model", "model path")
+                .opt("bits", "4", "bit width")
+                .flag("verbose", "chatty")
+                .pos("input", "input file"),
+        )
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_args() {
+        let m = app()
+            .parse(&argv(&["run", "file.bin", "--model", "m.sqtz", "--verbose"]))
+            .unwrap();
+        assert_eq!(m.command, "run");
+        assert_eq!(m.get("model").unwrap(), "m.sqtz");
+        assert_eq!(m.get("input").unwrap(), "file.bin");
+        assert_eq!(m.get_usize("bits").unwrap(), 4);
+        assert!(m.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let m = app()
+            .parse(&argv(&["run", "in", "--model=m", "--bits=8"]))
+            .unwrap();
+        assert_eq!(m.get("bits").unwrap(), "8");
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(app().parse(&argv(&["run", "in"])).is_err());
+    }
+
+    #[test]
+    fn unknown_command_and_option_error() {
+        assert!(app().parse(&argv(&["zap"])).is_err());
+        assert!(app()
+            .parse(&argv(&["run", "in", "--model", "m", "--nope", "1"]))
+            .is_err());
+    }
+
+    #[test]
+    fn help_bails_with_usage() {
+        let err = app().parse(&argv(&["run", "--help"])).unwrap_err();
+        assert!(err.to_string().contains("USAGE"));
+    }
+
+    #[test]
+    fn usize_list() {
+        let m = app()
+            .parse(&argv(&["run", "in", "--model", "m", "--bits", "2,4,8"]))
+            .unwrap();
+        assert_eq!(m.get_usize_list("bits").unwrap(), vec![2, 4, 8]);
+    }
+}

@@ -1,0 +1,13 @@
+//! Foundation utilities built from scratch (the build is fully offline:
+//! only the `xla` crate and `anyhow` are available), so this module
+//! provides what `rand`, `serde_json`, `clap`, `rayon` and `log` would
+//! normally supply.
+
+pub mod cli;
+pub mod fmt;
+pub mod json;
+pub mod logging;
+pub mod pool;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,184 @@
+//! A small work-stealing-free thread pool with scoped parallel-for.
+//!
+//! The offline build has no `rayon`/`tokio`; this pool provides the two
+//! primitives the coordinator needs: `parallel_for_chunks` (data-parallel
+//! sweeps over layers / eval problems) and fire-and-forget `spawn` jobs.
+//! On a 1-core container the pool degrades gracefully to near-sequential
+//! execution with identical results (all parallel reductions in this crate
+//! are order-independent or explicitly re-ordered by index).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size thread pool.
+pub struct Pool {
+    tx: mpsc::Sender<Msg>,
+    handles: Vec<thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl Pool {
+    /// Pool with `n` worker threads (n >= 1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(n);
+        for i in 0..n {
+            let rx = Arc::clone(&rx);
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("sq-worker-{i}"))
+                    .spawn(move || loop {
+                        let msg = { rx.lock().unwrap().recv() };
+                        match msg {
+                            Ok(Msg::Run(job)) => job(),
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        Self { tx, handles, size: n }
+    }
+
+    /// Pool sized to the machine (`available_parallelism`).
+    pub fn new_auto() -> Self {
+        let n = thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+        Self::new(n)
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Fire-and-forget.
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.send(Msg::Run(Box::new(f))).expect("pool alive");
+    }
+
+    /// Run `f(i)` for every i in 0..n, blocking until all complete.
+    /// Work is distributed by an atomic cursor so uneven items balance.
+    pub fn parallel_for<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        // Scoped threads let us borrow f without 'static.
+        let cursor = AtomicUsize::new(0);
+        let workers = self.size.min(n);
+        thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    f(i);
+                });
+            }
+        });
+    }
+
+    /// Map each index to a value, preserving index order in the output.
+    pub fn parallel_map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        {
+            let slots = Mutex::new(&mut out);
+            let cursor = AtomicUsize::new(0);
+            let workers = self.size.min(n.max(1));
+            thread::scope(|s| {
+                for _ in 0..workers {
+                    s.spawn(|| loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let v = f(i);
+                        // Short critical section: single slot store.
+                        let mut guard = slots.lock().unwrap();
+                        guard[i] = Some(v);
+                    });
+                }
+            });
+        }
+        out.into_iter().map(|v| v.expect("all slots filled")).collect()
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        for _ in 0..self.handles.len() {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_visits_every_index_once() {
+        let pool = Pool::new(4);
+        let hits: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+        pool.parallel_for(100, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let pool = Pool::new(3);
+        let out = pool.parallel_map(50, |i| i * i);
+        assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn spawn_runs_jobs() {
+        let pool = Pool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.spawn(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn zero_items_is_noop() {
+        let pool = Pool::new(2);
+        pool.parallel_for(0, |_| panic!("must not run"));
+        let v: Vec<usize> = pool.parallel_map(0, |i| i);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn single_thread_pool_works() {
+        let pool = Pool::new(1);
+        let out = pool.parallel_map(10, |i| i + 1);
+        assert_eq!(out, (1..=10).collect::<Vec<_>>());
+    }
+}

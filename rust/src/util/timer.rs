@@ -1,0 +1,121 @@
+//! Wall-clock timing helpers and a tiny hierarchical profiler used by the
+//! coordinator's stage reporting and the bench harness.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Measure one closure.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let v = f();
+    (v, t0.elapsed())
+}
+
+/// Accumulating named-section profiler. Thread-safe; sections are
+/// aggregated by name (count + total time) for the pipeline report.
+#[derive(Default)]
+pub struct Profiler {
+    sections: Mutex<BTreeMap<String, (u64, Duration)>>,
+}
+
+impl Profiler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f` and accumulate under `name`.
+    pub fn section<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let v = f();
+        self.record(name, t0.elapsed());
+        v
+    }
+
+    pub fn record(&self, name: &str, d: Duration) {
+        let mut m = self.sections.lock().unwrap();
+        let e = m.entry(name.to_string()).or_insert((0, Duration::ZERO));
+        e.0 += 1;
+        e.1 += d;
+    }
+
+    pub fn snapshot(&self) -> Vec<(String, u64, Duration)> {
+        self.sections
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, (n, d))| (k.clone(), *n, *d))
+            .collect()
+    }
+
+    /// Human-readable table, longest section first.
+    pub fn report(&self) -> String {
+        let mut rows = self.snapshot();
+        rows.sort_by(|a, b| b.2.cmp(&a.2));
+        let total: Duration = rows.iter().map(|r| r.2).sum();
+        let mut s = String::new();
+        s += &format!("{:<32} {:>8} {:>12} {:>7}\n", "section", "calls", "total", "share");
+        for (name, count, dur) in &rows {
+            let share = if total.as_nanos() > 0 {
+                100.0 * dur.as_secs_f64() / total.as_secs_f64()
+            } else {
+                0.0
+            };
+            s += &format!(
+                "{:<32} {:>8} {:>12} {:>6.1}%\n",
+                name,
+                count,
+                format_duration(*dur),
+                share
+            );
+        }
+        s
+    }
+}
+
+/// `1m 58s`-style formatting (matches how the paper reports times).
+pub fn format_duration(d: Duration) -> String {
+    let secs = d.as_secs_f64();
+    if secs >= 60.0 {
+        format!("{}m {:02.0}s", (secs / 60.0) as u64, secs % 60.0)
+    } else if secs >= 1.0 {
+        format!("{secs:.2}s")
+    } else if secs >= 1e-3 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.2}µs", secs * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, d) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0 || d.is_zero());
+    }
+
+    #[test]
+    fn profiler_accumulates() {
+        let p = Profiler::new();
+        p.section("a", || std::thread::sleep(Duration::from_millis(1)));
+        p.section("a", || {});
+        p.section("b", || {});
+        let snap = p.snapshot();
+        let a = snap.iter().find(|r| r.0 == "a").unwrap();
+        assert_eq!(a.1, 2);
+        assert!(a.2 >= Duration::from_millis(1));
+        assert!(p.report().contains("section"));
+    }
+
+    #[test]
+    fn duration_formats() {
+        assert_eq!(format_duration(Duration::from_secs(126)), "2m 06s");
+        assert_eq!(format_duration(Duration::from_millis(2500)), "2.50s");
+        assert!(format_duration(Duration::from_micros(50)).ends_with("µs"));
+        assert!(format_duration(Duration::from_millis(5)).ends_with("ms"));
+    }
+}

@@ -1,0 +1,219 @@
+//! Integration tests over the full pipeline: trained artifacts → split +
+//! quantize → pack → reload → evaluate, plus CPU-vs-PJRT cross-checks.
+//!
+//! These run against the real `artifacts/` produced by `make artifacts`;
+//! each test degrades to a skip (with a stderr note) when artifacts are
+//! absent so `cargo test` stays green on a fresh clone.
+
+use std::path::{Path, PathBuf};
+
+use splitquant::coordinator::{Arm, Coordinator, PipelineSpec};
+use splitquant::data::load_problems;
+use splitquant::io::checkpoint::load_checkpoint;
+use splitquant::io::qmodel::{load_qmodel, save_qmodel};
+use splitquant::model::quantized::{quantize_model, Method};
+use splitquant::quant::Bits;
+use splitquant::split::SplitConfig;
+
+fn artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("manifest.json").exists() && p.join("picollama_eval.sqtz").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn spec(dir: &Path) -> PipelineSpec {
+    PipelineSpec::new(
+        dir.join("picollama_eval.sqtz"),
+        dir.join("eval_problems.json"),
+    )
+}
+
+#[test]
+fn trained_checkpoint_loads_and_is_memorized() {
+    let Some(dir) = artifacts() else { return };
+    let ck = load_checkpoint(dir.join("picollama_eval.sqtz")).unwrap();
+    assert_eq!(ck.config.vocab, 211);
+    assert!(ck.meta.contains_key("fact_accuracy"));
+    let acc: f64 = ck.meta["fact_accuracy"].parse().unwrap();
+    assert!(acc > 0.9, "training failed to memorize: {acc}");
+    // Unperturbed model near-perfect on the eval set.
+    let (problems, vocab) = load_problems(dir.join("eval_problems.json")).unwrap();
+    assert_eq!(vocab, ck.config.vocab);
+    assert_eq!(problems.len(), 1165, "paper-sized problem set");
+    let coord = Coordinator::new();
+    let sample = &problems[..100];
+    let rep = splitquant::eval::evaluate(&ck, sample, &coord.pool).unwrap();
+    assert!(rep.accuracy > 0.95, "FP accuracy {}", rep.accuracy_pct());
+}
+
+#[test]
+fn full_arm_roundtrip_through_disk() {
+    let Some(dir) = artifacts() else { return };
+    let coord = Coordinator::new();
+    let s = spec(&dir);
+    let ck = coord.load_model(&s).unwrap();
+    let (problems, _) = load_problems(dir.join("eval_problems.json")).unwrap();
+    let sample = &problems[..64];
+
+    let qm = quantize_model(&ck, Bits::Int4, &Method::SplitQuant(SplitConfig::default()))
+        .unwrap();
+    let tmp = std::env::temp_dir().join("sq_integration_arm.sqtz");
+    save_qmodel(&tmp, &qm).unwrap();
+    let back = load_qmodel(&tmp).unwrap();
+
+    // Accuracy identical before/after the disk roundtrip.
+    let a = coord.evaluate_qm(&qm, sample, false).unwrap();
+    let b = coord.evaluate_qm(&back, sample, false).unwrap();
+    assert_eq!(a.n_correct, b.n_correct);
+    std::fs::remove_file(&tmp).ok();
+}
+
+#[test]
+fn cpu_and_pjrt_scoring_agree_fp() {
+    let Some(dir) = artifacts() else { return };
+    let coord = Coordinator::with_engine(&dir, Some(&["score_fp"])).unwrap();
+    let s = spec(&dir);
+    let ck = coord.load_model(&s).unwrap();
+    let (problems, _) = load_problems(dir.join("eval_problems.json")).unwrap();
+    let sample = &problems[..96];
+    let cpu = coord.evaluate_fp(&ck, sample, false).unwrap();
+    let pjrt = coord.evaluate_fp(&ck, sample, true).unwrap();
+    // Identical choices modulo FP noise at decision boundaries.
+    assert!(
+        (cpu.accuracy - pjrt.accuracy).abs() <= 2.0 / sample.len() as f64,
+        "CPU {} vs PJRT {}",
+        cpu.accuracy_pct(),
+        pjrt.accuracy_pct()
+    );
+}
+
+#[test]
+fn cpu_and_pjrt_scoring_agree_quantized_arms() {
+    let Some(dir) = artifacts() else { return };
+    let coord =
+        Coordinator::with_engine(&dir, Some(&["score_quant_k1", "score_quant_k3"])).unwrap();
+    let s = spec(&dir);
+    let ck = coord.load_model(&s).unwrap();
+    let (problems, _) = load_problems(dir.join("eval_problems.json")).unwrap();
+    let sample = &problems[..96];
+    for method in [
+        Method::Baseline,
+        Method::SplitQuant(SplitConfig::default()),
+    ] {
+        let arm = Arm {
+            bits: Bits::Int4,
+            method,
+        };
+        let (qm, _) = coord.quantize_arm(&ck, &arm).unwrap();
+        let cpu = coord.evaluate_qm(&qm, sample, false).unwrap();
+        let pjrt = coord.evaluate_qm(&qm, sample, true).unwrap();
+        assert!(
+            (cpu.accuracy - pjrt.accuracy).abs() <= 2.0 / sample.len() as f64,
+            "{}: CPU {} vs PJRT {}",
+            arm.label(),
+            cpu.accuracy_pct(),
+            pjrt.accuracy_pct()
+        );
+    }
+}
+
+#[test]
+fn table1_shape_holds_on_subset() {
+    // The paper's qualitative claims on a 200-problem subset (fast).
+    let Some(dir) = artifacts() else { return };
+    let coord = Coordinator::new();
+    let s = spec(&dir);
+    let ck = coord.load_model(&s).unwrap();
+    let (problems, _) = load_problems(dir.join("eval_problems.json")).unwrap();
+    let sample = &problems[..200];
+
+    let fp = coord.evaluate_fp(&ck, sample, false).unwrap();
+    let mut acc = std::collections::BTreeMap::new();
+    for arm in Coordinator::table1_arms(&SplitConfig::default()) {
+        let res = coord.run_arm(&ck, &arm, sample, &s).unwrap();
+        acc.insert(arm.label(), res.report.accuracy);
+    }
+    // INT8 ≈ FP both arms.
+    assert!((acc["INT8/baseline"] - fp.accuracy).abs() < 0.05);
+    assert!((acc["INT8/splitquantv2(k=3)"] - fp.accuracy).abs() < 0.05);
+    // INT4 baseline degrades materially; SQv2 recovers most of it.
+    assert!(
+        fp.accuracy - acc["INT4/baseline"] > 0.10,
+        "INT4 baseline should degrade: fp={} int4={}",
+        fp.accuracy,
+        acc["INT4/baseline"]
+    );
+    assert!(
+        acc["INT4/splitquantv2(k=3)"] - acc["INT4/baseline"] > 0.10,
+        "SQv2 should recover: {} vs {}",
+        acc["INT4/splitquantv2(k=3)"],
+        acc["INT4/baseline"]
+    );
+    assert!((fp.accuracy - acc["INT4/splitquantv2(k=3)"]) < 0.10);
+    // INT2 collapses toward chance for both arms.
+    assert!(acc["INT2/baseline"] < 0.45);
+}
+
+#[test]
+fn server_batches_and_matches_offline_scoring() {
+    use splitquant::coordinator::server::{Server, ServerConfig};
+    use splitquant::runtime::scoring;
+    let Some(dir) = artifacts() else { return };
+    let coord = Coordinator::new();
+    let s = spec(&dir);
+    let ck = coord.load_model(&s).unwrap();
+    let (problems, _) = load_problems(dir.join("eval_problems.json")).unwrap();
+    let sample = &problems[..48];
+
+    let qm = quantize_model(&ck, Bits::Int4, &Method::SplitQuant(SplitConfig::default()))
+        .unwrap();
+    let offline = coord.evaluate_qm(&qm, sample, false).unwrap();
+
+    let weights = scoring::quant_args(&qm, 3).unwrap();
+    let server = Server::start(dir.clone(), weights, ServerConfig::default()).unwrap();
+    let rx: Vec<_> = sample.iter().map(|p| server.submit(p.clone())).collect();
+    let mut correct = 0;
+    let mut max_batch = 0;
+    for r in rx {
+        let resp = r.recv().unwrap().unwrap();
+        correct += resp.result.is_correct() as usize;
+        max_batch = max_batch.max(resp.batch_size);
+    }
+    assert!(max_batch > 1, "burst must batch");
+    let served_acc = correct as f64 / sample.len() as f64;
+    assert!(
+        (served_acc - offline.accuracy).abs() <= 2.0 / sample.len() as f64,
+        "served {} vs offline {}",
+        served_acc,
+        offline.accuracy_pct()
+    );
+}
+
+#[test]
+fn gptq_arm_integrates_with_eval() {
+    let Some(dir) = artifacts() else { return };
+    let coord = Coordinator::new();
+    let s = spec(&dir);
+    let ck = coord.load_model(&s).unwrap();
+    let (problems, _) = load_problems(dir.join("eval_problems.json")).unwrap();
+    let sample = &problems[..100];
+    let world = splitquant::data::FactWorld::generate(120, 6, 80, 2026);
+    let calib: Vec<Vec<usize>> = world.corpus(1, 99).into_iter().take(64).collect();
+    let qm = splitquant::gptq::gptq_quantize_model(&ck, Bits::Int4, &calib, 0.01).unwrap();
+    let gptq = coord.evaluate_qm(&qm, sample, false).unwrap();
+    let base_arm = Arm {
+        bits: Bits::Int4,
+        method: Method::Baseline,
+    };
+    let base = coord.run_arm(&ck, &base_arm, sample, &s).unwrap();
+    assert!(
+        gptq.accuracy >= base.report.accuracy - 0.02,
+        "gptq {} should not trail baseline {} materially",
+        gptq.accuracy_pct(),
+        base.report.accuracy_pct()
+    );
+}
