@@ -1,29 +1,122 @@
-// perf probe: decompose split_quantize stages
+//! perf probe: decompose the split_quantize hot path into stages.
+//!
+//! Flags (also used by the CI bench smoke job):
+//!   --iters N    fixed-iteration mode: exactly N timed iterations per
+//!                probe (no warmup, no wall-clock target) so CI runs are
+//!                bounded and comparable
+//!   --json PATH  write the collected results as a JSON report
+
 use splitquant::bench::{black_box, Bench, BenchConfig};
 use splitquant::kmeans;
 use splitquant::quant::Bits;
-use splitquant::split::{split_quantize, SplitConfig};
+use splitquant::split::{cluster_weights, split_quantize, split_quantize_clustered, SplitConfig};
 use splitquant::tensor::Tensor;
+use splitquant::util::json::Json;
 use splitquant::util::rng::Rng;
+use std::time::Duration;
+
+struct Options {
+    iters: Option<usize>,
+    json: Option<String>,
+}
+
+fn parse_args() -> Options {
+    let mut opts = Options {
+        iters: None,
+        json: None,
+    };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--iters" => {
+                let v = args.next().expect("--iters needs a value");
+                opts.iters = Some(v.parse().expect("--iters must be an unsigned integer"));
+            }
+            "--json" => {
+                opts.json = Some(args.next().expect("--json needs a path"));
+            }
+            "--bench" => {} // passed by `cargo bench`; ignore
+            other => {
+                eprintln!("unknown option '{other}' (supported: --iters N, --json PATH)");
+                std::process::exit(2);
+            }
+        }
+    }
+    opts
+}
 
 fn main() {
+    let opts = parse_args();
+    let config = match opts.iters {
+        Some(n) => {
+            let n = n.max(1);
+            BenchConfig {
+                warmup_iters: 0,
+                min_iters: n,
+                max_iters: n,
+                target_time: Duration::ZERO,
+            }
+        }
+        None => BenchConfig::heavy(),
+    };
+
     let mut rng = Rng::new(42);
     let mut vals = vec![0.0f32; 1024 * 4096];
     rng.fill_normal(&mut vals, 0.0, 0.05);
-    for _ in 0..4000 { let i = rng.below(vals.len()); vals[i] = rng.uniform_in(-2.0, 2.0); }
+    for _ in 0..4000 {
+        let i = rng.below(vals.len());
+        vals[i] = rng.uniform_in(-2.0, 2.0);
+    }
     let w = Tensor::new(&[1024, 4096], vals.clone());
     let cfg = SplitConfig::default();
-    let mut b = Bench::with_config("probe", BenchConfig::heavy());
-    b.run("hist_kmeans", || black_box(kmeans::kmeans_hist(&vals, 3, 4096)));
+
+    let mut b = Bench::with_config("probe", config);
+    b.run("hist_kmeans", || {
+        black_box(kmeans::kmeans_hist(&vals, 3, 4096))
+    });
     let c = kmeans::kmeans_hist(&vals, 3, 4096);
     b.run("assign_scan(ranges pass)", || {
-        let mut lo = [f32::INFINITY; 3]; let mut hi = [f32::NEG_INFINITY; 3];
-        for &v in &vals { let cl = c.assign(v); if v < lo[cl] {lo[cl]=v;} if v > hi[cl] {hi[cl]=v;} }
+        let mut lo = [f32::INFINITY; 3];
+        let mut hi = [f32::NEG_INFINITY; 3];
+        for &v in &vals {
+            let cl = c.assign(v);
+            if v < lo[cl] {
+                lo[cl] = v;
+            }
+            if v > hi[cl] {
+                hi[cl] = v;
+            }
+        }
         black_box((lo, hi))
     });
     b.run("plane_alloc_fill", || {
         let planes: Vec<Vec<i8>> = (0..3).map(|j| vec![j as i8; vals.len()]).collect();
         black_box(planes)
     });
-    b.run("split_quantize_total", || black_box(split_quantize(&w, &cfg, Bits::Int4)));
+    b.run("cluster_stage(pipeline phase 1)", || {
+        black_box(cluster_weights(&w, &cfg))
+    });
+    let clustering = cluster_weights(&w, &cfg);
+    b.run("quantize_stage(pipeline phase 2)", || {
+        black_box(split_quantize_clustered(
+            &w,
+            clustering.clone(),
+            &cfg,
+            Bits::Int4,
+        ))
+    });
+    b.run("split_quantize_total", || {
+        black_box(split_quantize(&w, &cfg, Bits::Int4))
+    });
+
+    if let Some(path) = opts.json {
+        let results: Vec<Json> = b.results().iter().map(|r| r.to_json()).collect();
+        let report = Json::obj(vec![
+            ("bench", Json::str("perf_probe")),
+            ("fixed_iters", Json::num(opts.iters.unwrap_or(0) as f64)),
+            ("results", Json::arr(results)),
+        ]);
+        std::fs::write(&path, report.to_string_pretty()).expect("write json report");
+        println!("wrote {path}");
+    }
 }

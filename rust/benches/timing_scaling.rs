@@ -8,11 +8,13 @@
 //! direct (hardware-scaled) comparison with the paper's figure.
 
 use splitquant::bench::{banner, Bench, BenchConfig};
+use splitquant::model::quantized::{quantize_model, Method};
 use splitquant::model::{n_params, Checkpoint, PicoLlamaConfig};
+use splitquant::pipeline::Engine;
 use splitquant::quant::Bits;
 use splitquant::split::{split_quantize, SplitConfig};
-use splitquant::model::quantized::{quantize_model, Method};
 use splitquant::util::fmt::{human_count, Table};
+use splitquant::util::json::Json;
 use splitquant::util::stats::linear_fit;
 use splitquant::util::timer::format_duration;
 use std::time::Duration;
@@ -101,5 +103,43 @@ fn main() -> anyhow::Result<()> {
     breakdown.run("split_quantize[4Mx1 layer]", || {
         split_quantize(w, &cfg4, Bits::Int4)
     });
+
+    // E3b — pipeline threads scaling: the same multi-layer INT4
+    // split+quantize workload fanned out by the layer-pipeline engine at
+    // 1/2/4/8 workers. Output is bit-identical across thread counts (the
+    // test suite asserts it); here we record the wall-clock trajectory
+    // and emit a BENCH_pipeline.json point for the perf record.
+    banner("E3b: pipeline threads scaling (multi-layer INT4 split+quantize)");
+    let scale_cfg = scaled_config(384, 6);
+    let ck = Checkpoint::random_init(&scale_cfg, 11);
+    let mut pbench = Bench::with_config("pipeline", BenchConfig::heavy());
+    let mut points = Vec::new();
+    let mut base_s: Option<f64> = None;
+    for threads in [1usize, 2, 4, 8] {
+        let engine = Engine::new(threads);
+        let dur = pbench.run(&format!("pipeline[threads={threads}]"), || {
+            engine
+                .quantize_model(&ck, Bits::Int4, &Method::SplitQuant(cfg4.clone()))
+                .unwrap()
+        });
+        let secs = dur.as_secs_f64();
+        let base = *base_s.get_or_insert(secs);
+        let speedup = if secs > 0.0 { base / secs } else { 0.0 };
+        pbench.record_metric(&format!("speedup_t{threads}"), speedup, "x");
+        points.push(Json::obj(vec![
+            ("threads", Json::num(threads as f64)),
+            ("mean_s", Json::num(secs)),
+            ("speedup", Json::num(speedup)),
+        ]));
+    }
+    let trajectory = Json::obj(vec![
+        ("bench", Json::str("pipeline_threads_scaling")),
+        ("params", Json::num(n_params(&scale_cfg) as f64)),
+        ("bits", Json::str("INT4")),
+        ("method", Json::str("splitquantv2(k=3)")),
+        ("points", Json::arr(points)),
+    ]);
+    std::fs::write("BENCH_pipeline.json", trajectory.to_string_pretty())?;
+    println!("wrote BENCH_pipeline.json");
     Ok(())
 }

@@ -118,7 +118,8 @@ impl Bench {
         let mut samples = Vec::new();
         let started = Instant::now();
         while samples.len() < self.config.min_iters
-            || (samples.len() < self.config.max_iters && started.elapsed() < self.config.target_time)
+            || (samples.len() < self.config.max_iters
+                && started.elapsed() < self.config.target_time)
         {
             let t0 = Instant::now();
             black_box(f());

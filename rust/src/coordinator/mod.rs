@@ -20,7 +20,7 @@ use std::time::Duration;
 use crate::data::McqProblem;
 use crate::eval::EvalReport;
 use crate::io::{checkpoint::load_checkpoint, qmodel::save_qmodel};
-use crate::model::quantized::{quantize_model, Method, QuantizedModel};
+use crate::model::quantized::{Method, QuantizedModel};
 use crate::model::Checkpoint;
 use crate::quant::Bits;
 use crate::runtime::{scoring, Engine};
@@ -93,8 +93,18 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn new() -> Coordinator {
+        Coordinator::with_threads(0)
+    }
+
+    /// Coordinator with an explicit worker count (0 = available
+    /// parallelism) — the CLI's `--threads` flag lands here.
+    pub fn with_threads(threads: usize) -> Coordinator {
         Coordinator {
-            pool: Pool::new_auto(),
+            pool: if threads == 0 {
+                Pool::new_auto()
+            } else {
+                Pool::new(threads)
+            },
             profiler: Profiler::new(),
             engine: None,
         }
@@ -102,8 +112,18 @@ impl Coordinator {
 
     pub fn with_engine(artifacts_dir: impl AsRef<Path>, variants: Option<&[&str]>) -> Result<Self> {
         let mut c = Coordinator::new();
-        c.engine = Some(Engine::load(artifacts_dir, variants)?);
+        c.attach_engine(artifacts_dir, variants)?;
         Ok(c)
+    }
+
+    /// Load + compile the PJRT engine onto an existing coordinator.
+    pub fn attach_engine(
+        &mut self,
+        artifacts_dir: impl AsRef<Path>,
+        variants: Option<&[&str]>,
+    ) -> Result<()> {
+        self.engine = Some(Engine::load(artifacts_dir, variants)?);
+        Ok(())
     }
 
     pub fn engine(&self) -> Option<&Engine> {
@@ -131,13 +151,25 @@ impl Coordinator {
         Ok(problems)
     }
 
-    /// Quantize one arm (timed).
+    /// Quantize one arm (timed) through the layer-pipeline engine on the
+    /// coordinator's pool; per-stage totals land in the profiler.
     pub fn quantize_arm(&self, ck: &Checkpoint, arm: &Arm) -> Result<(QuantizedModel, Duration)> {
         let label = arm.label();
-        let (qm, dur) = crate::util::timer::time_it(|| quantize_model(ck, arm.bits, &arm.method));
+        let (res, dur) = crate::util::timer::time_it(|| {
+            crate::pipeline::quantize_with_pool(&self.pool, ck, arm.bits, &arm.method)
+        });
+        let (qm, report) = res?;
         self.profiler.record(&format!("quantize[{label}]"), dur);
-        log_debug!("quantized {label} in {:?}", dur);
-        Ok((qm?, dur))
+        let stages = report.stage_totals();
+        self.profiler.record("pipeline[cluster]", stages.cluster);
+        self.profiler.record("pipeline[quantize]", stages.quantize);
+        log_debug!(
+            "quantized {label} in {:?} on {} workers (cpu {:?})",
+            dur,
+            report.threads,
+            report.cpu_time()
+        );
+        Ok((qm, dur))
     }
 
     /// Evaluate a quantized model: PJRT when requested & compatible,

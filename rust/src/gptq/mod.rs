@@ -28,7 +28,7 @@ use crate::quant::{self, Bits, Granularity, QuantParams, QuantizedTensor};
 use crate::tensor::{Tensor, TensorI8};
 
 use anyhow::{anyhow, Result};
-use linalg::{cholesky_inverse_upper, damped};
+use self::linalg::{cholesky_inverse_upper, damped};
 
 /// Accumulated calibration statistics for one linear layer.
 #[derive(Clone, Debug)]
@@ -71,7 +71,10 @@ impl LayerHessian {
 /// Run calibration sequences through the FP model, accumulating per-layer
 /// Hessians (the GPTQ preprocessing the paper's §2.2 says SplitQuantV2
 /// does *not* need).
-pub fn calibrate(ck: &Checkpoint, sequences: &[Vec<usize>]) -> Result<BTreeMap<String, LayerHessian>> {
+pub fn calibrate(
+    ck: &Checkpoint,
+    sequences: &[Vec<usize>],
+) -> Result<BTreeMap<String, LayerHessian>> {
     let mut hessians: BTreeMap<String, LayerHessian> = BTreeMap::new();
     for info in param_inventory(&ck.config) {
         if info.kind == ParamKind::Linear {

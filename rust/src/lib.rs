@@ -15,7 +15,14 @@
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the quantized
 //!   matmul hot-spot, verified against pure-jnp oracles.
 //!
-//! See DESIGN.md for the experiment index and EXPERIMENTS.md for results.
+//! Preprocessing is scheduled by the [`pipeline`] engine: each layer's
+//! cluster → split+quantize → pack job is a work unit fanned out across
+//! the worker pool (`--threads` on the CLI), merged deterministically so
+//! the output is bit-identical to the sequential path.
+//!
+//! See README.md for the stack overview and how to run the tier-1
+//! verify, DESIGN.md (repo root) for the design notes and experiment
+//! index, and EXPERIMENTS.md for results.
 
 pub mod bench;
 pub mod coordinator;
@@ -25,6 +32,7 @@ pub mod gptq;
 pub mod io;
 pub mod kmeans;
 pub mod model;
+pub mod pipeline;
 pub mod quant;
 pub mod runtime;
 pub mod split;

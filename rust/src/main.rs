@@ -34,6 +34,7 @@ fn app() -> App {
                 .opt("strategy", "masked", "masked|rowwise split structure")
                 .opt("ocs-ratio", "0.05", "OCS channel expansion ratio")
                 .flag("dynamic-k", "choose k per layer by inertia elbow")
+                .opt("threads", "0", "pipeline worker threads (0 = all cores)")
                 .opt("log", "info", "log level"),
         )
         .command(
@@ -46,6 +47,7 @@ fn app() -> App {
                 .flag("no-amplify", "skip outlier amplification")
                 .flag("runtime", "score through PJRT instead of the CPU reference")
                 .opt("export-dir", "", "also export packed arms to this dir")
+                .opt("threads", "0", "pipeline worker threads (0 = all cores)")
                 .opt("log", "info", "log level"),
         )
         .command(
@@ -55,6 +57,7 @@ fn app() -> App {
                 .opt("artifacts", "artifacts", "artifacts dir (HLO + manifest)")
                 .opt("bits", "4", "bit width")
                 .opt("requests", "200", "number of requests to fire")
+                .opt("threads", "0", "pipeline worker threads (0 = all cores)")
                 .opt("log", "info", "log level"),
         )
         .command(
@@ -96,17 +99,18 @@ fn cmd_quantize(m: &Matches) -> Result<()> {
         },
         other => bail!("unknown method '{other}'"),
     };
+    let engine = splitquant::pipeline::Engine::new(m.get_usize("threads")?);
     log_info!(
-        "quantizing {} ({} params) to {} via {}",
+        "quantizing {} ({} params) to {} via {} on {} pipeline workers",
         m.get("ckpt")?,
         human_count(splitquant::model::n_params(&ck.config) as u64),
         bits.name(),
-        method.name()
+        method.name(),
+        engine.threads()
     );
-    let (qm, dur) = splitquant::util::timer::time_it(|| {
-        splitquant::model::quantized::quantize_model(&ck, bits, &method)
-    });
-    let qm = qm?;
+    let (res, dur) =
+        splitquant::util::timer::time_it(|| engine.quantize_model_reported(&ck, bits, &method));
+    let (qm, report) = res?;
     qmodel::save_qmodel(m.get("out")?, &qm)?;
     println!(
         "{} → {} [{}] in {}   packed={}  (fp32 was {})",
@@ -117,6 +121,7 @@ fn cmd_quantize(m: &Matches) -> Result<()> {
         human_bytes(qm.packed_bytes()),
         human_bytes(ck.fp32_bytes()),
     );
+    println!("{}", report.render());
     Ok(())
 }
 
@@ -134,11 +139,10 @@ fn cmd_eval(m: &Matches) -> Result<()> {
             spec.out_dir = Some(PathBuf::from(dir));
         }
     }
-    let coord = if spec.use_runtime {
-        Coordinator::with_engine("artifacts", None)?
-    } else {
-        Coordinator::new()
-    };
+    let mut coord = Coordinator::with_threads(m.get_usize("threads")?);
+    if spec.use_runtime {
+        coord.attach_engine("artifacts", None)?;
+    }
     let ck = coord.load_model(&spec)?;
     let problems = coord.load_problems(&spec)?;
 
@@ -177,11 +181,8 @@ fn cmd_serve(m: &Matches) -> Result<()> {
     let (problems, _) = splitquant::data::load_problems(m.get("problems")?)?;
     let n_requests = m.get_usize("requests")?.min(problems.len());
 
-    let qm = splitquant::model::quantized::quantize_model(
-        &ck,
-        bits,
-        &Method::SplitQuant(SplitConfig::default()),
-    )?;
+    let engine = splitquant::pipeline::Engine::new(m.get_usize("threads")?);
+    let qm = engine.quantize_model(&ck, bits, &Method::SplitQuant(SplitConfig::default()))?;
     let weights = scoring::quant_args(&qm, 3)?;
     log_info!("serving {} [{}]", m.get("ckpt")?, qm.method_name);
 

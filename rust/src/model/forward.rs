@@ -208,7 +208,12 @@ pub fn forward_tapped(
 
         // Output projection + residual.
         tap(&format!("{pre}.attn.wo"), &ws.attn_out[..seq * d], seq);
-        linear(&mut ws.xn[..seq * d], &ws.attn_out[..seq * d], ck.get(&format!("{pre}.attn.wo"))?, seq);
+        linear(
+            &mut ws.xn[..seq * d],
+            &ws.attn_out[..seq * d],
+            ck.get(&format!("{pre}.attn.wo"))?,
+            seq,
+        );
         for i in 0..seq * d {
             ws.x[i] += ws.xn[i];
         }
@@ -219,7 +224,12 @@ pub fn forward_tapped(
         let dff = cfg.d_ff;
         tap(&format!("{pre}.mlp.gate"), &ws.xn[..seq * d], seq);
         tap(&format!("{pre}.mlp.up"), &ws.xn[..seq * d], seq);
-        linear(&mut ws.gate[..seq * dff], &ws.xn[..seq * d], ck.get(&format!("{pre}.mlp.gate"))?, seq);
+        linear(
+            &mut ws.gate[..seq * dff],
+            &ws.xn[..seq * d],
+            ck.get(&format!("{pre}.mlp.gate"))?,
+            seq,
+        );
         linear(&mut ws.up[..seq * dff], &ws.xn[..seq * d], ck.get(&format!("{pre}.mlp.up"))?, seq);
         for i in 0..seq * dff {
             let g = ws.gate[i];
@@ -228,7 +238,12 @@ pub fn forward_tapped(
             ws.gate[i] = silu * ws.up[i];
         }
         tap(&format!("{pre}.mlp.down"), &ws.gate[..seq * dff], seq);
-        linear(&mut ws.mlp_out[..seq * d], &ws.gate[..seq * dff], ck.get(&format!("{pre}.mlp.down"))?, seq);
+        linear(
+            &mut ws.mlp_out[..seq * d],
+            &ws.gate[..seq * dff],
+            ck.get(&format!("{pre}.mlp.down"))?,
+            seq,
+        );
         for i in 0..seq * d {
             ws.x[i] += ws.mlp_out[i];
         }

@@ -92,9 +92,34 @@ pub struct QuantizedModel {
     pub fp_tensors: BTreeMap<String, Tensor>,
 }
 
+/// Quantize one linear parameter under a method — the single source of
+/// truth for the per-layer hot path, shared by the sequential reference
+/// ([`quantize_model`]) and the pipeline engine ([`crate::pipeline`]).
+pub fn quantize_linear_param(t: &Tensor, bits: Bits, method: &Method) -> QuantParam {
+    match method {
+        Method::Baseline => QuantParam::Plain(quant::quantize_per_tensor(t, bits)),
+        Method::SplitQuant(cfg) => QuantParam::Split(split::split_quantize(t, cfg, bits)),
+        Method::Ocs { expand_ratio } => {
+            let exp = split::ocs::ocs_expand(t, *expand_ratio);
+            let q = quant::quantize_per_tensor(&exp.expanded, bits);
+            let effective = exp.fold(&q.dequantize());
+            QuantParam::OcsEffective {
+                effective,
+                packed_len: q.packed_len(),
+            }
+        }
+    }
+}
+
 /// Quantize a checkpoint with a method at a bit width. This *is* the
 /// SplitQuantV2 pipeline when `method = SplitQuant` (preprocess + linear
 /// quantization, §3) and the baseline when `method = Baseline`.
+///
+/// This is the **sequential reference implementation**: a plain loop over
+/// the inventory. The production paths (`splitquant quantize --threads`,
+/// the coordinator's arms) go through [`crate::pipeline::Engine`], whose
+/// output is asserted bit-identical to this function for every worker
+/// count.
 pub fn quantize_model(ck: &Checkpoint, bits: Bits, method: &Method) -> Result<QuantizedModel> {
     let mut linears = BTreeMap::new();
     let mut fp_tensors = BTreeMap::new();
@@ -109,22 +134,7 @@ pub fn quantize_model(ck: &Checkpoint, bits: Bits, method: &Method) -> Result<Qu
                 embedding = Some(quant::quantize_per_channel(t, bits));
             }
             ParamKind::Linear => {
-                let q = match method {
-                    Method::Baseline => QuantParam::Plain(quant::quantize_per_tensor(t, bits)),
-                    Method::SplitQuant(cfg) => {
-                        QuantParam::Split(split::split_quantize(t, cfg, bits))
-                    }
-                    Method::Ocs { expand_ratio } => {
-                        let exp = split::ocs::ocs_expand(t, *expand_ratio);
-                        let q = quant::quantize_per_tensor(&exp.expanded, bits);
-                        let effective = exp.fold(&q.dequantize());
-                        QuantParam::OcsEffective {
-                            effective,
-                            packed_len: q.packed_len(),
-                        }
-                    }
-                };
-                linears.insert(info.name.clone(), q);
+                linears.insert(info.name.clone(), quantize_linear_param(t, bits, method));
             }
         }
     }
@@ -192,68 +202,19 @@ impl QuantizedModel {
     }
 }
 
-/// Multi-core variant of [`quantize_model`]: linear layers fan out over
-/// the worker pool (each layer's split+quantize is independent). Results
-/// are identical to the sequential path; on a 1-core host it degrades to
-/// sequential execution.
+/// Multi-core variant of [`quantize_model`]: every parameter's preprocess
+/// job fans out over the worker pool through the layer-pipeline engine
+/// ([`crate::pipeline::quantize_with_pool`]), which merges results in
+/// inventory order behind a bounded reorder window. Results are
+/// bit-identical to the sequential path for any pool size; on a 1-core
+/// host it degrades to sequential execution.
 pub fn quantize_model_parallel(
     ck: &Checkpoint,
     bits: Bits,
     method: &Method,
     pool: &crate::util::pool::Pool,
 ) -> Result<QuantizedModel> {
-    let inventory = param_inventory(&ck.config);
-    let linear_infos: Vec<_> = inventory
-        .iter()
-        .filter(|i| i.kind == ParamKind::Linear)
-        .cloned()
-        .collect();
-    let quantized: Vec<(String, QuantParam)> = pool
-        .parallel_map(linear_infos.len(), |i| {
-            let info = &linear_infos[i];
-            let t = ck.get(&info.name).expect("validated checkpoint");
-            let q = match method {
-                Method::Baseline => QuantParam::Plain(quant::quantize_per_tensor(t, bits)),
-                Method::SplitQuant(cfg) => QuantParam::Split(split::split_quantize(t, cfg, bits)),
-                Method::Ocs { expand_ratio } => {
-                    let exp = split::ocs::ocs_expand(t, *expand_ratio);
-                    let q = quant::quantize_per_tensor(&exp.expanded, bits);
-                    QuantParam::OcsEffective {
-                        effective: exp.fold(&q.dequantize()),
-                        packed_len: q.packed_len(),
-                    }
-                }
-            };
-            (info.name.clone(), q)
-        })
-        .into_iter()
-        .collect();
-
-    let mut linears = BTreeMap::new();
-    for (name, q) in quantized {
-        linears.insert(name, q);
-    }
-    let mut fp_tensors = BTreeMap::new();
-    let mut embedding = None;
-    for info in &inventory {
-        match info.kind {
-            ParamKind::Norm => {
-                fp_tensors.insert(info.name.clone(), ck.get(&info.name)?.clone());
-            }
-            ParamKind::Embedding => {
-                embedding = Some(quant::quantize_per_channel(ck.get(&info.name)?, bits));
-            }
-            ParamKind::Linear => {}
-        }
-    }
-    Ok(QuantizedModel {
-        config: ck.config.clone(),
-        bits,
-        method_name: method.name(),
-        linears,
-        embedding: embedding.ok_or_else(|| anyhow!("model has no embedding"))?,
-        fp_tensors,
-    })
+    crate::pipeline::quantize_with_pool(pool, ck, bits, method).map(|(qm, _report)| qm)
 }
 
 #[cfg(test)]

@@ -1,0 +1,182 @@
+//! Pipeline run reports: per-unit stage timings and whole-run aggregates.
+//!
+//! Every layer work unit records how long its cluster / quantize / pack
+//! stages took; the merged [`PipelineReport`] is what `splitquant
+//! quantize` prints, what the coordinator folds into its profiler, and
+//! what the threads-scaling bench serializes into `BENCH_pipeline.json`.
+
+use std::time::Duration;
+
+use crate::util::fmt::{human_bytes, human_count, Table};
+use crate::util::json::Json;
+use crate::util::timer::format_duration;
+
+/// Stage wall-clock for one unit. The fused split+quantize pass of the
+/// paper is a single stage here ("quantize"); "cluster" is the k-means
+/// decision and "pack" the optional bit-packing of the integer planes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageTimes {
+    pub cluster: Duration,
+    pub quantize: Duration,
+    pub pack: Duration,
+}
+
+impl StageTimes {
+    pub fn total(&self) -> Duration {
+        self.cluster + self.quantize + self.pack
+    }
+
+    pub fn accumulate(&mut self, other: &StageTimes) {
+        self.cluster += other.cluster;
+        self.quantize += other.quantize;
+        self.pack += other.pack;
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cluster_s", Json::num(self.cluster.as_secs_f64())),
+            ("quantize_s", Json::num(self.quantize.as_secs_f64())),
+            ("pack_s", Json::num(self.pack.as_secs_f64())),
+        ])
+    }
+}
+
+/// Outcome of one scheduled work unit (one parameter tensor).
+#[derive(Clone, Debug)]
+pub struct UnitReport {
+    pub name: String,
+    pub elems: usize,
+    /// Integer planes produced (k for split layers, 1 otherwise, 0 for
+    /// FP passthrough).
+    pub planes: usize,
+    pub packed_len: usize,
+    pub stages: StageTimes,
+}
+
+/// Merged report of one pipeline run.
+#[derive(Clone, Debug)]
+pub struct PipelineReport {
+    /// Worker threads the engine scheduled across.
+    pub threads: usize,
+    /// Bounded reorder window (max units buffered ahead of the merge).
+    pub window: usize,
+    /// End-to-end wall clock of the run.
+    pub wall: Duration,
+    pub units: Vec<UnitReport>,
+}
+
+impl PipelineReport {
+    /// Sum of per-unit stage times (total CPU work).
+    pub fn stage_totals(&self) -> StageTimes {
+        let mut t = StageTimes::default();
+        for u in &self.units {
+            t.accumulate(&u.stages);
+        }
+        t
+    }
+
+    /// Total CPU time across all units.
+    pub fn cpu_time(&self) -> Duration {
+        self.stage_totals().total()
+    }
+
+    /// Total packed bytes across units.
+    pub fn packed_len(&self) -> usize {
+        self.units.iter().map(|u| u.packed_len).sum()
+    }
+
+    /// cpu_time / (wall × threads): 1.0 = perfect scaling.
+    pub fn parallel_efficiency(&self) -> f64 {
+        let denom = self.wall.as_secs_f64() * self.threads as f64;
+        if denom > 0.0 {
+            self.cpu_time().as_secs_f64() / denom
+        } else {
+            0.0
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("threads", Json::num(self.threads as f64)),
+            ("window", Json::num(self.window as f64)),
+            ("wall_s", Json::num(self.wall.as_secs_f64())),
+            ("cpu_s", Json::num(self.cpu_time().as_secs_f64())),
+            ("efficiency", Json::num(self.parallel_efficiency())),
+            ("units", Json::num(self.units.len() as f64)),
+            ("packed_bytes", Json::num(self.packed_len() as f64)),
+            ("stages", self.stage_totals().to_json()),
+        ])
+    }
+
+    /// Human summary: aggregate line + the slowest units.
+    pub fn render(&self) -> String {
+        let totals = self.stage_totals();
+        let mut s = format!(
+            "pipeline: {} units on {} threads (window {}) in {}  cpu {}  efficiency {:.0}%\n\
+             stages: cluster {}  quantize {}  pack {}\n",
+            self.units.len(),
+            self.threads,
+            self.window,
+            format_duration(self.wall),
+            format_duration(self.cpu_time()),
+            100.0 * self.parallel_efficiency(),
+            format_duration(totals.cluster),
+            format_duration(totals.quantize),
+            format_duration(totals.pack),
+        );
+        let mut slowest: Vec<&UnitReport> = self.units.iter().collect();
+        slowest.sort_by(|a, b| b.stages.total().cmp(&a.stages.total()));
+        let mut table = Table::new(&["unit", "elems", "planes", "packed", "cluster", "quantize"]);
+        for u in slowest.iter().take(5) {
+            table.row(&[
+                u.name.clone(),
+                human_count(u.elems as u64),
+                u.planes.to_string(),
+                human_bytes(u.packed_len as u64),
+                format_duration(u.stages.cluster),
+                format_duration(u.stages.quantize),
+            ]);
+        }
+        s += &table.render();
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit(name: &str, ms: u64) -> UnitReport {
+        UnitReport {
+            name: name.to_string(),
+            elems: 100,
+            planes: 3,
+            packed_len: 64,
+            stages: StageTimes {
+                cluster: Duration::from_millis(ms),
+                quantize: Duration::from_millis(2 * ms),
+                pack: Duration::ZERO,
+            },
+        }
+    }
+
+    #[test]
+    fn aggregates_and_json() {
+        let rep = PipelineReport {
+            threads: 4,
+            window: 8,
+            wall: Duration::from_millis(30),
+            units: vec![unit("a", 10), unit("b", 20)],
+        };
+        assert_eq!(rep.stage_totals().cluster, Duration::from_millis(30));
+        assert_eq!(rep.cpu_time(), Duration::from_millis(90));
+        assert_eq!(rep.packed_len(), 128);
+        assert!(rep.parallel_efficiency() > 0.0);
+        let j = rep.to_json();
+        assert_eq!(j.get("threads").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(j.get("units").unwrap().as_usize().unwrap(), 2);
+        let text = rep.render();
+        assert!(text.contains("pipeline: 2 units"), "{text}");
+        assert!(text.contains("quantize"), "{text}");
+    }
+}

@@ -176,6 +176,19 @@ fn row_absmax(w: &Tensor) -> Vec<f32> {
         .collect()
 }
 
+/// Scatter whole rows of `w` into k planes by their clustered statistic —
+/// the single RowWise partitioning loop shared by [`split_tensor`] and
+/// [`split_quantize_clustered`].
+fn scatter_rows(w: &Tensor, stats: &[f32], clustering: &Clustering1D) -> Vec<Tensor> {
+    let mut planes = vec![Tensor::zeros(w.shape()); clustering.k()];
+    let cols = w.cols();
+    for r in 0..w.rows() {
+        let c = clustering.assign(stats[r]);
+        planes[c].data_mut()[r * cols..(r + 1) * cols].copy_from_slice(w.row(r));
+    }
+    planes
+}
+
 /// Split a tensor into FP masked planes (Figure 1 structure).
 ///
 /// Returns a single-plane `SplitLayer` (identity split) when the tensor is
@@ -206,16 +219,10 @@ pub fn split_tensor(w: &Tensor, cfg: &SplitConfig) -> SplitLayer {
             assert_eq!(w.ndim(), 2, "RowWise split requires a matrix");
             let stats = row_absmax(w);
             let clustering = cluster_values(&stats, cfg);
-            let k = clustering.k();
-            if k <= 1 {
+            if clustering.k() <= 1 {
                 return identity_split(w, cfg.strategy);
             }
-            let mut planes = vec![Tensor::zeros(w.shape()); k];
-            let cols = w.cols();
-            for r in 0..w.rows() {
-                let c = clustering.assign(stats[r]);
-                planes[c].data_mut()[r * cols..(r + 1) * cols].copy_from_slice(w.row(r));
-            }
+            let planes = scatter_rows(w, &stats, &clustering);
             SplitLayer {
                 planes,
                 clustering,
@@ -252,23 +259,37 @@ pub fn quantize_split(sl: &SplitLayer, bits: Bits) -> QuantizedSplitLayer {
     }
 }
 
-/// **Fused split + quantize** — the production hot path (the paper's
-/// 2-minute preprocessing claim). Never materializes FP planes: one pass
-/// clusters, a second pass writes each value's quantized level directly
-/// into its cluster's i8 plane (other planes get that cluster's exact-zero
-/// level). Numerically identical to `quantize_split(split_tensor(...))`.
-pub fn split_quantize(w: &Tensor, cfg: &SplitConfig, bits: Bits) -> QuantizedSplitLayer {
-    if w.len() < cfg.min_elems {
-        return QuantizedSplitLayer {
-            planes: vec![quant::quantize_per_tensor(w, bits)],
-            clustering: identity_split(w, cfg.strategy).clustering,
-            strategy: cfg.strategy,
-        };
+/// **Phase 1 of the fused hot path**: the clustering decision for `w` —
+/// over scalar weight values for [`Strategy::MaskedSum`], over row-absmax
+/// statistics for [`Strategy::RowWise`]. Exposed separately so the
+/// layer-pipeline engine can schedule and time the cluster stage of each
+/// layer's work unit independently of the quantize stage;
+/// [`split_quantize`] is exactly `split_quantize_clustered(w,
+/// cluster_weights(w, cfg), cfg, bits)` for tensors above `min_elems`.
+pub fn cluster_weights(w: &Tensor, cfg: &SplitConfig) -> Clustering1D {
+    match cfg.strategy {
+        Strategy::MaskedSum => cluster_values(w.data(), cfg),
+        Strategy::RowWise => {
+            assert_eq!(w.ndim(), 2, "RowWise split requires a matrix");
+            cluster_values(&row_absmax(w), cfg)
+        }
     }
+}
+
+/// **Phase 2 of the fused hot path**: quantize `w` under a clustering
+/// previously computed by [`cluster_weights`]. For MaskedSum this never
+/// materializes FP planes: each value's quantized level is written
+/// directly into its cluster's i8 plane (other planes get that cluster's
+/// exact-zero level).
+pub fn split_quantize_clustered(
+    w: &Tensor,
+    clustering: Clustering1D,
+    cfg: &SplitConfig,
+    bits: Bits,
+) -> QuantizedSplitLayer {
+    let k = clustering.k();
     match cfg.strategy {
         Strategy::MaskedSum => {
-            let clustering = cluster_values(w.data(), cfg);
-            let k = clustering.k();
             if k <= 1 {
                 return QuantizedSplitLayer {
                     planes: vec![quant::quantize_per_tensor(w, bits)],
@@ -308,8 +329,39 @@ pub fn split_quantize(w: &Tensor, cfg: &SplitConfig, bits: Bits) -> QuantizedSpl
                 strategy: cfg.strategy,
             }
         }
-        Strategy::RowWise => quantize_split(&split_tensor(w, cfg), bits),
+        Strategy::RowWise => {
+            if k <= 1 {
+                return quantize_split(&identity_split(w, cfg.strategy), bits);
+            }
+            // The row statistic is an O(n) rescan (the clustering itself
+            // is the expensive part); planes partition rows exactly as
+            // `split_tensor` does.
+            let planes = scatter_rows(w, &row_absmax(w), &clustering);
+            quantize_split(
+                &SplitLayer {
+                    planes,
+                    clustering,
+                    strategy: Strategy::RowWise,
+                },
+                bits,
+            )
+        }
     }
+}
+
+/// **Fused split + quantize** — the production hot path (the paper's
+/// 2-minute preprocessing claim), now expressed as cluster phase +
+/// quantize phase so the pipeline engine can run the phases per layer.
+/// Numerically identical to `quantize_split(split_tensor(...))`.
+pub fn split_quantize(w: &Tensor, cfg: &SplitConfig, bits: Bits) -> QuantizedSplitLayer {
+    if w.len() < cfg.min_elems {
+        return QuantizedSplitLayer {
+            planes: vec![quant::quantize_per_tensor(w, bits)],
+            clustering: identity_split(w, cfg.strategy).clustering,
+            strategy: cfg.strategy,
+        };
+    }
+    split_quantize_clustered(w, cluster_weights(w, cfg), cfg, bits)
 }
 
 /// Min/max of the values assigned to each cluster. Uses the solver's
@@ -604,6 +656,27 @@ mod tests {
         let rep_mse = crate::util::stats::mse(w.data(), q.effective_weight().data());
         let base_mse = quant::quant_mse(&w, Bits::Int4);
         assert!(rep_mse < base_mse * 0.25, "conv split {rep_mse} vs base {base_mse}");
+    }
+
+    #[test]
+    fn phased_cluster_then_quantize_equals_fused() {
+        // The pipeline engine runs the two phases separately; they must
+        // compose to exactly the fused hot path for both strategies.
+        let w = heavy_tensor(12, 24, 24);
+        for strategy in [Strategy::MaskedSum, Strategy::RowWise] {
+            let cfg = SplitConfig {
+                strategy,
+                ..Default::default()
+            };
+            let fused = split_quantize(&w, &cfg, Bits::Int4);
+            let clustering = cluster_weights(&w, &cfg);
+            let phased = split_quantize_clustered(&w, clustering, &cfg, Bits::Int4);
+            assert_eq!(fused.k(), phased.k(), "{strategy:?}");
+            for (a, b) in fused.planes.iter().zip(&phased.planes) {
+                assert_eq!(a.plane.data(), b.plane.data(), "{strategy:?}");
+                assert_eq!(a.params, b.params, "{strategy:?}");
+            }
+        }
     }
 
     #[test]

@@ -234,7 +234,9 @@ impl App {
                     .args
                     .iter()
                     .find(|a| a.name == key)
-                    .ok_or_else(|| anyhow!("unknown option '--{key}'\n\n{}", cmd.usage(self.name)))?;
+                    .ok_or_else(|| {
+                        anyhow!("unknown option '--{key}'\n\n{}", cmd.usage(self.name))
+                    })?;
                 if spec.is_flag {
                     if inline_val.is_some() {
                         bail!("flag --{key} takes no value");
@@ -255,7 +257,9 @@ impl App {
             } else {
                 let spec = pos_iter
                     .next()
-                    .ok_or_else(|| anyhow!("unexpected positional '{tok}'\n\n{}", cmd.usage(self.name)))?;
+                    .ok_or_else(|| {
+                        anyhow!("unexpected positional '{tok}'\n\n{}", cmd.usage(self.name))
+                    })?;
                 values.insert(spec.name.to_string(), tok.clone());
             }
             i += 1;

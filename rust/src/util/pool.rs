@@ -1,14 +1,18 @@
 //! A small work-stealing-free thread pool with scoped parallel-for.
 //!
-//! The offline build has no `rayon`/`tokio`; this pool provides the two
-//! primitives the coordinator needs: `parallel_for_chunks` (data-parallel
-//! sweeps over layers / eval problems) and fire-and-forget `spawn` jobs.
+//! The offline build has no `rayon`/`tokio`; this pool provides the
+//! primitives the coordinator and the layer-pipeline engine need:
+//! data-parallel sweeps (`parallel_for` / `parallel_map`), the bounded
+//! ordered scheduler behind `pipeline::Engine`
+//! (`parallel_consume_ordered`), and fire-and-forget `spawn` jobs.
 //! On a 1-core container the pool degrades gracefully to near-sequential
 //! execution with identical results (all parallel reductions in this crate
 //! are order-independent or explicitly re-ordered by index).
 
+use std::collections::BTreeMap;
+use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -118,6 +122,173 @@ impl Pool {
         }
         out.into_iter().map(|v| v.expect("all slots filled")).collect()
     }
+
+    /// Like [`parallel_map`](Pool::parallel_map), but with a bounded
+    /// reorder window (see
+    /// [`parallel_consume_ordered`](Pool::parallel_consume_ordered)).
+    pub fn parallel_map_bounded<T, F>(&self, n: usize, window: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let mut out = Vec::with_capacity(n);
+        self.parallel_consume_ordered(n, window, f, |_, v| out.push(v));
+        out
+    }
+
+    /// Bounded-memory ordered producer/consumer sweep — the scheduling
+    /// core of the layer-pipeline engine.
+    ///
+    /// `produce(i)` runs on up to `size()` workers; `consume(i, value)`
+    /// runs on the calling thread, strictly in index order, regardless of
+    /// which worker finishes first. Workers never run more than `window`
+    /// items ahead of the merge cursor, so at most `window` produced
+    /// results are buffered at any time — a slow early item applies
+    /// backpressure instead of letting the queue balloon (the
+    /// bounded-memory layer queue of `pipeline::Engine`).
+    ///
+    /// A panic in `produce` or `consume` stops the sweep (workers drain
+    /// and exit) and is re-raised on the calling thread, mirroring
+    /// `thread::scope` semantics.
+    pub fn parallel_consume_ordered<T, P, C>(
+        &self,
+        n: usize,
+        window: usize,
+        produce: P,
+        mut consume: C,
+    ) where
+        T: Send,
+        P: Fn(usize) -> T + Sync,
+        C: FnMut(usize, T),
+    {
+        if n == 0 {
+            return;
+        }
+        let window = window.max(1);
+        let workers = self.size.min(n);
+        if workers <= 1 {
+            // Strictly sequential: produce and merge alternate in index
+            // order; panics propagate natively.
+            for i in 0..n {
+                let v = produce(i);
+                consume(i, v);
+            }
+            return;
+        }
+
+        struct OrderedState<T> {
+            /// Produced-but-unmerged results (and panic payloads).
+            buf: BTreeMap<usize, thread::Result<T>>,
+            /// Next index the consumer will merge.
+            merged: usize,
+            /// Set on any panic: workers stop claiming and drain.
+            poisoned: bool,
+        }
+        struct Shared<T> {
+            state: Mutex<OrderedState<T>>,
+            /// Workers wait here for window space.
+            space: Condvar,
+            /// The consumer waits here for the next in-order item.
+            items: Condvar,
+        }
+
+        let shared: Shared<T> = Shared {
+            state: Mutex::new(OrderedState {
+                buf: BTreeMap::new(),
+                merged: 0,
+                poisoned: false,
+            }),
+            space: Condvar::new(),
+            items: Condvar::new(),
+        };
+        let cursor = AtomicUsize::new(0);
+        let mut consumer_panic: Option<Box<dyn std::any::Any + Send>> = None;
+
+        thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    {
+                        let mut g = shared.state.lock().unwrap();
+                        while !g.poisoned && i >= g.merged + window {
+                            g = shared.space.wait(g).unwrap();
+                        }
+                        if g.poisoned {
+                            break;
+                        }
+                    }
+                    let r = panic::catch_unwind(AssertUnwindSafe(|| produce(i)));
+                    let mut g = shared.state.lock().unwrap();
+                    if r.is_err() {
+                        g.poisoned = true;
+                        shared.space.notify_all();
+                    }
+                    g.buf.insert(i, r);
+                    shared.items.notify_all();
+                });
+            }
+
+            // In-order merge on the calling thread.
+            let merge = panic::catch_unwind(AssertUnwindSafe(|| {
+                for i in 0..n {
+                    let r = {
+                        let mut g = shared.state.lock().unwrap();
+                        loop {
+                            if let Some(r) = g.buf.remove(&i) {
+                                break r;
+                            }
+                            if g.poisoned {
+                                // Index i was abandoned by a draining
+                                // worker; the payload sits in `buf`.
+                                return;
+                            }
+                            g = shared.items.wait(g).unwrap();
+                        }
+                    };
+                    match r {
+                        Ok(v) => {
+                            consume(i, v);
+                            let mut g = shared.state.lock().unwrap();
+                            g.merged = i + 1;
+                            shared.space.notify_all();
+                        }
+                        Err(payload) => {
+                            let mut g = shared.state.lock().unwrap();
+                            g.poisoned = true;
+                            g.buf.insert(i, Err(payload));
+                            shared.space.notify_all();
+                            return;
+                        }
+                    }
+                }
+            }));
+            if let Err(p) = merge {
+                // `consume` panicked: poison so blocked workers exit,
+                // then re-raise after the scope joins them.
+                let mut g = shared.state.lock().unwrap();
+                g.poisoned = true;
+                shared.space.notify_all();
+                drop(g);
+                consumer_panic = Some(p);
+            }
+        });
+
+        if let Some(p) = consumer_panic {
+            panic::resume_unwind(p);
+        }
+        let state = shared.state.into_inner().unwrap();
+        if state.poisoned {
+            for (_, r) in state.buf {
+                if let Err(p) = r {
+                    panic::resume_unwind(p);
+                }
+            }
+            unreachable!("ordered sweep poisoned without a panic payload");
+        }
+    }
 }
 
 impl Drop for Pool {
@@ -180,5 +351,129 @@ mod tests {
         let pool = Pool::new(1);
         let out = pool.parallel_map(10, |i| i + 1);
         assert_eq!(out, (1..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn bounded_map_matches_sequential_for_any_worker_count() {
+        for workers in [1usize, 2, 3, 8] {
+            for window in [1usize, 2, 7, 64] {
+                let pool = Pool::new(workers);
+                let out = pool.parallel_map_bounded(37, window, |i| i * 3 + 1);
+                assert_eq!(
+                    out,
+                    (0..37).map(|i| i * 3 + 1).collect::<Vec<_>>(),
+                    "workers={workers} window={window}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bounded_map_edge_counts() {
+        // n = 1, n < workers, n = 0.
+        let pool = Pool::new(6);
+        assert_eq!(pool.parallel_map_bounded(1, 4, |i| i + 10), vec![10]);
+        assert_eq!(pool.parallel_map_bounded(3, 1, |i| i), vec![0, 1, 2]);
+        let empty: Vec<usize> = pool.parallel_map_bounded(0, 4, |i| i);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn ordered_consume_sees_ascending_indices() {
+        let pool = Pool::new(4);
+        let mut seen = Vec::new();
+        pool.parallel_consume_ordered(
+            50,
+            3,
+            |i| {
+                // Stagger completion so out-of-order production happens.
+                if i % 7 == 0 {
+                    thread::sleep(std::time::Duration::from_millis(2));
+                }
+                i
+            },
+            |i, v| {
+                assert_eq!(i, v);
+                seen.push(i);
+            },
+        );
+        assert_eq!(seen, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn window_bounds_in_flight_work() {
+        // A worker may only claim index i once i < merged + window; with
+        // the consumer's merge counter mirrored into an atomic, every
+        // produce call must observe i < merged + window.
+        let window = 4;
+        let merged = AtomicUsize::new(0);
+        let pool = Pool::new(8);
+        pool.parallel_consume_ordered(
+            200,
+            window,
+            |i| {
+                let m = merged.load(Ordering::SeqCst);
+                assert!(i < m + window, "index {i} ran ahead of merge {m} + window {window}");
+                i
+            },
+            |i, _| {
+                merged.store(i + 1, Ordering::SeqCst);
+            },
+        );
+        assert_eq!(merged.load(Ordering::SeqCst), 200);
+    }
+
+    #[test]
+    fn produce_panic_propagates() {
+        for workers in [1usize, 4] {
+            let pool = Pool::new(workers);
+            let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                pool.parallel_map_bounded(20, 2, |i| {
+                    if i == 11 {
+                        panic!("job 11 exploded");
+                    }
+                    i
+                })
+            }));
+            let payload = r.expect_err("panic must cross the sweep");
+            let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+            assert!(msg.contains("exploded"), "workers={workers}: payload {msg:?}");
+        }
+    }
+
+    #[test]
+    fn consume_panic_propagates() {
+        let pool = Pool::new(3);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.parallel_consume_ordered(
+                16,
+                2,
+                |i| i,
+                |i, _| {
+                    if i == 5 {
+                        panic!("merge exploded");
+                    }
+                },
+            )
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn parallel_for_panic_propagates_out_of_scope() {
+        // `thread::scope` re-raises worker panics when the scope joins;
+        // the pipeline engine and callers rely on that contract.
+        let pool = Pool::new(4);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.parallel_for(10, |i| {
+                if i == 3 {
+                    panic!("scoped worker panic");
+                }
+            })
+        }));
+        assert!(r.is_err(), "worker panic must escape parallel_for");
+        // The pool remains usable afterwards.
+        let out = pool.parallel_map(4, |i| i);
+        assert_eq!(out, vec![0, 1, 2, 3]);
     }
 }

@@ -1,0 +1,198 @@
+//! Property tests for the layer-pipeline engine: for ANY worker count,
+//! window size, model shape, method and bit width, the engine's output
+//! must be bit-identical to the sequential reference
+//! (`quantize_model`) — the core determinism contract of the tentpole.
+//!
+//! Generators are hand-rolled over the crate's deterministic PRNG
+//! (proptest is unavailable offline); failures print the seed.
+
+use splitquant::model::quantized::{quantize_model, Method, QuantParam, QuantizedModel};
+use splitquant::model::{Checkpoint, PicoLlamaConfig};
+use splitquant::pipeline::{Engine, PipelineConfig};
+use splitquant::quant::Bits;
+use splitquant::split::{SplitConfig, Strategy};
+use splitquant::util::rng::Rng;
+
+/// A random *valid* model shape: d_model divisible by n_heads, n_heads
+/// divisible by n_kv_heads, even head_dim — so every trial has a
+/// different layer set (count and sizes).
+fn random_config(seed: u64) -> PicoLlamaConfig {
+    let mut r = Rng::new(seed);
+    let head_dim = [4usize, 8][r.below(2)];
+    let n_kv_heads = 1 + r.below(2); // 1..=2
+    let groups = 1 + r.below(3); // 1..=3
+    let n_heads = n_kv_heads * groups;
+    PicoLlamaConfig {
+        vocab: 32 + r.below(64),
+        d_model: n_heads * head_dim,
+        n_layers: 1 + r.below(3),
+        n_heads,
+        n_kv_heads,
+        d_ff: 16 + 8 * r.below(6),
+        max_seq: 32,
+        rope_theta: 10_000.0,
+        norm_eps: 1e-5,
+        tie_embeddings: r.below(2) == 0,
+    }
+}
+
+fn random_checkpoint(seed: u64) -> Checkpoint {
+    let cfg = random_config(seed);
+    cfg.validate().expect("generator must produce valid configs");
+    let mut ck = Checkpoint::random_init(&cfg, seed ^ 0xbeef);
+    if seed % 2 == 0 {
+        ck.amplify_outliers(0.003, 12.0, seed + 1);
+    }
+    ck
+}
+
+fn assert_bit_identical(a: &QuantizedModel, b: &QuantizedModel, ctx: &str) {
+    assert_eq!(a.method_name, b.method_name, "{ctx}");
+    assert_eq!(a.packed_bytes(), b.packed_bytes(), "{ctx}");
+    assert_eq!(a.stored_values(), b.stored_values(), "{ctx}");
+    assert_eq!(a.linears.len(), b.linears.len(), "{ctx}");
+    // Plane-level comparison: integer levels and params, not just the
+    // dequantized view.
+    for (name, qa) in &a.linears {
+        let qb = b.linears.get(name).unwrap_or_else(|| panic!("{ctx}: missing {name}"));
+        match (qa, qb) {
+            (QuantParam::Plain(x), QuantParam::Plain(y)) => {
+                assert_eq!(x.plane.data(), y.plane.data(), "{ctx} {name}");
+                assert_eq!(x.params, y.params, "{ctx} {name}");
+            }
+            (QuantParam::Split(x), QuantParam::Split(y)) => {
+                assert_eq!(x.k(), y.k(), "{ctx} {name}");
+                for (pa, pb) in x.planes.iter().zip(&y.planes) {
+                    assert_eq!(pa.plane.data(), pb.plane.data(), "{ctx} {name}");
+                    assert_eq!(pa.params, pb.params, "{ctx} {name}");
+                }
+            }
+            (
+                QuantParam::OcsEffective { effective: x, packed_len: lx },
+                QuantParam::OcsEffective { effective: y, packed_len: ly },
+            ) => {
+                assert_eq!(x.data(), y.data(), "{ctx} {name}");
+                assert_eq!(lx, ly, "{ctx} {name}");
+            }
+            _ => panic!("{ctx} {name}: variant mismatch"),
+        }
+    }
+    assert_eq!(
+        a.embedding.plane.data(),
+        b.embedding.plane.data(),
+        "{ctx} embedding"
+    );
+    assert_eq!(a.embedding.params, b.embedding.params, "{ctx} embedding params");
+    for (name, t) in &a.fp_tensors {
+        assert_eq!(b.fp_tensors.get(name).unwrap(), t, "{ctx} {name}");
+    }
+}
+
+#[test]
+fn prop_pipeline_identical_to_sequential_over_random_layer_sets() {
+    for seed in 0..12u64 {
+        let ck = random_checkpoint(seed);
+        let mut r = Rng::new(seed + 500);
+        let method = match r.below(3) {
+            0 => Method::Baseline,
+            1 => Method::SplitQuant(SplitConfig::default()),
+            _ => Method::Ocs { expand_ratio: 0.04 },
+        };
+        let bits = [Bits::Int2, Bits::Int4, Bits::Int8][r.below(3)];
+        let reference = quantize_model(&ck, bits, &method).unwrap();
+        for threads in [1usize, 2, 5] {
+            let engine = Engine::new(threads);
+            let qm = engine.quantize_model(&ck, bits, &method).unwrap();
+            assert_bit_identical(
+                &reference,
+                &qm,
+                &format!("seed {seed} threads {threads} {bits:?}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_pipeline_identical_across_window_sizes_and_strategies() {
+    for seed in 20..26u64 {
+        let ck = random_checkpoint(seed);
+        for strategy in [Strategy::MaskedSum, Strategy::RowWise] {
+            let method = Method::SplitQuant(SplitConfig {
+                strategy,
+                ..Default::default()
+            });
+            let reference = quantize_model(&ck, Bits::Int4, &method).unwrap();
+            for window_per_worker in [1usize, 4] {
+                let engine = Engine::with_config(PipelineConfig {
+                    threads: 3,
+                    window_per_worker,
+                    ..Default::default()
+                });
+                let qm = engine.quantize_model(&ck, Bits::Int4, &method).unwrap();
+                assert_bit_identical(
+                    &reference,
+                    &qm,
+                    &format!("seed {seed} {strategy:?} window/worker {window_per_worker}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pipeline_is_deterministic_across_repeated_runs() {
+    let ck = random_checkpoint(99);
+    let method = Method::SplitQuant(SplitConfig::default());
+    let engine = Engine::new(4);
+    let first = engine.quantize_model(&ck, Bits::Int4, &method).unwrap();
+    for run in 0..3 {
+        let again = engine.quantize_model(&ck, Bits::Int4, &method).unwrap();
+        assert_bit_identical(&first, &again, &format!("run {run}"));
+    }
+}
+
+#[test]
+fn threads_exceeding_unit_count_matches_sequential() {
+    let ck = random_checkpoint(7);
+    let method = Method::SplitQuant(SplitConfig::default());
+    let reference = quantize_model(&ck, Bits::Int4, &method).unwrap();
+    // Far more workers than the model has parameters.
+    let engine = Engine::new(64);
+    let qm = engine.quantize_model(&ck, Bits::Int4, &method).unwrap();
+    assert_bit_identical(&reference, &qm, "threads=64");
+}
+
+#[test]
+fn engine_panic_propagates_to_caller() {
+    let engine = Engine::new(3);
+    let items: Vec<usize> = (0..30).collect();
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        engine.run_ordered(&items, |_, &v| {
+            if v == 17 {
+                panic!("unit 17 failed");
+            }
+            v
+        })
+    }));
+    assert!(r.is_err(), "worker panic must propagate out of the engine");
+    // The engine survives and stays correct afterwards.
+    let ok = engine.run_ordered(&items, |_, &v| v + 1);
+    assert_eq!(ok, (1..=30).collect::<Vec<_>>());
+}
+
+#[test]
+fn missing_tensor_surfaces_as_error_not_panic() {
+    let mut ck = random_checkpoint(3);
+    let name = ck
+        .tensors
+        .keys()
+        .find(|k| k.contains("attn"))
+        .unwrap()
+        .clone();
+    ck.tensors.remove(&name);
+    let engine = Engine::new(4);
+    let err = engine
+        .quantize_model(&ck, Bits::Int4, &Method::SplitQuant(SplitConfig::default()))
+        .unwrap_err();
+    assert!(err.to_string().contains("missing tensor"), "{err}");
+}

@@ -1,0 +1,256 @@
+//! Vendored, dependency-free subset of the `anyhow` crate.
+//!
+//! The splitquant build is fully offline (no crates.io), so this shim
+//! provides exactly the surface the workspace uses: [`Error`],
+//! [`Result`], the [`anyhow!`] / [`bail!`] macros, and the [`Context`]
+//! extension trait for `Result` and `Option`. Semantics match upstream
+//! anyhow for that subset:
+//!
+//! * `Error` is NOT `std::error::Error` itself, so the blanket
+//!   `From<E: std::error::Error>` conversion powers `?` without
+//!   conflicting with `From<Error> for Error`.
+//! * `{e}` displays the outermost message, `{e:#}` displays the whole
+//!   cause chain joined by `: `, and `{e:?}` displays the chain in the
+//!   multi-line "Caused by" form.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error with an optional chain of context messages.
+pub struct Error {
+    /// Context layers, outermost first. The first entry is what plain
+    /// `{}` formatting shows.
+    context: Vec<String>,
+    /// The underlying typed error, if the chain bottoms out in one.
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            context: vec![message.to_string()],
+            source: None,
+        }
+    }
+
+    /// Wrap an existing typed error.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error {
+            context: Vec::new(),
+            source: Some(Box::new(error)),
+        }
+    }
+
+    /// Add an outer context layer (what [`Context::context`] does).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.context.insert(0, context.to_string());
+        self
+    }
+
+    /// Every message in the chain, outermost first.
+    pub fn chain_messages(&self) -> Vec<String> {
+        let mut out = self.context.clone();
+        if let Some(s) = &self.source {
+            out.push(s.to_string());
+        }
+        out
+    }
+
+    /// The innermost message (the root cause).
+    pub fn root_cause_message(&self) -> String {
+        self.chain_messages()
+            .last()
+            .cloned()
+            .unwrap_or_else(|| "unknown error".to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let chain = self.chain_messages();
+        if f.alternate() {
+            write!(f, "{}", chain.join(": "))
+        } else {
+            write!(f, "{}", chain.first().map(String::as_str).unwrap_or("unknown error"))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let chain = self.chain_messages();
+        match chain.split_first() {
+            Some((head, rest)) if !rest.is_empty() => {
+                writeln!(f, "{head}")?;
+                writeln!(f, "\nCaused by:")?;
+                for (i, msg) in rest.iter().enumerate() {
+                    writeln!(f, "    {i}: {msg}")?;
+                }
+                Ok(())
+            }
+            Some((head, _)) => write!(f, "{head}"),
+            None => write!(f, "unknown error"),
+        }
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::new(e)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    /// Wrap the error with an outer message.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+
+    /// Wrap the error with a lazily-evaluated outer message.
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for std::result::Result<T, Error> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string. Tokens are forwarded to
+/// `format!` unchanged, so positional args and inline `{name}` captures
+/// both work exactly as upstream.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `return Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `if !cond { bail!(..) }`.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*)
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("file missing"));
+    }
+
+    #[test]
+    fn context_layers_and_alternate_display() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| "reading config".to_string()).unwrap_err();
+        assert_eq!(e.to_string(), "reading config");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("reading config: "), "{full}");
+        assert!(full.contains("file missing"), "{full}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+    }
+
+    #[test]
+    fn macros_format() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let x = 3;
+        let b = anyhow!("got {x} and {}", 4);
+        assert_eq!(b.to_string(), "got 3 and 4");
+        fn bails() -> Result<()> {
+            bail!("boom {}", 1)
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "boom 1");
+        fn ensures(n: i32) -> Result<()> {
+            ensure!(n > 0, "n must be positive, got {n}");
+            Ok(())
+        }
+        assert!(ensures(1).is_ok());
+        assert!(ensures(-1).is_err());
+    }
+
+    #[test]
+    fn debug_shows_cause_chain() {
+        let e = Error::new(io_err()).context("outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer"), "{dbg}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}

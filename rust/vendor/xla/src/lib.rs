@@ -1,0 +1,179 @@
+//! Offline stub of the `xla` (PJRT) bindings.
+//!
+//! The real crate links libxla/PJRT native libraries that are not part
+//! of this container image. This stub mirrors exactly the API surface
+//! `splitquant::runtime` uses, so the whole workspace builds and tests
+//! offline; [`PjRtClient::cpu`] fails with a descriptive error, which the
+//! runtime layer already treats as "PJRT unavailable" (integration tests
+//! skip, the CPU reference path is used instead). Swap this path
+//! dependency for the real `xla` crate to enable the PJRT runtime.
+
+use std::fmt;
+
+/// Error type for all stub operations. Matches the real crate's usage
+/// pattern: callers format it with `{:?}` and convert with `?`.
+pub struct Error(pub String);
+
+impl Error {
+    fn unavailable() -> Error {
+        Error("PJRT is unavailable: the workspace is built against the offline xla stub".into())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "XlaError({})", self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i8 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+/// XLA primitive type tags (subset).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrimitiveType {
+    S8,
+    S32,
+    F32,
+}
+
+/// A host-side literal value. The stub only carries shape metadata; no
+/// literal ever reaches an executable because compilation always fails
+/// first.
+#[derive(Clone, Debug, Default)]
+pub struct Literal {
+    shape: Vec<usize>,
+}
+
+impl Literal {
+    /// 1-D literal from a host slice.
+    pub fn vec1<T: NativeType>(values: &[T]) -> Literal {
+        Literal {
+            shape: vec![values.len()],
+        }
+    }
+
+    /// Reshape to explicit dimensions.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        Ok(Literal {
+            shape: dims.iter().map(|&d| d.max(0) as usize).collect(),
+        })
+    }
+
+    /// Uninitialised literal of a primitive type and shape.
+    pub fn create_from_shape(_ty: PrimitiveType, shape: &[usize]) -> Literal {
+        Literal {
+            shape: shape.to_vec(),
+        }
+    }
+
+    /// Copy raw host bytes into the literal.
+    pub fn copy_raw_from<T: NativeType>(&mut self, _values: &[T]) -> Result<()> {
+        Ok(())
+    }
+
+    /// Unwrap a 1-tuple result.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+
+    /// Read the literal back as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable())
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+}
+
+/// Parsed HLO module.
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable())
+    }
+}
+
+/// An XLA computation ready to compile.
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+/// A device buffer holding an execution result.
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+}
+
+/// A compiled executable.
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable())
+    }
+}
+
+/// The PJRT client. [`PjRtClient::cpu`] always fails in the stub.
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable())
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().expect_err("stub must fail");
+        assert!(format!("{err:?}").contains("unavailable"));
+    }
+
+    #[test]
+    fn literal_shape_plumbing() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.shape(), &[4]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.shape(), &[2, 2]);
+        let mut s = Literal::create_from_shape(PrimitiveType::S8, &[3]);
+        s.copy_raw_from(&[1i8, 2, 3]).unwrap();
+        assert!(s.to_vec::<i8>().is_err());
+    }
+}
