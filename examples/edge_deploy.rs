@@ -16,7 +16,7 @@ use std::path::PathBuf;
 use std::time::Instant;
 
 use anyhow::Result;
-use splitquant::coordinator::server::{Server, ServerConfig};
+use splitquant::coordinator::server::{Backend, Server, ServerConfig};
 use splitquant::io::qmodel::{load_qmodel, save_qmodel};
 use splitquant::io::checkpoint::load_checkpoint;
 use splitquant::model::quantized::{quantize_model, Method};
@@ -58,8 +58,10 @@ fn main() -> Result<()> {
     // 4. Start the batched scoring server (PJRT engine inside).
     let weights = scoring::quant_args(&device_qm, 3)?;
     let server = Server::start(
-        PathBuf::from("artifacts"),
-        weights,
+        Backend::Pjrt {
+            artifacts_dir: PathBuf::from("artifacts"),
+            weight_args: weights,
+        },
         ServerConfig::default(),
     )?;
 

@@ -9,7 +9,10 @@
 //! These feed EXPERIMENTS.md §Perf (before/after per optimization).
 
 use splitquant::bench::{banner, black_box, Bench, BenchConfig};
+use splitquant::kernels::{self, KernelScratch};
 use splitquant::kmeans;
+use splitquant::model::packed::pack_linear;
+use splitquant::model::quantized::QuantParam;
 use splitquant::quant::{pack, Bits};
 use splitquant::runtime::{ArgValue, Engine};
 use splitquant::split::{split_quantize, SplitConfig};
@@ -50,6 +53,40 @@ fn main() -> anyhow::Result<()> {
     b.run("unpack[INT4,4.2M]", || {
         black_box(pack::unpack(&packed, levels.len(), Bits::Int4).unwrap())
     });
+
+    banner("L3: packed kernel engine (1024x4096, INT4)");
+    let qp = QuantParam::Split(split_quantize(&w, &cfg, Bits::Int4));
+    let lin = pack_linear(&qp)?;
+    let eff = qp.effective();
+    let mut x1 = vec![0.0f32; 4096];
+    rng.fill_normal(&mut x1, 0.0, 1.0);
+    let mut x8 = vec![0.0f32; 8 * 4096];
+    rng.fill_normal(&mut x8, 0.0, 1.0);
+    let mut y1 = vec![0.0f32; 1024];
+    let mut y8 = vec![0.0f32; 8 * 1024];
+    let mut scratch = KernelScratch::new();
+    b.run("packed_gemv[1024x4096,k=3]", || {
+        kernels::gemv(&mut y1, &x1, &lin, &mut scratch);
+        black_box(y1[0])
+    });
+    b.run("packed_gemm[8x1024x4096,k=3]", || {
+        kernels::gemm(&mut y8, &x8, 8, &lin, &mut scratch);
+        black_box(y8[0])
+    });
+    b.run("packed_gemm_int8[8x1024x4096,k=3]", || {
+        kernels::gemm_int8(&mut y8, &x8, 8, &lin, &mut scratch);
+        black_box(y8[0])
+    });
+    let x8_t = Tensor::new(&[8, 4096], x8.clone());
+    let eff_t = eff.transpose();
+    b.run("f32_gemm_dequantized[8x1024x4096]", || {
+        black_box(splitquant::tensor::matmul(&x8_t, &eff_t))
+    });
+    b.record_metric(
+        "packed_weight_bytes_ratio",
+        lin.weight_bytes() as f64 / (eff.len() * 4) as f64,
+        "x",
+    );
 
     banner("L1 via PJRT: split_matmul kernel (128x128x128, k=3)");
     match Engine::load("artifacts", Some(&["linear_micro_k3"])) {

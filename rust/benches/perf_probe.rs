@@ -1,14 +1,22 @@
-//! perf probe: decompose the split_quantize hot path into stages.
+//! perf probe: decompose the split_quantize hot path into stages, plus
+//! the packed-kernel section (tokens/s and bytes-touched, packed vs the
+//! f32 dequant path).
 //!
 //! Flags (also used by the CI bench smoke job):
-//!   --iters N    fixed-iteration mode: exactly N timed iterations per
-//!                probe (no warmup, no wall-clock target) so CI runs are
-//!                bounded and comparable
-//!   --json PATH  write the collected results as a JSON report
+//!   --iters N           fixed-iteration mode: exactly N timed iterations
+//!                       per probe (no warmup, no wall-clock target) so
+//!                       CI runs are bounded and comparable
+//!   --json PATH         write the stage-decomposition results as JSON
+//!   --kernels-json PATH write the packed-kernel section (timings +
+//!                       bytes-touched ratios) as JSON (`BENCH_kernels.json`
+//!                       in CI, uploaded as an artifact)
 
 use splitquant::bench::{black_box, Bench, BenchConfig};
+use splitquant::kernels::{self, KernelScratch};
 use splitquant::kmeans;
-use splitquant::quant::Bits;
+use splitquant::model::packed::pack_linear;
+use splitquant::model::quantized::QuantParam;
+use splitquant::quant::{self, Bits};
 use splitquant::split::{cluster_weights, split_quantize, split_quantize_clustered, SplitConfig};
 use splitquant::tensor::Tensor;
 use splitquant::util::json::Json;
@@ -18,12 +26,14 @@ use std::time::Duration;
 struct Options {
     iters: Option<usize>,
     json: Option<String>,
+    kernels_json: Option<String>,
 }
 
 fn parse_args() -> Options {
     let mut opts = Options {
         iters: None,
         json: None,
+        kernels_json: None,
     };
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
@@ -35,9 +45,15 @@ fn parse_args() -> Options {
             "--json" => {
                 opts.json = Some(args.next().expect("--json needs a path"));
             }
+            "--kernels-json" => {
+                opts.kernels_json = Some(args.next().expect("--kernels-json needs a path"));
+            }
             "--bench" => {} // passed by `cargo bench`; ignore
             other => {
-                eprintln!("unknown option '{other}' (supported: --iters N, --json PATH)");
+                eprintln!(
+                    "unknown option '{other}' (supported: --iters N, --json PATH, \
+                     --kernels-json PATH)"
+                );
                 std::process::exit(2);
             }
         }
@@ -70,7 +86,7 @@ fn main() {
     let w = Tensor::new(&[1024, 4096], vals.clone());
     let cfg = SplitConfig::default();
 
-    let mut b = Bench::with_config("probe", config);
+    let mut b = Bench::with_config("probe", config.clone());
     b.run("hist_kmeans", || {
         black_box(kmeans::kmeans_hist(&vals, 3, 4096))
     });
@@ -117,6 +133,87 @@ fn main() {
             ("results", Json::arr(results)),
         ]);
         std::fs::write(&path, report.to_string_pretty()).expect("write json report");
+        println!("wrote {path}");
+    }
+
+    // --- packed-kernel section: execute the quantized layer directly on
+    // its packed planes vs dequantizing to f32 first. One "token" = one
+    // matvec through the 1024x4096 layer.
+    let mut kb = Bench::with_config("kernels", config);
+
+    let split_param = QuantParam::Split(split_quantize(&w, &cfg, Bits::Int4));
+    let split_lin = pack_linear(&split_param).expect("pack split layer");
+    let plain_param = QuantParam::Plain(quant::quantize_per_tensor(&w, Bits::Int4));
+    let plain_lin = pack_linear(&plain_param).expect("pack plain layer");
+    let eff = split_param.effective();
+
+    let mut x = vec![0.0f32; 4096];
+    rng.fill_normal(&mut x, 0.0, 1.0);
+    let mut y = vec![0.0f32; 1024];
+    let mut scratch = KernelScratch::new();
+
+    let t_packed = kb.run("packed_gemv[1024x4096,split k=3,INT4]", || {
+        kernels::gemv(&mut y, &x, &split_lin, &mut scratch);
+        black_box(y[0])
+    });
+    let t_plain = kb.run("packed_gemv[1024x4096,plain,INT4]", || {
+        kernels::gemv(&mut y, &x, &plain_lin, &mut scratch);
+        black_box(y[0])
+    });
+    let t_int8 = kb.run("packed_gemv_int8[1024x4096,split k=3,INT4]", || {
+        kernels::gemm_int8(&mut y, &x, 1, &split_lin, &mut scratch);
+        black_box(y[0])
+    });
+    // The f32 baseline runs the *same* 4-lane dot kernel over the dense
+    // dequantized weight, so the comparison isolates weight traffic +
+    // unpack cost rather than loop-shape differences.
+    let dense_lin = pack_linear(&QuantParam::OcsEffective {
+        effective: eff.clone(),
+        packed_len: 0,
+    })
+    .expect("dense baseline");
+    let t_f32 = kb.run("f32_gemv[1024x4096,dequantized]", || {
+        kernels::gemv(&mut y, &x, &dense_lin, &mut scratch);
+        black_box(y[0])
+    });
+
+    let f32_bytes = (eff.len() * 4) as f64;
+    let split_bytes = split_lin.weight_bytes() as f64;
+    let plain_bytes = plain_lin.weight_bytes() as f64;
+    kb.record_metric("f32_weight_bytes", f32_bytes, "bytes");
+    kb.record_metric("packed_split_weight_bytes", split_bytes, "bytes");
+    kb.record_metric("packed_plain_weight_bytes", plain_bytes, "bytes");
+    kb.record_metric("split_bytes_ratio", split_bytes / f32_bytes, "x");
+    kb.record_metric("plain_bytes_ratio", plain_bytes / f32_bytes, "x");
+    let tok = |d: Duration| 1.0 / d.as_secs_f64().max(1e-12);
+    kb.record_metric("packed_split_tokens_per_s", tok(t_packed), "tok/s");
+    kb.record_metric("packed_plain_tokens_per_s", tok(t_plain), "tok/s");
+    kb.record_metric("packed_int8_tokens_per_s", tok(t_int8), "tok/s");
+    kb.record_metric("f32_tokens_per_s", tok(t_f32), "tok/s");
+    println!(
+        "bytes touched per matvec: split {split_bytes:.0} / plain {plain_bytes:.0} \
+         vs f32 {f32_bytes:.0}  (ratios {:.3}x / {:.3}x)",
+        split_bytes / f32_bytes,
+        plain_bytes / f32_bytes
+    );
+
+    if let Some(path) = opts.kernels_json {
+        let results: Vec<Json> = kb.results().iter().map(|r| r.to_json()).collect();
+        let report = Json::obj(vec![
+            ("bench", Json::str("perf_probe.kernels")),
+            ("fixed_iters", Json::num(opts.iters.unwrap_or(0) as f64)),
+            ("f32_weight_bytes", Json::num(f32_bytes)),
+            ("packed_split_weight_bytes", Json::num(split_bytes)),
+            ("packed_plain_weight_bytes", Json::num(plain_bytes)),
+            ("split_bytes_ratio", Json::num(split_bytes / f32_bytes)),
+            ("plain_bytes_ratio", Json::num(plain_bytes / f32_bytes)),
+            ("packed_split_tokens_per_s", Json::num(tok(t_packed))),
+            ("packed_plain_tokens_per_s", Json::num(tok(t_plain))),
+            ("packed_int8_tokens_per_s", Json::num(tok(t_int8))),
+            ("f32_tokens_per_s", Json::num(tok(t_f32))),
+            ("results", Json::arr(results)),
+        ]);
+        std::fs::write(&path, report.to_string_pretty()).expect("write kernels json report");
         println!("wrote {path}");
     }
 }

@@ -29,7 +29,35 @@ use crate::util::pool::Pool;
 use crate::util::timer::Profiler;
 use crate::{log_debug, log_info};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
+
+/// Which execution engine scores quantized arms on the CPU.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecEngine {
+    /// Dequantize every plane to an effective f32 checkpoint and run the
+    /// reference forward (simulated quantization — full f32 bandwidth).
+    Reference,
+    /// Run straight on the bit-packed planes through the
+    /// [`crate::kernels`] engine (no f32 weight matrices materialized).
+    Packed,
+}
+
+impl ExecEngine {
+    pub fn parse(s: &str) -> Result<ExecEngine> {
+        Ok(match s {
+            "reference" => ExecEngine::Reference,
+            "packed" => ExecEngine::Packed,
+            other => bail!("unknown engine '{other}' (use packed|reference)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecEngine::Reference => "reference",
+            ExecEngine::Packed => "packed",
+        }
+    }
+}
 
 /// One arm of the experiment grid.
 #[derive(Clone, Debug)]
@@ -67,6 +95,8 @@ pub struct PipelineSpec {
     /// Score through PJRT (`score_quant_k*` / `score_fp`) instead of the
     /// CPU reference forward.
     pub use_runtime: bool,
+    /// CPU execution engine for quantized arms (`--engine` on the CLI).
+    pub engine: ExecEngine,
     pub seed: u64,
 }
 
@@ -78,6 +108,7 @@ impl PipelineSpec {
             out_dir: None,
             amplify: Some((0.003, 4.0)),
             use_runtime: false,
+            engine: ExecEngine::Reference,
             seed: 7,
         }
     }
@@ -173,12 +204,17 @@ impl Coordinator {
     }
 
     /// Evaluate a quantized model: PJRT when requested & compatible,
-    /// CPU reference otherwise.
+    /// otherwise the selected CPU engine — `Packed` executes the
+    /// bit-packed planes through `crate::kernels`; `Reference`
+    /// dequantizes to an effective f32 checkpoint. `use_runtime` takes
+    /// precedence over `engine` (the CLI rejects the `--runtime
+    /// --engine packed` combination so the conflict never goes silent).
     pub fn evaluate_qm(
         &self,
         qm: &QuantizedModel,
         problems: &[McqProblem],
         use_runtime: bool,
+        engine: ExecEngine,
     ) -> Result<EvalReport> {
         if use_runtime {
             if let Some(engine) = &self.engine {
@@ -201,6 +237,14 @@ impl Coordinator {
                     });
                 }
             }
+        }
+        if engine == ExecEngine::Packed {
+            let pm = self
+                .profiler
+                .section("pack_model", || crate::model::packed::PackedModel::from_qmodel(qm))?;
+            return self.profiler.section("eval_packed", || {
+                crate::eval::evaluate_packed(&pm, problems, &self.pool)
+            });
         }
         let eff = qm.effective_checkpoint();
         self.profiler
@@ -247,7 +291,7 @@ impl Coordinator {
             self.profiler
                 .section("export", || save_qmodel(dir.join(fname), &qm))?;
         }
-        let report = self.evaluate_qm(&qm, problems, spec.use_runtime)?;
+        let report = self.evaluate_qm(&qm, problems, spec.use_runtime, spec.engine)?;
         Ok(ArmResult {
             label: arm.label(),
             bits: arm.bits,
@@ -310,6 +354,7 @@ mod tests {
             out_dir: None,
             amplify: None,
             use_runtime: false,
+            engine: ExecEngine::Packed,
             seed: 1,
         };
         let arm = Arm {
@@ -341,6 +386,7 @@ mod tests {
             out_dir: Some(dir.clone()),
             amplify: None,
             use_runtime: false,
+            engine: ExecEngine::Reference,
             seed: 1,
         };
         let arm = Arm {

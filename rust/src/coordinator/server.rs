@@ -1,7 +1,7 @@
 //! Batched inference server: the deployment-side driver (examples/
 //! edge_deploy.rs) that serves MCQ scoring requests from a quantized
 //! model with dynamic batching — the "edge AI device" role the paper
-//! targets, on the rust+PJRT runtime.
+//! targets.
 //!
 //! Architecture (std threads; no tokio in the offline build):
 //!
@@ -11,9 +11,17 @@
 //!                          └──────── responses (per-request oneshot)
 //! ```
 //!
-//! The batcher groups pending requests up to the engine's compiled batch
-//! size or until `max_wait` expires — standard dynamic batching (the
+//! The batcher groups pending requests up to the executor's batch size
+//! or until `max_wait` expires — standard dynamic batching (the
 //! vLLM-router pattern, scaled to this workload).
+//!
+//! Three execution backends ([`Backend`]):
+//! * **Packed** — the packed-integer kernel engine
+//!   ([`crate::model::packed::PackedModel`]): scores straight on the
+//!   bit-packed planes, no PJRT artifacts or f32 weight dequants needed.
+//! * **Reference** — the CPU reference forward over an effective
+//!   (dequantized) f32 checkpoint.
+//! * **Pjrt** — the AOT-compiled PJRT variants (requires `artifacts/`).
 
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -21,10 +29,14 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::data::McqProblem;
-use crate::eval::ProblemResult;
+use crate::eval::{nan_safe_argmax, ProblemResult};
+use crate::kernels::KernelScratch;
+use crate::model::forward::Workspace;
+use crate::model::packed::PackedModel;
+use crate::model::Checkpoint;
 use crate::runtime::{ArgValue, Engine};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 
 /// One scoring request.
@@ -49,13 +61,30 @@ pub struct Server {
     worker: Option<thread::JoinHandle<()>>,
 }
 
+/// How the worker thread executes a batch.
+pub enum Backend {
+    /// AOT-compiled PJRT variants. The engine is constructed *inside*
+    /// the worker thread (the xla client is not Send).
+    Pjrt {
+        artifacts_dir: PathBuf,
+        weight_args: BTreeMap<String, ArgValue>,
+    },
+    /// Packed-integer kernel engine (CPU; no artifacts required).
+    Packed(Box<PackedModel>),
+    /// CPU reference forward over an effective f32 checkpoint.
+    Reference(Box<Checkpoint>),
+}
+
 /// Server configuration.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// Maximum time the batcher waits to fill a batch.
     pub max_wait: Duration,
-    /// Variant to execute (e.g. "score_quant_k3").
+    /// PJRT variant to execute (e.g. "score_quant_k3"); ignored by the
+    /// CPU backends.
     pub variant: String,
+    /// Batch size for the CPU backends (PJRT uses the compiled batch).
+    pub max_batch: usize,
 }
 
 impl Default for ServerConfig {
@@ -63,34 +92,51 @@ impl Default for ServerConfig {
         Self {
             max_wait: Duration::from_millis(5),
             variant: "score_quant_k3".to_string(),
+            max_batch: 16,
         }
     }
 }
 
 impl Server {
-    /// Spawn the batcher/executor thread. The PJRT engine is constructed
-    /// *inside* the worker (the xla client is not Send); startup errors
-    /// are returned synchronously through a handshake channel.
-    pub fn start(
-        artifacts_dir: PathBuf,
-        weight_args: BTreeMap<String, ArgValue>,
-        config: ServerConfig,
-    ) -> Result<Server> {
+    /// Spawn the batcher/executor thread for a backend. Startup errors
+    /// (e.g. PJRT compile failures) are returned synchronously through a
+    /// handshake channel.
+    pub fn start(backend: Backend, config: ServerConfig) -> Result<Server> {
         let (tx, rx) = mpsc::channel::<Request>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let variant = config.variant.clone();
         let worker = thread::spawn(move || {
-            let engine = match Engine::load(&artifacts_dir, Some(&[variant.as_str()])) {
-                Ok(e) => {
-                    let _ = ready_tx.send(Ok(()));
-                    e
+            let mut exec = match backend {
+                Backend::Pjrt {
+                    artifacts_dir,
+                    weight_args,
+                } => match Engine::load(&artifacts_dir, Some(&[config.variant.as_str()])) {
+                    Ok(engine) => Executor::Pjrt {
+                        engine,
+                        weight_args,
+                    },
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                },
+                // CPU backends hold one workspace + kernel scratch for
+                // the thread's lifetime, sized to the model's max_seq
+                // (validation rejects longer requests).
+                Backend::Packed(pm) => {
+                    let ws = Workspace::new(&pm.config, pm.config.max_seq);
+                    Executor::Packed {
+                        pm,
+                        ws,
+                        scratch: KernelScratch::new(),
+                    }
                 }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    return;
+                Backend::Reference(ck) => {
+                    let ws = Workspace::new(&ck.config, ck.config.max_seq);
+                    Executor::Reference { ck, ws }
                 }
             };
-            batch_loop(&engine, &weight_args, &config, rx);
+            let _ = ready_tx.send(Ok(()));
+            batch_loop(&mut exec, &config, rx);
         });
         ready_rx
             .recv()
@@ -133,13 +179,123 @@ impl Drop for Server {
     }
 }
 
-fn batch_loop(
-    engine: &Engine,
-    weight_args: &BTreeMap<String, ArgValue>,
-    config: &ServerConfig,
-    rx: mpsc::Receiver<Request>,
-) {
-    let max_batch = engine.batch;
+/// The worker-side executor (lives entirely on the batcher thread). The
+/// CPU backends keep one workspace + kernel scratch alive for the whole
+/// thread, so the serving hot path does no per-batch buffer allocation.
+enum Executor {
+    Pjrt {
+        engine: Engine,
+        weight_args: BTreeMap<String, ArgValue>,
+    },
+    Packed {
+        pm: Box<PackedModel>,
+        ws: Workspace,
+        scratch: KernelScratch,
+    },
+    Reference {
+        ck: Box<Checkpoint>,
+        ws: Workspace,
+    },
+}
+
+impl Executor {
+    fn max_batch(&self, config: &ServerConfig) -> usize {
+        match self {
+            Executor::Pjrt { engine, .. } => engine.batch,
+            _ => config.max_batch.max(1),
+        }
+    }
+
+    /// Score a batch. The outer `Err` is a whole-batch failure (e.g. a
+    /// PJRT execution error); the inner per-problem `Result`s carry
+    /// request-level errors (a malformed problem fails alone — valid
+    /// requests batched with it still succeed).
+    fn score(
+        &mut self,
+        config: &ServerConfig,
+        problems: &[McqProblem],
+    ) -> Result<Vec<Result<ProblemResult>>> {
+        match self {
+            Executor::Pjrt {
+                engine,
+                weight_args,
+            } => {
+                // Per-problem prompt-length validation: a mismatched
+                // request fails alone; the valid subset still executes.
+                let plen = engine.prompt_len;
+                let mut out: Vec<Option<Result<ProblemResult>>> = problems
+                    .iter()
+                    .map(|p| {
+                        (p.prompt.len() != plen).then(|| {
+                            Err(anyhow!(
+                                "prompt length {} != the engine's compiled prompt_len \
+                                 {plen}; this problem cannot be scored by variant '{}'",
+                                p.prompt.len(),
+                                config.variant
+                            ))
+                        })
+                    })
+                    .collect();
+                let valid: Vec<McqProblem> = problems
+                    .iter()
+                    .zip(&out)
+                    .filter(|(_, slot)| slot.is_none())
+                    .map(|(p, _)| p.clone())
+                    .collect();
+                let mut scored =
+                    per_problem_results(engine, weight_args, config, &valid)?.into_iter();
+                Ok(out
+                    .into_iter()
+                    .map(|slot| {
+                        slot.unwrap_or_else(|| Ok(scored.next().expect("one result per problem")))
+                    })
+                    .collect())
+            }
+            Executor::Packed { pm, ws, scratch } => Ok(problems
+                .iter()
+                .map(|p| {
+                    validate_cpu_problem(&pm.config, p)?;
+                    crate::eval::score_problem_packed(pm, p, ws, scratch)
+                })
+                .collect()),
+            Executor::Reference { ck, ws } => Ok(problems
+                .iter()
+                .map(|p| {
+                    validate_cpu_problem(&ck.config, p)?;
+                    crate::eval::score_problem(ck, p, ws)
+                })
+                .collect()),
+        }
+    }
+}
+
+/// Reject a malformed request with an error instead of letting the
+/// forward's asserts panic (and permanently kill) the batcher thread.
+fn validate_cpu_problem(cfg: &crate::model::PicoLlamaConfig, p: &McqProblem) -> Result<()> {
+    if p.prompt.is_empty() {
+        bail!("problem has an empty prompt");
+    }
+    if p.options.is_empty() || p.options.iter().any(|o| o.is_empty()) {
+        bail!("problem has empty options");
+    }
+    let max_opt = p.options.iter().map(|o| o.len()).max().unwrap_or(0);
+    let seq = p.prompt.len() + max_opt;
+    if seq > cfg.max_seq {
+        bail!("sequence length {seq} exceeds the model's max_seq {}", cfg.max_seq);
+    }
+    if let Some(&t) = p
+        .prompt
+        .iter()
+        .chain(p.options.iter().flatten())
+        .find(|&&t| t >= cfg.vocab)
+    {
+        bail!("token {t} out of vocab {}", cfg.vocab);
+    }
+    Ok(())
+}
+
+fn batch_loop(exec: &mut Executor, config: &ServerConfig, rx: mpsc::Receiver<Request>) {
+    let max_batch = exec.max_batch(config);
     loop {
         // Block for the first request.
         let first = match rx.recv() {
@@ -160,27 +316,22 @@ fn batch_loop(
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
-        execute_batch(engine, weight_args, config, batch);
+        execute_batch(exec, config, batch);
     }
 }
 
-fn execute_batch(
-    engine: &Engine,
-    weight_args: &BTreeMap<String, ArgValue>,
-    config: &ServerConfig,
-    batch: Vec<Request>,
-) {
+fn execute_batch(exec: &mut Executor, config: &ServerConfig, batch: Vec<Request>) {
     let problems: Vec<McqProblem> = batch.iter().map(|r| r.problem.clone()).collect();
     let n = batch.len();
-    match per_problem_results(engine, weight_args, config, &problems) {
+    match exec.score(config, &problems) {
         Ok(results) => {
             for (req, result) in batch.into_iter().zip(results) {
-                let resp = Response {
+                let resp = result.map(|result| Response {
                     result,
                     queue_time: req.enqueued.elapsed(),
                     batch_size: n,
-                };
-                let _ = req.respond.send(Ok(resp));
+                });
+                let _ = req.respond.send(resp);
             }
         }
         Err(e) => fail_all(batch, &e),
@@ -193,7 +344,7 @@ fn fail_all(batch: Vec<Request>, e: &anyhow::Error) {
     }
 }
 
-/// Execute one batch and return per-problem results.
+/// Execute one PJRT batch and return per-problem results.
 fn per_problem_results(
     engine: &Engine,
     weight_args: &BTreeMap<String, ArgValue>,
@@ -208,11 +359,19 @@ fn per_problem_results(
     for chunk in problems.chunks(b) {
         let mut tokens = Vec::with_capacity(b * plen);
         for p in chunk {
+            if p.prompt.len() != plen {
+                bail!(
+                    "prompt length {} != the engine's compiled prompt_len {plen}; \
+                     this problem cannot be scored by variant '{}'",
+                    p.prompt.len(),
+                    config.variant
+                );
+            }
             tokens.extend(p.prompt.iter().map(|&t| t as i32));
         }
-        for _ in chunk.len()..b {
-            tokens.extend(chunk[0].prompt.iter().map(|&t| t as i32));
-        }
+        // Pad the final chunk with neutral all-<pad> prompts of the
+        // engine's prompt_len; the padding rows' logits are discarded.
+        tokens.resize(b * plen, crate::data::PAD as i32);
         let mut args = (*weight_args).clone();
         args.insert("tokens".to_string(), ArgValue::I32(tokens));
         let logits = engine.execute(&config.variant, &args)?;
@@ -223,12 +382,9 @@ fn per_problem_results(
                 .iter()
                 .map(|opt| crate::model::forward::log_prob(row, opt[0]))
                 .collect();
-            let chosen = lps
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(j, _)| j)
-                .unwrap();
+            // NaN logprobs (a poisoned batch) must not panic the batch
+            // thread: treat them as -inf and let the result surface.
+            let chosen = nan_safe_argmax(&lps);
             results.push(ProblemResult {
                 chosen,
                 correct: p.correct,
@@ -241,15 +397,122 @@ fn per_problem_results(
 
 #[cfg(test)]
 mod tests {
-    // Server tests that need real artifacts live in rust/tests/
-    // integration; here we only test the queueing scaffolding compiles
-    // and the config defaults are sane.
+    // Server tests that need real PJRT artifacts live in rust/tests/
+    // integration; here we test the queueing scaffolding with the CPU
+    // backends and the config defaults.
     use super::*;
+    use crate::model::quantized::{quantize_model, Method};
+    use crate::model::PicoLlamaConfig;
+    use crate::quant::Bits;
+    use crate::split::SplitConfig;
 
     #[test]
     fn config_defaults() {
         let c = ServerConfig::default();
         assert!(c.max_wait <= Duration::from_millis(50));
         assert!(c.variant.starts_with("score_"));
+        assert!(c.max_batch >= 1);
+    }
+
+    fn setup() -> (crate::model::quantized::QuantizedModel, Vec<McqProblem>) {
+        let world = crate::data::FactWorld::generate(16, 4, 8, 1);
+        let mut cfg = PicoLlamaConfig::test();
+        cfg.vocab = world.vocab_size();
+        let ck = Checkpoint::random_init(&cfg, 3);
+        let qm =
+            quantize_model(&ck, Bits::Int4, &Method::SplitQuant(SplitConfig::default())).unwrap();
+        let problems = crate::data::generate_problems(&world, 24, 3);
+        (qm, problems)
+    }
+
+    #[test]
+    fn packed_backend_serves_and_batches() {
+        let (qm, problems) = setup();
+        let pm = PackedModel::from_qmodel(&qm).unwrap();
+        let server = Server::start(
+            Backend::Packed(Box::new(pm)),
+            ServerConfig {
+                max_wait: Duration::from_millis(20),
+                max_batch: 8,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let rx: Vec<_> = problems.iter().map(|p| server.submit(p.clone())).collect();
+        let mut max_batch = 0;
+        let mut n = 0;
+        for r in rx {
+            let resp = r.recv().unwrap().unwrap();
+            assert!(resp.batch_size >= 1 && resp.batch_size <= 8);
+            max_batch = max_batch.max(resp.batch_size);
+            n += 1;
+        }
+        assert_eq!(n, problems.len());
+        assert!(max_batch > 1, "burst must batch");
+    }
+
+    #[test]
+    fn malformed_request_errors_without_killing_the_server() {
+        let (qm, problems) = setup();
+        let server = Server::start(
+            Backend::Packed(Box::new(PackedModel::from_qmodel(&qm).unwrap())),
+            ServerConfig::default(),
+        )
+        .unwrap();
+        // Out-of-vocab token, empty prompt, over-long prompt: each must
+        // come back as an error response, not a worker panic.
+        let mut bad_vocab = problems[0].clone();
+        bad_vocab.prompt[0] = 10_000;
+        let mut empty_prompt = problems[0].clone();
+        empty_prompt.prompt.clear();
+        let mut too_long = problems[0].clone();
+        too_long.prompt = vec![1; qm.config.max_seq + 1];
+        for bad in [bad_vocab.clone(), empty_prompt, too_long] {
+            assert!(server.score(bad).is_err());
+        }
+        // The server is still alive and scores valid problems.
+        let ok = server.score(problems[0].clone()).unwrap();
+        assert!(ok.result.logprobs.len() == problems[0].options.len());
+
+        // A malformed request batched together with valid ones fails
+        // alone; its batch-mates still succeed.
+        let slow = Server::start(
+            Backend::Packed(Box::new(PackedModel::from_qmodel(&qm).unwrap())),
+            ServerConfig {
+                max_wait: Duration::from_millis(200),
+                max_batch: 4,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let rx_bad = slow.submit(bad_vocab);
+        let rx_good = slow.submit(problems[1].clone());
+        assert!(rx_bad.recv().unwrap().is_err());
+        let good = rx_good.recv().unwrap().unwrap();
+        assert!(good.result.logprobs.iter().all(|l| l.is_finite()));
+    }
+
+    #[test]
+    fn packed_and_reference_backends_agree() {
+        let (qm, problems) = setup();
+        let packed = Server::start(
+            Backend::Packed(Box::new(PackedModel::from_qmodel(&qm).unwrap())),
+            ServerConfig::default(),
+        )
+        .unwrap();
+        let reference = Server::start(
+            Backend::Reference(Box::new(qm.effective_checkpoint())),
+            ServerConfig::default(),
+        )
+        .unwrap();
+        for p in &problems {
+            let a = packed.score(p.clone()).unwrap();
+            let b = reference.score(p.clone()).unwrap();
+            // The engines agree on every decided problem; only a near-tie
+            // on this untrained checkpoint may flip under FP reordering.
+            if a.result.chosen != b.result.chosen {
+                assert!(b.result.margin() < 1e-3, "margin {}", b.result.margin());
+            }
+        }
     }
 }

@@ -9,11 +9,30 @@
 //! paths are cross-checked in integration tests).
 
 use crate::data::McqProblem;
+use crate::kernels::KernelScratch;
 use crate::model::forward::{continuation_logprob, generate_greedy, Workspace};
+use crate::model::packed::PackedModel;
 use crate::model::Checkpoint;
 use crate::util::pool::Pool;
 
 use anyhow::Result;
+
+/// Index of the largest finite value, treating NaN as −∞. Never panics:
+/// an all-NaN (or empty... callers guarantee non-empty) slice yields 0.
+/// The scoring paths use this instead of
+/// `max_by(partial_cmp().unwrap())`, which panics the thread on any NaN
+/// logprob.
+pub fn nan_safe_argmax(xs: &[f64]) -> usize {
+    let mut best = 0;
+    let mut best_v = f64::NEG_INFINITY;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best
+}
 
 /// Result of scoring one problem.
 #[derive(Clone, Debug)]
@@ -30,8 +49,14 @@ impl ProblemResult {
 
     /// Margin between the chosen option and the runner-up (confidence
     /// proxy; collapses toward 0 as quantization destroys the model).
+    /// NaN logprobs rank as −∞ (consistent with [`nan_safe_argmax`]) so
+    /// a poisoned result never panics downstream consumers.
     pub fn margin(&self) -> f64 {
-        let mut sorted = self.logprobs.clone();
+        let mut sorted: Vec<f64> = self
+            .logprobs
+            .iter()
+            .map(|&v| if v.is_nan() { f64::NEG_INFINITY } else { v })
+            .collect();
         sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
         if sorted.len() >= 2 {
             sorted[0] - sorted[1]
@@ -73,36 +98,79 @@ impl EvalReport {
     }
 }
 
+/// The MCQ scoring rule over any continuation-likelihood function: one
+/// logprob per option, argmax (NaN-safe) picks the answer. Both engines
+/// (reference and packed) score through this single body.
+fn score_with(
+    problem: &McqProblem,
+    mut logprob_of: impl FnMut(&[usize], &[usize]) -> Result<f64>,
+) -> Result<ProblemResult> {
+    let mut logprobs = Vec::with_capacity(problem.options.len());
+    for opt in &problem.options {
+        logprobs.push(logprob_of(&problem.prompt, opt)?);
+    }
+    Ok(ProblemResult {
+        chosen: nan_safe_argmax(&logprobs),
+        correct: problem.correct,
+        logprobs,
+    })
+}
+
+/// Longest prompt+option sequence in a problem set (workspace sizing).
+pub fn max_problem_seq(problems: &[McqProblem]) -> usize {
+    problems
+        .iter()
+        .map(|p| p.prompt.len() + p.options.iter().map(|o| o.len()).max().unwrap_or(1))
+        .max()
+        .unwrap_or(8)
+}
+
 /// Score one problem with the CPU reference forward.
 pub fn score_problem(
     ck: &Checkpoint,
     problem: &McqProblem,
     ws: &mut Workspace,
 ) -> Result<ProblemResult> {
-    let mut logprobs = Vec::with_capacity(problem.options.len());
-    for opt in &problem.options {
-        logprobs.push(continuation_logprob(ck, &problem.prompt, opt, ws)?);
+    score_with(problem, |prompt, opt| continuation_logprob(ck, prompt, opt, ws))
+}
+
+/// Score one problem on the packed-integer engine.
+pub fn score_problem_packed(
+    pm: &PackedModel,
+    problem: &McqProblem,
+    ws: &mut Workspace,
+    scratch: &mut KernelScratch,
+) -> Result<ProblemResult> {
+    score_with(problem, |prompt, opt| pm.continuation_logprob(prompt, opt, ws, scratch))
+}
+
+/// Evaluate a packed model over a problem set, parallelized over
+/// problems — the `--engine packed` twin of [`evaluate`].
+pub fn evaluate_packed(
+    pm: &PackedModel,
+    problems: &[McqProblem],
+    pool: &Pool,
+) -> Result<EvalReport> {
+    let max_seq = max_problem_seq(problems);
+    let results: Vec<Result<ProblemResult>> = pool.parallel_map(problems.len(), |i| {
+        // Same per-work-item buffer granularity as [`evaluate`]: the
+        // workspace/scratch are small relative to the forward cost on
+        // the eval model, and the scratch still amortizes over the
+        // problem's options. (The serving path holds them per thread.)
+        let mut ws = Workspace::new(&pm.config, max_seq);
+        let mut scratch = KernelScratch::new();
+        score_problem_packed(pm, &problems[i], &mut ws, &mut scratch)
+    });
+    let mut ok = Vec::with_capacity(results.len());
+    for r in results {
+        ok.push(r?);
     }
-    let chosen = logprobs
-        .iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i)
-        .unwrap();
-    Ok(ProblemResult {
-        chosen,
-        correct: problem.correct,
-        logprobs,
-    })
+    Ok(EvalReport::from_results(&ok))
 }
 
 /// Evaluate a checkpoint over a problem set, parallelized over problems.
 pub fn evaluate(ck: &Checkpoint, problems: &[McqProblem], pool: &Pool) -> Result<EvalReport> {
-    let max_seq = problems
-        .iter()
-        .map(|p| p.prompt.len() + p.options.iter().map(|o| o.len()).max().unwrap_or(1))
-        .max()
-        .unwrap_or(8);
+    let max_seq = max_problem_seq(problems);
     let results: Vec<Result<ProblemResult>> = pool.parallel_map(problems.len(), |i| {
         // One workspace per work item would thrash; thread-locals are not
         // available per-closure, so create per call — Workspace is small
@@ -252,6 +320,48 @@ mod tests {
         assert!(probe.entropy_bits >= 0.0);
         assert!((0.0..=1.0).contains(&probe.valid_fraction));
         assert_eq!(probe.sample.len(), 4);
+    }
+
+    #[test]
+    fn nan_safe_argmax_never_panics() {
+        assert_eq!(nan_safe_argmax(&[-1.0, -0.5, -2.0]), 1);
+        assert_eq!(nan_safe_argmax(&[f64::NAN, -0.5, -2.0]), 1);
+        assert_eq!(nan_safe_argmax(&[-1.0, f64::NAN, f64::NEG_INFINITY]), 0);
+        assert_eq!(nan_safe_argmax(&[f64::NAN, f64::NAN]), 0);
+        assert_eq!(nan_safe_argmax(&[]), 0);
+    }
+
+    #[test]
+    fn margin_tolerates_nan_logprobs() {
+        let r = ProblemResult {
+            chosen: 1,
+            correct: 0,
+            logprobs: vec![f64::NAN, -1.0, f64::NAN],
+        };
+        let m = r.margin(); // must not panic; NaN ranks as -inf
+        assert!(m >= 0.0);
+    }
+
+    #[test]
+    fn packed_eval_matches_reference_choices() {
+        use crate::model::quantized::{quantize_model, Method};
+        use crate::quant::Bits;
+        let (ck, _, problems) = setup();
+        let qm = quantize_model(&ck, Bits::Int8, &Method::Baseline).unwrap();
+        let pm = crate::model::packed::PackedModel::from_qmodel(&qm).unwrap();
+        let eff = qm.effective_checkpoint();
+        let pool = Pool::new(2);
+        let a = evaluate(&eff, &problems, &pool).unwrap();
+        let b = evaluate_packed(&pm, &problems, &pool).unwrap();
+        assert_eq!(a.n, b.n);
+        // Same model, same scoring rule: accuracies within a couple of
+        // near-tie flips on an untrained checkpoint.
+        assert!(
+            (a.accuracy - b.accuracy).abs() <= 2.0 / problems.len() as f64,
+            "reference {} vs packed {}",
+            a.accuracy_pct(),
+            b.accuracy_pct()
+        );
     }
 
     #[test]

@@ -1,0 +1,180 @@
+//! Inner loops of the packed kernel engine: register-level row
+//! unpacking and the dot-product kernels.
+//!
+//! Two arithmetic flavors:
+//!
+//! * **f32-activation fused** ([`unpack_row_qz`] + [`dot_f32`]) — the
+//!   zero-point is subtracted in the integer domain while unpacking (so a
+//!   masked zero level contributes *exactly* 0), the activation product
+//!   accumulates in 4-lane f32 (the reference forward's pattern), and the
+//!   scale divides once per output. Functionally equivalent to
+//!   dequantize-then-matmul up to FP summation order.
+//! * **integer** ([`unpack_row_qz_i32`] + [`dot_qi32`]) — both operands
+//!   are integers (INT8-quantized activations × unpacked levels); the
+//!   products accumulate in i32 per [`INT_BLOCK`]-sized column block and
+//!   fold into i64 between blocks, so no width can overflow.
+
+use crate::quant::Bits;
+
+/// Column-block length of the i32 accumulator. Worst-case per-product
+/// magnitude is 127 · 255 (INT8 activations × INT8 zero-adjusted
+/// levels), so a 4096-long block peaks at ~1.3e8 ≪ i32::MAX.
+pub const INT_BLOCK: usize = 4096;
+
+/// Unpack one row-aligned packed row into zero-adjusted levels
+/// `(q − z) as f32` in `out[..cols]`. `q − z` is computed in exact
+/// integer arithmetic: a masked-zero level (`q == z`) unpacks to 0.0.
+pub(crate) fn unpack_row_qz(row: &[u8], cols: usize, bits: Bits, z: i32, out: &mut [f32]) {
+    debug_assert!(out.len() >= cols);
+    let base = bits.qmin() - z;
+    match bits {
+        Bits::Int8 => {
+            for i in 0..cols {
+                out[i] = (row[i] as i32 + base) as f32;
+            }
+        }
+        Bits::Int4 => {
+            let pairs = cols / 2;
+            for b in 0..pairs {
+                let byte = row[b];
+                out[2 * b] = ((byte & 0x0F) as i32 + base) as f32;
+                out[2 * b + 1] = ((byte >> 4) as i32 + base) as f32;
+            }
+            if cols % 2 == 1 {
+                out[cols - 1] = ((row[pairs] & 0x0F) as i32 + base) as f32;
+            }
+        }
+        Bits::Int2 => {
+            let quads = cols / 4;
+            for b in 0..quads {
+                let byte = row[b];
+                out[4 * b] = ((byte & 0x03) as i32 + base) as f32;
+                out[4 * b + 1] = (((byte >> 2) & 0x03) as i32 + base) as f32;
+                out[4 * b + 2] = (((byte >> 4) & 0x03) as i32 + base) as f32;
+                out[4 * b + 3] = (((byte >> 6) & 0x03) as i32 + base) as f32;
+            }
+            for i in quads * 4..cols {
+                out[i] = (((row[quads] >> ((i % 4) * 2)) & 0x03) as i32 + base) as f32;
+            }
+        }
+    }
+}
+
+/// Integer-domain twin of [`unpack_row_qz`]: `(q − z)` as i32.
+pub(crate) fn unpack_row_qz_i32(row: &[u8], cols: usize, bits: Bits, z: i32, out: &mut [i32]) {
+    debug_assert!(out.len() >= cols);
+    let base = bits.qmin() - z;
+    match bits {
+        Bits::Int8 => {
+            for i in 0..cols {
+                out[i] = row[i] as i32 + base;
+            }
+        }
+        Bits::Int4 => {
+            let pairs = cols / 2;
+            for b in 0..pairs {
+                let byte = row[b];
+                out[2 * b] = (byte & 0x0F) as i32 + base;
+                out[2 * b + 1] = (byte >> 4) as i32 + base;
+            }
+            if cols % 2 == 1 {
+                out[cols - 1] = (row[pairs] & 0x0F) as i32 + base;
+            }
+        }
+        Bits::Int2 => {
+            let quads = cols / 4;
+            for b in 0..quads {
+                let byte = row[b];
+                out[4 * b] = (byte & 0x03) as i32 + base;
+                out[4 * b + 1] = ((byte >> 2) & 0x03) as i32 + base;
+                out[4 * b + 2] = ((byte >> 4) & 0x03) as i32 + base;
+                out[4 * b + 3] = ((byte >> 6) & 0x03) as i32 + base;
+            }
+            for i in quads * 4..cols {
+                out[i] = ((row[quads] >> ((i % 4) * 2)) & 0x03) as i32 + base;
+            }
+        }
+    }
+}
+
+/// 4-lane unrolled f32 dot product — the same accumulation pattern as
+/// the reference forward's `linear`, autovectorizes to SIMD.
+pub(crate) fn dot_f32(x: &[f32], w: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), w.len());
+    let n = x.len();
+    let chunks = n / 4 * 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let mut i = 0;
+    while i < chunks {
+        s0 += x[i] * w[i];
+        s1 += x[i + 1] * w[i + 1];
+        s2 += x[i + 2] * w[i + 2];
+        s3 += x[i + 3] * w[i + 3];
+        i += 4;
+    }
+    let mut acc = s0 + s1 + s2 + s3;
+    while i < n {
+        acc += x[i] * w[i];
+        i += 1;
+    }
+    acc
+}
+
+/// Integer dot product: i32 accumulation per [`INT_BLOCK`] column
+/// block, folded into i64 between blocks.
+pub(crate) fn dot_qi32(qx: &[i8], wqz: &[i32]) -> i64 {
+    debug_assert_eq!(qx.len(), wqz.len());
+    let mut total: i64 = 0;
+    for (xc, wc) in qx.chunks(INT_BLOCK).zip(wqz.chunks(INT_BLOCK)) {
+        let mut acc: i32 = 0;
+        for (&a, &b) in xc.iter().zip(wc) {
+            acc += a as i32 * b;
+        }
+        total += acc as i64;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pack;
+
+    #[test]
+    fn unpack_matches_scalar_accessor_all_widths() {
+        for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+            for cols in [1usize, 3, 4, 5, 8, 17] {
+                let vals: Vec<i8> = (0..cols)
+                    .map(|i| {
+                        let span = (bits.qmax() - bits.qmin() + 1) as usize;
+                        (bits.qmin() + (i * 7 % span) as i32) as i8
+                    })
+                    .collect();
+                let packed = pack::pack(&vals, bits);
+                let z = 1.min(bits.qmax());
+                let mut f = vec![0.0f32; cols];
+                let mut q = vec![0i32; cols];
+                unpack_row_qz(&packed, cols, bits, z, &mut f);
+                unpack_row_qz_i32(&packed, cols, bits, z, &mut q);
+                for c in 0..cols {
+                    let want = vals[c] as i32 - z;
+                    assert_eq!(q[c], want, "{bits:?} cols={cols} c={c}");
+                    assert_eq!(f[c], want as f32, "{bits:?} cols={cols} c={c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dots_agree_with_naive() {
+        let x: Vec<f32> = (0..37).map(|i| (i as f32 * 0.1).sin()).collect();
+        let w: Vec<f32> = (0..37).map(|i| (i as f32 * 0.2).cos()).collect();
+        let naive: f32 = x.iter().zip(&w).map(|(a, b)| a * b).sum();
+        assert!((dot_f32(&x, &w) - naive).abs() < 1e-4);
+
+        let qx: Vec<i8> = (0..37).map(|i| (i as i32 % 11 - 5) as i8).collect();
+        let wq: Vec<i32> = (0..37).map(|i| i as i32 % 7 - 3).collect();
+        let naive_i: i64 = qx.iter().zip(&wq).map(|(&a, &b)| a as i64 * b as i64).sum();
+        assert_eq!(dot_qi32(&qx, &wq), naive_i);
+    }
+}

@@ -1,0 +1,478 @@
+//! Packed-integer kernel engine: GEMV/GEMM executed **directly on
+//! bit-packed INT2/4/8 planes** — the CPU twin of the Pallas L1
+//! `split_matmul` kernel, and the execution layer behind the `packed`
+//! engine (`splitquant eval/serve --engine packed`).
+//!
+//! Until this module existed, every quantized arm was *simulated*: the
+//! integer planes were dequantized back to full f32 matrices and the
+//! reference forward paid full-precision memory bandwidth. Here the
+//! packed bytes are the operand:
+//!
+//! * [`PackedMatrix`] — a row-aligned bit-packed `[out, in]` plane (each
+//!   row starts on a byte boundary; see `quant::pack::pack_rows`) with
+//!   per-tensor or per-row affine parameters.
+//! * [`PackedLinear`] — one quantized linear layer: one plane (plain
+//!   quantization), k planes (SplitQuantV2 split layers, outputs
+//!   accumulated across planes with per-cluster scales), or a dense f32
+//!   fallback for layers with no integer-plane form (OCS).
+//!
+//! Kernel scheme (row-major, cache-blocked): for each output row the
+//! packed bytes are unpacked **once** into a row-sized scratch of
+//! zero-adjusted levels `(q − z)` — integer subtraction, so masked zeros
+//! in split planes contribute exactly 0 — then every activation row of
+//! the batch takes a 4-lane dot against that L1/L2-resident scratch, and
+//! the scale is applied once per output. The full f32 weight matrix is
+//! never materialized; weight traffic is the packed bytes (INT4 = 1/8 of
+//! f32 per plane, 3/8 for a k=3 split layer).
+//!
+//! [`gemm_int8`] is the all-integer variant: activations are dynamically
+//! quantized to symmetric INT8 and products accumulate in i32 per column
+//! block (`gemv::INT_BLOCK`), trading a small activation-quantization
+//! error for integer-only inner loops.
+
+mod gemv;
+
+use crate::quant::{pack, Bits, Granularity, QuantParams, QuantizedTensor};
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// A row-aligned bit-packed 2-D plane with its affine parameters.
+#[derive(Clone, Debug)]
+pub struct PackedMatrix {
+    rows: usize,
+    cols: usize,
+    bits: Bits,
+    row_stride: usize,
+    bytes: Vec<u8>,
+    /// One entry (per-tensor) or `rows` entries (per-row granularity).
+    params: Vec<QuantParams>,
+}
+
+impl PackedMatrix {
+    /// Pack an unpacked quantized plane. Requires a 2-D shape and a
+    /// parameter count consistent with its granularity.
+    pub fn from_quantized(q: &QuantizedTensor) -> Result<PackedMatrix> {
+        if q.shape().len() != 2 {
+            bail!("packed kernels need a 2-D plane, got shape {:?}", q.shape());
+        }
+        let (rows, cols) = (q.shape()[0], q.shape()[1]);
+        let expect = match q.granularity {
+            Granularity::PerTensor => 1,
+            Granularity::PerChannel => rows,
+        };
+        if q.params.len() != expect {
+            bail!(
+                "plane has {} params, expected {expect} for {:?}",
+                q.params.len(),
+                q.granularity
+            );
+        }
+        let bits = q.bits();
+        Ok(PackedMatrix {
+            rows,
+            cols,
+            bits,
+            row_stride: pack::row_stride(cols, bits),
+            bytes: pack::pack_rows(q.plane.data(), rows, cols, bits),
+            params: q.params.clone(),
+        })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn bits(&self) -> Bits {
+        self.bits
+    }
+
+    /// Bytes of packed weight storage this matrix streams per pass.
+    pub fn packed_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// Quantization parameters governing row `r`.
+    pub fn param_of_row(&self, r: usize) -> QuantParams {
+        if self.params.len() == 1 {
+            self.params[0]
+        } else {
+            self.params[r]
+        }
+    }
+
+    fn row_bytes(&self, r: usize) -> &[u8] {
+        &self.bytes[r * self.row_stride..(r + 1) * self.row_stride]
+    }
+
+    /// Scalar accessor (tests/tools): the stored level at `(r, c)`.
+    pub fn get(&self, r: usize, c: usize) -> i8 {
+        pack::get_packed(self.row_bytes(r), c, self.bits)
+    }
+
+    /// Dequantize row `r` into `out[..cols]` — numerically identical to
+    /// `QuantizedTensor::dequantize` on that row (the embedding-lookup
+    /// path).
+    pub fn dequant_row_into(&self, r: usize, out: &mut [f32]) {
+        assert!(out.len() >= self.cols, "row buffer too small");
+        let p = self.param_of_row(r);
+        gemv::unpack_row_qz(self.row_bytes(r), self.cols, self.bits, p.zero_point, out);
+        for v in out[..self.cols].iter_mut() {
+            *v = (*v as f64 / p.scale) as f32;
+        }
+    }
+}
+
+/// One quantized linear layer in executable packed form.
+#[derive(Clone, Debug)]
+pub enum PackedLinear {
+    /// Bit-packed integer planes: 1 (plain) or k (split). Outputs are
+    /// accumulated across planes with each plane's own scale/zero-point.
+    Planes(Vec<PackedMatrix>),
+    /// Dense f32 fallback for layers with no integer-plane form (OCS
+    /// folded effective weights).
+    Dense(Tensor),
+}
+
+impl PackedLinear {
+    /// Build from same-shape packed planes (≥ 1).
+    pub fn from_planes(planes: Vec<PackedMatrix>) -> Result<PackedLinear> {
+        let Some(first) = planes.first() else {
+            bail!("packed linear needs at least one plane");
+        };
+        let (r, c) = (first.rows, first.cols);
+        for p in &planes[1..] {
+            if p.rows != r || p.cols != c {
+                bail!("plane shape mismatch: {}x{} vs {r}x{c}", p.rows, p.cols);
+            }
+        }
+        Ok(PackedLinear::Planes(planes))
+    }
+
+    /// Dense f32 fallback (`[out, in]`).
+    pub fn dense(w: Tensor) -> Result<PackedLinear> {
+        if w.ndim() != 2 {
+            bail!("dense linear must be 2-D, got {:?}", w.shape());
+        }
+        Ok(PackedLinear::Dense(w))
+    }
+
+    pub fn out_dim(&self) -> usize {
+        match self {
+            PackedLinear::Planes(p) => p[0].rows,
+            PackedLinear::Dense(t) => t.shape()[0],
+        }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        match self {
+            PackedLinear::Planes(p) => p[0].cols,
+            PackedLinear::Dense(t) => t.shape()[1],
+        }
+    }
+
+    pub fn n_planes(&self) -> usize {
+        match self {
+            PackedLinear::Planes(p) => p.len(),
+            PackedLinear::Dense(_) => 1,
+        }
+    }
+
+    /// Weight bytes one full pass streams (packed bytes, or numel·4 for
+    /// the dense fallback) — the perf-probe "bytes touched" metric.
+    pub fn weight_bytes(&self) -> usize {
+        match self {
+            PackedLinear::Planes(p) => p.iter().map(|m| m.packed_bytes()).sum(),
+            PackedLinear::Dense(t) => t.len() * 4,
+        }
+    }
+}
+
+/// Reusable scratch for the kernels: one unpacked weight row plus the
+/// integer path's quantized activations. Allocate once per thread and
+/// pass to every call; buffers grow to the largest layer and stay.
+#[derive(Default)]
+pub struct KernelScratch {
+    qz: Vec<f32>,
+    qz_i: Vec<i32>,
+    qx: Vec<i8>,
+    sx: Vec<f64>,
+}
+
+impl KernelScratch {
+    pub fn new() -> KernelScratch {
+        KernelScratch::default()
+    }
+}
+
+/// y[seq, out] = x[seq, in] · Wᵀ executed on the packed layer (planes
+/// accumulated, scale/zero applied per plane row). Overwrites `y`.
+pub fn gemm(y: &mut [f32], x: &[f32], seq: usize, lin: &PackedLinear, scratch: &mut KernelScratch) {
+    y.iter_mut().for_each(|v| *v = 0.0);
+    match lin {
+        PackedLinear::Planes(planes) => {
+            for m in planes {
+                accumulate_matrix(y, x, seq, m, scratch);
+            }
+        }
+        PackedLinear::Dense(w) => dense_gemm(y, x, seq, w),
+    }
+}
+
+/// Single-row convenience: y[out] = x[in] · Wᵀ.
+pub fn gemv(y: &mut [f32], x: &[f32], lin: &PackedLinear, scratch: &mut KernelScratch) {
+    gemm(y, x, 1, lin, scratch);
+}
+
+/// y[seq, out] = x · dequant(M)ᵀ for one packed matrix (per-row params
+/// honored — the tied-LM-head path over the packed embedding).
+pub fn gemm_matrix(
+    y: &mut [f32],
+    x: &[f32],
+    seq: usize,
+    m: &PackedMatrix,
+    scratch: &mut KernelScratch,
+) {
+    y.iter_mut().for_each(|v| *v = 0.0);
+    accumulate_matrix(y, x, seq, m, scratch);
+}
+
+/// y += x · dequant(M)ᵀ: unpack each packed row once into the scratch,
+/// then dot every activation row against it; divide by the row's scale
+/// at the end (the zero-point was subtracted in the integer domain
+/// during unpacking).
+fn accumulate_matrix(
+    y: &mut [f32],
+    x: &[f32],
+    seq: usize,
+    m: &PackedMatrix,
+    scratch: &mut KernelScratch,
+) {
+    let (out_dim, in_dim) = (m.rows, m.cols);
+    debug_assert_eq!(x.len(), seq * in_dim, "x length");
+    debug_assert_eq!(y.len(), seq * out_dim, "y length");
+    if scratch.qz.len() < in_dim {
+        scratch.qz.resize(in_dim, 0.0);
+    }
+    for o in 0..out_dim {
+        let p = m.param_of_row(o);
+        gemv::unpack_row_qz(m.row_bytes(o), in_dim, m.bits, p.zero_point, &mut scratch.qz);
+        let wrow = &scratch.qz[..in_dim];
+        for t in 0..seq {
+            let acc = gemv::dot_f32(&x[t * in_dim..(t + 1) * in_dim], wrow);
+            y[t * out_dim + o] += (acc as f64 / p.scale) as f32;
+        }
+    }
+}
+
+/// Dense f32 fallback path (same dot kernel, full-precision weights).
+fn dense_gemm(y: &mut [f32], x: &[f32], seq: usize, w: &Tensor) {
+    let (out_dim, in_dim) = (w.shape()[0], w.shape()[1]);
+    debug_assert_eq!(x.len(), seq * in_dim, "x length");
+    debug_assert_eq!(y.len(), seq * out_dim, "y length");
+    for t in 0..seq {
+        let xr = &x[t * in_dim..(t + 1) * in_dim];
+        let yr = &mut y[t * out_dim..(t + 1) * out_dim];
+        for o in 0..out_dim {
+            yr[o] = gemv::dot_f32(xr, &w.data()[o * in_dim..(o + 1) * in_dim]);
+        }
+    }
+}
+
+/// All-integer GEMM: each activation row is dynamically quantized to
+/// symmetric INT8 (scale 127/absmax, zero-point 0) and the inner loop is
+/// a pure integer dot with i32 block accumulation. Adds a bounded
+/// activation-quantization error (~1/254 relative per activation) on top
+/// of the weight quantization; use [`gemm`] where functional equivalence
+/// with the dequantized reference is required. Dense fallback layers run
+/// the f32 path.
+pub fn gemm_int8(
+    y: &mut [f32],
+    x: &[f32],
+    seq: usize,
+    lin: &PackedLinear,
+    scratch: &mut KernelScratch,
+) {
+    y.iter_mut().for_each(|v| *v = 0.0);
+    let planes = match lin {
+        PackedLinear::Planes(p) => p,
+        PackedLinear::Dense(w) => {
+            dense_gemm(y, x, seq, w);
+            return;
+        }
+    };
+    let (out_dim, in_dim) = (planes[0].rows, planes[0].cols);
+    debug_assert_eq!(x.len(), seq * in_dim, "x length");
+    debug_assert_eq!(y.len(), seq * out_dim, "y length");
+
+    // Quantize the activations once per call.
+    if scratch.qx.len() < seq * in_dim {
+        scratch.qx.resize(seq * in_dim, 0);
+    }
+    scratch.sx.clear();
+    for t in 0..seq {
+        let xr = &x[t * in_dim..(t + 1) * in_dim];
+        let absmax = xr.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let s = if absmax > 0.0 { 127.0 / absmax as f64 } else { 0.0 };
+        scratch.sx.push(s);
+        let dst = &mut scratch.qx[t * in_dim..(t + 1) * in_dim];
+        for (d, &v) in dst.iter_mut().zip(xr) {
+            *d = (v as f64 * s).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+
+    if scratch.qz_i.len() < in_dim {
+        scratch.qz_i.resize(in_dim, 0);
+    }
+    for m in planes {
+        for o in 0..out_dim {
+            let p = m.param_of_row(o);
+            let z = p.zero_point;
+            gemv::unpack_row_qz_i32(m.row_bytes(o), in_dim, m.bits, z, &mut scratch.qz_i);
+            let wrow = &scratch.qz_i[..in_dim];
+            for t in 0..seq {
+                let s = scratch.sx[t];
+                if s == 0.0 {
+                    continue; // all-zero activation row contributes 0
+                }
+                let acc = gemv::dot_qi32(&scratch.qx[t * in_dim..(t + 1) * in_dim], wrow);
+                y[t * out_dim + o] += (acc as f64 / (s * p.scale)) as f32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize_per_channel, quantize_per_tensor};
+    use crate::tensor::matmul;
+    use crate::util::rng::Rng;
+    use crate::util::stats::max_abs_diff;
+
+    fn random_tensor(seed: u64, rows: usize, cols: usize, std: f32) -> Tensor {
+        let mut r = Rng::new(seed);
+        let mut data = vec![0.0f32; rows * cols];
+        r.fill_normal(&mut data, 0.0, std);
+        Tensor::new(&[rows, cols], data)
+    }
+
+    fn oracle(x: &Tensor, eff: &Tensor) -> Tensor {
+        matmul(x, &eff.transpose())
+    }
+
+    #[test]
+    fn packed_matrix_roundtrips_levels_and_rows() {
+        let w = random_tensor(1, 5, 7, 0.3);
+        for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+            let q = quantize_per_tensor(&w, bits);
+            let m = PackedMatrix::from_quantized(&q).unwrap();
+            assert_eq!((m.rows(), m.cols()), (5, 7));
+            let dq = q.dequantize();
+            let mut row = vec![0.0f32; 7];
+            for r in 0..5 {
+                for c in 0..7 {
+                    assert_eq!(m.get(r, c), q.plane.data()[r * 7 + c], "{bits:?} ({r},{c})");
+                }
+                m.dequant_row_into(r, &mut row);
+                assert_eq!(&row[..], dq.row(r), "{bits:?} row {r} dequant");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_matches_dequantized_oracle() {
+        let w = random_tensor(2, 9, 13, 0.5);
+        let x = random_tensor(3, 4, 13, 1.0);
+        let mut scratch = KernelScratch::new();
+        for bits in [Bits::Int4, Bits::Int8] {
+            let q = quantize_per_tensor(&w, bits);
+            let lin = PackedLinear::from_planes(vec![PackedMatrix::from_quantized(&q).unwrap()])
+                .unwrap();
+            let want = oracle(&x, &q.dequantize());
+            let mut y = vec![0.0f32; 4 * 9];
+            gemm(&mut y, x.data(), 4, &lin, &mut scratch);
+            assert!(
+                max_abs_diff(&y, want.data()) < 1e-4,
+                "{bits:?}: diff {}",
+                max_abs_diff(&y, want.data())
+            );
+        }
+    }
+
+    #[test]
+    fn per_channel_params_honored() {
+        let w = random_tensor(4, 6, 10, 0.2);
+        let q = quantize_per_channel(&w, Bits::Int8);
+        let m = PackedMatrix::from_quantized(&q).unwrap();
+        let x = random_tensor(5, 2, 10, 1.0);
+        let mut y = vec![0.0f32; 2 * 6];
+        let mut scratch = KernelScratch::new();
+        gemm_matrix(&mut y, x.data(), 2, &m, &mut scratch);
+        let want = oracle(&x, &q.dequantize());
+        assert!(max_abs_diff(&y, want.data()) < 1e-4);
+    }
+
+    #[test]
+    fn gemm_int8_is_close_not_exact() {
+        let w = random_tensor(6, 16, 32, 0.2);
+        let x = random_tensor(7, 2, 32, 1.0);
+        let q = quantize_per_tensor(&w, Bits::Int8);
+        let lin =
+            PackedLinear::from_planes(vec![PackedMatrix::from_quantized(&q).unwrap()]).unwrap();
+        let mut scratch = KernelScratch::new();
+        let mut exact = vec![0.0f32; 2 * 16];
+        gemm(&mut exact, x.data(), 2, &lin, &mut scratch);
+        let mut int = vec![0.0f32; 2 * 16];
+        gemm_int8(&mut int, x.data(), 2, &lin, &mut scratch);
+        // INT8 activations: ~1% relative error bound on these magnitudes.
+        let scale = exact.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-6) as f64;
+        assert!(
+            max_abs_diff(&int, &exact) < 0.05 * scale + 1e-3,
+            "diff {} vs scale {scale}",
+            max_abs_diff(&int, &exact)
+        );
+    }
+
+    #[test]
+    fn dense_fallback_matches_matmul() {
+        let w = random_tensor(8, 7, 5, 0.4);
+        let x = random_tensor(9, 3, 5, 1.0);
+        let lin = PackedLinear::dense(w.clone()).unwrap();
+        let mut y = vec![0.0f32; 3 * 7];
+        let mut scratch = KernelScratch::new();
+        gemm(&mut y, x.data(), 3, &lin, &mut scratch);
+        let want = oracle(&x, &w);
+        assert!(max_abs_diff(&y, want.data()) < 1e-4);
+        assert_eq!(lin.weight_bytes(), 7 * 5 * 4);
+    }
+
+    #[test]
+    fn constructors_reject_bad_shapes() {
+        let a = quantize_per_tensor(&random_tensor(10, 3, 4, 0.1), Bits::Int4);
+        let b = quantize_per_tensor(&random_tensor(11, 4, 4, 0.1), Bits::Int4);
+        let ma = PackedMatrix::from_quantized(&a).unwrap();
+        let mb = PackedMatrix::from_quantized(&b).unwrap();
+        assert!(PackedLinear::from_planes(vec![]).is_err());
+        assert!(PackedLinear::from_planes(vec![ma, mb]).is_err());
+        assert!(PackedLinear::dense(Tensor::from_vec(vec![1.0, 2.0])).is_err());
+        let q3 = quantize_per_tensor(&Tensor::zeros(&[2, 2, 2]), Bits::Int4);
+        assert!(PackedMatrix::from_quantized(&q3).is_err());
+    }
+
+    #[test]
+    fn weight_bytes_ratios() {
+        let w = random_tensor(12, 64, 64, 0.1);
+        let q4 = quantize_per_tensor(&w, Bits::Int4);
+        let lin =
+            PackedLinear::from_planes(vec![PackedMatrix::from_quantized(&q4).unwrap()]).unwrap();
+        // INT4 packed = 1/8 of the f32 bytes.
+        assert_eq!(lin.weight_bytes() * 8, 64 * 64 * 4);
+        assert_eq!(lin.out_dim(), 64);
+        assert_eq!(lin.in_dim(), 64);
+        assert_eq!(lin.n_planes(), 1);
+    }
+}

@@ -13,7 +13,10 @@
 //! * **L2 (python/compile/model.py)** — the picollama transformer in JAX,
 //!   lowered once to HLO text at build time.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the quantized
-//!   matmul hot-spot, verified against pure-jnp oracles.
+//!   matmul hot-spot, verified against pure-jnp oracles. On the CPU the
+//!   same role is played by the [`kernels`] packed-integer engine:
+//!   fused unpack-dequant GEMV/GEMM straight on bit-packed planes, the
+//!   execution layer behind `eval`/`serve --engine packed`.
 //!
 //! Preprocessing is scheduled by the [`pipeline`] engine: each layer's
 //! cluster → split+quantize → pack job is a work unit fanned out across
@@ -30,6 +33,7 @@ pub mod data;
 pub mod eval;
 pub mod gptq;
 pub mod io;
+pub mod kernels;
 pub mod kmeans;
 pub mod model;
 pub mod pipeline;

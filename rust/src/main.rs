@@ -10,7 +10,7 @@
 use std::path::PathBuf;
 
 use anyhow::{bail, Result};
-use splitquant::coordinator::{Coordinator, PipelineSpec};
+use splitquant::coordinator::{Coordinator, ExecEngine, PipelineSpec};
 use splitquant::io::{checkpoint::load_checkpoint, qmodel, read_file};
 use splitquant::model::quantized::Method;
 use splitquant::model::{param_inventory, ParamKind};
@@ -46,16 +46,18 @@ fn app() -> App {
                 .opt("amplify-gain", "4", "outlier amplification gain")
                 .flag("no-amplify", "skip outlier amplification")
                 .flag("runtime", "score through PJRT instead of the CPU reference")
+                .opt("engine", "reference", "CPU engine for quantized arms: packed|reference")
                 .opt("export-dir", "", "also export packed arms to this dir")
                 .opt("threads", "0", "pipeline worker threads (0 = all cores)")
                 .opt("log", "info", "log level"),
         )
         .command(
-            Command::new("serve", "batched scoring server demo (PJRT)")
+            Command::new("serve", "batched scoring server demo")
                 .opt("ckpt", "artifacts/picollama_eval.sqtz", "FP checkpoint")
                 .opt("problems", "artifacts/eval_problems.json", "problem set")
-                .opt("artifacts", "artifacts", "artifacts dir (HLO + manifest)")
+                .opt("artifacts", "artifacts", "artifacts dir (HLO + manifest; pjrt engine only)")
                 .opt("bits", "4", "bit width")
+                .opt("engine", "packed", "execution engine: packed|reference (CPU) or pjrt")
                 .opt("requests", "200", "number of requests to fire")
                 .opt("threads", "0", "pipeline worker threads (0 = all cores)")
                 .opt("log", "info", "log level"),
@@ -128,6 +130,10 @@ fn cmd_quantize(m: &Matches) -> Result<()> {
 fn cmd_eval(m: &Matches) -> Result<()> {
     let mut spec = PipelineSpec::new(m.get("ckpt")?, m.get("problems")?);
     spec.use_runtime = m.flag("runtime");
+    spec.engine = ExecEngine::parse(m.get("engine")?)?;
+    if spec.use_runtime && spec.engine == ExecEngine::Packed {
+        bail!("--engine packed cannot combine with --runtime (PJRT executes the batch); pick one");
+    }
     if m.flag("no-amplify") {
         spec.amplify = None;
     } else {
@@ -172,8 +178,7 @@ fn cmd_eval(m: &Matches) -> Result<()> {
 }
 
 fn cmd_serve(m: &Matches) -> Result<()> {
-    use splitquant::coordinator::server::{Server, ServerConfig};
-    use splitquant::runtime::scoring;
+    use splitquant::coordinator::server::{Backend, Server, ServerConfig};
     use std::time::Instant;
 
     let bits = parse_bits(m)?;
@@ -183,14 +188,25 @@ fn cmd_serve(m: &Matches) -> Result<()> {
 
     let engine = splitquant::pipeline::Engine::new(m.get_usize("threads")?);
     let qm = engine.quantize_model(&ck, bits, &Method::SplitQuant(SplitConfig::default()))?;
-    let weights = scoring::quant_args(&qm, 3)?;
-    log_info!("serving {} [{}]", m.get("ckpt")?, qm.method_name);
+    log_info!(
+        "serving {} [{}] on the '{}' engine",
+        m.get("ckpt")?,
+        qm.method_name,
+        m.get("engine")?
+    );
 
-    let server = Server::start(
-        PathBuf::from(m.get("artifacts")?),
-        weights,
-        ServerConfig::default(),
-    )?;
+    let backend = match m.get("engine")? {
+        "packed" => Backend::Packed(Box::new(
+            splitquant::model::packed::PackedModel::from_qmodel(&qm)?,
+        )),
+        "reference" => Backend::Reference(Box::new(qm.effective_checkpoint())),
+        "pjrt" => Backend::Pjrt {
+            artifacts_dir: PathBuf::from(m.get("artifacts")?),
+            weight_args: splitquant::runtime::scoring::quant_args(&qm, 3)?,
+        },
+        other => bail!("unknown engine '{other}' (use packed|reference|pjrt)"),
+    };
+    let server = Server::start(backend, ServerConfig::default())?;
     let t0 = Instant::now();
     let mut rx = Vec::new();
     for p in problems.iter().take(n_requests) {

@@ -134,12 +134,67 @@ fn softmax(xs: &mut [f32]) {
     }
 }
 
+/// The per-model primitives the shared transformer loop is generic
+/// over. Implemented by the FP reference (checkpoint tensors, below)
+/// and by the packed-integer engine ([`crate::model::packed`]); the
+/// RMSNorm/RoPE/attention/SwiGLU math in [`forward_ops`] is shared, so
+/// both engines execute the *same* f32 activation path and differ only
+/// in how linear layers and embedding rows are produced.
+pub(crate) trait ForwardOps {
+    fn config(&self) -> &PicoLlamaConfig;
+    /// Write the embedding row of `tok` into `out` (`[d_model]`).
+    fn embed(&mut self, tok: usize, out: &mut [f32]) -> Result<()>;
+    /// y[seq, out] = x[seq, in] · W(name)ᵀ (overwrites `y`).
+    fn linear(&mut self, name: &str, y: &mut [f32], x: &[f32], seq: usize) -> Result<()>;
+    /// Final LM-head projection: y[seq, vocab] (overwrites `y`).
+    fn lm_head(&mut self, y: &mut [f32], x: &[f32], seq: usize) -> Result<()>;
+    /// FP32 passthrough tensor (norm gains).
+    fn fp(&self, name: &str) -> Result<&Tensor>;
+}
+
 /// Full forward: token ids → logits `[seq, vocab]`.
 ///
 /// O(seq²·d) attention without KV caching — fine for the ≤64-token MCQ
 /// sequences this crate evaluates.
 pub fn forward(ck: &Checkpoint, tokens: &[usize], ws: &mut Workspace) -> Result<Tensor> {
     forward_tapped(ck, tokens, ws, &mut |_, _, _| {})
+}
+
+/// Reference ops over an FP checkpoint, with the activation tap.
+struct CkOps<'a, 'b> {
+    ck: &'a Checkpoint,
+    tap: &'b mut dyn FnMut(&str, &[f32], usize),
+}
+
+impl ForwardOps for CkOps<'_, '_> {
+    fn config(&self) -> &PicoLlamaConfig {
+        &self.ck.config
+    }
+
+    fn embed(&mut self, tok: usize, out: &mut [f32]) -> Result<()> {
+        out.copy_from_slice(self.ck.get("embed.tok")?.row(tok));
+        Ok(())
+    }
+
+    fn linear(&mut self, name: &str, y: &mut [f32], x: &[f32], seq: usize) -> Result<()> {
+        (self.tap)(name, x, seq);
+        linear(y, x, self.ck.get(name)?, seq);
+        Ok(())
+    }
+
+    fn lm_head(&mut self, y: &mut [f32], x: &[f32], seq: usize) -> Result<()> {
+        let head = if self.ck.config.tie_embeddings {
+            self.ck.get("embed.tok")?
+        } else {
+            self.ck.get("lm_head")?
+        };
+        linear(y, x, head, seq);
+        Ok(())
+    }
+
+    fn fp(&self, name: &str) -> Result<&Tensor> {
+        self.ck.get(name)
+    }
 }
 
 /// Forward with an activation tap: `tap(linear_name, input, seq)` fires
@@ -151,7 +206,18 @@ pub fn forward_tapped(
     ws: &mut Workspace,
     tap: &mut dyn FnMut(&str, &[f32], usize),
 ) -> Result<Tensor> {
-    let cfg = &ck.config;
+    forward_ops(&mut CkOps { ck, tap }, tokens, ws)
+}
+
+/// The shared transformer loop: embedding → n_layers × (RMSNorm → RoPE
+/// GQA attention → SwiGLU, residual streams) → final norm → LM head,
+/// generic over how weights execute ([`ForwardOps`]).
+pub(crate) fn forward_ops<O: ForwardOps>(
+    ops: &mut O,
+    tokens: &[usize],
+    ws: &mut Workspace,
+) -> Result<Tensor> {
+    let cfg = ops.config().clone();
     let seq = tokens.len();
     assert!(seq > 0 && seq <= cfg.max_seq, "seq {seq} out of range");
     let d = cfg.d_model;
@@ -160,24 +226,20 @@ pub fn forward_tapped(
     let groups = cfg.n_heads / cfg.n_kv_heads;
 
     // Embedding lookup.
-    let emb = ck.get("embed.tok")?;
     for (t, &tok) in tokens.iter().enumerate() {
         assert!(tok < cfg.vocab, "token {tok} out of vocab");
-        ws.x[t * d..(t + 1) * d].copy_from_slice(emb.row(tok));
+        ops.embed(tok, &mut ws.x[t * d..(t + 1) * d])?;
     }
 
     for l in 0..cfg.n_layers {
         let pre = format!("layers.{l}");
         // --- Attention block ---
-        let gamma = ck.get(&format!("{pre}.norm_attn"))?;
+        let gamma = ops.fp(&format!("{pre}.norm_attn"))?;
         rmsnorm(&mut ws.xn, &ws.x, gamma.data(), cfg.norm_eps, seq, d);
 
-        tap(&format!("{pre}.attn.wq"), &ws.xn[..seq * d], seq);
-        tap(&format!("{pre}.attn.wk"), &ws.xn[..seq * d], seq);
-        tap(&format!("{pre}.attn.wv"), &ws.xn[..seq * d], seq);
-        linear(&mut ws.q[..seq * d], &ws.xn[..seq * d], ck.get(&format!("{pre}.attn.wq"))?, seq);
-        linear(&mut ws.k[..seq * kvd], &ws.xn[..seq * d], ck.get(&format!("{pre}.attn.wk"))?, seq);
-        linear(&mut ws.v[..seq * kvd], &ws.xn[..seq * d], ck.get(&format!("{pre}.attn.wv"))?, seq);
+        ops.linear(&format!("{pre}.attn.wq"), &mut ws.q[..seq * d], &ws.xn[..seq * d], seq)?;
+        ops.linear(&format!("{pre}.attn.wk"), &mut ws.k[..seq * kvd], &ws.xn[..seq * d], seq)?;
+        ops.linear(&format!("{pre}.attn.wv"), &mut ws.v[..seq * kvd], &ws.xn[..seq * d], seq)?;
 
         rope(&mut ws.q[..seq * d], seq, cfg.n_heads, hd, cfg.rope_theta);
         rope(&mut ws.k[..seq * kvd], seq, cfg.n_kv_heads, hd, cfg.rope_theta);
@@ -207,58 +269,39 @@ pub fn forward_tapped(
         }
 
         // Output projection + residual.
-        tap(&format!("{pre}.attn.wo"), &ws.attn_out[..seq * d], seq);
-        linear(
-            &mut ws.xn[..seq * d],
-            &ws.attn_out[..seq * d],
-            ck.get(&format!("{pre}.attn.wo"))?,
-            seq,
-        );
+        ops.linear(&format!("{pre}.attn.wo"), &mut ws.xn[..seq * d], &ws.attn_out[..seq * d], seq)?;
         for i in 0..seq * d {
             ws.x[i] += ws.xn[i];
         }
 
         // --- MLP block (SwiGLU) ---
-        let gamma = ck.get(&format!("{pre}.norm_mlp"))?;
+        let gamma = ops.fp(&format!("{pre}.norm_mlp"))?;
         rmsnorm(&mut ws.xn, &ws.x, gamma.data(), cfg.norm_eps, seq, d);
         let dff = cfg.d_ff;
-        tap(&format!("{pre}.mlp.gate"), &ws.xn[..seq * d], seq);
-        tap(&format!("{pre}.mlp.up"), &ws.xn[..seq * d], seq);
-        linear(
-            &mut ws.gate[..seq * dff],
-            &ws.xn[..seq * d],
-            ck.get(&format!("{pre}.mlp.gate"))?,
-            seq,
-        );
-        linear(&mut ws.up[..seq * dff], &ws.xn[..seq * d], ck.get(&format!("{pre}.mlp.up"))?, seq);
+        ops.linear(&format!("{pre}.mlp.gate"), &mut ws.gate[..seq * dff], &ws.xn[..seq * d], seq)?;
+        ops.linear(&format!("{pre}.mlp.up"), &mut ws.up[..seq * dff], &ws.xn[..seq * d], seq)?;
         for i in 0..seq * dff {
             let g = ws.gate[i];
             // SiLU(g) * up
             let silu = g / (1.0 + (-g).exp());
             ws.gate[i] = silu * ws.up[i];
         }
-        tap(&format!("{pre}.mlp.down"), &ws.gate[..seq * dff], seq);
-        linear(
+        ops.linear(
+            &format!("{pre}.mlp.down"),
             &mut ws.mlp_out[..seq * d],
             &ws.gate[..seq * dff],
-            ck.get(&format!("{pre}.mlp.down"))?,
             seq,
-        );
+        )?;
         for i in 0..seq * d {
             ws.x[i] += ws.mlp_out[i];
         }
     }
 
     // Final norm + LM head.
-    let gamma = ck.get("norm.final")?;
+    let gamma = ops.fp("norm.final")?;
     rmsnorm(&mut ws.xn, &ws.x, gamma.data(), cfg.norm_eps, seq, d);
-    let head = if ck.config.tie_embeddings {
-        ck.get("embed.tok")?
-    } else {
-        ck.get("lm_head")?
-    };
     let mut logits = vec![0.0f32; seq * cfg.vocab];
-    linear(&mut logits, &ws.xn[..seq * d], head, seq);
+    ops.lm_head(&mut logits, &ws.xn[..seq * d], seq)?;
     Ok(Tensor::new(&[seq, cfg.vocab], logits))
 }
 
@@ -274,6 +317,22 @@ pub fn log_prob(logits_row: &[f32], tok: usize) -> f64 {
     logits_row[tok] as f64 - lse
 }
 
+/// Teacher-forced continuation log-likelihood read off a full-sequence
+/// logits matrix: token at position p is predicted by logits at p−1.
+/// Shared by the reference and packed scoring paths.
+pub fn continuation_logprob_from_logits(
+    logits: &Tensor,
+    prompt_len: usize,
+    continuation: &[usize],
+) -> f64 {
+    debug_assert!(prompt_len > 0 && !continuation.is_empty());
+    let mut total = 0.0;
+    for (i, &tok) in continuation.iter().enumerate() {
+        total += log_prob(logits.row(prompt_len + i - 1), tok);
+    }
+    total
+}
+
 /// Sum of log-probs of `continuation` tokens given `prompt` (teacher-
 /// forced). The MCQ scoring rule (same as Meta's eval harness: pick the
 /// option with the highest likelihood).
@@ -287,13 +346,7 @@ pub fn continuation_logprob(
     let mut seq = prompt.to_vec();
     seq.extend_from_slice(continuation);
     let logits = forward(ck, &seq, ws)?;
-    let mut total = 0.0;
-    for (i, &tok) in continuation.iter().enumerate() {
-        // Token at position p is predicted by logits at p-1.
-        let pos = prompt.len() + i - 1;
-        total += log_prob(logits.row(pos), tok);
-    }
-    Ok(total)
+    Ok(continuation_logprob_from_logits(&logits, prompt.len(), continuation))
 }
 
 /// Greedy generation (used by the INT2 "random characters" probe, E11).

@@ -10,6 +10,7 @@
 //! embeddings (lookup tables) and normalization gains are not.**
 
 pub mod forward;
+pub mod packed;
 pub mod quantized;
 
 use std::collections::BTreeMap;

@@ -1,0 +1,246 @@
+//! PackedForward: the packed-integer execution path of picollama.
+//!
+//! [`PackedModel`] holds the deployable artifact's *actual* bytes —
+//! bit-packed INT2/4/8 planes straight out of `io/qmodel.rs` — and runs
+//! the full forward through the [`crate::kernels`] engine: every linear
+//! layer and the embedding/LM-head execute on packed planes; RMSNorm,
+//! RoPE, attention and SwiGLU stay f32 (shared verbatim with the
+//! reference forward via [`super::forward::ForwardOps`]). No f32 weight
+//! matrix is ever materialized, so a forward streams the packed bytes
+//! (INT4: 1/8 of the f32 weight traffic per plane) instead of
+//! full-precision dequants.
+//!
+//! Functional equivalence: masked zeros in split planes unpack to an
+//! exact 0 contribution and plane outputs are accumulated per cluster
+//! scale, so logits match the dequantize-then-f32 reference within FP
+//! summation-order tolerance (property-tested in
+//! `rust/tests/packed_kernels.rs`).
+
+use std::collections::BTreeMap;
+
+use crate::kernels::{self, KernelScratch, PackedLinear, PackedMatrix};
+use crate::model::forward::{
+    continuation_logprob_from_logits, forward_ops, ForwardOps, Workspace,
+};
+use crate::model::quantized::{QuantParam, QuantizedModel};
+use crate::model::PicoLlamaConfig;
+use crate::quant::Bits;
+use crate::tensor::Tensor;
+
+use anyhow::{anyhow, Result};
+
+/// Convert one quantized linear parameter into its packed kernel form:
+/// plain → 1 plane, split → k planes, OCS → dense f32 fallback (its
+/// expansion is virtual; there is no integer-plane form to execute).
+pub fn pack_linear(qp: &QuantParam) -> Result<PackedLinear> {
+    match qp {
+        QuantParam::Plain(q) => PackedLinear::from_planes(vec![PackedMatrix::from_quantized(q)?]),
+        QuantParam::Split(s) => PackedLinear::from_planes(
+            s.planes
+                .iter()
+                .map(PackedMatrix::from_quantized)
+                .collect::<Result<Vec<_>>>()?,
+        ),
+        QuantParam::OcsEffective { effective, .. } => PackedLinear::dense(effective.clone()),
+    }
+}
+
+/// A quantized model in executable packed form.
+#[derive(Clone, Debug)]
+pub struct PackedModel {
+    pub config: PicoLlamaConfig,
+    pub bits: Bits,
+    pub method_name: String,
+    linears: BTreeMap<String, PackedLinear>,
+    embedding: PackedMatrix,
+    fp_tensors: BTreeMap<String, Tensor>,
+}
+
+impl PackedModel {
+    /// Pack every linear + the embedding of a quantized model. Works for
+    /// all methods (baseline, SplitQuantV2, per-channel GPTQ grids, OCS
+    /// via the dense fallback).
+    pub fn from_qmodel(qm: &QuantizedModel) -> Result<PackedModel> {
+        let mut linears = BTreeMap::new();
+        for (name, qp) in &qm.linears {
+            let lin = pack_linear(qp).map_err(|e| anyhow!("packing '{name}': {e}"))?;
+            linears.insert(name.clone(), lin);
+        }
+        Ok(PackedModel {
+            config: qm.config.clone(),
+            bits: qm.bits,
+            method_name: qm.method_name.clone(),
+            linears,
+            embedding: PackedMatrix::from_quantized(&qm.embedding)?,
+            fp_tensors: qm.fp_tensors.clone(),
+        })
+    }
+
+    /// Full forward on packed weights: token ids → logits `[seq, vocab]`.
+    /// Convenience wrapper allocating a fresh kernel scratch; hot paths
+    /// should hold a [`KernelScratch`] and call [`Self::forward_with`].
+    pub fn forward(&self, tokens: &[usize], ws: &mut Workspace) -> Result<Tensor> {
+        self.forward_with(tokens, ws, &mut KernelScratch::new())
+    }
+
+    /// Full forward reusing the caller's kernel scratch (buffers grow to
+    /// the largest layer once and stay).
+    pub fn forward_with(
+        &self,
+        tokens: &[usize],
+        ws: &mut Workspace,
+        scratch: &mut KernelScratch,
+    ) -> Result<Tensor> {
+        let mut ops = PackedOps { pm: self, scratch };
+        forward_ops(&mut ops, tokens, ws)
+    }
+
+    /// Teacher-forced continuation log-likelihood (the MCQ scoring rule),
+    /// mirroring `forward::continuation_logprob` on the packed engine.
+    pub fn continuation_logprob(
+        &self,
+        prompt: &[usize],
+        continuation: &[usize],
+        ws: &mut Workspace,
+        scratch: &mut KernelScratch,
+    ) -> Result<f64> {
+        assert!(!continuation.is_empty());
+        let mut seq = prompt.to_vec();
+        seq.extend_from_slice(continuation);
+        let logits = self.forward_with(&seq, ws, scratch)?;
+        Ok(continuation_logprob_from_logits(&logits, prompt.len(), continuation))
+    }
+
+    /// Weight bytes one full-sequence forward streams: packed linear
+    /// planes + the packed embedding (read in full by the tied LM head)
+    /// + FP norm gains. Compare against
+    /// `Checkpoint::fp32_bytes` of the effective checkpoint for the
+    /// packed-vs-f32 traffic ratio.
+    pub fn weight_bytes_per_forward(&self) -> u64 {
+        let linear: u64 = self.linears.values().map(|l| l.weight_bytes() as u64).sum();
+        let emb = self.embedding.packed_bytes() as u64;
+        let fp: u64 = self.fp_tensors.values().map(|t| t.len() as u64 * 4).sum();
+        linear + emb + fp
+    }
+
+    pub fn n_linears(&self) -> usize {
+        self.linears.len()
+    }
+}
+
+/// [`ForwardOps`] over packed planes: linears and the LM head run the
+/// kernel engine; embedding rows dequantize straight out of the packed
+/// bytes; norm gains come from the FP passthrough set.
+struct PackedOps<'a, 'b> {
+    pm: &'a PackedModel,
+    scratch: &'b mut KernelScratch,
+}
+
+impl ForwardOps for PackedOps<'_, '_> {
+    fn config(&self) -> &PicoLlamaConfig {
+        &self.pm.config
+    }
+
+    fn embed(&mut self, tok: usize, out: &mut [f32]) -> Result<()> {
+        self.pm.embedding.dequant_row_into(tok, out);
+        Ok(())
+    }
+
+    fn linear(&mut self, name: &str, y: &mut [f32], x: &[f32], seq: usize) -> Result<()> {
+        let pm = self.pm;
+        let lin = pm
+            .linears
+            .get(name)
+            .ok_or_else(|| anyhow!("missing packed linear '{name}'"))?;
+        kernels::gemm(y, x, seq, lin, &mut *self.scratch);
+        Ok(())
+    }
+
+    fn lm_head(&mut self, y: &mut [f32], x: &[f32], seq: usize) -> Result<()> {
+        let pm = self.pm;
+        if pm.config.tie_embeddings {
+            kernels::gemm_matrix(y, x, seq, &pm.embedding, &mut *self.scratch);
+        } else {
+            let lin = pm
+                .linears
+                .get("lm_head")
+                .ok_or_else(|| anyhow!("missing packed linear 'lm_head'"))?;
+            kernels::gemm(y, x, seq, lin, &mut *self.scratch);
+        }
+        Ok(())
+    }
+
+    fn fp(&self, name: &str) -> Result<&Tensor> {
+        self.pm
+            .fp_tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("missing fp tensor '{name}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::quantized::{quantize_model, Method};
+    use crate::model::{forward, Checkpoint, PicoLlamaConfig};
+    use crate::split::SplitConfig;
+    use crate::util::stats::max_abs_diff;
+
+    fn ck() -> Checkpoint {
+        let mut ck = Checkpoint::random_init(&PicoLlamaConfig::test(), 17);
+        ck.amplify_outliers(0.002, 10.0, 5);
+        ck
+    }
+
+    #[test]
+    fn packed_forward_matches_effective_reference() {
+        let ck = ck();
+        let toks = [1usize, 6, 11, 3, 2];
+        for method in [
+            Method::Baseline,
+            Method::SplitQuant(SplitConfig::default()),
+            Method::Ocs { expand_ratio: 0.05 },
+        ] {
+            let qm = quantize_model(&ck, Bits::Int4, &method).unwrap();
+            let pm = PackedModel::from_qmodel(&qm).unwrap();
+            let eff = qm.effective_checkpoint();
+            let mut ws = Workspace::new(&ck.config, 16);
+            let want = forward::forward(&eff, &toks, &mut ws).unwrap();
+            let got = pm.forward(&toks, &mut ws).unwrap();
+            assert_eq!(got.shape(), want.shape());
+            let diff = max_abs_diff(got.data(), want.data());
+            assert!(diff < 1e-3, "{}: logit diff {diff}", qm.method_name);
+        }
+    }
+
+    #[test]
+    fn packed_bytes_fraction_of_f32() {
+        let ck = ck();
+        let qm = quantize_model(&ck, Bits::Int4, &Method::Baseline).unwrap();
+        let pm = PackedModel::from_qmodel(&qm).unwrap();
+        let f32_bytes = qm.effective_checkpoint().fp32_bytes();
+        // INT4 plain: everything except the (tiny) norm gains is 1/8.
+        assert!(
+            (pm.weight_bytes_per_forward() as f64) < 0.2 * f32_bytes as f64,
+            "packed {} vs f32 {f32_bytes}",
+            pm.weight_bytes_per_forward()
+        );
+        assert_eq!(pm.n_linears(), qm.linears.len());
+    }
+
+    #[test]
+    fn continuation_logprob_close_to_reference() {
+        let ck = ck();
+        let qm =
+            quantize_model(&ck, Bits::Int8, &Method::SplitQuant(SplitConfig::default())).unwrap();
+        let pm = PackedModel::from_qmodel(&qm).unwrap();
+        let eff = qm.effective_checkpoint();
+        let mut ws = Workspace::new(&ck.config, 16);
+        let mut scratch = KernelScratch::new();
+        let a = forward::continuation_logprob(&eff, &[1, 5, 9], &[12, 2], &mut ws).unwrap();
+        let b = pm
+            .continuation_logprob(&[1, 5, 9], &[12, 2], &mut ws, &mut scratch)
+            .unwrap();
+        assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+    }
+}

@@ -37,6 +37,37 @@ pub fn pack(values: &[i8], bits: Bits) -> Vec<u8> {
     out
 }
 
+/// Bytes per row of a row-aligned packed matrix: each row starts at a
+/// byte boundary so kernels can address rows independently even when
+/// `cols` is not a multiple of the values-per-byte count.
+pub fn row_stride(cols: usize, bits: Bits) -> usize {
+    packed_len(cols, bits)
+}
+
+/// Pack a row-major `[rows, cols]` plane with every row aligned to a
+/// byte boundary (the layout [`crate::kernels`] executes directly).
+/// Returns `rows * row_stride(cols, bits)` bytes.
+pub fn pack_rows(values: &[i8], rows: usize, cols: usize, bits: Bits) -> Vec<u8> {
+    assert_eq!(values.len(), rows * cols, "plane length != rows*cols");
+    let stride = row_stride(cols, bits);
+    let mut out = vec![0u8; rows * stride];
+    for r in 0..rows {
+        let packed = pack(&values[r * cols..(r + 1) * cols], bits);
+        out[r * stride..r * stride + packed.len()].copy_from_slice(&packed);
+    }
+    out
+}
+
+/// Read one signed level out of a packed row (or any packed run) by
+/// value index. Accessor for tests/tools; kernels unpack whole blocks.
+pub fn get_packed(bytes: &[u8], i: usize, bits: Bits) -> i8 {
+    let width = bits.width() as usize;
+    let per_byte = 8 / width;
+    let mask = ((1u32 << width) - 1) as u8;
+    let u = (bytes[i / per_byte] >> ((i % per_byte) * width)) & mask;
+    (u as i32 + bits.qmin()) as i8
+}
+
 /// Unpack `n` signed levels from packed bytes.
 pub fn unpack(bytes: &[u8], n: usize, bits: Bits) -> Result<Vec<i8>> {
     let expect = packed_len(n, bits);
@@ -124,6 +155,34 @@ mod tests {
     #[test]
     fn unpack_rejects_wrong_length() {
         assert!(unpack(&[0u8; 3], 8, Bits::Int4).is_err());
+    }
+
+    #[test]
+    fn row_aligned_packing_roundtrips_odd_cols() {
+        let mut r = Rng::new(2);
+        for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+            for (rows, cols) in [(3usize, 5usize), (1, 7), (4, 1), (2, 8)] {
+                let vals: Vec<i8> = (0..rows * cols)
+                    .map(|_| {
+                        (bits.qmin() + r.below((bits.qmax() - bits.qmin() + 1) as usize) as i32)
+                            as i8
+                    })
+                    .collect();
+                let stride = row_stride(cols, bits);
+                let bytes = pack_rows(&vals, rows, cols, bits);
+                assert_eq!(bytes.len(), rows * stride);
+                for row in 0..rows {
+                    let rb = &bytes[row * stride..(row + 1) * stride];
+                    for c in 0..cols {
+                        assert_eq!(
+                            get_packed(rb, c, bits),
+                            vals[row * cols + c],
+                            "{bits:?} [{rows}x{cols}] ({row},{c})"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

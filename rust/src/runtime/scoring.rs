@@ -148,12 +148,8 @@ pub fn score_problems(
                 }
                 lps.push(crate::model::forward::log_prob(row, opt[0]));
             }
-            let chosen = lps
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(j, _)| j)
-                .unwrap();
+            // NaN logprobs rank as -inf instead of panicking the caller.
+            let chosen = crate::eval::nan_safe_argmax(&lps);
             results.push(ProblemResult {
                 chosen,
                 correct: p.correct,

@@ -1,0 +1,253 @@
+//! Property tests for the packed-integer kernel engine: packed GEMV/GEMM
+//! must match the dequantize-then-f32 oracle within tight tolerance
+//! across bit widths, parameter kinds (plain per-tensor, plain
+//! per-channel, split, OCS-dense), odd shapes, and degenerate
+//! (empty-cluster) planes — plus a PackedForward vs reference-forward
+//! end-to-end logit check.
+
+use splitquant::kernels::{self, KernelScratch};
+use splitquant::kmeans::Clustering1D;
+use splitquant::model::forward::{self, Workspace};
+use splitquant::model::packed::{pack_linear, PackedModel};
+use splitquant::model::quantized::{quantize_model, Method, QuantParam};
+use splitquant::model::{Checkpoint, PicoLlamaConfig};
+use splitquant::quant::{self, Bits, QuantParams};
+use splitquant::split::{split_quantize, QuantizedSplitLayer, SplitConfig, Strategy};
+use splitquant::tensor::{matmul, Tensor, TensorI8};
+use splitquant::util::rng::Rng;
+use splitquant::util::stats::max_abs_diff;
+
+/// LLM-like weights: mostly small values, a few large outliers (the
+/// regime split layers exist for).
+fn heavy_tensor(seed: u64, rows: usize, cols: usize) -> Tensor {
+    let mut r = Rng::new(seed);
+    let mut data: Vec<f32> = (0..rows * cols).map(|_| r.normal_f32(0.0, 0.05)).collect();
+    let n_out = (data.len() / 50).max(1);
+    for _ in 0..n_out {
+        let i = r.below(data.len());
+        data[i] = r.uniform_in(1.0, 2.5) * if r.uniform() < 0.5 { -1.0 } else { 1.0 };
+    }
+    Tensor::new(&[rows, cols], data)
+}
+
+fn random_x(seed: u64, seq: usize, cols: usize) -> Tensor {
+    let mut r = Rng::new(seed);
+    let mut data = vec![0.0f32; seq * cols];
+    r.fill_normal(&mut data, 0.0, 1.0);
+    Tensor::new(&[seq, cols], data)
+}
+
+/// The oracle every kernel is held against: dequantize the parameter to
+/// its effective f32 weight, then plain f32 matmul.
+fn oracle(x: &Tensor, qp: &QuantParam) -> Tensor {
+    matmul(x, &qp.effective().transpose())
+}
+
+fn assert_close(got: &[f32], want: &[f32], label: &str) {
+    let scale = want.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1.0);
+    let diff = max_abs_diff(got, want);
+    assert!(
+        diff < 1e-3 * scale as f64,
+        "{label}: diff {diff} vs magnitude {scale}"
+    );
+}
+
+#[test]
+fn gemm_matches_oracle_across_bits_params_and_odd_shapes() {
+    let mut scratch = KernelScratch::new();
+    let mut seed = 100;
+    for bits in [Bits::Int4, Bits::Int8] {
+        for (rows, cols) in [(5usize, 7usize), (1, 9), (8, 1), (16, 33), (12, 64)] {
+            seed += 1;
+            let w = heavy_tensor(seed, rows, cols);
+            let params: Vec<(&str, QuantParam)> = vec![
+                ("plain", QuantParam::Plain(quant::quantize_per_tensor(&w, bits))),
+                (
+                    "per-channel",
+                    QuantParam::Plain(quant::quantize_per_channel(&w, bits)),
+                ),
+                (
+                    "split",
+                    QuantParam::Split(split_quantize(&w, &SplitConfig::default(), bits)),
+                ),
+                (
+                    "ocs-dense",
+                    QuantParam::OcsEffective {
+                        effective: w.clone(),
+                        packed_len: 0,
+                    },
+                ),
+            ];
+            for (kind, qp) in &params {
+                let label = format!("{bits:?} {rows}x{cols} {kind}");
+                let lin = pack_linear(qp).unwrap_or_else(|e| panic!("{label}: {e}"));
+                assert_eq!(lin.out_dim(), rows, "{label}");
+                assert_eq!(lin.in_dim(), cols, "{label}");
+                for seq in [1usize, 3] {
+                    let x = random_x(seed * 10 + seq as u64, seq, cols);
+                    let want = oracle(&x, qp);
+                    let mut y = vec![0.0f32; seq * rows];
+                    kernels::gemm(&mut y, x.data(), seq, &lin, &mut scratch);
+                    assert_close(&y, want.data(), &format!("{label} seq={seq}"));
+                }
+                // gemv == gemm with seq 1.
+                let x = random_x(seed * 31, 1, cols);
+                let mut y1 = vec![0.0f32; rows];
+                let mut yg = vec![0.0f32; rows];
+                kernels::gemv(&mut y1, x.data(), &lin, &mut scratch);
+                kernels::gemm(&mut yg, x.data(), 1, &lin, &mut scratch);
+                assert_eq!(y1, yg, "{label} gemv vs gemm");
+            }
+        }
+    }
+}
+
+#[test]
+fn int2_planes_execute_too() {
+    let mut scratch = KernelScratch::new();
+    for (rows, cols) in [(4usize, 5usize), (9, 16)] {
+        let w = heavy_tensor(7, rows, cols);
+        let qp = QuantParam::Split(split_quantize(&w, &SplitConfig::default(), Bits::Int2));
+        let lin = pack_linear(&qp).unwrap();
+        let x = random_x(8, 2, cols);
+        let want = oracle(&x, &qp);
+        let mut y = vec![0.0f32; 2 * rows];
+        kernels::gemm(&mut y, x.data(), 2, &lin, &mut scratch);
+        assert_close(&y, want.data(), &format!("INT2 {rows}x{cols}"));
+    }
+}
+
+#[test]
+fn empty_cluster_plane_contributes_exactly_zero() {
+    // A degenerate split layer whose second plane is all masked zeros
+    // (an empty cluster: scale 1, zero-point 0, every level 0) must
+    // produce bit-identical output to the single-plane layer.
+    let w = heavy_tensor(21, 6, 10);
+    for bits in [Bits::Int4, Bits::Int8] {
+        let qa = quant::quantize_per_tensor(&w, bits);
+        let zero_plane = splitquant::quant::QuantizedTensor {
+            plane: TensorI8::zeros(&[6, 10]),
+            granularity: splitquant::quant::Granularity::PerTensor,
+            params: vec![QuantParams::from_range(bits, 0.0, 0.0)],
+        };
+        let clustering = Clustering1D {
+            centroids: vec![0.0, 0.0],
+            boundaries: vec![f64::INFINITY],
+            inertia: 0.0,
+            sizes: vec![w.len() as f64, 0.0],
+            member_ranges: None,
+        };
+        let with_empty = QuantParam::Split(QuantizedSplitLayer {
+            planes: vec![qa.clone(), zero_plane],
+            clustering,
+            strategy: Strategy::MaskedSum,
+        });
+        let single = QuantParam::Plain(qa.clone());
+        let lin_a = pack_linear(&with_empty).unwrap();
+        let lin_b = pack_linear(&single).unwrap();
+        let x = random_x(22, 2, 10);
+        let mut scratch = KernelScratch::new();
+        let mut ya = vec![0.0f32; 2 * 6];
+        let mut yb = vec![0.0f32; 2 * 6];
+        kernels::gemm(&mut ya, x.data(), 2, &lin_a, &mut scratch);
+        kernels::gemm(&mut yb, x.data(), 2, &lin_b, &mut scratch);
+        assert_eq!(ya, yb, "{bits:?}: empty plane leaked");
+    }
+}
+
+#[test]
+fn int8_activation_kernel_within_quantization_tolerance() {
+    let mut scratch = KernelScratch::new();
+    let w = heavy_tensor(30, 24, 48);
+    for bits in [Bits::Int4, Bits::Int8] {
+        let qp = QuantParam::Split(split_quantize(&w, &SplitConfig::default(), bits));
+        let lin = pack_linear(&qp).unwrap();
+        let x = random_x(31, 3, 48);
+        let mut exact = vec![0.0f32; 3 * 24];
+        kernels::gemm(&mut exact, x.data(), 3, &lin, &mut scratch);
+        let mut int = vec![0.0f32; 3 * 24];
+        kernels::gemm_int8(&mut int, x.data(), 3, &lin, &mut scratch);
+        let scale = exact.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-6);
+        assert!(
+            max_abs_diff(&int, &exact) < 0.05 * scale as f64 + 1e-3,
+            "{bits:?}: int path drifted {} vs magnitude {scale}",
+            max_abs_diff(&int, &exact)
+        );
+    }
+}
+
+fn test_checkpoint() -> Checkpoint {
+    let mut ck = Checkpoint::random_init(&PicoLlamaConfig::test(), 55);
+    ck.amplify_outliers(0.002, 12.0, 9);
+    ck
+}
+
+#[test]
+fn packed_forward_matches_reference_forward_end_to_end() {
+    let ck = test_checkpoint();
+    let toks: Vec<usize> = vec![1, 7, 23, 4, 2, 11];
+    for bits in [Bits::Int4, Bits::Int8] {
+        for method in [
+            Method::Baseline,
+            Method::SplitQuant(SplitConfig::default()),
+            Method::Ocs { expand_ratio: 0.05 },
+        ] {
+            let qm = quantize_model(&ck, bits, &method).unwrap();
+            let pm = PackedModel::from_qmodel(&qm).unwrap();
+            let eff = qm.effective_checkpoint();
+            let mut ws = Workspace::new(&ck.config, 16);
+            let want = forward::forward(&eff, &toks, &mut ws).unwrap();
+            let got = pm.forward(&toks, &mut ws).unwrap();
+            assert_eq!(got.shape(), want.shape());
+            assert_close(
+                got.data(),
+                want.data(),
+                &format!("{bits:?}/{} logits", qm.method_name),
+            );
+        }
+    }
+}
+
+#[test]
+fn packed_scoring_agrees_with_reference_on_decided_problems() {
+    let world = splitquant::data::FactWorld::generate(16, 4, 8, 3);
+    let mut cfg = PicoLlamaConfig::test();
+    cfg.vocab = world.vocab_size();
+    let mut ck = Checkpoint::random_init(&cfg, 77);
+    ck.amplify_outliers(0.002, 8.0, 2);
+    let problems = splitquant::data::generate_problems(&world, 32, 5);
+    let qm = quantize_model(&ck, Bits::Int4, &Method::SplitQuant(SplitConfig::default())).unwrap();
+    let pm = PackedModel::from_qmodel(&qm).unwrap();
+    let eff = qm.effective_checkpoint();
+    let mut ws = Workspace::new(&cfg, 16);
+    let mut scratch = KernelScratch::new();
+    for p in &problems {
+        let a = splitquant::eval::score_problem(&eff, p, &mut ws).unwrap();
+        let b = splitquant::eval::score_problem_packed(&pm, p, &mut ws, &mut scratch).unwrap();
+        // Identical choices except at FP-noise-level ties.
+        if a.chosen != b.chosen {
+            assert!(a.margin() < 1e-4, "margin {} flipped", a.margin());
+        }
+        for (la, lb) in a.logprobs.iter().zip(&b.logprobs) {
+            assert!((la - lb).abs() < 1e-3, "logprob {la} vs {lb}");
+        }
+    }
+}
+
+#[test]
+fn packed_weight_traffic_under_half_of_f32_at_int4() {
+    // The perf acceptance bound: at INT4 the packed path must touch
+    // < 0.5x the weight bytes of the f32 path — even for k=3 split
+    // layers (3/8 per linear), and ~1/8 for the baseline.
+    let ck = test_checkpoint();
+    let f32_bytes = ck.fp32_bytes() as f64;
+    let split = quantize_model(&ck, Bits::Int4, &Method::SplitQuant(SplitConfig::default()))
+        .unwrap();
+    let base = quantize_model(&ck, Bits::Int4, &Method::Baseline).unwrap();
+    let pm_split = PackedModel::from_qmodel(&split).unwrap();
+    let pm_base = PackedModel::from_qmodel(&base).unwrap();
+    let r_split = pm_split.weight_bytes_per_forward() as f64 / f32_bytes;
+    let r_base = pm_base.weight_bytes_per_forward() as f64 / f32_bytes;
+    assert!(r_split < 0.5, "split ratio {r_split}");
+    assert!(r_base < 0.2, "baseline ratio {r_base}");
+}

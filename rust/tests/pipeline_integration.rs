@@ -7,7 +7,7 @@
 
 use std::path::{Path, PathBuf};
 
-use splitquant::coordinator::{Arm, Coordinator, PipelineSpec};
+use splitquant::coordinator::{Arm, Coordinator, ExecEngine, PipelineSpec};
 use splitquant::data::load_problems;
 use splitquant::io::checkpoint::load_checkpoint;
 use splitquant::io::qmodel::{load_qmodel, save_qmodel};
@@ -65,11 +65,69 @@ fn full_arm_roundtrip_through_disk() {
     save_qmodel(&tmp, &qm).unwrap();
     let back = load_qmodel(&tmp).unwrap();
 
-    // Accuracy identical before/after the disk roundtrip.
-    let a = coord.evaluate_qm(&qm, sample, false).unwrap();
-    let b = coord.evaluate_qm(&back, sample, false).unwrap();
-    assert_eq!(a.n_correct, b.n_correct);
+    // Accuracy identical before/after the disk roundtrip — on both CPU
+    // engines (the packed engine consumes the same packed planes the
+    // container stores).
+    for engine in [ExecEngine::Reference, ExecEngine::Packed] {
+        let a = coord.evaluate_qm(&qm, sample, false, engine).unwrap();
+        let b = coord.evaluate_qm(&back, sample, false, engine).unwrap();
+        assert_eq!(a.n_correct, b.n_correct, "{}", engine.name());
+    }
     std::fs::remove_file(&tmp).ok();
+}
+
+#[test]
+fn packed_engine_matches_reference_choices() {
+    // The `--engine packed` acceptance check: same chosen answers as the
+    // reference engine on the bundled eval set, on every quantized arm.
+    let Some(dir) = artifacts() else { return };
+    let coord = Coordinator::new();
+    let s = spec(&dir);
+    let ck = coord.load_model(&s).unwrap();
+    let (problems, _) = load_problems(dir.join("eval_problems.json")).unwrap();
+    let sample = &problems[..200];
+    for (bits, method) in [
+        (Bits::Int8, Method::Baseline),
+        (Bits::Int4, Method::Baseline),
+        (Bits::Int4, Method::SplitQuant(SplitConfig::default())),
+    ] {
+        let qm = quantize_model(&ck, bits, &method).unwrap();
+        let pm = splitquant::model::packed::PackedModel::from_qmodel(&qm).unwrap();
+        let eff = qm.effective_checkpoint();
+        let mut ws = splitquant::model::forward::Workspace::new(&ck.config, ck.config.max_seq);
+        let mut scratch = splitquant::kernels::KernelScratch::new();
+        for p in sample {
+            let reference = splitquant::eval::score_problem(&eff, p, &mut ws).unwrap();
+            let packed =
+                splitquant::eval::score_problem_packed(&pm, p, &mut ws, &mut scratch).unwrap();
+            // Identical choices on every decided problem; only FP-noise
+            // ties may flip between summation orders.
+            if reference.chosen != packed.chosen {
+                assert!(
+                    reference.margin() < 1e-3,
+                    "{}/{}: choice flipped at margin {}",
+                    bits.name(),
+                    qm.method_name,
+                    reference.margin()
+                );
+            }
+        }
+        // Aggregate accuracies also agree through the coordinator path.
+        let a = coord
+            .evaluate_qm(&qm, sample, false, ExecEngine::Reference)
+            .unwrap();
+        let b = coord
+            .evaluate_qm(&qm, sample, false, ExecEngine::Packed)
+            .unwrap();
+        assert!(
+            (a.accuracy - b.accuracy).abs() <= 2.0 / sample.len() as f64,
+            "{}/{}: reference {} vs packed {}",
+            bits.name(),
+            qm.method_name,
+            a.accuracy_pct(),
+            b.accuracy_pct()
+        );
+    }
 }
 
 #[test]
@@ -109,8 +167,12 @@ fn cpu_and_pjrt_scoring_agree_quantized_arms() {
             method,
         };
         let (qm, _) = coord.quantize_arm(&ck, &arm).unwrap();
-        let cpu = coord.evaluate_qm(&qm, sample, false).unwrap();
-        let pjrt = coord.evaluate_qm(&qm, sample, true).unwrap();
+        let cpu = coord
+            .evaluate_qm(&qm, sample, false, ExecEngine::Reference)
+            .unwrap();
+        let pjrt = coord
+            .evaluate_qm(&qm, sample, true, ExecEngine::Reference)
+            .unwrap();
         assert!(
             (cpu.accuracy - pjrt.accuracy).abs() <= 2.0 / sample.len() as f64,
             "{}: CPU {} vs PJRT {}",
@@ -171,10 +233,19 @@ fn server_batches_and_matches_offline_scoring() {
 
     let qm = quantize_model(&ck, Bits::Int4, &Method::SplitQuant(SplitConfig::default()))
         .unwrap();
-    let offline = coord.evaluate_qm(&qm, sample, false).unwrap();
+    let offline = coord
+        .evaluate_qm(&qm, sample, false, ExecEngine::Reference)
+        .unwrap();
 
     let weights = scoring::quant_args(&qm, 3).unwrap();
-    let server = Server::start(dir.clone(), weights, ServerConfig::default()).unwrap();
+    let server = Server::start(
+        splitquant::coordinator::server::Backend::Pjrt {
+            artifacts_dir: dir.clone(),
+            weight_args: weights,
+        },
+        ServerConfig::default(),
+    )
+    .unwrap();
     let rx: Vec<_> = sample.iter().map(|p| server.submit(p.clone())).collect();
     let mut correct = 0;
     let mut max_batch = 0;
@@ -204,7 +275,10 @@ fn gptq_arm_integrates_with_eval() {
     let world = splitquant::data::FactWorld::generate(120, 6, 80, 2026);
     let calib: Vec<Vec<usize>> = world.corpus(1, 99).into_iter().take(64).collect();
     let qm = splitquant::gptq::gptq_quantize_model(&ck, Bits::Int4, &calib, 0.01).unwrap();
-    let gptq = coord.evaluate_qm(&qm, sample, false).unwrap();
+    // Per-channel GPTQ grids run through the packed engine natively.
+    let gptq = coord
+        .evaluate_qm(&qm, sample, false, ExecEngine::Packed)
+        .unwrap();
     let base_arm = Arm {
         bits: Bits::Int4,
         method: Method::Baseline,
