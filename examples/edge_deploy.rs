@@ -79,7 +79,7 @@ fn main() -> Result<()> {
     for rx in pending {
         let resp = rx.recv()??;
         correct += resp.result.is_correct() as usize;
-        lat_ms.push(resp.queue_time.as_secs_f64() * 1e3);
+        lat_ms.push(resp.latency().as_secs_f64() * 1e3);
         batches.push(resp.batch_size as f64);
     }
     let burst_wall = t0.elapsed();

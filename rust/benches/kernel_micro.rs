@@ -77,6 +77,19 @@ fn main() -> anyhow::Result<()> {
         kernels::gemm_int8(&mut y8, &x8, 8, &lin, &mut scratch);
         black_box(y8[0])
     });
+    // Decode/extension shapes: a DecodeState-resident forward pushes
+    // 1-row (single-token decode) and 2–4-row (MCQ option extension)
+    // chunks through each layer; the seq==1 kernel fast path and the
+    // unpack-amortization loss at tiny batches both show up here.
+    for rows in [1usize, 2, 4] {
+        let mut y = vec![0.0f32; rows * 1024];
+        let x = &x8[..rows * 4096];
+        b.run(&format!("packed_gemm_extend[{rows}x1024x4096,k=3]"), || {
+            kernels::gemm(&mut y, x, rows, &lin, &mut scratch);
+            black_box(y[0])
+        });
+    }
+
     let x8_t = Tensor::new(&[8, 4096], x8.clone());
     let eff_t = eff.transpose();
     b.run("f32_gemm_dequantized[8x1024x4096]", || {

@@ -10,6 +10,12 @@
 //!   --kernels-json PATH write the packed-kernel section (timings +
 //!                       bytes-touched ratios) as JSON (`BENCH_kernels.json`
 //!                       in CI, uploaded as an artifact)
+//!   --serving-json PATH run the serving section — req/s and p50/p95
+//!                       queue+exec latency on the packed backend at
+//!                       1/4/8 executor workers with prefix reuse
+//!                       on/off — and write it as JSON
+//!                       (`BENCH_serving.json` in CI, uploaded as an
+//!                       artifact)
 
 use splitquant::bench::{black_box, Bench, BenchConfig};
 use splitquant::kernels::{self, KernelScratch};
@@ -27,6 +33,7 @@ struct Options {
     iters: Option<usize>,
     json: Option<String>,
     kernels_json: Option<String>,
+    serving_json: Option<String>,
 }
 
 fn parse_args() -> Options {
@@ -34,6 +41,7 @@ fn parse_args() -> Options {
         iters: None,
         json: None,
         kernels_json: None,
+        serving_json: None,
     };
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
@@ -48,11 +56,14 @@ fn parse_args() -> Options {
             "--kernels-json" => {
                 opts.kernels_json = Some(args.next().expect("--kernels-json needs a path"));
             }
+            "--serving-json" => {
+                opts.serving_json = Some(args.next().expect("--serving-json needs a path"));
+            }
             "--bench" => {} // passed by `cargo bench`; ignore
             other => {
                 eprintln!(
                     "unknown option '{other}' (supported: --iters N, --json PATH, \
-                     --kernels-json PATH)"
+                     --kernels-json PATH, --serving-json PATH)"
                 );
                 std::process::exit(2);
             }
@@ -216,4 +227,115 @@ fn main() {
         std::fs::write(&path, report.to_string_pretty()).expect("write kernels json report");
         println!("wrote {path}");
     }
+
+    if let Some(path) = opts.serving_json {
+        serving_section(&path);
+    }
+}
+
+/// Serving section: fire a burst of 4-option MCQ requests at the packed
+/// backend and measure req/s + p50/p95 queue+exec latency across
+/// executor worker counts, with prefix reuse on vs off (off = the seed
+/// full-recompute scoring plus a disabled prompt cache). Each problem
+/// is submitted several times so the prompt-prefix LRU sees
+/// cross-request hits, the pattern a shared-prompt workload produces.
+fn serving_section(path: &str) {
+    use splitquant::coordinator::server::{Backend, Server, ServerConfig};
+    use splitquant::data::{generate_problems, FactWorld};
+    use splitquant::model::packed::PackedModel;
+    use splitquant::model::quantized::{quantize_model, Method};
+    use splitquant::model::{Checkpoint, PicoLlamaConfig};
+    use splitquant::util::stats::Summary;
+    use std::time::Instant;
+
+    let world = FactWorld::generate(24, 4, 12, 5);
+    let cfg = PicoLlamaConfig {
+        vocab: world.vocab_size(),
+        d_model: 64,
+        n_layers: 4,
+        n_heads: 4,
+        n_kv_heads: 2,
+        d_ff: 128,
+        max_seq: 32,
+        rope_theta: 10_000.0,
+        norm_eps: 1e-5,
+        tie_embeddings: true,
+    };
+    let mut ck = Checkpoint::random_init(&cfg, 11);
+    ck.amplify_outliers(0.002, 8.0, 3);
+    let qm = quantize_model(&ck, Bits::Int4, &Method::SplitQuant(SplitConfig::default()))
+        .expect("quantize serving model");
+    let pm = PackedModel::from_qmodel(&qm).expect("pack serving model");
+    let problems = generate_problems(&world, 24, 9);
+    const REPEATS: usize = 6;
+
+    let mut sections = Vec::new();
+    let mut reqps = std::collections::BTreeMap::new();
+    for &workers in &[1usize, 4, 8] {
+        for &reuse in &[true, false] {
+            let server = Server::start(
+                Backend::Packed(Box::new(pm.clone())),
+                ServerConfig {
+                    max_wait: Duration::from_millis(2),
+                    max_batch: 16,
+                    workers,
+                    prefix_cache: if reuse { 64 } else { 0 },
+                    reuse_prefix: reuse,
+                    ..Default::default()
+                },
+            )
+            .expect("start server");
+            let t0 = Instant::now();
+            let mut rx = Vec::new();
+            for _ in 0..REPEATS {
+                for p in &problems {
+                    rx.push(server.submit(p.clone()));
+                }
+            }
+            let mut lat_ms = Vec::with_capacity(rx.len());
+            let mut batch_sizes = Vec::with_capacity(rx.len());
+            for r in rx {
+                let resp = r.recv().expect("server alive").expect("scored");
+                lat_ms.push(resp.latency().as_secs_f64() * 1e3);
+                batch_sizes.push(resp.batch_size as f64);
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let n = REPEATS * problems.len();
+            let rps = n as f64 / wall.max(1e-9);
+            let lat = Summary::of(&lat_ms);
+            reqps.insert((workers, reuse), rps);
+            println!(
+                "serving[workers={workers} reuse={reuse}]: {rps:.1} req/s  \
+                 p50 {:.2}ms p95 {:.2}ms  mean batch {:.1}",
+                lat.median,
+                lat.p95,
+                Summary::of(&batch_sizes).mean
+            );
+            sections.push(Json::obj(vec![
+                ("workers", Json::num(workers as f64)),
+                ("prefix_reuse", Json::Bool(reuse)),
+                ("req_per_s", Json::num(rps)),
+                ("latency_p50_ms", Json::num(lat.median)),
+                ("latency_p95_ms", Json::num(lat.p95)),
+                ("mean_batch", Json::num(Summary::of(&batch_sizes).mean)),
+            ]));
+        }
+    }
+    let speedup = reqps[&(1, true)] / reqps[&(1, false)].max(1e-9);
+    let scaling = reqps[&(4, true)] / reqps[&(1, true)].max(1e-9);
+    println!(
+        "serving: prefix-reuse speedup {speedup:.2}x at 1 worker; \
+         1→4 worker scaling {scaling:.2}x"
+    );
+    let report = Json::obj(vec![
+        ("bench", Json::str("perf_probe.serving")),
+        ("n_requests", Json::num((REPEATS * problems.len()) as f64)),
+        ("options_per_problem", Json::num(4.0)),
+        ("prompt_len", Json::num(3.0)),
+        ("reuse_speedup_1worker", Json::num(speedup)),
+        ("scaling_1_to_4_workers", Json::num(scaling)),
+        ("sections", Json::arr(sections)),
+    ]);
+    std::fs::write(path, report.to_string_pretty()).expect("write serving json report");
+    println!("wrote {path}");
 }

@@ -27,7 +27,7 @@ use crate::runtime::{scoring, Engine};
 use crate::split::SplitConfig;
 use crate::util::pool::Pool;
 use crate::util::timer::Profiler;
-use crate::{log_debug, log_info};
+use crate::{log_debug, log_error, log_info};
 
 use anyhow::{bail, Context, Result};
 
@@ -292,6 +292,15 @@ impl Coordinator {
                 .section("export", || save_qmodel(dir.join(fname), &qm))?;
         }
         let report = self.evaluate_qm(&qm, problems, spec.use_runtime, spec.engine)?;
+        if report.n_errors > 0 {
+            log_error!(
+                "arm {}: {} problem(s) failed to score (first: {}); accuracy covers the {} scored",
+                arm.label(),
+                report.n_errors,
+                report.first_error.as_deref().unwrap_or("unknown"),
+                report.n
+            );
+        }
         Ok(ArmResult {
             label: arm.label(),
             bits: arm.bits,

@@ -7,13 +7,21 @@
 //!
 //! ```text
 //!   clients ──(mpsc)──▶ batcher ──(collect ≤B, ≤max_wait)──▶ executor
-//!                          ▲                                   │
+//!                          ▲                 │ shard across worker pool
+//!                          │                 │ (per-worker ScoreBuffers,
+//!                          │                 │  shared prompt-prefix LRU)
 //!                          └──────── responses (per-request oneshot)
 //! ```
 //!
 //! The batcher groups pending requests up to the executor's batch size
 //! or until `max_wait` expires — standard dynamic batching (the
-//! vLLM-router pattern, scaled to this workload).
+//! vLLM-router pattern, scaled to this workload). The CPU executors
+//! then **shard the batch across a worker pool** (`workers` threads,
+//! each holding its own workspace/decode-state/kernel-scratch) and
+//! score each problem with **prefix reuse**: one prompt pass + one
+//! short extension per option, consulting a bounded LRU
+//! [`PrefixCache`] keyed by prompt tokens so concurrent requests that
+//! share a prompt reuse its computed K/V instead of recomputing it.
 //!
 //! Three execution backends ([`Backend`]):
 //! * **Packed** — the packed-integer kernel engine
@@ -24,17 +32,18 @@
 //! * **Pjrt** — the AOT-compiled PJRT variants (requires `artifacts/`).
 
 use std::path::PathBuf;
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::data::McqProblem;
-use crate::eval::{nan_safe_argmax, ProblemResult};
-use crate::kernels::KernelScratch;
-use crate::model::forward::Workspace;
+use crate::eval::{self, nan_safe_argmax, ProblemResult, ScoreBuffers};
+use crate::model::decode::PrefixCache;
 use crate::model::packed::PackedModel;
 use crate::model::Checkpoint;
 use crate::runtime::{ArgValue, Engine};
+use crate::util::pool::Pool;
 
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
@@ -51,8 +60,18 @@ pub struct Request {
 #[derive(Clone, Debug)]
 pub struct Response {
     pub result: ProblemResult,
+    /// Time spent queued (enqueue → the batch starting to execute).
     pub queue_time: Duration,
+    /// Time the batch spent executing (shared by its members).
+    pub exec_time: Duration,
     pub batch_size: usize,
+}
+
+impl Response {
+    /// End-to-end latency: queueing plus batch execution.
+    pub fn latency(&self) -> Duration {
+        self.queue_time + self.exec_time
+    }
 }
 
 /// Server handle: submit requests, join on drop.
@@ -85,6 +104,16 @@ pub struct ServerConfig {
     pub variant: String,
     /// Batch size for the CPU backends (PJRT uses the compiled batch).
     pub max_batch: usize,
+    /// Worker threads a CPU executor shards a batch across (each holds
+    /// its own `ScoreBuffers`). 0 = available parallelism; PJRT ignores
+    /// this (the compiled executable is the batch executor).
+    pub workers: usize,
+    /// Prompt-prefix LRU capacity in entries (0 disables the cache).
+    pub prefix_cache: usize,
+    /// Score with prefix reuse (one prompt pass + per-option
+    /// extensions). `false` falls back to the seed full-recompute path —
+    /// kept as a benchmarking baseline (`perf_probe --serving-json`).
+    pub reuse_prefix: bool,
 }
 
 impl Default for ServerConfig {
@@ -93,6 +122,19 @@ impl Default for ServerConfig {
             max_wait: Duration::from_millis(5),
             variant: "score_quant_k3".to_string(),
             max_batch: 16,
+            workers: 1,
+            prefix_cache: 32,
+            reuse_prefix: true,
+        }
+    }
+}
+
+impl ServerConfig {
+    fn make_pool(&self) -> Pool {
+        if self.workers == 0 {
+            Pool::new_auto()
+        } else {
+            Pool::new(self.workers)
         }
     }
 }
@@ -119,20 +161,33 @@ impl Server {
                         return;
                     }
                 },
-                // CPU backends hold one workspace + kernel scratch for
-                // the thread's lifetime, sized to the model's max_seq
-                // (validation rejects longer requests).
+                // CPU backends own a worker pool, a shared prefix cache
+                // and one checkout slot of scoring buffers per worker,
+                // all for the batcher thread's lifetime — the serving
+                // hot path does no per-batch buffer allocation.
                 Backend::Packed(pm) => {
-                    let ws = Workspace::new(&pm.config, pm.config.max_seq);
+                    let pool = config.make_pool();
+                    let bufs = (0..pool.size())
+                        .map(|_| Mutex::new(ScoreBuffers::for_packed(&pm, pm.config.max_seq)))
+                        .collect();
                     Executor::Packed {
                         pm,
-                        ws,
-                        scratch: KernelScratch::new(),
+                        pool,
+                        cache: Mutex::new(PrefixCache::new(config.prefix_cache)),
+                        bufs,
                     }
                 }
                 Backend::Reference(ck) => {
-                    let ws = Workspace::new(&ck.config, ck.config.max_seq);
-                    Executor::Reference { ck, ws }
+                    let pool = config.make_pool();
+                    let bufs = (0..pool.size())
+                        .map(|_| Mutex::new(ScoreBuffers::new(&ck.config, ck.config.max_seq)))
+                        .collect();
+                    Executor::Reference {
+                        ck,
+                        pool,
+                        cache: Mutex::new(PrefixCache::new(config.prefix_cache)),
+                        bufs,
+                    }
                 }
             };
             let _ = ready_tx.send(Ok(()));
@@ -180,8 +235,10 @@ impl Drop for Server {
 }
 
 /// The worker-side executor (lives entirely on the batcher thread). The
-/// CPU backends keep one workspace + kernel scratch alive for the whole
-/// thread, so the serving hot path does no per-batch buffer allocation.
+/// CPU backends shard each batch across their pool; every pool worker
+/// checks out one batcher-lifetime [`ScoreBuffers`] slot (workspace +
+/// decode state + prewarmed kernel scratch, reused across batches) and
+/// the workers share the batcher-lifetime prompt-prefix cache.
 enum Executor {
     Pjrt {
         engine: Engine,
@@ -189,13 +246,40 @@ enum Executor {
     },
     Packed {
         pm: Box<PackedModel>,
-        ws: Workspace,
-        scratch: KernelScratch,
+        pool: Pool,
+        cache: Mutex<PrefixCache>,
+        bufs: Vec<Mutex<ScoreBuffers>>,
     },
     Reference {
         ck: Box<Checkpoint>,
-        ws: Workspace,
+        pool: Pool,
+        cache: Mutex<PrefixCache>,
+        bufs: Vec<Mutex<ScoreBuffers>>,
     },
+}
+
+/// Shard one batch across the executor pool: every sweep worker checks
+/// out a distinct long-lived buffer slot (the atomic ticket makes
+/// indices unique and `workers <= bufs.len()` — the pool never runs
+/// more workers than its size — so the lock never blocks) and scores
+/// the problems it claims through `score_one`. Shared by the Packed and
+/// Reference arms so the sharding/checkout logic cannot drift between
+/// engines.
+fn shard_batch<F>(
+    pool: &Pool,
+    bufs: &[Mutex<ScoreBuffers>],
+    problems: &[McqProblem],
+    score_one: F,
+) -> Vec<Result<ProblemResult>>
+where
+    F: Fn(&mut ScoreBuffers, &McqProblem) -> Result<ProblemResult> + Sync,
+{
+    let ticket = AtomicUsize::new(0);
+    pool.parallel_map_init(
+        problems.len(),
+        || bufs[ticket.fetch_add(1, Ordering::Relaxed) % bufs.len()].lock().unwrap(),
+        |guard, i| score_one(guard, &problems[i]),
+    )
 }
 
 impl Executor {
@@ -220,20 +304,25 @@ impl Executor {
                 engine,
                 weight_args,
             } => {
-                // Per-problem prompt-length validation: a mismatched
-                // request fails alone; the valid subset still executes.
+                // Per-problem shape validation: a mismatched or
+                // malformed request fails alone (instead of panicking
+                // the batcher); the valid subset still executes.
                 let plen = engine.prompt_len;
                 let mut out: Vec<Option<Result<ProblemResult>>> = problems
                     .iter()
                     .map(|p| {
-                        (p.prompt.len() != plen).then(|| {
-                            Err(anyhow!(
+                        if p.prompt.len() != plen {
+                            Some(Err(anyhow!(
                                 "prompt length {} != the engine's compiled prompt_len \
                                  {plen}; this problem cannot be scored by variant '{}'",
                                 p.prompt.len(),
                                 config.variant
-                            ))
-                        })
+                            )))
+                        } else if p.options.is_empty() || p.options.iter().any(|o| o.is_empty()) {
+                            Some(Err(anyhow!("problem has empty options")))
+                        } else {
+                            None
+                        }
                     })
                     .collect();
                 let valid: Vec<McqProblem> = problems
@@ -247,51 +336,54 @@ impl Executor {
                 Ok(out
                     .into_iter()
                     .map(|slot| {
-                        slot.unwrap_or_else(|| Ok(scored.next().expect("one result per problem")))
+                        slot.unwrap_or_else(|| scored.next().expect("one result per problem"))
                     })
                     .collect())
             }
-            Executor::Packed { pm, ws, scratch } => Ok(problems
-                .iter()
-                .map(|p| {
-                    validate_cpu_problem(&pm.config, p)?;
-                    crate::eval::score_problem_packed(pm, p, ws, scratch)
-                })
-                .collect()),
-            Executor::Reference { ck, ws } => Ok(problems
-                .iter()
-                .map(|p| {
-                    validate_cpu_problem(&ck.config, p)?;
-                    crate::eval::score_problem(ck, p, ws)
-                })
-                .collect()),
+            Executor::Packed {
+                pm,
+                pool,
+                cache,
+                bufs,
+            } => {
+                let pm: &PackedModel = pm;
+                let cache: &Mutex<PrefixCache> = cache;
+                Ok(shard_batch(pool, bufs, problems, |bufs, p| {
+                    eval::validate_problem(&pm.config, p)?;
+                    if config.reuse_prefix {
+                        let ScoreBuffers { ws, state, scratch } = bufs;
+                        eval::score_problem_session(&mut pm.ops(scratch), p, ws, state, Some(cache))
+                    } else {
+                        eval::score_problem_packed_full(pm, p, &mut bufs.ws, &mut bufs.scratch)
+                    }
+                }))
+            }
+            Executor::Reference {
+                ck,
+                pool,
+                cache,
+                bufs,
+            } => {
+                let ck: &Checkpoint = ck;
+                let cache: &Mutex<PrefixCache> = cache;
+                Ok(shard_batch(pool, bufs, problems, |bufs, p| {
+                    eval::validate_problem(&ck.config, p)?;
+                    if config.reuse_prefix {
+                        let mut ops = crate::model::forward::CkOps::new(ck);
+                        eval::score_problem_session(
+                            &mut ops,
+                            p,
+                            &mut bufs.ws,
+                            &mut bufs.state,
+                            Some(cache),
+                        )
+                    } else {
+                        eval::score_problem_full(ck, p, &mut bufs.ws)
+                    }
+                }))
+            }
         }
     }
-}
-
-/// Reject a malformed request with an error instead of letting the
-/// forward's asserts panic (and permanently kill) the batcher thread.
-fn validate_cpu_problem(cfg: &crate::model::PicoLlamaConfig, p: &McqProblem) -> Result<()> {
-    if p.prompt.is_empty() {
-        bail!("problem has an empty prompt");
-    }
-    if p.options.is_empty() || p.options.iter().any(|o| o.is_empty()) {
-        bail!("problem has empty options");
-    }
-    let max_opt = p.options.iter().map(|o| o.len()).max().unwrap_or(0);
-    let seq = p.prompt.len() + max_opt;
-    if seq > cfg.max_seq {
-        bail!("sequence length {seq} exceeds the model's max_seq {}", cfg.max_seq);
-    }
-    if let Some(&t) = p
-        .prompt
-        .iter()
-        .chain(p.options.iter().flatten())
-        .find(|&&t| t >= cfg.vocab)
-    {
-        bail!("token {t} out of vocab {}", cfg.vocab);
-    }
-    Ok(())
 }
 
 fn batch_loop(exec: &mut Executor, config: &ServerConfig, rx: mpsc::Receiver<Request>) {
@@ -323,12 +415,15 @@ fn batch_loop(exec: &mut Executor, config: &ServerConfig, rx: mpsc::Receiver<Req
 fn execute_batch(exec: &mut Executor, config: &ServerConfig, batch: Vec<Request>) {
     let problems: Vec<McqProblem> = batch.iter().map(|r| r.problem.clone()).collect();
     let n = batch.len();
+    let started = Instant::now();
     match exec.score(config, &problems) {
         Ok(results) => {
+            let exec_time = started.elapsed();
             for (req, result) in batch.into_iter().zip(results) {
                 let resp = result.map(|result| Response {
                     result,
-                    queue_time: req.enqueued.elapsed(),
+                    queue_time: started.duration_since(req.enqueued),
+                    exec_time,
                     batch_size: n,
                 });
                 let _ = req.respond.send(resp);
@@ -344,13 +439,17 @@ fn fail_all(batch: Vec<Request>, e: &anyhow::Error) {
     }
 }
 
-/// Execute one PJRT batch and return per-problem results.
+/// Execute one PJRT batch and return per-problem results. Callers
+/// ([`Executor::score`]) have already shape-validated every problem
+/// (prompt length, non-empty options); token-range errors that only
+/// surface against the executed logits (an out-of-vocab option) come
+/// back as that problem's inner `Err`.
 fn per_problem_results(
     engine: &Engine,
     weight_args: &BTreeMap<String, ArgValue>,
     config: &ServerConfig,
     problems: &[McqProblem],
-) -> Result<Vec<ProblemResult>> {
+) -> Result<Vec<Result<ProblemResult>>> {
     // score_problems pads internally; its report is aggregate only, so
     // inline the batching here for per-problem outputs.
     let b = engine.batch;
@@ -359,14 +458,7 @@ fn per_problem_results(
     for chunk in problems.chunks(b) {
         let mut tokens = Vec::with_capacity(b * plen);
         for p in chunk {
-            if p.prompt.len() != plen {
-                bail!(
-                    "prompt length {} != the engine's compiled prompt_len {plen}; \
-                     this problem cannot be scored by variant '{}'",
-                    p.prompt.len(),
-                    config.variant
-                );
-            }
+            debug_assert_eq!(p.prompt.len(), plen, "caller pre-validates prompt length");
             tokens.extend(p.prompt.iter().map(|&t| t as i32));
         }
         // Pad the final chunk with neutral all-<pad> prompts of the
@@ -375,21 +467,26 @@ fn per_problem_results(
         let mut args = (*weight_args).clone();
         args.insert("tokens".to_string(), ArgValue::I32(tokens));
         let logits = engine.execute(&config.variant, &args)?;
+        let vocab = logits.shape()[1];
         for (i, p) in chunk.iter().enumerate() {
             let row = logits.row(i);
-            let lps: Vec<f64> = p
+            let lps: Result<Vec<f64>> = p
                 .options
                 .iter()
-                .map(|opt| crate::model::forward::log_prob(row, opt[0]))
+                .map(|opt| {
+                    if opt[0] >= vocab {
+                        bail!("option token {} out of vocab {vocab}", opt[0]);
+                    }
+                    Ok(crate::model::forward::log_prob(row, opt[0]))
+                })
                 .collect();
             // NaN logprobs (a poisoned batch) must not panic the batch
             // thread: treat them as -inf and let the result surface.
-            let chosen = nan_safe_argmax(&lps);
-            results.push(ProblemResult {
-                chosen,
+            results.push(lps.map(|lps| ProblemResult {
+                chosen: nan_safe_argmax(&lps),
                 correct: p.correct,
                 logprobs: lps,
-            });
+            }));
         }
     }
     Ok(results)
@@ -412,6 +509,8 @@ mod tests {
         assert!(c.max_wait <= Duration::from_millis(50));
         assert!(c.variant.starts_with("score_"));
         assert!(c.max_batch >= 1);
+        assert!(c.workers >= 1, "default avoids surprise thread fan-out");
+        assert!(c.reuse_prefix, "prefix reuse is the default scoring path");
     }
 
     fn setup() -> (crate::model::quantized::QuantizedModel, Vec<McqProblem>) {
@@ -444,11 +543,122 @@ mod tests {
         for r in rx {
             let resp = r.recv().unwrap().unwrap();
             assert!(resp.batch_size >= 1 && resp.batch_size <= 8);
+            assert!(resp.latency() >= resp.queue_time);
             max_batch = max_batch.max(resp.batch_size);
             n += 1;
         }
         assert_eq!(n, problems.len());
         assert!(max_batch > 1, "burst must batch");
+    }
+
+    #[test]
+    fn batcher_honors_deadline_and_full_batches() {
+        let (qm, problems) = setup();
+        // A lone request with a large max_wait and room in the batch
+        // must wait out (approximately) the deadline...
+        let waiting = Server::start(
+            Backend::Packed(Box::new(PackedModel::from_qmodel(&qm).unwrap())),
+            ServerConfig {
+                max_wait: Duration::from_millis(120),
+                max_batch: 8,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let resp = waiting.score(problems[0].clone()).unwrap();
+        assert!(
+            resp.queue_time >= Duration::from_millis(90),
+            "lone request should wait near the deadline, waited {:?}",
+            resp.queue_time
+        );
+        assert_eq!(resp.batch_size, 1);
+
+        // ...while a full batch executes immediately: with max_batch=1 a
+        // huge deadline must not delay the response.
+        let eager = Server::start(
+            Backend::Packed(Box::new(PackedModel::from_qmodel(&qm).unwrap())),
+            ServerConfig {
+                max_wait: Duration::from_secs(30),
+                max_batch: 1,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let t0 = Instant::now();
+        let resp = eager.score(problems[1].clone()).unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "full batch must not wait for the deadline"
+        );
+        assert_eq!(resp.batch_size, 1);
+    }
+
+    #[test]
+    fn prefix_cache_hit_matches_cold_miss() {
+        let (qm, problems) = setup();
+        let server = Server::start(
+            Backend::Packed(Box::new(PackedModel::from_qmodel(&qm).unwrap())),
+            ServerConfig {
+                max_wait: Duration::from_millis(1),
+                prefix_cache: 16,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // Same problem twice: the second scoring hits the prompt cache
+        // and must return identical logprobs.
+        let cold = server.score(problems[0].clone()).unwrap();
+        let hit = server.score(problems[0].clone()).unwrap();
+        assert_eq!(cold.result.logprobs, hit.result.logprobs);
+        assert_eq!(cold.result.chosen, hit.result.chosen);
+        // And a cache-disabled server agrees too.
+        let uncached = Server::start(
+            Backend::Packed(Box::new(PackedModel::from_qmodel(&qm).unwrap())),
+            ServerConfig {
+                max_wait: Duration::from_millis(1),
+                prefix_cache: 0,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let none = uncached.score(problems[0].clone()).unwrap();
+        assert_eq!(cold.result.logprobs, none.result.logprobs);
+    }
+
+    #[test]
+    fn sharded_batch_matches_sequential_executor() {
+        let (qm, problems) = setup();
+        let pm = PackedModel::from_qmodel(&qm).unwrap();
+        let sharded = Server::start(
+            Backend::Packed(Box::new(pm.clone())),
+            ServerConfig {
+                max_wait: Duration::from_millis(50),
+                max_batch: 16,
+                workers: 4,
+                prefix_cache: 16,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let sequential = Server::start(
+            Backend::Packed(Box::new(pm)),
+            ServerConfig {
+                max_wait: Duration::from_millis(50),
+                max_batch: 16,
+                workers: 1,
+                prefix_cache: 0,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let rx_a: Vec<_> = problems.iter().map(|p| sharded.submit(p.clone())).collect();
+        let rx_b: Vec<_> = problems.iter().map(|p| sequential.submit(p.clone())).collect();
+        for (a, b) in rx_a.into_iter().zip(rx_b) {
+            let a = a.recv().unwrap().unwrap();
+            let b = b.recv().unwrap().unwrap();
+            assert_eq!(a.result.logprobs, b.result.logprobs, "sharding changed results");
+            assert_eq!(a.result.chosen, b.result.chosen);
+        }
     }
 
     #[test]
@@ -512,6 +722,33 @@ mod tests {
             // on this untrained checkpoint may flip under FP reordering.
             if a.result.chosen != b.result.chosen {
                 assert!(b.result.margin() < 1e-3, "margin {}", b.result.margin());
+            }
+        }
+    }
+
+    #[test]
+    fn full_recompute_baseline_matches_prefix_reuse() {
+        let (qm, problems) = setup();
+        let pm = PackedModel::from_qmodel(&qm).unwrap();
+        let fast = Server::start(
+            Backend::Packed(Box::new(pm.clone())),
+            ServerConfig::default(),
+        )
+        .unwrap();
+        let baseline = Server::start(
+            Backend::Packed(Box::new(pm)),
+            ServerConfig {
+                reuse_prefix: false,
+                prefix_cache: 0,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for p in problems.iter().take(8) {
+            let a = fast.score(p.clone()).unwrap();
+            let b = baseline.score(p.clone()).unwrap();
+            for (la, lb) in a.result.logprobs.iter().zip(&b.result.logprobs) {
+                assert!((la - lb).abs() < 1e-6, "{la} vs {lb}");
             }
         }
     }

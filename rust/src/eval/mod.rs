@@ -4,29 +4,43 @@
 //! Scoring rule: for each problem, compute the teacher-forced log
 //! likelihood of every option continuation after the prompt and pick the
 //! argmax — the same rule Meta's ARC harness applies to Llama 3.2.
-//! Evaluation runs on the CPU reference forward by default; the
-//! coordinator can route scoring through the PJRT runtime instead (both
-//! paths are cross-checked in integration tests).
+//!
+//! Scoring is **prefix-reusing**: a problem's prompt is forwarded once
+//! over a resumable [`DecodeState`] and each of its N options costs one
+//! short extension with snapshot/rollback, instead of the seed's N full
+//! `prompt+option` recomputes (a (prompt+opt)·N → prompt+opt·N compute
+//! reduction; the seed paths survive as `*_full` oracles and are pinned
+//! against the fast path in `rust/tests/decode_state.rs`). Evaluation
+//! runs on the CPU reference forward by default; the coordinator can
+//! route scoring through the packed engine or the PJRT runtime instead
+//! (all paths are cross-checked in integration tests).
+
+use std::sync::Mutex;
 
 use crate::data::McqProblem;
 use crate::kernels::KernelScratch;
-use crate::model::forward::{continuation_logprob, generate_greedy, Workspace};
+use crate::model::decode::{DecodeState, PrefixCache, PrefixEntry};
+use crate::model::forward::{
+    self, continuation_logprob, generate_greedy, CkOps, ForwardOps, Workspace,
+};
 use crate::model::packed::PackedModel;
-use crate::model::Checkpoint;
+use crate::model::{Checkpoint, PicoLlamaConfig};
 use crate::util::pool::Pool;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// Index of the largest finite value, treating NaN as −∞. Never panics:
 /// an all-NaN (or empty... callers guarantee non-empty) slice yields 0.
 /// The scoring paths use this instead of
 /// `max_by(partial_cmp().unwrap())`, which panics the thread on any NaN
-/// logprob.
+/// logprob. Exact ties break toward the **last** maximal index — the
+/// same answer `Iterator::max_by` gives — so the argmax choice on
+/// degenerate (all-equal) logits matches the seed scoring rule.
 pub fn nan_safe_argmax(xs: &[f64]) -> usize {
     let mut best = 0;
     let mut best_v = f64::NEG_INFINITY;
     for (i, &v) in xs.iter().enumerate() {
-        if v > best_v {
+        if v >= best_v {
             best_v = v;
             best = i;
         }
@@ -66,13 +80,19 @@ impl ProblemResult {
     }
 }
 
-/// Aggregate accuracy report.
+/// Aggregate accuracy report. `n` counts *scored* problems; malformed
+/// problems are carried as `n_errors` + the first error message instead
+/// of aborting the whole evaluation.
 #[derive(Clone, Debug)]
 pub struct EvalReport {
     pub n: usize,
     pub n_correct: usize,
     pub accuracy: f64,
     pub mean_margin: f64,
+    /// Problems that failed to score (malformed input, engine error).
+    pub n_errors: usize,
+    /// First per-problem error, for diagnostics.
+    pub first_error: Option<String>,
 }
 
 impl EvalReport {
@@ -89,7 +109,32 @@ impl EvalReport {
             n_correct,
             accuracy: if n > 0 { n_correct as f64 / n as f64 } else { 0.0 },
             mean_margin,
+            n_errors: 0,
+            first_error: None,
         }
+    }
+
+    /// Aggregate per-problem outcomes: failed problems are counted (and
+    /// the first message kept) while the rest still make the report.
+    pub fn from_fallible(results: Vec<Result<ProblemResult>>) -> EvalReport {
+        let mut ok = Vec::with_capacity(results.len());
+        let mut n_errors = 0;
+        let mut first_error = None;
+        for r in results {
+            match r {
+                Ok(v) => ok.push(v),
+                Err(e) => {
+                    n_errors += 1;
+                    if first_error.is_none() {
+                        first_error = Some(format!("{e:#}"));
+                    }
+                }
+            }
+        }
+        let mut rep = EvalReport::from_results(&ok);
+        rep.n_errors = n_errors;
+        rep.first_error = first_error;
+        rep
     }
 
     /// `57.94%`-style string (the paper reports 2 decimals).
@@ -98,17 +143,93 @@ impl EvalReport {
     }
 }
 
-/// The MCQ scoring rule over any continuation-likelihood function: one
-/// logprob per option, argmax (NaN-safe) picks the answer. Both engines
-/// (reference and packed) score through this single body.
-fn score_with(
-    problem: &McqProblem,
-    mut logprob_of: impl FnMut(&[usize], &[usize]) -> Result<f64>,
-) -> Result<ProblemResult> {
-    let mut logprobs = Vec::with_capacity(problem.options.len());
-    for opt in &problem.options {
-        logprobs.push(logprob_of(&problem.prompt, opt)?);
+/// Reject a malformed problem with an error instead of letting the
+/// forward's asserts panic the scoring thread (shared by the eval sweep
+/// and the server batcher).
+pub fn validate_problem(cfg: &PicoLlamaConfig, p: &McqProblem) -> Result<()> {
+    if p.prompt.is_empty() {
+        bail!("problem has an empty prompt");
     }
+    if p.options.is_empty() || p.options.iter().any(|o| o.is_empty()) {
+        bail!("problem has empty options");
+    }
+    let max_opt = p.options.iter().map(|o| o.len()).max().unwrap_or(0);
+    let seq = p.prompt.len() + max_opt;
+    if seq > cfg.max_seq {
+        bail!("sequence length {seq} exceeds the model's max_seq {}", cfg.max_seq);
+    }
+    if let Some(&t) = p
+        .prompt
+        .iter()
+        .chain(p.options.iter().flatten())
+        .find(|&&t| t >= cfg.vocab)
+    {
+        bail!("token {t} out of vocab {}", cfg.vocab);
+    }
+    Ok(())
+}
+
+/// Per-worker reusable scoring state: workspace + decode state + kernel
+/// scratch. Create once per worker/thread (see
+/// [`Pool::parallel_map_init`]) and reuse across every problem it
+/// scores — the hot scoring path does no per-problem buffer allocation.
+pub struct ScoreBuffers {
+    pub ws: Workspace,
+    pub state: DecodeState,
+    pub scratch: KernelScratch,
+}
+
+impl ScoreBuffers {
+    pub fn new(cfg: &PicoLlamaConfig, max_seq: usize) -> ScoreBuffers {
+        ScoreBuffers {
+            ws: Workspace::new(cfg, max_seq),
+            state: DecodeState::new(cfg),
+            scratch: KernelScratch::new(),
+        }
+    }
+
+    /// Buffers for the packed engine, with the kernel scratch pre-grown
+    /// to the model's widest layer.
+    pub fn for_packed(pm: &PackedModel, max_seq: usize) -> ScoreBuffers {
+        ScoreBuffers {
+            ws: Workspace::new(&pm.config, max_seq),
+            state: DecodeState::new(&pm.config),
+            scratch: pm.prewarmed_scratch(),
+        }
+    }
+}
+
+/// The engine-generic prefix-reuse scoring session: resolve the prompt
+/// (from the shared prefix cache when one is attached, else one prompt
+/// pass — inserting the snapshot on miss), then score every option as a
+/// short extension with rollback.
+pub(crate) fn score_problem_session<O: ForwardOps>(
+    ops: &mut O,
+    problem: &McqProblem,
+    ws: &mut Workspace,
+    state: &mut DecodeState,
+    cache: Option<&Mutex<PrefixCache>>,
+) -> Result<ProblemResult> {
+    anyhow::ensure!(!problem.prompt.is_empty(), "problem has an empty prompt");
+    let plen = problem.prompt.len();
+    let cached = cache.and_then(|c| c.lock().unwrap().get(&problem.prompt));
+    let last_row = match cached {
+        Some(entry) => {
+            // Hit: restore the prompt's K/V into this worker's state
+            // (payload copy happens outside the cache lock).
+            state.copy_from(&entry.state);
+            entry.last_row.clone()
+        }
+        None => {
+            let last = forward::prompt_pass(ops, &problem.prompt, ws, state)?;
+            if let Some(c) = cache {
+                let entry = PrefixEntry::new(state.snapshot(plen), last.clone());
+                c.lock().unwrap().insert(problem.prompt.clone(), entry);
+            }
+            last
+        }
+    };
+    let logprobs = forward::option_logprobs(ops, plen, &last_row, &problem.options, ws, state)?;
     Ok(ProblemResult {
         chosen: nan_safe_argmax(&logprobs),
         correct: problem.correct,
@@ -125,8 +246,51 @@ pub fn max_problem_seq(problems: &[McqProblem]) -> usize {
         .unwrap_or(8)
 }
 
-/// Score one problem with the CPU reference forward.
+/// Score one problem with the CPU reference forward (prefix-reuse: one
+/// prompt pass + one extension per option).
 pub fn score_problem(
+    ck: &Checkpoint,
+    problem: &McqProblem,
+    bufs: &mut ScoreBuffers,
+) -> Result<ProblemResult> {
+    let mut ops = CkOps::new(ck);
+    score_problem_session(&mut ops, problem, &mut bufs.ws, &mut bufs.state, None)
+}
+
+/// Score one problem on the packed-integer engine (prefix-reuse).
+pub fn score_problem_packed(
+    pm: &PackedModel,
+    problem: &McqProblem,
+    bufs: &mut ScoreBuffers,
+) -> Result<ProblemResult> {
+    let ScoreBuffers { ws, state, scratch } = bufs;
+    let mut ops = pm.ops(scratch);
+    score_problem_session(&mut ops, problem, ws, state, None)
+}
+
+/// The MCQ scoring rule over any continuation-likelihood function: one
+/// logprob per option, argmax (NaN-safe) picks the answer. Both
+/// full-recompute oracles score through this single body, so the rule
+/// cannot drift between engines.
+fn score_with(
+    problem: &McqProblem,
+    mut logprob_of: impl FnMut(&[usize], &[usize]) -> Result<f64>,
+) -> Result<ProblemResult> {
+    let mut logprobs = Vec::with_capacity(problem.options.len());
+    for opt in &problem.options {
+        logprobs.push(logprob_of(&problem.prompt, opt)?);
+    }
+    Ok(ProblemResult {
+        chosen: nan_safe_argmax(&logprobs),
+        correct: problem.correct,
+        logprobs,
+    })
+}
+
+/// Seed full-recompute scoring (one whole `prompt+option` forward per
+/// option) — the oracle the prefix-reuse path is property-tested
+/// against, and the serving baseline behind `reuse_prefix: false`.
+pub fn score_problem_full(
     ck: &Checkpoint,
     problem: &McqProblem,
     ws: &mut Workspace,
@@ -134,8 +298,8 @@ pub fn score_problem(
     score_with(problem, |prompt, opt| continuation_logprob(ck, prompt, opt, ws))
 }
 
-/// Score one problem on the packed-integer engine.
-pub fn score_problem_packed(
+/// Seed full-recompute scoring on the packed engine.
+pub fn score_problem_packed_full(
     pm: &PackedModel,
     problem: &McqProblem,
     ws: &mut Workspace,
@@ -145,44 +309,40 @@ pub fn score_problem_packed(
 }
 
 /// Evaluate a packed model over a problem set, parallelized over
-/// problems — the `--engine packed` twin of [`evaluate`].
+/// problems — the `--engine packed` twin of [`evaluate`]. Each pool
+/// worker holds one long-lived [`ScoreBuffers`] (workspace, decode
+/// state, prewarmed kernel scratch) reused across every problem it
+/// claims; malformed problems are carried as report errors.
 pub fn evaluate_packed(
     pm: &PackedModel,
     problems: &[McqProblem],
     pool: &Pool,
 ) -> Result<EvalReport> {
     let max_seq = max_problem_seq(problems);
-    let results: Vec<Result<ProblemResult>> = pool.parallel_map(problems.len(), |i| {
-        // Same per-work-item buffer granularity as [`evaluate`]: the
-        // workspace/scratch are small relative to the forward cost on
-        // the eval model, and the scratch still amortizes over the
-        // problem's options. (The serving path holds them per thread.)
-        let mut ws = Workspace::new(&pm.config, max_seq);
-        let mut scratch = KernelScratch::new();
-        score_problem_packed(pm, &problems[i], &mut ws, &mut scratch)
-    });
-    let mut ok = Vec::with_capacity(results.len());
-    for r in results {
-        ok.push(r?);
-    }
-    Ok(EvalReport::from_results(&ok))
+    let results: Vec<Result<ProblemResult>> = pool.parallel_map_init(
+        problems.len(),
+        || ScoreBuffers::for_packed(pm, max_seq),
+        |bufs, i| {
+            validate_problem(&pm.config, &problems[i])?;
+            score_problem_packed(pm, &problems[i], bufs)
+        },
+    );
+    Ok(EvalReport::from_fallible(results))
 }
 
-/// Evaluate a checkpoint over a problem set, parallelized over problems.
+/// Evaluate a checkpoint over a problem set, parallelized over problems
+/// with one reusable [`ScoreBuffers`] per pool worker.
 pub fn evaluate(ck: &Checkpoint, problems: &[McqProblem], pool: &Pool) -> Result<EvalReport> {
     let max_seq = max_problem_seq(problems);
-    let results: Vec<Result<ProblemResult>> = pool.parallel_map(problems.len(), |i| {
-        // One workspace per work item would thrash; thread-locals are not
-        // available per-closure, so create per call — Workspace is small
-        // relative to the forward cost for the eval model.
-        let mut ws = Workspace::new(&ck.config, max_seq);
-        score_problem(ck, &problems[i], &mut ws)
-    });
-    let mut ok = Vec::with_capacity(results.len());
-    for r in results {
-        ok.push(r?);
-    }
-    Ok(EvalReport::from_results(&ok))
+    let results: Vec<Result<ProblemResult>> = pool.parallel_map_init(
+        problems.len(),
+        || ScoreBuffers::new(&ck.config, max_seq),
+        |bufs, i| {
+            validate_problem(&ck.config, &problems[i])?;
+            score_problem(ck, &problems[i], bufs)
+        },
+    );
+    Ok(EvalReport::from_fallible(results))
 }
 
 /// Text-degeneration probe (E11): greedy-generate from a few prompts and
@@ -265,6 +425,7 @@ mod tests {
         let pool = Pool::new(2);
         let rep = evaluate(&ck, &problems, &pool).unwrap();
         assert_eq!(rep.n, 40);
+        assert_eq!(rep.n_errors, 0);
         // Untrained model ≈ 25% ± wide tolerance on 40 problems.
         assert!(
             rep.accuracy < 0.65,
@@ -290,6 +451,37 @@ mod tests {
     }
 
     #[test]
+    fn prefix_reuse_matches_full_recompute() {
+        // The new scoring path (one prompt pass + rollback per option)
+        // must agree with the seed full-recompute oracle.
+        let (ck, _, problems) = setup();
+        let mut bufs = ScoreBuffers::new(&ck.config, max_problem_seq(&problems));
+        let mut ws = Workspace::new(&ck.config, max_problem_seq(&problems));
+        for p in &problems {
+            let fast = score_problem(&ck, p, &mut bufs).unwrap();
+            let full = score_problem_full(&ck, p, &mut ws).unwrap();
+            assert_eq!(fast.chosen, full.chosen);
+            for (a, b) in fast.logprobs.iter().zip(&full.logprobs) {
+                assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_problems_are_carried_not_fatal() {
+        let (ck, _, mut problems) = setup();
+        problems[3].prompt.clear(); // empty prompt
+        problems[7].options[1] = vec![10_000]; // out-of-vocab token
+        problems[11].options.clear(); // no options
+        let pool = Pool::new(2);
+        let rep = evaluate(&ck, &problems, &pool).unwrap();
+        assert_eq!(rep.n, 37, "the valid problems still score");
+        assert_eq!(rep.n_errors, 3);
+        let msg = rep.first_error.as_deref().unwrap();
+        assert!(msg.contains("empty prompt"), "first error surfaced: {msg}");
+    }
+
+    #[test]
     fn report_math() {
         let results = vec![
             ProblemResult {
@@ -311,6 +503,27 @@ mod tests {
         assert_eq!(rep.accuracy_pct(), "50.00%");
         assert!(results[0].is_correct());
         assert!(!results[1].is_correct());
+        assert_eq!(rep.n_errors, 0);
+        assert!(rep.first_error.is_none());
+    }
+
+    #[test]
+    fn fallible_report_counts_errors() {
+        let ok = ProblemResult {
+            chosen: 0,
+            correct: 0,
+            logprobs: vec![-1.0, -2.0],
+        };
+        let rep = EvalReport::from_fallible(vec![
+            Ok(ok.clone()),
+            Err(anyhow::anyhow!("bad problem A")),
+            Ok(ok),
+            Err(anyhow::anyhow!("bad problem B")),
+        ]);
+        assert_eq!(rep.n, 2);
+        assert_eq!(rep.n_errors, 2);
+        assert!(rep.first_error.unwrap().contains("bad problem A"));
+        assert!((rep.accuracy - 1.0).abs() < 1e-12);
     }
 
     #[test]
@@ -329,6 +542,22 @@ mod tests {
         assert_eq!(nan_safe_argmax(&[-1.0, f64::NAN, f64::NEG_INFINITY]), 0);
         assert_eq!(nan_safe_argmax(&[f64::NAN, f64::NAN]), 0);
         assert_eq!(nan_safe_argmax(&[]), 0);
+    }
+
+    #[test]
+    fn nan_safe_argmax_breaks_ties_like_max_by() {
+        // Exact ties pick the LAST maximal index — the seed's
+        // `Iterator::max_by` behavior — so degenerate (all-equal)
+        // logits score the same choice as the original rule.
+        for xs in [vec![-1.0, -1.0, -1.0], vec![-2.0, -1.0, -1.0], vec![0.0, 0.0]] {
+            let want = xs
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            assert_eq!(nan_safe_argmax(&xs), want, "{xs:?}");
+        }
     }
 
     #[test]
@@ -362,6 +591,26 @@ mod tests {
             a.accuracy_pct(),
             b.accuracy_pct()
         );
+    }
+
+    #[test]
+    fn session_with_cache_hit_matches_cold_miss() {
+        // Scoring through a shared prefix cache must be bit-identical
+        // between the miss (computes + inserts) and the hit (restores).
+        let (ck, _, problems) = setup();
+        let cache = Mutex::new(PrefixCache::new(8));
+        let mut bufs = ScoreBuffers::new(&ck.config, max_problem_seq(&problems));
+        let p = &problems[0];
+        let mut ops = CkOps::new(&ck);
+        let cold = score_problem_session(&mut ops, p, &mut bufs.ws, &mut bufs.state, Some(&cache))
+            .unwrap();
+        assert_eq!(cache.lock().unwrap().misses(), 1);
+        let mut ops = CkOps::new(&ck);
+        let hit = score_problem_session(&mut ops, p, &mut bufs.ws, &mut bufs.state, Some(&cache))
+            .unwrap();
+        assert_eq!(cache.lock().unwrap().hits(), 1);
+        assert_eq!(cold.logprobs, hit.logprobs, "hit must equal cold miss");
+        assert_eq!(cold.chosen, hit.chosen);
     }
 
     #[test]

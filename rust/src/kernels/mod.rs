@@ -206,6 +206,19 @@ impl KernelScratch {
     pub fn new() -> KernelScratch {
         KernelScratch::default()
     }
+
+    /// Scratch pre-grown for layers up to `in_dim` columns wide, so a
+    /// long-lived worker (server executor, eval worker) never pays
+    /// incremental growth on its first requests. Buffers still grow on
+    /// demand if a wider layer shows up.
+    pub fn with_capacity(in_dim: usize) -> KernelScratch {
+        KernelScratch {
+            qz: vec![0.0; in_dim],
+            qz_i: vec![0; in_dim],
+            qx: Vec::new(),
+            sx: Vec::new(),
+        }
+    }
 }
 
 /// y[seq, out] = x[seq, in] · Wᵀ executed on the packed layer (planes
@@ -256,6 +269,20 @@ fn accumulate_matrix(
     debug_assert_eq!(y.len(), seq * out_dim, "y length");
     if scratch.qz.len() < in_dim {
         scratch.qz.resize(in_dim, 0.0);
+    }
+    if seq == 1 {
+        // Decode/extension fast path (1-row chunks through a
+        // DecodeState-resident forward): same unpack-once-then-dot
+        // scheme with the batch loop peeled, so the single activation
+        // row stays hot and per-row loop bookkeeping disappears.
+        // Identical FP operation order to the general path below.
+        for o in 0..out_dim {
+            let p = m.param_of_row(o);
+            gemv::unpack_row_qz(m.row_bytes(o), in_dim, m.bits, p.zero_point, &mut scratch.qz);
+            let acc = gemv::dot_f32(x, &scratch.qz[..in_dim]);
+            y[o] += (acc as f64 / p.scale) as f32;
+        }
+        return;
     }
     for o in 0..out_dim {
         let p = m.param_of_row(o);
@@ -461,6 +488,27 @@ mod tests {
         assert!(PackedLinear::dense(Tensor::from_vec(vec![1.0, 2.0])).is_err());
         let q3 = quantize_per_tensor(&Tensor::zeros(&[2, 2, 2]), Bits::Int4);
         assert!(PackedMatrix::from_quantized(&q3).is_err());
+    }
+
+    #[test]
+    fn single_row_fast_path_matches_batched() {
+        // The seq==1 decode path must produce the same outputs as the
+        // same row pushed through the batched loop.
+        let w = random_tensor(21, 11, 17, 0.3);
+        let x = random_tensor(22, 3, 17, 1.0);
+        for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+            let q = quantize_per_channel(&w, bits);
+            let lin = PackedLinear::from_planes(vec![PackedMatrix::from_quantized(&q).unwrap()])
+                .unwrap();
+            let mut scratch = KernelScratch::with_capacity(17);
+            let mut batched = vec![0.0f32; 3 * 11];
+            gemm(&mut batched, x.data(), 3, &lin, &mut scratch);
+            for t in 0..3 {
+                let mut single = vec![0.0f32; 11];
+                gemv(&mut single, x.row(t), &lin, &mut scratch);
+                assert_eq!(&single[..], &batched[t * 11..(t + 1) * 11], "{bits:?} row {t}");
+            }
+        }
     }
 
     #[test]

@@ -59,6 +59,11 @@ fn app() -> App {
                 .opt("bits", "4", "bit width")
                 .opt("engine", "packed", "execution engine: packed|reference (CPU) or pjrt")
                 .opt("requests", "200", "number of requests to fire")
+                .opt("max-batch", "16", "executor batch size (CPU engines)")
+                .opt("max-wait-ms", "5", "batcher fill deadline in milliseconds")
+                .opt("workers", "0", "executor pool workers, CPU engines (0 = all cores)")
+                .opt("prefix-cache", "32", "prompt-prefix LRU capacity (0 = disabled)")
+                .flag("full-recompute", "score via full prompt+option recompute (baseline)")
                 .opt("threads", "0", "pipeline worker threads (0 = all cores)")
                 .opt("log", "info", "log level"),
         )
@@ -153,6 +158,13 @@ fn cmd_eval(m: &Matches) -> Result<()> {
     let problems = coord.load_problems(&spec)?;
 
     let fp = coord.evaluate_fp(&ck, &problems, spec.use_runtime)?;
+    if fp.n_errors > 0 {
+        log_error!(
+            "FP arm: {} problem(s) failed to score (first: {})",
+            fp.n_errors,
+            fp.first_error.as_deref().unwrap_or("unknown")
+        );
+    }
     let mut table = Table::new(&["arm", "accuracy", "d vs FP", "quantize", "packed"]);
     table.row(&[
         "Original (FP32)".to_string(),
@@ -206,7 +218,15 @@ fn cmd_serve(m: &Matches) -> Result<()> {
         },
         other => bail!("unknown engine '{other}' (use packed|reference|pjrt)"),
     };
-    let server = Server::start(backend, ServerConfig::default())?;
+    let config = ServerConfig {
+        max_wait: m.get_ms("max-wait-ms")?,
+        max_batch: m.get_usize("max-batch")?,
+        workers: m.get_usize("workers")?,
+        prefix_cache: m.get_usize("prefix-cache")?,
+        reuse_prefix: !m.flag("full-recompute"),
+        ..Default::default()
+    };
+    let server = Server::start(backend, config)?;
     let t0 = Instant::now();
     let mut rx = Vec::new();
     for p in problems.iter().take(n_requests) {
@@ -220,7 +240,7 @@ fn cmd_serve(m: &Matches) -> Result<()> {
         if resp.result.is_correct() {
             correct += 1;
         }
-        lat.push(resp.queue_time.as_secs_f64() * 1e3);
+        lat.push(resp.latency().as_secs_f64() * 1e3);
         batch_sizes.push(resp.batch_size as f64);
     }
     let wall = t0.elapsed();

@@ -1,0 +1,343 @@
+//! Resumable decode state: the per-layer K/V caches behind
+//! `forward::forward_extend`, plus the bounded LRU prompt-prefix cache
+//! the serving path builds on its snapshots.
+//!
+//! A [`DecodeState`] makes the transformer forward *incremental*: the
+//! K/V rows of every position computed so far persist across calls, so
+//! extending a sequence by `m` tokens costs `m` position-forwards
+//! instead of re-running the whole prefix. Rollback is O(1) — the state
+//! keeps a logical length and truncating it simply rewinds that cursor
+//! (the cached rows are overwritten by the next extension) — which is
+//! what lets MCQ scoring replay N option continuations against one
+//! computed prompt.
+//!
+//! [`PrefixCache`] extends the reuse *across requests*: a bounded LRU
+//! from prompt token ids to a compact [`DecodeState`] snapshot plus the
+//! prompt's last-position logits row. Concurrent server workers that
+//! score problems sharing a prompt copy the cached K/V instead of
+//! recomputing it. Entries are `Arc`-shared so a lookup is a pointer
+//! clone under the lock; the K/V payload is copied outside it.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use super::PicoLlamaConfig;
+
+/// Per-layer K/V cache with O(1) truncation (snapshot/rollback).
+///
+/// Layout: one `Vec<f32>` of `[len, kv_dim]` rows per layer. The
+/// physical vectors only grow; `len` is the logical number of cached
+/// positions and everything beyond it is dead until overwritten by the
+/// next [`append_layer`](DecodeState::append_layer).
+#[derive(Clone, Debug)]
+pub struct DecodeState {
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    kv_dim: usize,
+    max_seq: usize,
+    len: usize,
+}
+
+impl DecodeState {
+    /// Empty state for a model config. Buffers grow lazily up to
+    /// `max_seq` positions, so constructing one is allocation-light.
+    pub fn new(cfg: &PicoLlamaConfig) -> DecodeState {
+        DecodeState {
+            k: vec![Vec::new(); cfg.n_layers],
+            v: vec![Vec::new(); cfg.n_layers],
+            kv_dim: cfg.kv_dim(),
+            max_seq: cfg.max_seq,
+            len: 0,
+        }
+    }
+
+    /// Number of cached positions.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Maximum position capacity (the model's `max_seq`).
+    pub fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    /// Rewind to `len` cached positions (O(1): later rows stay in the
+    /// buffers until the next extension overwrites them). This is the
+    /// rollback half of snapshot/rollback scoring.
+    pub fn truncate(&mut self, len: usize) {
+        assert!(
+            len <= self.len,
+            "truncate to {len} but only {} positions cached",
+            self.len
+        );
+        self.len = len;
+    }
+
+    /// Drop every cached position.
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+
+    /// Bytes of live K/V payload (cache accounting).
+    pub fn kv_bytes(&self) -> usize {
+        2 * self.k.len() * self.len * self.kv_dim * 4
+    }
+
+    /// Compact copy of the first `len` positions (the snapshot half of
+    /// snapshot/rollback; what the prefix cache stores).
+    pub fn snapshot(&self, len: usize) -> DecodeState {
+        assert!(len <= self.len, "snapshot of {len} > cached {}", self.len);
+        let n = len * self.kv_dim;
+        DecodeState {
+            k: self.k.iter().map(|kl| kl[..n].to_vec()).collect(),
+            v: self.v.iter().map(|vl| vl[..n].to_vec()).collect(),
+            kv_dim: self.kv_dim,
+            max_seq: self.max_seq,
+            len,
+        }
+    }
+
+    /// Overwrite this state with `other`'s cached positions, reusing
+    /// this state's allocations (the cache-hit restore path).
+    pub fn copy_from(&mut self, other: &DecodeState) {
+        assert_eq!(self.kv_dim, other.kv_dim, "kv_dim mismatch");
+        assert_eq!(self.k.len(), other.k.len(), "layer count mismatch");
+        let n = other.len * other.kv_dim;
+        for (dst, src) in self.k.iter_mut().zip(&other.k) {
+            dst.clear();
+            dst.extend_from_slice(&src[..n]);
+        }
+        for (dst, src) in self.v.iter_mut().zip(&other.v) {
+            dst.clear();
+            dst.extend_from_slice(&src[..n]);
+        }
+        self.len = other.len;
+    }
+
+    /// Write one layer's K/V rows for positions `start..start+m` (the
+    /// chunk being extended). Overwrites anything previously cached at
+    /// or after `start`; the caller commits the new logical length once
+    /// every layer has been written.
+    pub(crate) fn append_layer(&mut self, l: usize, start: usize, k: &[f32], v: &[f32]) {
+        debug_assert_eq!(k.len(), v.len());
+        debug_assert_eq!(k.len() % self.kv_dim, 0);
+        let base = start * self.kv_dim;
+        debug_assert!(base <= self.k[l].len(), "append past cached prefix");
+        self.k[l].truncate(base);
+        self.k[l].extend_from_slice(k);
+        self.v[l].truncate(base);
+        self.v[l].extend_from_slice(v);
+    }
+
+    /// One layer's cached K/V for positions `0..upto` (row-major
+    /// `[upto, kv_dim]` slices).
+    pub(crate) fn layer_kv(&self, l: usize, upto: usize) -> (&[f32], &[f32]) {
+        let n = upto * self.kv_dim;
+        (&self.k[l][..n], &self.v[l][..n])
+    }
+
+    /// Commit the logical length after an extension wrote all layers.
+    pub(crate) fn commit(&mut self, len: usize) {
+        debug_assert!(len <= self.max_seq);
+        self.len = len;
+    }
+}
+
+/// One cached prompt: its decode state (exactly `prompt.len()` cached
+/// positions) and the prompt's last-position logits row — everything a
+/// worker needs to score option continuations without re-running the
+/// prompt.
+#[derive(Clone, Debug)]
+pub struct PrefixEntry {
+    pub state: DecodeState,
+    pub last_row: Vec<f32>,
+}
+
+impl PrefixEntry {
+    pub fn new(state: DecodeState, last_row: Vec<f32>) -> PrefixEntry {
+        PrefixEntry { state, last_row }
+    }
+}
+
+/// Bounded LRU from prompt token ids to [`PrefixEntry`]. Capacity 0
+/// disables the cache (every lookup misses, inserts are dropped), so
+/// callers never need a separate on/off switch.
+#[derive(Debug)]
+pub struct PrefixCache {
+    cap: usize,
+    tick: u64,
+    map: BTreeMap<Vec<usize>, (u64, Arc<PrefixEntry>)>,
+    hits: u64,
+    misses: u64,
+}
+
+impl PrefixCache {
+    pub fn new(cap: usize) -> PrefixCache {
+        PrefixCache {
+            cap,
+            tick: 0,
+            map: BTreeMap::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Look up a prompt, refreshing its recency on hit.
+    pub fn get(&mut self, prompt: &[usize]) -> Option<Arc<PrefixEntry>> {
+        if self.cap == 0 {
+            return None;
+        }
+        match self.map.get_mut(prompt) {
+            Some(slot) => {
+                self.tick += 1;
+                slot.0 = self.tick;
+                self.hits += 1;
+                Some(Arc::clone(&slot.1))
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) a prompt's entry, evicting the
+    /// least-recently-used entry when at capacity.
+    pub fn insert(&mut self, prompt: Vec<usize>, entry: PrefixEntry) {
+        if self.cap == 0 {
+            return;
+        }
+        if !self.map.contains_key(&prompt) && self.map.len() >= self.cap {
+            let oldest = self.map.iter().min_by_key(|(_, (t, _))| *t).map(|(k, _)| k.clone());
+            if let Some(key) = oldest {
+                self.map.remove(&key);
+            }
+        }
+        self.tick += 1;
+        self.map.insert(prompt, (self.tick, Arc::new(entry)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> PicoLlamaConfig {
+        PicoLlamaConfig::test()
+    }
+
+    fn state_with(cfg: &PicoLlamaConfig, positions: usize, fill: f32) -> DecodeState {
+        let mut st = DecodeState::new(cfg);
+        let kvd = cfg.kv_dim();
+        for l in 0..cfg.n_layers {
+            let rows = vec![fill; positions * kvd];
+            st.append_layer(l, 0, &rows, &rows);
+        }
+        st.commit(positions);
+        st
+    }
+
+    #[test]
+    fn truncate_is_logical_and_reextendable() {
+        let cfg = cfg();
+        let kvd = cfg.kv_dim();
+        let mut st = state_with(&cfg, 5, 1.0);
+        assert_eq!(st.len(), 5);
+        assert_eq!(st.kv_bytes(), 2 * cfg.n_layers * 5 * kvd * 4);
+        st.truncate(2);
+        assert_eq!(st.len(), 2);
+        // Re-extend over the truncated tail with different values.
+        for l in 0..cfg.n_layers {
+            let rows = vec![7.0; 3 * kvd];
+            st.append_layer(l, 2, &rows, &rows);
+        }
+        st.commit(5);
+        let (k, _) = st.layer_kv(0, 5);
+        assert_eq!(k[0], 1.0, "prefix preserved");
+        assert_eq!(k[2 * kvd], 7.0, "tail overwritten");
+    }
+
+    #[test]
+    fn snapshot_and_copy_from_roundtrip() {
+        let cfg = cfg();
+        let st = state_with(&cfg, 4, 3.0);
+        let snap = st.snapshot(3);
+        assert_eq!(snap.len(), 3);
+        let mut other = state_with(&cfg, 6, 9.0);
+        other.copy_from(&snap);
+        assert_eq!(other.len(), 3);
+        let (k, v) = other.layer_kv(1, 3);
+        assert!(k.iter().chain(v).all(|&x| x == 3.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "truncate")]
+    fn truncate_beyond_len_panics() {
+        let mut st = DecodeState::new(&cfg());
+        st.truncate(1);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let cfg = cfg();
+        let entry = || PrefixEntry::new(DecodeState::new(&cfg), vec![0.0]);
+        let mut cache = PrefixCache::new(2);
+        cache.insert(vec![1], entry());
+        cache.insert(vec![2], entry());
+        assert!(cache.get(&[1]).is_some()); // refresh [1]; [2] is now LRU
+        cache.insert(vec![3], entry());
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(&[2]).is_none(), "LRU entry evicted");
+        assert!(cache.get(&[1]).is_some());
+        assert!(cache.get(&[3]).is_some());
+        assert_eq!(cache.hits(), 3);
+        assert_eq!(cache.misses(), 1);
+    }
+
+    #[test]
+    fn zero_capacity_disables_cache() {
+        let cfg = cfg();
+        let mut cache = PrefixCache::new(0);
+        cache.insert(vec![1], PrefixEntry::new(DecodeState::new(&cfg), vec![]));
+        assert!(cache.get(&[1]).is_none());
+        assert!(cache.is_empty());
+        assert_eq!(cache.capacity(), 0);
+    }
+
+    #[test]
+    fn reinsert_refreshes_existing_key_without_evicting() {
+        let cfg = cfg();
+        let entry = |x: f32| PrefixEntry::new(DecodeState::new(&cfg), vec![x]);
+        let mut cache = PrefixCache::new(2);
+        cache.insert(vec![1], entry(1.0));
+        cache.insert(vec![2], entry(2.0));
+        cache.insert(vec![1], entry(10.0)); // refresh, no eviction
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.get(&[1]).unwrap().last_row, vec![10.0]);
+        assert!(cache.get(&[2]).is_some());
+    }
+}

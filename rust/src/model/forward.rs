@@ -1,4 +1,4 @@
-//! CPU reference forward pass of picollama.
+//! CPU reference forward pass of picollama — now resumable.
 //!
 //! This is the runtime-independent evaluation path: it runs the exact
 //! Llama-3 computation (RMSNorm → RoPE GQA attention → SwiGLU, residual
@@ -11,16 +11,30 @@
 //! * cross-validation of the PJRT/HLO path (`runtime` executes the same
 //!   checkpoint; logits must agree to FP tolerance).
 //!
+//! The transformer loop is built around a resumable
+//! [`DecodeState`](crate::model::decode::DecodeState): per-layer K/V
+//! persists across calls and [`forward_extend`] computes only the
+//! appended positions, attending over the cached prefix (RoPE applied
+//! at absolute positions). A whole-sequence forward is simply an extend
+//! from position 0, so the full-sequence path and the incremental path
+//! cannot drift — they are the same loop. Both execution engines (this
+//! FP reference via [`CkOps`] and the packed-integer engine via
+//! [`ForwardOps`]) share it.
+//!
 //! Weight convention matches the JAX model: all linear weights are
 //! `[out, in]` and apply as `y = x · Wᵀ`.
 
+use crate::model::decode::DecodeState;
 use crate::tensor::Tensor;
 
 use super::{Checkpoint, PicoLlamaConfig};
 use anyhow::Result;
 
 /// Scratch buffers reused across layers/positions to keep the forward
-/// allocation-light (matters when scoring 4×1165 sequences).
+/// allocation-light (matters when scoring 4×1165 sequences). Sized for
+/// a chunk of `max_seq` new positions at construction; every buffer
+/// grows on demand, so a `Workspace` can be built small and reused for
+/// any request up to the model's `max_seq`.
 pub struct Workspace {
     x: Vec<f32>,        // [seq, d]
     xn: Vec<f32>,       // [seq, d]
@@ -28,7 +42,7 @@ pub struct Workspace {
     k: Vec<f32>,        // [seq, kv_dim]
     v: Vec<f32>,        // [seq, kv_dim]
     attn_out: Vec<f32>, // [seq, d]
-    scores: Vec<f32>,   // [seq]
+    scores: Vec<f32>,   // [total] — spans cached + new positions
     gate: Vec<f32>,     // [seq, d_ff]
     up: Vec<f32>,       // [seq, d_ff]
     mlp_out: Vec<f32>,  // [seq, d]
@@ -50,6 +64,27 @@ impl Workspace {
             mlp_out: vec![0.0; max_seq * d],
         }
     }
+
+    /// Grow buffers to hold a `seq`-position chunk attending over
+    /// `total` positions. No-op when already large enough.
+    fn ensure(&mut self, cfg: &PicoLlamaConfig, seq: usize, total: usize) {
+        let grow = |b: &mut Vec<f32>, n: usize| {
+            if b.len() < n {
+                b.resize(n, 0.0);
+            }
+        };
+        let d = cfg.d_model;
+        grow(&mut self.x, seq * d);
+        grow(&mut self.xn, seq * d);
+        grow(&mut self.q, seq * d);
+        grow(&mut self.k, seq * cfg.kv_dim());
+        grow(&mut self.v, seq * cfg.kv_dim());
+        grow(&mut self.attn_out, seq * d);
+        grow(&mut self.scores, total);
+        grow(&mut self.gate, seq * cfg.d_ff);
+        grow(&mut self.up, seq * cfg.d_ff);
+        grow(&mut self.mlp_out, seq * d);
+    }
 }
 
 /// RMSNorm: x · γ / rms(x).
@@ -65,16 +100,17 @@ fn rmsnorm(out: &mut [f32], x: &[f32], gamma: &[f32], eps: f64, seq: usize, d: u
     }
 }
 
-/// In-place rotary position embedding over `[seq, n_heads*head_dim]`,
-/// pairing dimension (2i, 2i+1) within each head — matches the JAX model.
-fn rope(x: &mut [f32], seq: usize, n_heads: usize, head_dim: usize, theta: f64) {
+/// In-place rotary position embedding over `[seq, n_heads*head_dim]`
+/// where row `t` sits at absolute position `start + t`, pairing
+/// dimension (2i, 2i+1) within each head — matches the JAX model.
+fn rope_from(x: &mut [f32], seq: usize, start: usize, n_heads: usize, head_dim: usize, theta: f64) {
     let half = head_dim / 2;
     for t in 0..seq {
         for h in 0..n_heads {
             let base = t * n_heads * head_dim + h * head_dim;
             for i in 0..half {
                 let freq = 1.0 / theta.powf(2.0 * i as f64 / head_dim as f64);
-                let ang = t as f64 * freq;
+                let ang = (start + t) as f64 * freq;
                 let (sin, cos) = ang.sin_cos();
                 let a = x[base + 2 * i] as f64;
                 let b = x[base + 2 * i + 1] as f64;
@@ -83,6 +119,12 @@ fn rope(x: &mut [f32], seq: usize, n_heads: usize, head_dim: usize, theta: f64) 
             }
         }
     }
+}
+
+/// RoPE from position 0 (whole-sequence form, kept for tests/tools).
+#[cfg(test)]
+fn rope(x: &mut [f32], seq: usize, n_heads: usize, head_dim: usize, theta: f64) {
+    rope_from(x, seq, 0, n_heads, head_dim, theta);
 }
 
 /// y[seq, out] = x[seq, in] · W[out, in]ᵀ.
@@ -137,9 +179,9 @@ fn softmax(xs: &mut [f32]) {
 /// The per-model primitives the shared transformer loop is generic
 /// over. Implemented by the FP reference (checkpoint tensors, below)
 /// and by the packed-integer engine ([`crate::model::packed`]); the
-/// RMSNorm/RoPE/attention/SwiGLU math in [`forward_ops`] is shared, so
-/// both engines execute the *same* f32 activation path and differ only
-/// in how linear layers and embedding rows are produced.
+/// RMSNorm/RoPE/attention/SwiGLU math in [`forward_extend`] is shared,
+/// so both engines execute the *same* f32 activation path and differ
+/// only in how linear layers and embedding rows are produced.
 pub(crate) trait ForwardOps {
     fn config(&self) -> &PicoLlamaConfig;
     /// Write the embedding row of `tok` into `out` (`[d_model]`).
@@ -154,16 +196,23 @@ pub(crate) trait ForwardOps {
 
 /// Full forward: token ids → logits `[seq, vocab]`.
 ///
-/// O(seq²·d) attention without KV caching — fine for the ≤64-token MCQ
-/// sequences this crate evaluates.
+/// Runs as a [`forward_extend`] from position 0 over a fresh decode
+/// state — fine for the ≤64-token MCQ sequences this crate evaluates;
+/// hot paths hold a [`DecodeState`] and extend instead of recomputing.
 pub fn forward(ck: &Checkpoint, tokens: &[usize], ws: &mut Workspace) -> Result<Tensor> {
     forward_tapped(ck, tokens, ws, &mut |_, _, _| {})
 }
 
-/// Reference ops over an FP checkpoint, with the activation tap.
-struct CkOps<'a, 'b> {
+/// Reference ops over an FP checkpoint, with an optional activation tap.
+pub(crate) struct CkOps<'a, 'b> {
     ck: &'a Checkpoint,
-    tap: &'b mut dyn FnMut(&str, &[f32], usize),
+    tap: Option<&'b mut dyn FnMut(&str, &[f32], usize)>,
+}
+
+impl<'a> CkOps<'a, 'static> {
+    pub(crate) fn new(ck: &'a Checkpoint) -> CkOps<'a, 'static> {
+        CkOps { ck, tap: None }
+    }
 }
 
 impl ForwardOps for CkOps<'_, '_> {
@@ -177,7 +226,9 @@ impl ForwardOps for CkOps<'_, '_> {
     }
 
     fn linear(&mut self, name: &str, y: &mut [f32], x: &[f32], seq: usize) -> Result<()> {
-        (self.tap)(name, x, seq);
+        if let Some(tap) = self.tap.as_mut() {
+            tap(name, x, seq);
+        }
         linear(y, x, self.ck.get(name)?, seq);
         Ok(())
     }
@@ -206,26 +257,76 @@ pub fn forward_tapped(
     ws: &mut Workspace,
     tap: &mut dyn FnMut(&str, &[f32], usize),
 ) -> Result<Tensor> {
-    forward_ops(&mut CkOps { ck, tap }, tokens, ws)
+    forward_ops(&mut CkOps { ck, tap: Some(tap) }, tokens, ws)
 }
 
-/// The shared transformer loop: embedding → n_layers × (RMSNorm → RoPE
-/// GQA attention → SwiGLU, residual streams) → final norm → LM head,
-/// generic over how weights execute ([`ForwardOps`]).
+/// Whole-sequence forward over a fresh decode state (an extend from
+/// position 0) — the shape every pre-DecodeState caller expects.
 pub(crate) fn forward_ops<O: ForwardOps>(
     ops: &mut O,
     tokens: &[usize],
     ws: &mut Workspace,
 ) -> Result<Tensor> {
+    let mut state = DecodeState::new(ops.config());
+    forward_extend(ops, tokens, 0, ws, &mut state)
+}
+
+/// The shared resumable transformer loop: compute logits for `tokens`
+/// appended at absolute position `start_pos`, attending over the K/V
+/// cached in `state` for positions `0..start_pos` plus the chunk
+/// itself. Returns logits `[tokens.len(), vocab]` for the *new*
+/// positions only.
+///
+/// `start_pos` may rewind a longer state (`start_pos <= state.len()`):
+/// the state is truncated first, which is how MCQ scoring rolls back to
+/// the prompt between option continuations. An extend from 0 over an
+/// empty state is exactly the whole-sequence forward — same loop, same
+/// FP operation order — so full and incremental execution agree
+/// bit-for-bit (property-tested in `rust/tests/decode_state.rs`).
+pub(crate) fn forward_extend<O: ForwardOps>(
+    ops: &mut O,
+    tokens: &[usize],
+    start_pos: usize,
+    ws: &mut Workspace,
+    state: &mut DecodeState,
+) -> Result<Tensor> {
+    forward_extend_rows(ops, tokens, start_pos, ws, state, false)
+}
+
+/// [`forward_extend`] with an optional last-row-only LM head: when
+/// `last_only` is set, the final norm + vocab projection (the single
+/// largest matmul) run for just the chunk's last position and the
+/// returned logits are `[1, vocab]`. The transformer layers are
+/// unchanged — K/V for every chunk position is still cached — and the
+/// last row is bit-identical to the full projection's last row (the
+/// per-row math is position-independent). This is the prompt-pass hot
+/// path: scoring only ever needs the prompt's final logits.
+fn forward_extend_rows<O: ForwardOps>(
+    ops: &mut O,
+    tokens: &[usize],
+    start_pos: usize,
+    ws: &mut Workspace,
+    state: &mut DecodeState,
+    last_only: bool,
+) -> Result<Tensor> {
     let cfg = ops.config().clone();
     let seq = tokens.len();
-    assert!(seq > 0 && seq <= cfg.max_seq, "seq {seq} out of range");
+    let total = start_pos + seq;
+    assert!(seq > 0, "empty token chunk");
+    assert!(total <= cfg.max_seq, "sequence {total} exceeds max_seq {}", cfg.max_seq);
+    assert!(
+        start_pos <= state.len(),
+        "extend at position {start_pos} but only {} positions cached",
+        state.len()
+    );
+    state.truncate(start_pos);
     let d = cfg.d_model;
     let hd = cfg.head_dim();
     let kvd = cfg.kv_dim();
     let groups = cfg.n_heads / cfg.n_kv_heads;
+    ws.ensure(&cfg, seq, total);
 
-    // Embedding lookup.
+    // Embedding lookup for the new positions.
     for (t, &tok) in tokens.iter().enumerate() {
         assert!(tok < cfg.vocab, "token {tok} out of vocab");
         ops.embed(tok, &mut ws.x[t * d..(t + 1) * d])?;
@@ -241,26 +342,31 @@ pub(crate) fn forward_ops<O: ForwardOps>(
         ops.linear(&format!("{pre}.attn.wk"), &mut ws.k[..seq * kvd], &ws.xn[..seq * d], seq)?;
         ops.linear(&format!("{pre}.attn.wv"), &mut ws.v[..seq * kvd], &ws.xn[..seq * d], seq)?;
 
-        rope(&mut ws.q[..seq * d], seq, cfg.n_heads, hd, cfg.rope_theta);
-        rope(&mut ws.k[..seq * kvd], seq, cfg.n_kv_heads, hd, cfg.rope_theta);
+        rope_from(&mut ws.q[..seq * d], seq, start_pos, cfg.n_heads, hd, cfg.rope_theta);
+        rope_from(&mut ws.k[..seq * kvd], seq, start_pos, cfg.n_kv_heads, hd, cfg.rope_theta);
 
-        // Causal attention per head.
+        // Commit the chunk's K/V, then attend over every cached
+        // position (prefix + chunk) — causal per new position.
+        state.append_layer(l, start_pos, &ws.k[..seq * kvd], &ws.v[..seq * kvd]);
+        let (cached_k, cached_v) = state.layer_kv(l, total);
+
         let scale = 1.0 / (hd as f64).sqrt();
         for h in 0..cfg.n_heads {
             let kvh = h / groups;
             for t in 0..seq {
+                let abs = start_pos + t;
                 let qv = &ws.q[t * d + h * hd..t * d + (h + 1) * hd];
-                for s in 0..=t {
-                    let kv = &ws.k[s * kvd + kvh * hd..s * kvd + (kvh + 1) * hd];
+                for s in 0..=abs {
+                    let kv = &cached_k[s * kvd + kvh * hd..s * kvd + (kvh + 1) * hd];
                     let dot: f32 = qv.iter().zip(kv).map(|(&a, &b)| a * b).sum();
                     ws.scores[s] = (dot as f64 * scale) as f32;
                 }
-                softmax(&mut ws.scores[..=t]);
+                softmax(&mut ws.scores[..=abs]);
                 let out = &mut ws.attn_out[t * d + h * hd..t * d + (h + 1) * hd];
                 out.iter_mut().for_each(|v| *v = 0.0);
-                for s in 0..=t {
+                for s in 0..=abs {
                     let w = ws.scores[s];
-                    let vv = &ws.v[s * kvd + kvh * hd..s * kvd + (kvh + 1) * hd];
+                    let vv = &cached_v[s * kvd + kvh * hd..s * kvd + (kvh + 1) * hd];
                     for i in 0..hd {
                         out[i] += w * vv[i];
                     }
@@ -296,13 +402,95 @@ pub(crate) fn forward_ops<O: ForwardOps>(
             ws.x[i] += ws.mlp_out[i];
         }
     }
+    state.commit(total);
 
-    // Final norm + LM head.
+    // Final norm + LM head — all new positions, or just the last one.
     let gamma = ops.fp("norm.final")?;
+    if last_only {
+        let t0 = (seq - 1) * d;
+        rmsnorm(&mut ws.xn[..d], &ws.x[t0..t0 + d], gamma.data(), cfg.norm_eps, 1, d);
+        let mut logits = vec![0.0f32; cfg.vocab];
+        ops.lm_head(&mut logits, &ws.xn[..d], 1)?;
+        return Ok(Tensor::new(&[1, cfg.vocab], logits));
+    }
     rmsnorm(&mut ws.xn, &ws.x, gamma.data(), cfg.norm_eps, seq, d);
     let mut logits = vec![0.0f32; seq * cfg.vocab];
     ops.lm_head(&mut logits, &ws.xn[..seq * d], seq)?;
     Ok(Tensor::new(&[seq, cfg.vocab], logits))
+}
+
+/// Reference-engine [`forward_extend`]: logits for `tokens` appended at
+/// `start_pos` over the cached prefix in `state` (the packed twin is
+/// [`crate::model::packed::PackedModel::forward_extend`]).
+pub fn forward_extend_ck(
+    ck: &Checkpoint,
+    tokens: &[usize],
+    start_pos: usize,
+    ws: &mut Workspace,
+    state: &mut DecodeState,
+) -> Result<Tensor> {
+    forward_extend(&mut CkOps::new(ck), tokens, start_pos, ws, state)
+}
+
+/// One prompt pass: reset the state and extend with `prompt` from
+/// position 0, returning the last position's logits row (what MCQ
+/// scoring and the prompt-prefix cache need). The LM head runs for the
+/// last position only — the earlier rows' vocab projections are never
+/// computed.
+pub(crate) fn prompt_pass<O: ForwardOps>(
+    ops: &mut O,
+    prompt: &[usize],
+    ws: &mut Workspace,
+    state: &mut DecodeState,
+) -> Result<Vec<f32>> {
+    state.reset();
+    let logits = forward_extend_rows(ops, prompt, 0, ws, state, true)?;
+    Ok(logits.row(0).to_vec())
+}
+
+/// Teacher-forced log-likelihood of every option continuation given a
+/// state positioned at the prompt and the prompt's last logits row.
+/// Each option costs one extension of `len−1` positions (single-token
+/// options cost zero extra forwards); the state is rolled back to the
+/// prompt between options.
+pub(crate) fn option_logprobs<O: ForwardOps>(
+    ops: &mut O,
+    prompt_len: usize,
+    last_row: &[f32],
+    options: &[Vec<usize>],
+    ws: &mut Workspace,
+    state: &mut DecodeState,
+) -> Result<Vec<f64>> {
+    let mut out = Vec::with_capacity(options.len());
+    for opt in options {
+        anyhow::ensure!(!opt.is_empty(), "empty option continuation");
+        let mut lp = log_prob(last_row, opt[0]);
+        if opt.len() > 1 {
+            // Rollback to the prompt is implicit: extending at
+            // `prompt_len` truncates the previous option's tail.
+            let logits = forward_extend(ops, &opt[..opt.len() - 1], prompt_len, ws, state)?;
+            for (i, &tok) in opt[1..].iter().enumerate() {
+                lp += log_prob(logits.row(i), tok);
+            }
+        }
+        out.push(lp);
+    }
+    Ok(out)
+}
+
+/// Prefix-reuse MCQ scoring on the reference engine: one prompt pass +
+/// one short extension per option (vs the seed's N full `prompt+option`
+/// recomputes — see [`continuation_logprob`] for that oracle path).
+pub fn score_options(
+    ck: &Checkpoint,
+    prompt: &[usize],
+    options: &[Vec<usize>],
+    ws: &mut Workspace,
+    state: &mut DecodeState,
+) -> Result<Vec<f64>> {
+    let mut ops = CkOps::new(ck);
+    let last = prompt_pass(&mut ops, prompt, ws, state)?;
+    option_logprobs(&mut ops, prompt.len(), &last, options, ws, state)
 }
 
 /// Log-softmax of one logits row, returning log P(token) for `tok`.
@@ -334,8 +522,9 @@ pub fn continuation_logprob_from_logits(
 }
 
 /// Sum of log-probs of `continuation` tokens given `prompt` (teacher-
-/// forced). The MCQ scoring rule (same as Meta's eval harness: pick the
-/// option with the highest likelihood).
+/// forced) via a full `prompt+continuation` recompute. This is the seed
+/// scoring rule kept as the oracle for the prefix-reuse path
+/// ([`score_options`]); the property tests pin the two within 1e-4.
 pub fn continuation_logprob(
     ck: &Checkpoint,
     prompt: &[usize],
@@ -350,28 +539,36 @@ pub fn continuation_logprob(
 }
 
 /// Greedy generation (used by the INT2 "random characters" probe, E11).
+/// Decodes incrementally on a [`DecodeState`]: the prompt is forwarded
+/// once, then each new token costs one position-extend instead of the
+/// seed's full-sequence recompute (O(n·seq) vs O(n²·seq) linears).
 pub fn generate_greedy(
     ck: &Checkpoint,
     prompt: &[usize],
     n_new: usize,
     ws: &mut Workspace,
 ) -> Result<Vec<usize>> {
-    let mut seq = prompt.to_vec();
-    for _ in 0..n_new {
-        if seq.len() >= ck.config.max_seq {
-            break;
-        }
-        let logits = forward(ck, &seq, ws)?;
-        let last = logits.row(seq.len() - 1);
+    let mut ops = CkOps::new(ck);
+    let mut state = DecodeState::new(&ck.config);
+    if n_new == 0 || prompt.len() >= ck.config.max_seq {
+        return Ok(Vec::new());
+    }
+    let mut last = prompt_pass(&mut ops, prompt, ws, &mut state)?;
+    let mut out = Vec::with_capacity(n_new);
+    loop {
         let next = last
             .iter()
             .enumerate()
             .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
             .map(|(i, _)| i)
             .unwrap();
-        seq.push(next);
+        out.push(next);
+        if out.len() == n_new || prompt.len() + out.len() >= ck.config.max_seq {
+            return Ok(out);
+        }
+        let logits = forward_extend(&mut ops, &[next], state.len(), ws, &mut state)?;
+        last = logits.row(0).to_vec();
     }
-    Ok(seq[prompt.len()..].to_vec())
 }
 
 #[cfg(test)]
@@ -417,6 +614,73 @@ mod tests {
     }
 
     #[test]
+    fn extend_matches_full_forward_exactly() {
+        // Chunked extension through a decode state is the same loop as
+        // the whole-sequence forward — logits must agree bit-for-bit.
+        let ck = test_ck();
+        let toks = [3usize, 1, 4, 1, 5, 9, 2, 6];
+        let mut ws = Workspace::new(&ck.config, 16);
+        let full = forward(&ck, &toks, &mut ws).unwrap();
+        for split in [1usize, 3, 7] {
+            let mut state = DecodeState::new(&ck.config);
+            let head = forward_extend_ck(&ck, &toks[..split], 0, &mut ws, &mut state).unwrap();
+            let tail = forward_extend_ck(&ck, &toks[split..], split, &mut ws, &mut state).unwrap();
+            assert_eq!(state.len(), toks.len());
+            for t in 0..split {
+                assert_eq!(head.row(t), full.row(t), "split {split} head row {t}");
+            }
+            for t in split..toks.len() {
+                assert_eq!(tail.row(t - split), full.row(t), "split {split} tail row {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn extend_rollback_replays_identically() {
+        // Truncating the state back to the prompt and extending with a
+        // different continuation matches a fresh computation.
+        let ck = test_ck();
+        let mut ws = Workspace::new(&ck.config, 16);
+        let mut state = DecodeState::new(&ck.config);
+        forward_extend_ck(&ck, &[5, 9, 3], 0, &mut ws, &mut state).unwrap();
+        let a1 = forward_extend_ck(&ck, &[7, 2], 3, &mut ws, &mut state).unwrap();
+        // Roll back (implicit truncate) and replay a different branch.
+        let b = forward_extend_ck(&ck, &[8], 3, &mut ws, &mut state).unwrap();
+        let a2 = forward_extend_ck(&ck, &[7, 2], 3, &mut ws, &mut state).unwrap();
+        assert_eq!(a1, a2, "rollback must be lossless");
+        let fresh = forward(&ck, &[5, 9, 3, 8], &mut ws).unwrap();
+        assert_eq!(b.row(0), fresh.row(3), "branch after rollback");
+    }
+
+    #[test]
+    fn prompt_pass_matches_full_forward_last_row() {
+        // The last-row-only LM head must reproduce the full
+        // projection's last row exactly.
+        let ck = test_ck();
+        let mut ws = Workspace::new(&ck.config, 16);
+        let toks = [1usize, 5, 9, 2, 7];
+        let full = forward(&ck, &toks, &mut ws).unwrap();
+        let mut state = DecodeState::new(&ck.config);
+        let last = prompt_pass(&mut CkOps::new(&ck), &toks, &mut ws, &mut state).unwrap();
+        assert_eq!(&last[..], full.row(toks.len() - 1));
+        assert_eq!(state.len(), toks.len(), "prompt pass caches every position");
+    }
+
+    #[test]
+    fn score_options_matches_full_recompute() {
+        let ck = test_ck();
+        let mut ws = Workspace::new(&ck.config, 16);
+        let mut state = DecodeState::new(&ck.config);
+        let prompt = [1usize, 2, 3];
+        let options: Vec<Vec<usize>> = vec![vec![4, 5], vec![6], vec![7, 8, 9]];
+        let fast = score_options(&ck, &prompt, &options, &mut ws, &mut state).unwrap();
+        for (opt, lp) in options.iter().zip(&fast) {
+            let want = continuation_logprob(&ck, &prompt, opt, &mut ws).unwrap();
+            assert!((lp - want).abs() < 1e-6, "{lp} vs {want}");
+        }
+    }
+
+    #[test]
     fn rope_rotation_properties() {
         // t=0 is the identity; t>0 rotates; norms are preserved.
         let head_dim = 8;
@@ -434,6 +698,11 @@ mod tests {
         );
         let norm = |v: &[f32]| v.iter().map(|&a| (a as f64).powi(2)).sum::<f64>().sqrt();
         assert!((norm(rotated) - norm(&orig)).abs() < 1e-5, "rotation preserves norm");
+
+        // rope_from at an offset equals the tail of a longer rope pass.
+        let mut tail = orig.clone();
+        rope_from(&mut tail, 1, 1, 1, head_dim, 10_000.0);
+        assert_eq!(tail, x[head_dim..], "offset rope matches in-sequence rope");
     }
 
     #[test]
@@ -481,6 +750,39 @@ mod tests {
     }
 
     #[test]
+    fn generate_incremental_matches_full_recompute() {
+        // The decode-state path must pick the same greedy tokens as the
+        // seed's recompute-everything loop.
+        let ck = test_ck();
+        let mut ws = Workspace::new(&ck.config, 32);
+        let fast = generate_greedy(&ck, &[1, 2], 5, &mut ws).unwrap();
+        let mut seq = vec![1usize, 2];
+        for _ in 0..5 {
+            let logits = forward(&ck, &seq, &mut ws).unwrap();
+            let next = logits
+                .row(seq.len() - 1)
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            seq.push(next);
+        }
+        assert_eq!(fast, seq[2..], "incremental decode must match");
+    }
+
+    #[test]
+    fn generate_stops_at_max_seq() {
+        let ck = test_ck();
+        let mut ws = Workspace::new(&ck.config, ck.config.max_seq);
+        let prompt = vec![1usize; ck.config.max_seq - 2];
+        let out = generate_greedy(&ck, &prompt, 10, &mut ws).unwrap();
+        assert_eq!(out.len(), 2, "generation is clipped at max_seq");
+        let none = generate_greedy(&ck, &vec![1; ck.config.max_seq], 4, &mut ws).unwrap();
+        assert!(none.is_empty());
+    }
+
+    #[test]
     fn gqa_differs_from_zeroed_kv_heads() {
         // Sanity that the GQA head mapping is actually used: zeroing wk
         // changes the output.
@@ -491,5 +793,18 @@ mod tests {
         ck.tensors.insert(name.into(), Tensor::zeros(&[ck.config.kv_dim(), ck.config.d_model]));
         let changed = forward(&ck, &[1, 2, 3], &mut ws).unwrap();
         assert!(crate::util::stats::max_abs_diff(base.data(), changed.data()) > 1e-6);
+    }
+
+    #[test]
+    fn small_workspace_grows_on_demand() {
+        // A workspace built for 2 positions transparently serves an
+        // 8-token sequence (buffers grow inside forward_extend).
+        let ck = test_ck();
+        let mut small = Workspace::new(&ck.config, 2);
+        let mut big = Workspace::new(&ck.config, 16);
+        let toks = [1usize, 2, 3, 4, 5, 6, 7, 8];
+        let a = forward(&ck, &toks, &mut small).unwrap();
+        let b = forward(&ck, &toks, &mut big).unwrap();
+        assert_eq!(a, b);
     }
 }

@@ -9,6 +9,7 @@
 //! eligibility follows the paper's §3 rules: **linear layers are split;
 //! embeddings (lookup tables) and normalization gains are not.**
 
+pub mod decode;
 pub mod forward;
 pub mod packed;
 pub mod quantized;

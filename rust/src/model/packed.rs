@@ -19,8 +19,10 @@
 use std::collections::BTreeMap;
 
 use crate::kernels::{self, KernelScratch, PackedLinear, PackedMatrix};
+use crate::model::decode::DecodeState;
 use crate::model::forward::{
-    continuation_logprob_from_logits, forward_ops, ForwardOps, Workspace,
+    continuation_logprob_from_logits, forward_extend, forward_ops, option_logprobs, prompt_pass,
+    ForwardOps, Workspace,
 };
 use crate::model::quantized::{QuantParam, QuantizedModel};
 use crate::model::PicoLlamaConfig;
@@ -95,8 +97,67 @@ impl PackedModel {
         forward_ops(&mut ops, tokens, ws)
     }
 
-    /// Teacher-forced continuation log-likelihood (the MCQ scoring rule),
-    /// mirroring `forward::continuation_logprob` on the packed engine.
+    /// Resumable forward on packed weights: logits for `tokens` appended
+    /// at `start_pos`, attending over the K/V cached in `state` — the
+    /// packed twin of [`crate::model::forward::forward_extend_ck`].
+    pub fn forward_extend(
+        &self,
+        tokens: &[usize],
+        start_pos: usize,
+        ws: &mut Workspace,
+        scratch: &mut KernelScratch,
+        state: &mut DecodeState,
+    ) -> Result<Tensor> {
+        let mut ops = PackedOps { pm: self, scratch };
+        forward_extend(&mut ops, tokens, start_pos, ws, state)
+    }
+
+    /// One prompt pass (reset + extend from 0), returning the prompt's
+    /// last-position logits row — what the prefix cache stores.
+    pub fn prompt_pass(
+        &self,
+        prompt: &[usize],
+        ws: &mut Workspace,
+        scratch: &mut KernelScratch,
+        state: &mut DecodeState,
+    ) -> Result<Vec<f32>> {
+        let mut ops = PackedOps { pm: self, scratch };
+        prompt_pass(&mut ops, prompt, ws, state)
+    }
+
+    /// Option logprobs given a state positioned at the prompt (see
+    /// [`crate::model::forward::score_options`] for the semantics).
+    pub fn option_logprobs(
+        &self,
+        prompt_len: usize,
+        last_row: &[f32],
+        options: &[Vec<usize>],
+        ws: &mut Workspace,
+        scratch: &mut KernelScratch,
+        state: &mut DecodeState,
+    ) -> Result<Vec<f64>> {
+        let mut ops = PackedOps { pm: self, scratch };
+        option_logprobs(&mut ops, prompt_len, last_row, options, ws, state)
+    }
+
+    /// Prefix-reuse MCQ scoring on the packed engine: one prompt pass +
+    /// one short extension per option.
+    pub fn score_options(
+        &self,
+        prompt: &[usize],
+        options: &[Vec<usize>],
+        ws: &mut Workspace,
+        scratch: &mut KernelScratch,
+        state: &mut DecodeState,
+    ) -> Result<Vec<f64>> {
+        let last = self.prompt_pass(prompt, ws, scratch, state)?;
+        self.option_logprobs(prompt.len(), &last, options, ws, scratch, state)
+    }
+
+    /// Teacher-forced continuation log-likelihood (the MCQ scoring rule)
+    /// via a full `prompt+continuation` recompute — the seed oracle path
+    /// mirroring `forward::continuation_logprob` on the packed engine;
+    /// hot paths score through [`Self::score_options`] instead.
     pub fn continuation_logprob(
         &self,
         prompt: &[usize],
@@ -109,6 +170,23 @@ impl PackedModel {
         seq.extend_from_slice(continuation);
         let logits = self.forward_with(&seq, ws, scratch)?;
         Ok(continuation_logprob_from_logits(&logits, prompt.len(), continuation))
+    }
+
+    /// Widest linear input dimension (incl. the embedding read by the
+    /// tied LM head) — what a [`KernelScratch`] needs to hold.
+    pub fn max_in_dim(&self) -> usize {
+        self.linears
+            .values()
+            .map(|l| l.in_dim())
+            .chain(std::iter::once(self.embedding.cols()))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// A kernel scratch pre-grown to this model's widest layer, so
+    /// long-lived workers never pay incremental growth on the hot path.
+    pub fn prewarmed_scratch(&self) -> KernelScratch {
+        KernelScratch::with_capacity(self.max_in_dim())
     }
 
     /// Weight bytes one full-sequence forward streams: packed linear
@@ -131,9 +209,17 @@ impl PackedModel {
 /// [`ForwardOps`] over packed planes: linears and the LM head run the
 /// kernel engine; embedding rows dequantize straight out of the packed
 /// bytes; norm gains come from the FP passthrough set.
-struct PackedOps<'a, 'b> {
+pub(crate) struct PackedOps<'a, 'b> {
     pm: &'a PackedModel,
     scratch: &'b mut KernelScratch,
+}
+
+impl PackedModel {
+    /// Borrow this model as [`ForwardOps`] for the shared transformer
+    /// loop (the generic scoring session in `eval` drives it).
+    pub(crate) fn ops<'a, 'b>(&'a self, scratch: &'b mut KernelScratch) -> PackedOps<'a, 'b> {
+        PackedOps { pm: self, scratch }
+    }
 }
 
 impl ForwardOps for PackedOps<'_, '_> {
@@ -242,5 +328,44 @@ mod tests {
             .continuation_logprob(&[1, 5, 9], &[12, 2], &mut ws, &mut scratch)
             .unwrap();
         assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+    }
+
+    #[test]
+    fn packed_score_options_matches_full_recompute() {
+        let ck = ck();
+        let qm =
+            quantize_model(&ck, Bits::Int4, &Method::SplitQuant(SplitConfig::default())).unwrap();
+        let pm = PackedModel::from_qmodel(&qm).unwrap();
+        let mut ws = Workspace::new(&ck.config, 16);
+        let mut scratch = pm.prewarmed_scratch();
+        let mut state = DecodeState::new(&ck.config);
+        let prompt = [2usize, 8, 5];
+        let options: Vec<Vec<usize>> = vec![vec![3], vec![11, 4], vec![6, 1, 9]];
+        let fast = pm.score_options(&prompt, &options, &mut ws, &mut scratch, &mut state).unwrap();
+        for (opt, lp) in options.iter().zip(&fast) {
+            let want = pm.continuation_logprob(&prompt, opt, &mut ws, &mut scratch).unwrap();
+            assert!((lp - want).abs() < 1e-6, "{lp} vs {want}");
+        }
+        assert!(pm.max_in_dim() >= pm.config.d_model);
+    }
+
+    #[test]
+    fn packed_extend_matches_full_forward() {
+        let ck = ck();
+        let qm = quantize_model(&ck, Bits::Int8, &Method::Baseline).unwrap();
+        let pm = PackedModel::from_qmodel(&qm).unwrap();
+        let toks = [1usize, 6, 11, 3, 2, 9];
+        let mut ws = Workspace::new(&ck.config, 16);
+        let mut scratch = KernelScratch::new();
+        let full = pm.forward(&toks, &mut ws).unwrap();
+        let mut state = DecodeState::new(&ck.config);
+        let head = pm.forward_extend(&toks[..2], 0, &mut ws, &mut scratch, &mut state).unwrap();
+        let tail = pm.forward_extend(&toks[2..], 2, &mut ws, &mut scratch, &mut state).unwrap();
+        for t in 0..2 {
+            assert_eq!(head.row(t), full.row(t), "head row {t}");
+        }
+        for t in 2..toks.len() {
+            assert_eq!(tail.row(t - 2), full.row(t), "tail row {t}");
+        }
     }
 }

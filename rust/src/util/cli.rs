@@ -145,6 +145,11 @@ impl Matches {
             .map_err(|_| anyhow!("--{name} must be an unsigned integer"))
     }
 
+    /// Millisecond option as a `Duration` (e.g. `--max-wait-ms 5`).
+    pub fn get_ms(&self, name: &str) -> Result<std::time::Duration> {
+        Ok(std::time::Duration::from_millis(self.get_u64(name)?))
+    }
+
     pub fn get_f64(&self, name: &str) -> Result<f64> {
         self.get(name)?
             .parse()
@@ -307,6 +312,18 @@ mod tests {
         assert_eq!(m.get("input").unwrap(), "file.bin");
         assert_eq!(m.get_usize("bits").unwrap(), 4);
         assert!(m.flag("verbose"));
+    }
+
+    #[test]
+    fn ms_option_parses_to_duration() {
+        let m = app()
+            .parse(&argv(&["run", "in", "--model", "m", "--bits", "250"]))
+            .unwrap();
+        assert_eq!(
+            m.get_ms("bits").unwrap(),
+            std::time::Duration::from_millis(250)
+        );
+        assert!(m.get_ms("model").is_err(), "non-numeric value errors");
     }
 
     #[test]

@@ -100,22 +100,43 @@ impl Pool {
         T: Send,
         F: Fn(usize) -> T + Sync,
     {
+        self.parallel_map_init(n, || (), |_, i| f(i))
+    }
+
+    /// [`parallel_map`](Pool::parallel_map) with **per-worker state**:
+    /// `init()` runs once on each participating worker and the resulting
+    /// value is threaded through every `f(&mut state, i)` call that
+    /// worker claims. This is how the scoring paths hold one
+    /// workspace/decode-state/kernel-scratch per worker instead of
+    /// allocating per work item (the rayon `map_init` pattern).
+    pub fn parallel_map_init<S, T, I, F>(&self, n: usize, init: I, f: F) -> Vec<T>
+    where
+        T: Send,
+        I: Fn() -> S + Sync,
+        F: Fn(&mut S, usize) -> T + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
         let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
         {
             let slots = Mutex::new(&mut out);
             let cursor = AtomicUsize::new(0);
-            let workers = self.size.min(n.max(1));
+            let workers = self.size.min(n);
             thread::scope(|s| {
                 for _ in 0..workers {
-                    s.spawn(|| loop {
-                        let i = cursor.fetch_add(1, Ordering::Relaxed);
-                        if i >= n {
-                            break;
+                    s.spawn(|| {
+                        let mut state = init();
+                        loop {
+                            let i = cursor.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            let v = f(&mut state, i);
+                            // Short critical section: single slot store.
+                            let mut guard = slots.lock().unwrap();
+                            guard[i] = Some(v);
                         }
-                        let v = f(i);
-                        // Short critical section: single slot store.
-                        let mut guard = slots.lock().unwrap();
-                        guard[i] = Some(v);
                     });
                 }
             });
@@ -322,6 +343,40 @@ mod tests {
         let pool = Pool::new(3);
         let out = pool.parallel_map(50, |i| i * i);
         assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_init_reuses_state_per_worker() {
+        let pool = Pool::new(3);
+        let inits = AtomicUsize::new(0);
+        let out = pool.parallel_map_init(
+            64,
+            || {
+                inits.fetch_add(1, Ordering::SeqCst);
+                // Per-worker counter: proves the state is threaded
+                // through successive items on the same worker.
+                0usize
+            },
+            |calls, i| {
+                *calls += 1;
+                (i, *calls)
+            },
+        );
+        assert_eq!(out.len(), 64);
+        assert!(out.iter().enumerate().all(|(i, (idx, _))| *idx == i));
+        let n_inits = inits.load(Ordering::SeqCst);
+        assert!(n_inits >= 1 && n_inits <= 3, "one init per worker, got {n_inits}");
+        // Total calls across workers equals the item count.
+        let per_worker_max: usize = out.iter().map(|&(_, c)| c).max().unwrap();
+        assert!(per_worker_max >= 64 / 3, "state did not accumulate");
+    }
+
+    #[test]
+    fn map_init_zero_items_never_inits() {
+        let pool = Pool::new(2);
+        let out: Vec<usize> =
+            pool.parallel_map_init(0, || panic!("init must not run"), |_: &mut (), i| i);
+        assert!(out.is_empty());
     }
 
     #[test]

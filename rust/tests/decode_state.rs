@@ -1,0 +1,200 @@
+//! Property sweeps for the resumable decode-state forward (hand-rolled
+//! generators over the crate's deterministic PRNG — proptest is
+//! unavailable offline).
+//!
+//! Pinned invariants, across random model shapes, token sequences and
+//! split points on **both** execution engines:
+//!
+//! 1. `forward_extend` chunking reproduces the whole-sequence forward
+//!    exactly (same loop, same FP operation order).
+//! 2. Prefix-reuse MCQ scoring (one prompt pass + per-option extension
+//!    with rollback) matches the seed full-recompute path within 1e-4
+//!    and agrees on every chosen option.
+//! 3. A pool-sharded server batch (4 workers + prefix cache) returns
+//!    results identical to the sequential executor (1 worker, no
+//!    cache).
+
+use splitquant::coordinator::server::{Backend, Server, ServerConfig};
+use splitquant::data::McqProblem;
+use splitquant::eval::{
+    score_problem, score_problem_full, score_problem_packed, score_problem_packed_full,
+    ScoreBuffers,
+};
+use splitquant::model::decode::DecodeState;
+use splitquant::model::forward::{forward, forward_extend_ck, Workspace};
+use splitquant::model::packed::PackedModel;
+use splitquant::model::quantized::{quantize_model, Method};
+use splitquant::model::{Checkpoint, PicoLlamaConfig};
+use splitquant::quant::Bits;
+use splitquant::split::SplitConfig;
+use splitquant::util::rng::Rng;
+use std::time::Duration;
+
+const TRIALS: u64 = 12;
+
+/// Random small-but-varied model config (GQA shapes included).
+fn random_config(r: &mut Rng) -> PicoLlamaConfig {
+    let n_kv_heads = 1 + r.below(2); // 1 or 2
+    let n_heads = n_kv_heads * (1 + r.below(3)); // ×1..3
+    let head_dim = 2 * (1 + r.below(4)); // even, 2..8
+    PicoLlamaConfig {
+        vocab: 32 + r.below(64),
+        d_model: n_heads * head_dim,
+        n_layers: 1 + r.below(3),
+        n_heads,
+        n_kv_heads,
+        d_ff: 8 + r.below(48),
+        max_seq: 32,
+        rope_theta: 10_000.0,
+        norm_eps: 1e-5,
+        tie_embeddings: true,
+    }
+}
+
+fn random_tokens(r: &mut Rng, cfg: &PicoLlamaConfig, len: usize) -> Vec<usize> {
+    (0..len).map(|_| r.below(cfg.vocab)).collect()
+}
+
+fn random_problem(r: &mut Rng, cfg: &PicoLlamaConfig) -> McqProblem {
+    let plen = 1 + r.below(6);
+    let n_opts = 2 + r.below(4);
+    let max_opt = (cfg.max_seq - plen).min(4);
+    McqProblem {
+        prompt: random_tokens(r, cfg, plen),
+        options: (0..n_opts)
+            .map(|_| random_tokens(r, cfg, 1 + r.below(max_opt)))
+            .collect(),
+        correct: r.below(n_opts),
+    }
+}
+
+#[test]
+fn prop_extend_chunking_matches_full_forward_both_engines() {
+    for seed in 0..TRIALS {
+        let mut r = Rng::new(1000 + seed);
+        let cfg = random_config(&mut r);
+        let mut ck = Checkpoint::random_init(&cfg, seed);
+        ck.amplify_outliers(0.005, 6.0, seed);
+        let len = 2 + r.below(10);
+        let toks = random_tokens(&mut r, &cfg, len);
+        let split = 1 + r.below(len - 1);
+        let mut ws = Workspace::new(&cfg, cfg.max_seq);
+
+        // Reference engine: exact equality (same loop, same FP order).
+        let full = forward(&ck, &toks, &mut ws).unwrap();
+        let mut state = DecodeState::new(&cfg);
+        let head = forward_extend_ck(&ck, &toks[..split], 0, &mut ws, &mut state).unwrap();
+        let tail = forward_extend_ck(&ck, &toks[split..], split, &mut ws, &mut state).unwrap();
+        for t in 0..len {
+            let got = if t < split { head.row(t) } else { tail.row(t - split) };
+            assert_eq!(got, full.row(t), "seed {seed} split {split} row {t} (reference)");
+        }
+
+        // Packed engine: same invariant on bit-packed weights.
+        let qm = quantize_model(&ck, Bits::Int4, &Method::SplitQuant(SplitConfig::default()))
+            .unwrap();
+        let pm = PackedModel::from_qmodel(&qm).unwrap();
+        let mut scratch = pm.prewarmed_scratch();
+        let pfull = pm.forward(&toks, &mut ws).unwrap();
+        let mut pstate = DecodeState::new(&cfg);
+        let phead = pm
+            .forward_extend(&toks[..split], 0, &mut ws, &mut scratch, &mut pstate)
+            .unwrap();
+        let ptail = pm
+            .forward_extend(&toks[split..], split, &mut ws, &mut scratch, &mut pstate)
+            .unwrap();
+        for t in 0..len {
+            let got = if t < split { phead.row(t) } else { ptail.row(t - split) };
+            assert_eq!(got, pfull.row(t), "seed {seed} split {split} row {t} (packed)");
+        }
+    }
+}
+
+#[test]
+fn prop_prefix_reuse_scoring_matches_full_recompute_both_engines() {
+    for seed in 0..TRIALS {
+        let mut r = Rng::new(2000 + seed);
+        let cfg = random_config(&mut r);
+        let mut ck = Checkpoint::random_init(&cfg, 7 * seed + 1);
+        ck.amplify_outliers(0.005, 6.0, seed);
+        let qm = quantize_model(&ck, Bits::Int8, &Method::SplitQuant(SplitConfig::default()))
+            .unwrap();
+        let pm = PackedModel::from_qmodel(&qm).unwrap();
+        let eff = qm.effective_checkpoint();
+
+        let mut ref_bufs = ScoreBuffers::new(&cfg, cfg.max_seq);
+        let mut packed_bufs = ScoreBuffers::for_packed(&pm, cfg.max_seq);
+        let mut ws = Workspace::new(&cfg, cfg.max_seq);
+        let mut scratch = pm.prewarmed_scratch();
+        for _ in 0..4 {
+            let p = random_problem(&mut r, &cfg);
+
+            let fast = score_problem(&eff, &p, &mut ref_bufs).unwrap();
+            let full = score_problem_full(&eff, &p, &mut ws).unwrap();
+            assert_eq!(fast.chosen, full.chosen, "seed {seed}: choice must agree");
+            for (a, b) in fast.logprobs.iter().zip(&full.logprobs) {
+                assert!((a - b).abs() < 1e-4, "seed {seed}: {a} vs {b} (reference)");
+            }
+
+            let pfast = score_problem_packed(&pm, &p, &mut packed_bufs).unwrap();
+            let pfull = score_problem_packed_full(&pm, &p, &mut ws, &mut scratch).unwrap();
+            assert_eq!(pfast.chosen, pfull.chosen, "seed {seed}: packed choice must agree");
+            for (a, b) in pfast.logprobs.iter().zip(&pfull.logprobs) {
+                assert!((a - b).abs() < 1e-4, "seed {seed}: {a} vs {b} (packed)");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_sharded_server_batch_matches_sequential_executor() {
+    for seed in 0..4u64 {
+        let mut r = Rng::new(3000 + seed);
+        let cfg = random_config(&mut r);
+        let ck = Checkpoint::random_init(&cfg, 13 * seed + 5);
+        let qm = quantize_model(&ck, Bits::Int4, &Method::Baseline).unwrap();
+        let pm = PackedModel::from_qmodel(&qm).unwrap();
+        // Duplicate some prompts so the prefix cache actually hits.
+        let mut problems: Vec<McqProblem> =
+            (0..10).map(|_| random_problem(&mut r, &cfg)).collect();
+        for i in 0..5 {
+            let mut dup = problems[i].clone();
+            dup.correct = (dup.correct + 1) % dup.options.len();
+            problems.push(dup);
+        }
+
+        let sharded = Server::start(
+            Backend::Packed(Box::new(pm.clone())),
+            ServerConfig {
+                max_wait: Duration::from_millis(50),
+                max_batch: 32,
+                workers: 4,
+                prefix_cache: 8,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let sequential = Server::start(
+            Backend::Packed(Box::new(pm)),
+            ServerConfig {
+                max_wait: Duration::from_millis(50),
+                max_batch: 32,
+                workers: 1,
+                prefix_cache: 0,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let rx_a: Vec<_> = problems.iter().map(|p| sharded.submit(p.clone())).collect();
+        let rx_b: Vec<_> = problems.iter().map(|p| sequential.submit(p.clone())).collect();
+        for (i, (a, b)) in rx_a.into_iter().zip(rx_b).enumerate() {
+            let a = a.recv().unwrap().unwrap();
+            let b = b.recv().unwrap().unwrap();
+            assert_eq!(
+                a.result.logprobs, b.result.logprobs,
+                "seed {seed} problem {i}: sharded vs sequential logprobs"
+            );
+            assert_eq!(a.result.chosen, b.result.chosen, "seed {seed} problem {i}");
+        }
+    }
+}

@@ -219,11 +219,11 @@ fn packed_scoring_agrees_with_reference_on_decided_problems() {
     let qm = quantize_model(&ck, Bits::Int4, &Method::SplitQuant(SplitConfig::default())).unwrap();
     let pm = PackedModel::from_qmodel(&qm).unwrap();
     let eff = qm.effective_checkpoint();
-    let mut ws = Workspace::new(&cfg, 16);
-    let mut scratch = KernelScratch::new();
+    let mut ref_bufs = splitquant::eval::ScoreBuffers::new(&cfg, 16);
+    let mut packed_bufs = splitquant::eval::ScoreBuffers::for_packed(&pm, 16);
     for p in &problems {
-        let a = splitquant::eval::score_problem(&eff, p, &mut ws).unwrap();
-        let b = splitquant::eval::score_problem_packed(&pm, p, &mut ws, &mut scratch).unwrap();
+        let a = splitquant::eval::score_problem(&eff, p, &mut ref_bufs).unwrap();
+        let b = splitquant::eval::score_problem_packed(&pm, p, &mut packed_bufs).unwrap();
         // Identical choices except at FP-noise-level ties.
         if a.chosen != b.chosen {
             assert!(a.margin() < 1e-4, "margin {} flipped", a.margin());

@@ -94,12 +94,12 @@ fn packed_engine_matches_reference_choices() {
         let qm = quantize_model(&ck, bits, &method).unwrap();
         let pm = splitquant::model::packed::PackedModel::from_qmodel(&qm).unwrap();
         let eff = qm.effective_checkpoint();
-        let mut ws = splitquant::model::forward::Workspace::new(&ck.config, ck.config.max_seq);
-        let mut scratch = splitquant::kernels::KernelScratch::new();
+        let mut ref_bufs = splitquant::eval::ScoreBuffers::new(&ck.config, ck.config.max_seq);
+        let mut packed_bufs = splitquant::eval::ScoreBuffers::for_packed(&pm, ck.config.max_seq);
         for p in sample {
-            let reference = splitquant::eval::score_problem(&eff, p, &mut ws).unwrap();
+            let reference = splitquant::eval::score_problem(&eff, p, &mut ref_bufs).unwrap();
             let packed =
-                splitquant::eval::score_problem_packed(&pm, p, &mut ws, &mut scratch).unwrap();
+                splitquant::eval::score_problem_packed(&pm, p, &mut packed_bufs).unwrap();
             // Identical choices on every decided problem; only FP-noise
             // ties may flip between summation orders.
             if reference.chosen != packed.chosen {
