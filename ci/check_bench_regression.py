@@ -1,0 +1,64 @@
+#!/usr/bin/env python3
+"""Bench regression gate for the packed kernel engine.
+
+Reads the BENCH_gemv.json report written by
+`cargo bench --bench perf_probe -- --gemv-json BENCH_gemv.json`
+and fails (exit 1) if the LUT-fused INT4 GEMV kernel is not at least
+MIN_SPEEDUP x faster than the scalar unpack-whole-row baseline on the
+fixed-iteration smoke run. This is the CI contract behind DESIGN.md §7:
+the LUT engine exists to be faster; a regression below the floor means
+the fused path has rotted into a slow path and must not merge silently.
+
+Usage: check_bench_regression.py BENCH_gemv.json [--min 1.5]
+"""
+
+import argparse
+import json
+import math
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("report", help="path to BENCH_gemv.json")
+    ap.add_argument(
+        "--min",
+        type=float,
+        default=1.5,
+        dest="min_speedup",
+        help="minimum INT4 LUT-vs-scalar GEMV speedup (default 1.5)",
+    )
+    args = ap.parse_args()
+
+    try:
+        with open(args.report, encoding="utf-8") as f:
+            report = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"FAIL: cannot read bench report {args.report}: {e}")
+        return 1
+
+    speedup = report.get("int4_lut_speedup")
+    if not isinstance(speedup, (int, float)) or not math.isfinite(speedup):
+        print(f"FAIL: {args.report} has no finite 'int4_lut_speedup' (got {speedup!r})")
+        return 1
+
+    par = report.get("int4_lut_parallel_speedup")
+    extend = (report.get("extend") or {}).get("lut_extend_speedup")
+    print(f"INT4 GEMV: lut {speedup:.2f}x scalar (floor {args.min_speedup:.2f}x)")
+    if isinstance(par, (int, float)) and math.isfinite(par):
+        print(f"INT4 GEMV: lut+row-parallel {par:.2f}x scalar")
+    if isinstance(extend, (int, float)) and math.isfinite(extend):
+        print(f"1-token forward_extend: lut {extend:.2f}x scalar")
+
+    if speedup < args.min_speedup:
+        print(
+            f"FAIL: INT4 LUT GEMV speedup {speedup:.2f}x is below the "
+            f"{args.min_speedup:.2f}x regression floor"
+        )
+        return 1
+    print("OK: LUT kernels clear the regression floor")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,7 +9,7 @@
 //! These feed EXPERIMENTS.md §Perf (before/after per optimization).
 
 use splitquant::bench::{banner, black_box, Bench, BenchConfig};
-use splitquant::kernels::{self, KernelScratch};
+use splitquant::kernels::{self, KernelImpl, KernelScratch};
 use splitquant::kmeans;
 use splitquant::model::packed::pack_linear;
 use splitquant::model::quantized::QuantParam;
@@ -89,6 +89,48 @@ fn main() -> anyhow::Result<()> {
             black_box(y[0])
         });
     }
+
+    banner("L3: LUT-fused kernels vs the scalar oracle (1024x4096, k=3, INT4)");
+    // The default scratch above already runs the LUT engine; pin the
+    // scalar oracle and the row-parallel variant next to it.
+    let mut scalar_scratch = KernelScratch::new();
+    scalar_scratch.set_kernel_impl(KernelImpl::Scalar);
+    b.run("packed_gemv_scalar[1024x4096,k=3]", || {
+        kernels::gemv(&mut y1, &x1, &lin, &mut scalar_scratch);
+        black_box(y1[0])
+    });
+    let mut par_scratch = KernelScratch::new();
+    par_scratch.set_row_pool(Some(std::sync::Arc::new(
+        splitquant::util::pool::Pool::new_auto(),
+    )));
+    b.run("packed_gemv_lut_row_parallel[1024x4096,k=3]", || {
+        kernels::gemv(&mut y1, &x1, &lin, &mut par_scratch);
+        black_box(y1[0])
+    });
+
+    // First-token-vs-steady-state: a prewarmed scratch must pay zero
+    // LUT construction on the hot path. This is an assertion, not just
+    // a timing — the bench fails if prewarming regresses.
+    let mut warm = KernelScratch::new();
+    warm.prewarm_linear(&lin);
+    let built = warm.lut_builds();
+    let t0 = std::time::Instant::now();
+    kernels::gemv(&mut y1, &x1, &lin, &mut warm);
+    let first = t0.elapsed();
+    assert_eq!(
+        warm.lut_builds(),
+        built,
+        "prewarmed scratch built LUTs on the first token"
+    );
+    let t_steady = b.run("packed_gemv_lut_prewarmed[1024x4096,k=3]", || {
+        kernels::gemv(&mut y1, &x1, &lin, &mut warm);
+        black_box(y1[0])
+    });
+    assert_eq!(warm.lut_builds(), built, "steady state built LUTs");
+    println!(
+        "  first token {:?} vs steady-state {:?} (no LUT builds in either)",
+        first, t_steady
+    );
 
     let x8_t = Tensor::new(&[8, 4096], x8.clone());
     let eff_t = eff.transpose();

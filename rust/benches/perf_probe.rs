@@ -16,6 +16,14 @@
 //!                       on/off — and write it as JSON
 //!                       (`BENCH_serving.json` in CI, uploaded as an
 //!                       artifact)
+//!   --gemv-json PATH    run the GEMV section — ns/row and effective
+//!                       GB/s per bit width for scalar vs LUT vs
+//!                       LUT+row-parallel kernels, plus single-token
+//!                       `forward_extend` tokens/s — and write it as
+//!                       JSON (`BENCH_gemv.json` in CI; the
+//!                       `ci/check_bench_regression.py` gate fails the
+//!                       smoke job if the INT4 LUT kernel is not ≥1.5×
+//!                       the scalar baseline)
 
 use splitquant::bench::{black_box, Bench, BenchConfig};
 use splitquant::kernels::{self, KernelScratch};
@@ -34,6 +42,7 @@ struct Options {
     json: Option<String>,
     kernels_json: Option<String>,
     serving_json: Option<String>,
+    gemv_json: Option<String>,
 }
 
 fn parse_args() -> Options {
@@ -42,6 +51,7 @@ fn parse_args() -> Options {
         json: None,
         kernels_json: None,
         serving_json: None,
+        gemv_json: None,
     };
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
@@ -59,11 +69,14 @@ fn parse_args() -> Options {
             "--serving-json" => {
                 opts.serving_json = Some(args.next().expect("--serving-json needs a path"));
             }
+            "--gemv-json" => {
+                opts.gemv_json = Some(args.next().expect("--gemv-json needs a path"));
+            }
             "--bench" => {} // passed by `cargo bench`; ignore
             other => {
                 eprintln!(
                     "unknown option '{other}' (supported: --iters N, --json PATH, \
-                     --kernels-json PATH, --serving-json PATH)"
+                     --kernels-json PATH, --serving-json PATH, --gemv-json PATH)"
                 );
                 std::process::exit(2);
             }
@@ -231,6 +244,193 @@ fn main() {
     if let Some(path) = opts.serving_json {
         serving_section(&path);
     }
+
+    if let Some(path) = opts.gemv_json {
+        gemv_section(&path, opts.iters);
+    }
+}
+
+/// GEMV section: the LUT-fused kernel trajectory (DESIGN.md §7). For
+/// every bit width, one 1024×4096 plain-quantized layer is driven as a
+/// single-token GEMV by three configurations — the scalar oracle, the
+/// LUT-fused blocked kernel, and LUT + row-parallel sharding on an
+/// auto-sized pool — recording ns per output row, effective packed-GB/s
+/// and tokens/s each. A second block times a real single-token
+/// `forward_extend` on a packed model per configuration. The JSON lands
+/// in CI as `BENCH_gemv.json`; `ci/check_bench_regression.py` fails the
+/// smoke job if `int4_lut_speedup` < 1.5.
+fn gemv_section(path: &str, fixed_iters: Option<usize>) {
+    use splitquant::kernels::KernelImpl;
+    use splitquant::model::decode::DecodeState;
+    use splitquant::model::forward::Workspace;
+    use splitquant::model::packed::PackedModel;
+    use splitquant::model::quantized::{quantize_model, Method};
+    use splitquant::model::{Checkpoint, PicoLlamaConfig};
+    use splitquant::util::pool::Pool;
+    use std::sync::Arc;
+
+    // A GEMV is milliseconds, not seconds: run 10× the smoke iteration
+    // budget (still bounded) so the regression gate compares stable
+    // means instead of 3-sample noise.
+    let config = match fixed_iters {
+        Some(n) => {
+            let n = (n * 10).max(20);
+            BenchConfig {
+                warmup_iters: 2,
+                min_iters: n,
+                max_iters: n,
+                target_time: Duration::ZERO,
+            }
+        }
+        None => BenchConfig::default(),
+    };
+    let mut gb = Bench::with_config("gemv", config.clone());
+
+    let (rows, cols) = (1024usize, 4096usize);
+    let mut rng = Rng::new(97);
+    let mut vals = vec![0.0f32; rows * cols];
+    rng.fill_normal(&mut vals, 0.0, 0.05);
+    for _ in 0..4000 {
+        let i = rng.below(vals.len());
+        vals[i] = rng.uniform_in(-2.0, 2.0);
+    }
+    let w = Tensor::new(&[rows, cols], vals);
+    let mut x = vec![0.0f32; cols];
+    rng.fill_normal(&mut x, 0.0, 1.0);
+    let mut y = vec![0.0f32; rows];
+
+    let row_pool = Arc::new(Pool::new_auto());
+    let mut sections = Vec::new();
+    let mut int4_lut_speedup = 0.0;
+    let mut int4_par_speedup = 0.0;
+    for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+        let lin = pack_linear(&QuantParam::Plain(quant::quantize_per_tensor(&w, bits)))
+            .expect("pack gemv layer");
+        let bytes = lin.weight_bytes() as f64;
+        let mut scalar = KernelScratch::new();
+        scalar.set_kernel_impl(KernelImpl::Scalar);
+        let mut lut = KernelScratch::new();
+        lut.prewarm_linear(&lin);
+        let mut par = KernelScratch::new();
+        par.prewarm_linear(&lin);
+        par.set_row_pool(Some(Arc::clone(&row_pool)));
+        let t_scalar = gb.run(&format!("gemv_scalar[1024x4096,{}]", bits.name()), || {
+            kernels::gemv(&mut y, &x, &lin, &mut scalar);
+            black_box(y[0])
+        });
+        let t_lut = gb.run(&format!("gemv_lut[1024x4096,{}]", bits.name()), || {
+            kernels::gemv(&mut y, &x, &lin, &mut lut);
+            black_box(y[0])
+        });
+        let t_par = gb.run(&format!("gemv_lut_parallel[1024x4096,{}]", bits.name()), || {
+            kernels::gemv(&mut y, &x, &lin, &mut par);
+            black_box(y[0])
+        });
+        let ns_per_row = |d: Duration| d.as_secs_f64() * 1e9 / rows as f64;
+        let gbps = |d: Duration| bytes / d.as_secs_f64() / 1e9;
+        let lut_speedup = t_scalar.as_secs_f64() / t_lut.as_secs_f64().max(1e-12);
+        let par_speedup = t_scalar.as_secs_f64() / t_par.as_secs_f64().max(1e-12);
+        if bits == Bits::Int4 {
+            int4_lut_speedup = lut_speedup;
+            int4_par_speedup = par_speedup;
+        }
+        println!(
+            "gemv[{}]: scalar {:.0} ns/row, lut {:.0} ns/row ({lut_speedup:.2}x), \
+             lut+parallel {:.0} ns/row ({par_speedup:.2}x)",
+            bits.name(),
+            ns_per_row(t_scalar),
+            ns_per_row(t_lut),
+            ns_per_row(t_par)
+        );
+        sections.push(Json::obj(vec![
+            ("bits", Json::str(bits.name())),
+            ("packed_bytes", Json::num(bytes)),
+            ("scalar_ns_per_row", Json::num(ns_per_row(t_scalar))),
+            ("lut_ns_per_row", Json::num(ns_per_row(t_lut))),
+            ("lut_parallel_ns_per_row", Json::num(ns_per_row(t_par))),
+            ("scalar_gbps", Json::num(gbps(t_scalar))),
+            ("lut_gbps", Json::num(gbps(t_lut))),
+            ("lut_parallel_gbps", Json::num(gbps(t_par))),
+            ("scalar_tokens_per_s", Json::num(1.0 / t_scalar.as_secs_f64().max(1e-12))),
+            ("lut_tokens_per_s", Json::num(1.0 / t_lut.as_secs_f64().max(1e-12))),
+            (
+                "lut_parallel_tokens_per_s",
+                Json::num(1.0 / t_par.as_secs_f64().max(1e-12)),
+            ),
+            ("lut_speedup", Json::num(lut_speedup)),
+            ("lut_parallel_speedup", Json::num(par_speedup)),
+        ]));
+    }
+
+    // Single-token decode through a whole packed forward: the latency
+    // `BENCH_serving.json` p50 is made of. The state rewinds to the
+    // prompt each call, so every iteration is a steady-state 1-token
+    // extend.
+    let cfg = PicoLlamaConfig {
+        vocab: 2048,
+        d_model: 256,
+        n_layers: 2,
+        n_heads: 4,
+        n_kv_heads: 2,
+        d_ff: 512,
+        max_seq: 32,
+        rope_theta: 10_000.0,
+        norm_eps: 1e-5,
+        tie_embeddings: true,
+    };
+    let ck = Checkpoint::random_init(&cfg, 5);
+    let qm = quantize_model(&ck, Bits::Int4, &Method::Baseline).expect("quantize extend model");
+    let pm = PackedModel::from_qmodel(&qm).expect("pack extend model");
+    let mut ws = Workspace::new(&cfg, 8);
+    let prompt = [1usize, 2, 3, 4];
+    let mut eb = Bench::with_config("gemv.extend", config);
+    let mut extend_fields: Vec<(String, f64)> = Vec::new();
+    for (label, imp, pool) in [
+        ("scalar", KernelImpl::Scalar, None),
+        ("lut", KernelImpl::Lut, None),
+        ("lut_parallel", KernelImpl::Lut, Some(Arc::clone(&row_pool))),
+    ] {
+        let mut scratch = pm.prewarmed_scratch();
+        scratch.set_kernel_impl(imp);
+        scratch.set_row_pool(pool);
+        let mut state = DecodeState::new(&cfg);
+        pm.prompt_pass(&prompt, &mut ws, &mut scratch, &mut state).expect("prompt pass");
+        let t = eb.run(&format!("forward_extend_1tok[{label},INT4]"), || {
+            let logits = pm
+                .forward_extend(&[7], prompt.len(), &mut ws, &mut scratch, &mut state)
+                .expect("extend");
+            black_box(logits.row(0)[0])
+        });
+        extend_fields.push((format!("{label}_tokens_per_s"), 1.0 / t.as_secs_f64().max(1e-12)));
+    }
+    let extend_speedup = extend_fields[1].1 / extend_fields[0].1.max(1e-12);
+    println!(
+        "forward_extend 1-token: lut {extend_speedup:.2}x scalar \
+         ({:.0} vs {:.0} tok/s)",
+        extend_fields[1].1, extend_fields[0].1
+    );
+    let mut extend_obj: Vec<(&str, Json)> = extend_fields
+        .iter()
+        .map(|(k, v)| (k.as_str(), Json::num(*v)))
+        .collect();
+    extend_obj.push(("lut_extend_speedup", Json::num(extend_speedup)));
+
+    let results: Vec<Json> =
+        gb.results().iter().chain(eb.results().iter()).map(|r| r.to_json()).collect();
+    let report = Json::obj(vec![
+        ("bench", Json::str("perf_probe.gemv")),
+        ("fixed_iters", Json::num(fixed_iters.unwrap_or(0) as f64)),
+        ("rows", Json::num(rows as f64)),
+        ("cols", Json::num(cols as f64)),
+        ("row_pool_workers", Json::num(row_pool.size() as f64)),
+        ("int4_lut_speedup", Json::num(int4_lut_speedup)),
+        ("int4_lut_parallel_speedup", Json::num(int4_par_speedup)),
+        ("sections", Json::arr(sections)),
+        ("extend", Json::obj(extend_obj)),
+        ("results", Json::arr(results)),
+    ]);
+    std::fs::write(path, report.to_string_pretty()).expect("write gemv json report");
+    println!("wrote {path}");
 }
 
 /// Serving section: fire a burst of 4-option MCQ requests at the packed

@@ -19,6 +19,7 @@ use std::time::Duration;
 
 use crate::data::McqProblem;
 use crate::eval::EvalReport;
+use crate::kernels::KernelImpl;
 use crate::io::{checkpoint::load_checkpoint, qmodel::save_qmodel};
 use crate::model::quantized::{Method, QuantizedModel};
 use crate::model::Checkpoint;
@@ -97,6 +98,9 @@ pub struct PipelineSpec {
     pub use_runtime: bool,
     /// CPU execution engine for quantized arms (`--engine` on the CLI).
     pub engine: ExecEngine,
+    /// Packed-kernel inner loops (`--kernel-impl` on the CLI): the
+    /// LUT-fused default or the scalar oracle path.
+    pub kernel_impl: KernelImpl,
     pub seed: u64,
 }
 
@@ -109,6 +113,7 @@ impl PipelineSpec {
             amplify: Some((0.003, 4.0)),
             use_runtime: false,
             engine: ExecEngine::Reference,
+            kernel_impl: KernelImpl::default(),
             seed: 7,
         }
     }
@@ -216,6 +221,20 @@ impl Coordinator {
         use_runtime: bool,
         engine: ExecEngine,
     ) -> Result<EvalReport> {
+        self.evaluate_qm_impl(qm, problems, use_runtime, engine, KernelImpl::default())
+    }
+
+    /// [`Self::evaluate_qm`] with an explicit packed-kernel
+    /// implementation (the packed engine's `--kernel-impl`; the
+    /// reference engine never touches the packed kernels).
+    pub fn evaluate_qm_impl(
+        &self,
+        qm: &QuantizedModel,
+        problems: &[McqProblem],
+        use_runtime: bool,
+        engine: ExecEngine,
+        kernel_impl: KernelImpl,
+    ) -> Result<EvalReport> {
         if use_runtime {
             if let Some(engine) = &self.engine {
                 if scoring::is_int_plane_compatible(qm) {
@@ -243,7 +262,7 @@ impl Coordinator {
                 .profiler
                 .section("pack_model", || crate::model::packed::PackedModel::from_qmodel(qm))?;
             return self.profiler.section("eval_packed", || {
-                crate::eval::evaluate_packed(&pm, problems, &self.pool)
+                crate::eval::evaluate_packed_impl(&pm, problems, &self.pool, kernel_impl)
             });
         }
         let eff = qm.effective_checkpoint();
@@ -291,7 +310,8 @@ impl Coordinator {
             self.profiler
                 .section("export", || save_qmodel(dir.join(fname), &qm))?;
         }
-        let report = self.evaluate_qm(&qm, problems, spec.use_runtime, spec.engine)?;
+        let report =
+            self.evaluate_qm_impl(&qm, problems, spec.use_runtime, spec.engine, spec.kernel_impl)?;
         if report.n_errors > 0 {
             log_error!(
                 "arm {}: {} problem(s) failed to score (first: {}); accuracy covers the {} scored",
@@ -364,6 +384,7 @@ mod tests {
             amplify: None,
             use_runtime: false,
             engine: ExecEngine::Packed,
+            kernel_impl: KernelImpl::default(),
             seed: 1,
         };
         let arm = Arm {
@@ -396,6 +417,7 @@ mod tests {
             amplify: None,
             use_runtime: false,
             engine: ExecEngine::Reference,
+            kernel_impl: KernelImpl::default(),
             seed: 1,
         };
         let arm = Arm {

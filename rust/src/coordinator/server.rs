@@ -33,17 +33,18 @@
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::data::McqProblem;
 use crate::eval::{self, nan_safe_argmax, ProblemResult, ScoreBuffers};
+use crate::kernels::KernelImpl;
 use crate::model::decode::PrefixCache;
 use crate::model::packed::PackedModel;
 use crate::model::Checkpoint;
 use crate::runtime::{ArgValue, Engine};
-use crate::util::pool::Pool;
+use crate::util::pool::{thread_budget, Pool};
 
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
@@ -114,6 +115,15 @@ pub struct ServerConfig {
     /// extensions). `false` falls back to the seed full-recompute path —
     /// kept as a benchmarking baseline (`perf_probe --serving-json`).
     pub reuse_prefix: bool,
+    /// Packed-kernel inner loops: the LUT-fused default or the scalar
+    /// oracle (`--kernel-impl`). The reference backend ignores this.
+    pub kernel_impl: KernelImpl,
+    /// Threads each packed executor worker shards large GEMV output
+    /// rows across (`--row-workers`). 0 = auto: the cores left over
+    /// after batch-level sharding (`thread_budget`), so a one-worker
+    /// server decoding a single stream uses every core per token while
+    /// a saturated batch pool stays row-serial.
+    pub row_workers: usize,
 }
 
 impl Default for ServerConfig {
@@ -125,6 +135,8 @@ impl Default for ServerConfig {
             workers: 1,
             prefix_cache: 32,
             reuse_prefix: true,
+            kernel_impl: KernelImpl::default(),
+            row_workers: 0,
         }
     }
 }
@@ -136,6 +148,18 @@ impl ServerConfig {
         } else {
             Pool::new(self.workers)
         }
+    }
+
+    /// The shared row pool packed executor workers attach to their
+    /// kernel scratch, or `None` when the budget leaves no spare cores.
+    fn make_row_pool(&self, batch_workers: usize) -> Option<Arc<Pool>> {
+        let row = if self.row_workers > 0 {
+            self.row_workers
+        } else {
+            let total = thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+            thread_budget(total, batch_workers).1
+        };
+        (row > 1).then(|| Arc::new(Pool::new(row)))
     }
 }
 
@@ -167,8 +191,18 @@ impl Server {
                 // hot path does no per-batch buffer allocation.
                 Backend::Packed(pm) => {
                     let pool = config.make_pool();
+                    // Thread budget: cores beyond the batch-level pool
+                    // go to intra-forward row sharding — a single
+                    // decode stream then scales with cores instead of
+                    // pinning one.
+                    let row_pool = config.make_row_pool(pool.size());
                     let bufs = (0..pool.size())
-                        .map(|_| Mutex::new(ScoreBuffers::for_packed(&pm, pm.config.max_seq)))
+                        .map(|_| {
+                            let mut b = ScoreBuffers::for_packed(&pm, pm.config.max_seq);
+                            b.scratch.set_kernel_impl(config.kernel_impl);
+                            b.scratch.set_row_pool(row_pool.clone());
+                            Mutex::new(b)
+                        })
                         .collect();
                     Executor::Packed {
                         pm,
@@ -700,6 +734,36 @@ mod tests {
         assert!(rx_bad.recv().unwrap().is_err());
         let good = rx_good.recv().unwrap().unwrap();
         assert!(good.result.logprobs.iter().all(|l| l.is_finite()));
+    }
+
+    #[test]
+    fn scalar_kernel_impl_and_row_workers_agree_with_default() {
+        let (qm, problems) = setup();
+        let pm = PackedModel::from_qmodel(&qm).unwrap();
+        let lut = Server::start(
+            Backend::Packed(Box::new(pm.clone())),
+            ServerConfig {
+                row_workers: 4,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let scalar = Server::start(
+            Backend::Packed(Box::new(pm)),
+            ServerConfig {
+                kernel_impl: KernelImpl::Scalar,
+                row_workers: 1,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for p in problems.iter().take(8) {
+            let a = lut.score(p.clone()).unwrap();
+            let b = scalar.score(p.clone()).unwrap();
+            for (la, lb) in a.result.logprobs.iter().zip(&b.result.logprobs) {
+                assert!((la - lb).abs() < 1e-4, "lut {la} vs scalar {lb}");
+            }
+        }
     }
 
     #[test]

@@ -1,25 +1,51 @@
 //! Inner loops of the packed kernel engine: register-level row
-//! unpacking and the dot-product kernels.
+//! unpacking, byte-granularity lookup tables, and the dot-product
+//! kernels.
 //!
-//! Two arithmetic flavors:
+//! Three arithmetic flavors:
 //!
-//! * **f32-activation fused** ([`unpack_row_qz`] + [`dot_f32`]) — the
+//! * **f32-activation scalar** ([`unpack_row_qz`] + [`dot_f32`]) — the
 //!   zero-point is subtracted in the integer domain while unpacking (so a
 //!   masked zero level contributes *exactly* 0), the activation product
 //!   accumulates in 4-lane f32 (the reference forward's pattern), and the
 //!   scale divides once per output. Functionally equivalent to
-//!   dequantize-then-matmul up to FP summation order.
-//! * **integer** ([`unpack_row_qz_i32`] + [`dot_qi32`]) — both operands
-//!   are integers (INT8-quantized activations × unpacked levels); the
-//!   products accumulate in i32 per [`INT_BLOCK`]-sized column block and
-//!   fold into i64 between blocks, so no width can overflow.
+//!   dequantize-then-matmul up to FP summation order. This is the
+//!   `KernelImpl::Scalar` path and the oracle the LUT kernels are pinned
+//!   against.
+//! * **f32-activation LUT-fused** ([`LutCache`] + [`expand_block`] +
+//!   [`dot_f32`]) — a per-`(bits, zero_point)` table maps a packed byte
+//!   directly to its 1 (INT8) / 2 (INT4) / 4 (INT2) zero-adjusted f32
+//!   lanes, so the inner loop replaces shift/mask/int-add/convert with
+//!   one table load per lane. Packed bytes are streamed in
+//!   [`LUT_BLOCK`]-lane column blocks through a small L1-resident buffer
+//!   (the full unpacked row is never materialized) and the block dots
+//!   against the activations with the same 4-lane [`dot_f32`]. Table
+//!   entries are exact integers (`(q − z) as f32`), so the
+//!   exact-zero-contribution guarantee of the scalar path carries over
+//!   unchanged.
+//! * **integer** ([`unpack_row_qz_i32`] / [`expand_block`] +
+//!   [`dot_qi32`]) — both operands are integers (INT8-quantized
+//!   activations × unpacked levels); the products accumulate in i32 per
+//!   bounded column block and fold into i64 between blocks, so no width
+//!   can overflow. Integer addition is associative, so the LUT-blocked
+//!   and whole-row variants return bit-identical sums.
 
-use crate::quant::Bits;
+use crate::quant::{pack, Bits};
 
 /// Column-block length of the i32 accumulator. Worst-case per-product
 /// magnitude is 127 · 255 (INT8 activations × INT8 zero-adjusted
 /// levels), so a 4096-long block peaks at ~1.3e8 ≪ i32::MAX.
 pub const INT_BLOCK: usize = 4096;
+
+/// Column-block length (in lanes) of the LUT-fused kernels. A multiple
+/// of 8, so a block boundary is byte-aligned at every bit width (8
+/// lanes = 1 INT8 byte · 8 = 4 INT4 bytes · 2 = 2 INT2 bytes · 4).
+/// 512 f32 lanes = a 2 KiB block buffer: together with the 1–4 KiB
+/// byte table and the activation slice it stays L1-resident, unlike
+/// the full unpacked row of a 4096-wide layer (16 KiB) that the scalar
+/// path streams per output row. Well under [`INT_BLOCK`], so the
+/// integer path's i32 accumulator cannot overflow per block.
+pub const LUT_BLOCK: usize = 512;
 
 /// Unpack one row-aligned packed row into zero-adjusted levels
 /// `(q − z) as f32` in `out[..cols]`. `q − z` is computed in exact
@@ -97,6 +123,180 @@ pub(crate) fn unpack_row_qz_i32(row: &[u8], cols: usize, bits: Bits, z: i32, out
     }
 }
 
+/// Build the byte→lanes table for `(bits, z)`: entry `byte * L + j` is
+/// lane `j` of `byte` as the zero-adjusted level `(q − z)` in i32,
+/// where `L = lanes_per_byte(bits)`.
+pub(crate) fn build_lut_i32(bits: Bits, z: i32) -> Vec<i32> {
+    let lanes = pack::lanes_per_byte(bits);
+    let width = bits.width() as usize;
+    let mask = ((1u32 << width) - 1) as usize;
+    let base = bits.qmin() - z;
+    let mut lut = vec![0i32; 256 * lanes];
+    for byte in 0..256usize {
+        for j in 0..lanes {
+            lut[byte * lanes + j] = ((byte >> (j * width)) & mask) as i32 + base;
+        }
+    }
+    lut
+}
+
+/// f32 flavor of [`build_lut_i32`] for the fused f32-activation path.
+/// All levels are small integers — exactly representable in f32 — so a
+/// LUT expansion yields bit-for-bit the same lane values as
+/// [`unpack_row_qz`].
+pub(crate) fn build_lut_f32(bits: Bits, z: i32) -> Vec<f32> {
+    build_lut_i32(bits, z).into_iter().map(|v| v as f32).collect()
+}
+
+/// One flavor (f32 or i32) of the byte→lane table store, directly
+/// indexed by `[width_class][z − qmin]` so the per-output-row lookup is
+/// O(1) even for INT8 per-row planes, whose zero-points can take up to
+/// 256 distinct values. Zero-points outside `[qmin, qmax]` never come
+/// out of `quant::QuantParams::from_range` (ranges are widened to
+/// include 0, which pins them in), but an unknown parameter source must
+/// not panic — those land in a linear-scanned overflow list.
+#[derive(Default)]
+struct LutBank<T> {
+    slots: [Vec<Option<Vec<T>>>; 3],
+    overflow: Vec<((u32, i32), Vec<T>)>,
+}
+
+/// Width class index for the slot banks: INT2 → 0, INT4 → 1, INT8 → 2.
+fn class_of(bits: Bits) -> usize {
+    match bits {
+        Bits::Int2 => 0,
+        Bits::Int4 => 1,
+        Bits::Int8 => 2,
+    }
+}
+
+/// Slot of `z` within its width's bank, or `None` when out of range.
+fn slot_of(bits: Bits, z: i32) -> Option<usize> {
+    let s = z - bits.qmin();
+    (s >= 0 && s < bits.levels() as i32).then_some(s as usize)
+}
+
+impl<T> LutBank<T> {
+    fn get(&self, bits: Bits, z: i32) -> Option<&[T]> {
+        match slot_of(bits, z) {
+            Some(s) => self.slots[class_of(bits)].get(s).and_then(|t| t.as_deref()),
+            None => self
+                .overflow
+                .iter()
+                .find(|(k, _)| *k == (bits.width(), z))
+                .map(|(_, t)| t.as_slice()),
+        }
+    }
+
+    fn insert(&mut self, bits: Bits, z: i32, table: Vec<T>) {
+        match slot_of(bits, z) {
+            Some(s) => {
+                let bank = &mut self.slots[class_of(bits)];
+                if bank.len() <= s {
+                    bank.resize_with(bits.levels() as usize, || None);
+                }
+                bank[s] = Some(table);
+            }
+            None => self.overflow.push(((bits.width(), z), table)),
+        }
+    }
+}
+
+/// Per-thread cache of byte→lane tables keyed by `(bits, zero_point)`,
+/// O(1)-indexed per flavor (see [`LutBank`]); each table is 1–4 KiB.
+/// Tables live in the [`KernelScratch`](super::KernelScratch) (one
+/// cache per worker thread, no sharing, no locks); packed matrices
+/// carry their distinct zero-points so prewarming is O(#zps), not
+/// O(rows).
+#[derive(Default)]
+pub(crate) struct LutCache {
+    f: LutBank<f32>,
+    i: LutBank<i32>,
+    builds: usize,
+}
+
+impl LutCache {
+    /// Number of tables built so far — the first-token-vs-steady-state
+    /// probe: after a prewarm this must not grow on the hot path.
+    pub(crate) fn builds(&self) -> usize {
+        self.builds
+    }
+
+    pub(crate) fn ensure_f32(&mut self, bits: Bits, z: i32) {
+        if self.f.get(bits, z).is_none() {
+            self.f.insert(bits, z, build_lut_f32(bits, z));
+            self.builds += 1;
+        }
+    }
+
+    pub(crate) fn ensure_i32(&mut self, bits: Bits, z: i32) {
+        if self.i.get(bits, z).is_none() {
+            self.i.insert(bits, z, build_lut_i32(bits, z));
+            self.builds += 1;
+        }
+    }
+
+    /// The f32 table for `(bits, z)`. Callers ensure the table first
+    /// (every kernel entry point prewarms the planes' zero-points).
+    pub(crate) fn f32_table(&self, bits: Bits, z: i32) -> &[f32] {
+        self.f.get(bits, z).expect("LUT not prewarmed for (bits, zero_point)")
+    }
+
+    /// The i32 table for `(bits, z)` (see [`Self::f32_table`]).
+    pub(crate) fn i32_table(&self, bits: Bits, z: i32) -> &[i32] {
+        self.i.get(bits, z).expect("i32 LUT not prewarmed for (bits, zero_point)")
+    }
+}
+
+/// Expand lanes `col0..col0+len` of a packed row into `out[..len]`
+/// through a byte table (f32 or i32 flavor — one body, so the delicate
+/// tail-lane handling cannot diverge between them). `col0` must be
+/// byte-aligned (a multiple of the lanes-per-byte count — every
+/// [`LUT_BLOCK`] boundary is). Tail lanes (`len` not a multiple of the
+/// lane count) only occur at the true row end: every non-final block is
+/// a full [`LUT_BLOCK`]. Lane values equal [`unpack_row_qz`]'s exactly.
+pub(crate) fn expand_block<T: Copy>(
+    row: &[u8],
+    col0: usize,
+    len: usize,
+    bits: Bits,
+    lut: &[T],
+    out: &mut [T],
+) {
+    debug_assert_eq!(col0 % pack::lanes_per_byte(bits), 0, "block start must be byte-aligned");
+    debug_assert!(out.len() >= len);
+    match bits {
+        Bits::Int8 => {
+            for (o, &b) in out[..len].iter_mut().zip(&row[col0..col0 + len]) {
+                *o = lut[b as usize];
+            }
+        }
+        Bits::Int4 => {
+            let b0 = col0 / 2;
+            let pairs = len / 2;
+            for j in 0..pairs {
+                let e = &lut[row[b0 + j] as usize * 2..][..2];
+                out[2 * j] = e[0];
+                out[2 * j + 1] = e[1];
+            }
+            if len % 2 == 1 {
+                out[len - 1] = lut[row[b0 + pairs] as usize * 2];
+            }
+        }
+        Bits::Int2 => {
+            let b0 = col0 / 4;
+            let quads = len / 4;
+            for j in 0..quads {
+                let e = &lut[row[b0 + j] as usize * 4..][..4];
+                out[4 * j..4 * j + 4].copy_from_slice(e);
+            }
+            for i in quads * 4..len {
+                out[i] = lut[row[b0 + quads] as usize * 4 + (i % 4)];
+            }
+        }
+    }
+}
+
 /// 4-lane unrolled f32 dot product — the same accumulation pattern as
 /// the reference forward's `linear`, autovectorizes to SIMD.
 pub(crate) fn dot_f32(x: &[f32], w: &[f32]) -> f32 {
@@ -163,6 +363,77 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn lut_tables_hold_exact_levels_for_every_byte() {
+        for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+            let lanes = pack::lanes_per_byte(bits);
+            for z in [bits.qmin(), 0, bits.qmax()] {
+                let f = build_lut_f32(bits, z);
+                let i = build_lut_i32(bits, z);
+                assert_eq!(f.len(), 256 * lanes);
+                for byte in 0..=255u8 {
+                    for j in 0..lanes {
+                        let level = pack::get_packed(&[byte], j, bits) as i32 - z;
+                        assert_eq!(i[byte as usize * lanes + j], level, "{bits:?} z={z}");
+                        assert_eq!(f[byte as usize * lanes + j], level as f32, "{bits:?} z={z}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lut_block_expansion_matches_unpack_at_all_alignments() {
+        for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+            let lanes = pack::lanes_per_byte(bits);
+            for cols in [1usize, 5, 8, 17, 31, 40] {
+                let vals: Vec<i8> = (0..cols)
+                    .map(|i| {
+                        let span = (bits.qmax() - bits.qmin() + 1) as usize;
+                        (bits.qmin() + (i * 5 % span) as i32) as i8
+                    })
+                    .collect();
+                let packed = pack::pack(&vals, bits);
+                let z = 1.min(bits.qmax());
+                let mut want = vec![0.0f32; cols];
+                unpack_row_qz(&packed, cols, bits, z, &mut want);
+                let mut want_i = vec![0i32; cols];
+                unpack_row_qz_i32(&packed, cols, bits, z, &mut want_i);
+                let lut_f = build_lut_f32(bits, z);
+                let lut_i = build_lut_i32(bits, z);
+                // Expand in blocks of 8 lanes (byte-aligned everywhere).
+                let mut got = vec![0.0f32; cols];
+                let mut got_i = vec![0i32; cols];
+                let mut c0 = 0;
+                while c0 < cols {
+                    let len = 8.min(cols - c0);
+                    let mut buf = [0.0f32; 8];
+                    expand_block(&packed, c0, len, bits, &lut_f, &mut buf);
+                    got[c0..c0 + len].copy_from_slice(&buf[..len]);
+                    let mut buf_i = [0i32; 8];
+                    expand_block(&packed, c0, len, bits, &lut_i, &mut buf_i);
+                    got_i[c0..c0 + len].copy_from_slice(&buf_i[..len]);
+                    c0 += len;
+                }
+                assert_eq!(got, want, "{bits:?} cols={cols} ({lanes} lanes/byte)");
+                assert_eq!(got_i, want_i, "{bits:?} cols={cols} i32 twin");
+            }
+        }
+    }
+
+    #[test]
+    fn lut_cache_builds_once_per_key() {
+        let mut cache = LutCache::default();
+        cache.ensure_f32(Bits::Int4, 1);
+        cache.ensure_f32(Bits::Int4, 1);
+        cache.ensure_i32(Bits::Int4, 1);
+        cache.ensure_f32(Bits::Int2, 1); // same z, different width: new table
+        assert_eq!(cache.builds(), 3);
+        assert_eq!(cache.f32_table(Bits::Int4, 1).len(), 512);
+        assert_eq!(cache.i32_table(Bits::Int4, 1).len(), 512);
+        assert_eq!(cache.f32_table(Bits::Int2, 1).len(), 1024);
     }
 
     #[test]

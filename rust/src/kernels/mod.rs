@@ -16,25 +16,105 @@
 //!   accumulated across planes with per-cluster scales), or a dense f32
 //!   fallback for layers with no integer-plane form (OCS).
 //!
-//! Kernel scheme (row-major, cache-blocked): for each output row the
-//! packed bytes are unpacked **once** into a row-sized scratch of
-//! zero-adjusted levels `(q − z)` — integer subtraction, so masked zeros
-//! in split planes contribute exactly 0 — then every activation row of
-//! the batch takes a 4-lane dot against that L1/L2-resident scratch, and
-//! the scale is applied once per output. The full f32 weight matrix is
-//! never materialized; weight traffic is the packed bytes (INT4 = 1/8 of
-//! f32 per plane, 3/8 for a k=3 split layer).
+//! Two inner-loop implementations ([`KernelImpl`], selected per
+//! [`KernelScratch`]; `--kernel-impl` on the CLI):
+//!
+//! * **`Scalar`** — the original scheme: each packed row is unpacked
+//!   once per pass into a row-sized scratch of zero-adjusted levels
+//!   `(q − z)` with shift/mask arithmetic, then every activation row
+//!   dots against it. Kept as the equivalence oracle.
+//! * **`Lut`** (default) — byte-granularity lookup tables fused into a
+//!   column-blocked microkernel (DESIGN.md §7): a per-`(bits,
+//!   zero_point)` table maps each packed byte straight to its 1/2/4
+//!   zero-adjusted f32 lanes, packed bytes stream through a
+//!   [`LUT_BLOCK`]-lane L1-resident block buffer (the full
+//!   unpacked row is never written), and the seq==1 decode fast path
+//!   runs a 4-output-row register tile that loads each activation block
+//!   once per 4 rows. On top, large GEMVs can shard output rows across
+//!   a [`Pool`] attached to the scratch (intra-forward row
+//!   parallelism), so *single-token decode latency* — not just batch
+//!   throughput — scales with cores. Row sharding and tiling preserve
+//!   each output's FP summation order exactly, so tiled ≡ untiled ≡
+//!   row-parallel bit-for-bit, and chunked decode ≡ full forwards stay
+//!   bit-identical.
+//!
+//! Accumulation contract: the public entry points ([`gemm`],
+//! [`gemm_matrix`], [`gemm_int8`]) zero-fill `y` exactly once, and every
+//! internal `accumulate_*` helper — packed planes *and* the dense
+//! fallback — strictly `+=`s into it. Keeping the contract in one place
+//! is what lets split layers accumulate k planes into one output without
+//! double-counting (regression-tested in `rust/tests/kernel_lut.rs`).
 //!
 //! [`gemm_int8`] is the all-integer variant: activations are dynamically
 //! quantized to symmetric INT8 and products accumulate in i32 per column
-//! block (`gemv::INT_BLOCK`), trading a small activation-quantization
-//! error for integer-only inner loops.
+//! block, trading a small activation-quantization error for integer-only
+//! inner loops. Its blocked LUT path uses i32 tables and returns sums
+//! bit-identical to the whole-row unpack (integer addition is exact).
 
 mod gemv;
 
+use std::sync::Arc;
+
 use crate::quant::{pack, Bits, Granularity, QuantParams, QuantizedTensor};
 use crate::tensor::Tensor;
+use crate::util::pool::Pool;
 use anyhow::{bail, Result};
+
+pub use gemv::{INT_BLOCK, LUT_BLOCK};
+
+/// Which inner-loop implementation the packed kernels run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelImpl {
+    /// Unpack-whole-row shift/mask scheme — the original path, kept as
+    /// the equivalence oracle (`--kernel-impl scalar`). Never shards
+    /// rows: it is the strictly sequential baseline.
+    Scalar,
+    /// LUT-fused blocked kernels with the seq==1 row tile and optional
+    /// row-parallel sharding (the default).
+    #[default]
+    Lut,
+}
+
+impl KernelImpl {
+    pub fn parse(s: &str) -> Result<KernelImpl> {
+        Ok(match s {
+            "scalar" => KernelImpl::Scalar,
+            "lut" => KernelImpl::Lut,
+            other => bail!("unknown kernel impl '{other}' (use lut|scalar)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelImpl::Scalar => "scalar",
+            KernelImpl::Lut => "lut",
+        }
+    }
+}
+
+/// Minimum output rows per row-parallel shard. Below this the per-shard
+/// dispatch cost (one scoped-thread handoff) outweighs the dot work.
+const MIN_ROWS_PER_SHARD: usize = 16;
+
+/// Default `out·in·planes` element-work floor for row sharding. A shard
+/// handoff costs tens of microseconds; 2^18 multiply-adds (~0.1–0.5 ms
+/// of GEMV) is where fan-out starts paying for itself. Layers below the
+/// floor (small test models, narrow projections) run serial even with a
+/// row pool attached; `KernelScratch::set_min_par_work` overrides.
+pub const DEFAULT_PAR_MIN_WORK: usize = 1 << 18;
+
+/// The byte→lane table the LUT engine uses for `(bits, zero_point)` —
+/// exposed so tests/tools can pin the exact integer levels
+/// (`rust/tests/kernel_lut.rs` asserts every lane equals the packed
+/// accessor's `q − z`).
+pub fn lut_table_f32(bits: Bits, z: i32) -> Vec<f32> {
+    gemv::build_lut_f32(bits, z)
+}
+
+/// Integer twin of [`lut_table_f32`] (the `gemm_int8` tables).
+pub fn lut_table_i32(bits: Bits, z: i32) -> Vec<i32> {
+    gemv::build_lut_i32(bits, z)
+}
 
 /// A row-aligned bit-packed 2-D plane with its affine parameters.
 #[derive(Clone, Debug)]
@@ -46,6 +126,12 @@ pub struct PackedMatrix {
     bytes: Vec<u8>,
     /// One entry (per-tensor) or `rows` entries (per-row granularity).
     params: Vec<QuantParams>,
+    /// Distinct zero-points across `params`, sorted — the plane's LUT
+    /// key set, computed once at pack time so prewarming and per-call
+    /// `ensure` are O(#zps) instead of O(rows). Bounded by the level
+    /// count (ranges are widened to include 0, pinning every zero-point
+    /// into `[qmin, qmax]`).
+    zps: Vec<i32>,
 }
 
 impl PackedMatrix {
@@ -68,6 +154,9 @@ impl PackedMatrix {
             );
         }
         let bits = q.bits();
+        let mut zps: Vec<i32> = q.params.iter().map(|p| p.zero_point).collect();
+        zps.sort_unstable();
+        zps.dedup();
         Ok(PackedMatrix {
             rows,
             cols,
@@ -75,6 +164,7 @@ impl PackedMatrix {
             row_stride: pack::row_stride(cols, bits),
             bytes: pack::pack_rows(q.plane.data(), rows, cols, bits),
             params: q.params.clone(),
+            zps,
         })
     }
 
@@ -93,6 +183,12 @@ impl PackedMatrix {
     /// Bytes of packed weight storage this matrix streams per pass.
     pub fn packed_bytes(&self) -> usize {
         self.bytes.len()
+    }
+
+    /// Distinct zero-points across this plane's parameters (the LUT
+    /// keys a scratch prewarms for it).
+    pub fn zero_points(&self) -> &[i32] {
+        &self.zps
     }
 
     /// Quantization parameters governing row `r`.
@@ -191,15 +287,44 @@ impl PackedLinear {
     }
 }
 
-/// Reusable scratch for the kernels: one unpacked weight row plus the
-/// integer path's quantized activations. Allocate once per thread and
-/// pass to every call; buffers grow to the largest layer and stay.
-#[derive(Default)]
+/// Reusable per-thread kernel context: scratch buffers (one unpacked
+/// weight row for the scalar path, block accumulators for the LUT path,
+/// the integer path's quantized activations), the byte→lane LUT cache,
+/// and the execution knobs — which [`KernelImpl`] runs and the optional
+/// row-parallel pool. Allocate once per thread and pass to every call;
+/// buffers and tables grow to the largest layer and stay.
 pub struct KernelScratch {
     qz: Vec<f32>,
     qz_i: Vec<i32>,
     qx: Vec<i8>,
     sx: Vec<f64>,
+    /// Per-position dot accumulators of the blocked LUT path (`[seq]`).
+    acc: Vec<f32>,
+    /// i64 twin for the blocked `gemm_int8` path.
+    acc_i: Vec<i64>,
+    luts: gemv::LutCache,
+    imp: KernelImpl,
+    /// Pool GEMV output rows shard across (seq==1, LUT impl, work ≥
+    /// `min_par_work`). `None` = always serial.
+    row_pool: Option<Arc<Pool>>,
+    min_par_work: usize,
+}
+
+impl Default for KernelScratch {
+    fn default() -> KernelScratch {
+        KernelScratch {
+            qz: Vec::new(),
+            qz_i: Vec::new(),
+            qx: Vec::new(),
+            sx: Vec::new(),
+            acc: Vec::new(),
+            acc_i: Vec::new(),
+            luts: gemv::LutCache::default(),
+            imp: KernelImpl::default(),
+            row_pool: None,
+            min_par_work: DEFAULT_PAR_MIN_WORK,
+        }
+    }
 }
 
 impl KernelScratch {
@@ -210,14 +335,78 @@ impl KernelScratch {
     /// Scratch pre-grown for layers up to `in_dim` columns wide, so a
     /// long-lived worker (server executor, eval worker) never pays
     /// incremental growth on its first requests. Buffers still grow on
-    /// demand if a wider layer shows up.
+    /// demand if a wider layer shows up. LUT prewarming needs the
+    /// planes themselves — see [`Self::prewarm_linear`] /
+    /// `PackedModel::prewarmed_scratch`.
     pub fn with_capacity(in_dim: usize) -> KernelScratch {
         KernelScratch {
             qz: vec![0.0; in_dim],
             qz_i: vec![0; in_dim],
-            qx: Vec::new(),
-            sx: Vec::new(),
+            ..KernelScratch::default()
         }
+    }
+
+    /// Select the inner-loop implementation (default [`KernelImpl::Lut`]).
+    pub fn set_kernel_impl(&mut self, imp: KernelImpl) {
+        self.imp = imp;
+    }
+
+    pub fn kernel_impl(&self) -> KernelImpl {
+        self.imp
+    }
+
+    /// Attach (or detach) the pool large GEMVs shard output rows across.
+    /// Sharding preserves each output's FP operation order, so results
+    /// are bit-identical to the serial LUT path for any pool size.
+    pub fn set_row_pool(&mut self, pool: Option<Arc<Pool>>) {
+        self.row_pool = pool;
+    }
+
+    /// Override the row-sharding work floor ([`DEFAULT_PAR_MIN_WORK`]).
+    pub fn set_min_par_work(&mut self, work: usize) {
+        self.min_par_work = work;
+    }
+
+    /// Byte→lane tables built so far. After a prewarm this must stay
+    /// flat across forwards — the first-token-vs-steady-state probe
+    /// (`kernel_micro` asserts it).
+    pub fn lut_builds(&self) -> usize {
+        self.luts.builds()
+    }
+
+    /// Pre-build the f32 tables for every distinct zero-point of a
+    /// plane, so the first decode token pays no table construction.
+    /// Only the flavor the default engine runs is built — the integer
+    /// path ([`gemm_int8`]) ensures its i32 tables on first use, so a
+    /// worker that never scores through it carries no dead tables.
+    pub fn prewarm_matrix(&mut self, m: &PackedMatrix) {
+        for &z in &m.zps {
+            self.luts.ensure_f32(m.bits, z);
+        }
+    }
+
+    /// [`Self::prewarm_matrix`] over every plane of a linear.
+    pub fn prewarm_linear(&mut self, lin: &PackedLinear) {
+        if let PackedLinear::Planes(planes) = lin {
+            for m in planes {
+                self.prewarm_matrix(m);
+            }
+        }
+    }
+
+    /// The pool to shard `out_dim` rows across, if this call qualifies:
+    /// LUT impl, single activation row, work above the floor, enough
+    /// rows to cut into ≥ 2 shards. Returns an owned handle so callers
+    /// can keep borrowing the scratch's LUT cache.
+    fn row_parallel(&self, seq: usize, out_dim: usize, work: usize) -> Option<Arc<Pool>> {
+        if self.imp != KernelImpl::Lut
+            || seq != 1
+            || work < self.min_par_work
+            || out_dim < 2 * MIN_ROWS_PER_SHARD
+        {
+            return None;
+        }
+        self.row_pool.as_ref().filter(|p| p.size() > 1).cloned()
     }
 }
 
@@ -226,12 +415,8 @@ impl KernelScratch {
 pub fn gemm(y: &mut [f32], x: &[f32], seq: usize, lin: &PackedLinear, scratch: &mut KernelScratch) {
     y.iter_mut().for_each(|v| *v = 0.0);
     match lin {
-        PackedLinear::Planes(planes) => {
-            for m in planes {
-                accumulate_matrix(y, x, seq, m, scratch);
-            }
-        }
-        PackedLinear::Dense(w) => dense_gemm(y, x, seq, w),
+        PackedLinear::Planes(planes) => accumulate_planes(y, x, seq, planes, scratch),
+        PackedLinear::Dense(w) => accumulate_dense(y, x, seq, w, scratch),
     }
 }
 
@@ -250,14 +435,167 @@ pub fn gemm_matrix(
     scratch: &mut KernelScratch,
 ) {
     y.iter_mut().for_each(|v| *v = 0.0);
-    accumulate_matrix(y, x, seq, m, scratch);
+    accumulate_planes(y, x, seq, std::slice::from_ref(m), scratch);
 }
 
-/// y += x · dequant(M)ᵀ: unpack each packed row once into the scratch,
-/// then dot every activation row against it; divide by the row's scale
-/// at the end (the zero-point was subtracted in the integer domain
-/// during unpacking).
-fn accumulate_matrix(
+/// y += Σ_planes x · dequant(plane)ᵀ, dispatched on the scratch's
+/// [`KernelImpl`] and row-parallel eligibility. The plane loop is
+/// always outermost per output row (serial and sharded alike), so
+/// per-output accumulation order — and therefore the result — is
+/// independent of sharding and tiling.
+fn accumulate_planes(
+    y: &mut [f32],
+    x: &[f32],
+    seq: usize,
+    planes: &[PackedMatrix],
+    scratch: &mut KernelScratch,
+) {
+    let (out_dim, in_dim) = (planes[0].rows, planes[0].cols);
+    debug_assert_eq!(x.len(), seq * in_dim, "x length");
+    debug_assert_eq!(y.len(), seq * out_dim, "y length");
+    if scratch.imp == KernelImpl::Scalar {
+        for m in planes {
+            accumulate_matrix_scalar(y, x, seq, m, scratch);
+        }
+        return;
+    }
+    for m in planes {
+        for &z in &m.zps {
+            scratch.luts.ensure_f32(m.bits, z);
+        }
+    }
+    let work: usize = planes.iter().map(|m| m.rows * m.cols).sum();
+    if let Some(pool) = scratch.row_parallel(seq, out_dim, work) {
+        let luts = &scratch.luts;
+        let chunk = shard_rows(out_dim, pool.size());
+        pool.parallel_chunks(y, chunk, |i, rows| {
+            let o0 = i * chunk;
+            for m in planes {
+                gemv_rows_lut(rows, x, m, o0, luts);
+            }
+        });
+        return;
+    }
+    if seq == 1 {
+        let luts = &scratch.luts;
+        for m in planes {
+            gemv_rows_lut(y, x, m, 0, luts);
+        }
+        return;
+    }
+    let KernelScratch { acc, luts, .. } = scratch;
+    for m in planes {
+        accumulate_matrix_lut(y, x, seq, m, acc, luts);
+    }
+}
+
+/// Rows per row-parallel shard: ~2 shards per worker for dynamic
+/// balance, floored so a shard is never dispatch-dominated.
+fn shard_rows(out_dim: usize, workers: usize) -> usize {
+    out_dim.div_ceil(workers.max(1) * 2).max(MIN_ROWS_PER_SHARD)
+}
+
+/// LUT-fused GEMV core over output rows `o0..o0+y.len()` of one plane
+/// (`y` is that row range of the full output; seq == 1): packed bytes
+/// stream through a [`LUT_BLOCK`]-lane block buffer and dot against the
+/// matching activation block. The main loop is a 4-output-row register
+/// tile — each activation block is loaded once per 4 rows — with a
+/// 1-row tail; per-row arithmetic is identical in both, so tile
+/// boundaries never change results.
+fn gemv_rows_lut(y: &mut [f32], x: &[f32], m: &PackedMatrix, o0: usize, luts: &gemv::LutCache) {
+    let in_dim = m.cols;
+    let n = y.len();
+    let mut bufs = [[0.0f32; LUT_BLOCK]; 4];
+    let mut r = 0;
+    while r + 4 <= n {
+        let o = o0 + r;
+        let rows = [m.row_bytes(o), m.row_bytes(o + 1), m.row_bytes(o + 2), m.row_bytes(o + 3)];
+        let tabs = [
+            luts.f32_table(m.bits, m.param_of_row(o).zero_point),
+            luts.f32_table(m.bits, m.param_of_row(o + 1).zero_point),
+            luts.f32_table(m.bits, m.param_of_row(o + 2).zero_point),
+            luts.f32_table(m.bits, m.param_of_row(o + 3).zero_point),
+        ];
+        let mut acc = [0.0f32; 4];
+        let mut c0 = 0;
+        while c0 < in_dim {
+            let len = LUT_BLOCK.min(in_dim - c0);
+            let xb = &x[c0..c0 + len];
+            for j in 0..4 {
+                gemv::expand_block(rows[j], c0, len, m.bits, tabs[j], &mut bufs[j]);
+                acc[j] += gemv::dot_f32(xb, &bufs[j][..len]);
+            }
+            c0 += len;
+        }
+        for j in 0..4 {
+            let p = m.param_of_row(o + j);
+            y[r + j] += (acc[j] as f64 / p.scale) as f32;
+        }
+        r += 4;
+    }
+    while r < n {
+        let o = o0 + r;
+        let p = m.param_of_row(o);
+        let tab = luts.f32_table(m.bits, p.zero_point);
+        let row = m.row_bytes(o);
+        let mut acc = 0.0f32;
+        let mut c0 = 0;
+        while c0 < in_dim {
+            let len = LUT_BLOCK.min(in_dim - c0);
+            gemv::expand_block(row, c0, len, m.bits, tab, &mut bufs[0]);
+            acc += gemv::dot_f32(&x[c0..c0 + len], &bufs[0][..len]);
+            c0 += len;
+        }
+        y[r] += (acc as f64 / p.scale) as f32;
+        r += 1;
+    }
+}
+
+/// Batched (seq > 1) LUT path: per output row, stream the packed bytes
+/// once per block and dot every activation row against the expanded
+/// block — the unpack cost amortizes over the batch while the buffer
+/// stays [`LUT_BLOCK`]-sized. Per-(row, position) summation order is
+/// the same block-major order as [`gemv_rows_lut`], so chunked (seq==1)
+/// and whole-sequence execution agree bit-for-bit.
+fn accumulate_matrix_lut(
+    y: &mut [f32],
+    x: &[f32],
+    seq: usize,
+    m: &PackedMatrix,
+    acc: &mut Vec<f32>,
+    luts: &gemv::LutCache,
+) {
+    let (out_dim, in_dim) = (m.rows, m.cols);
+    if acc.len() < seq {
+        acc.resize(seq, 0.0);
+    }
+    let mut buf = [0.0f32; LUT_BLOCK];
+    for o in 0..out_dim {
+        let p = m.param_of_row(o);
+        let tab = luts.f32_table(m.bits, p.zero_point);
+        let row = m.row_bytes(o);
+        acc[..seq].fill(0.0);
+        let mut c0 = 0;
+        while c0 < in_dim {
+            let len = LUT_BLOCK.min(in_dim - c0);
+            gemv::expand_block(row, c0, len, m.bits, tab, &mut buf);
+            let wb = &buf[..len];
+            for (t, a) in acc[..seq].iter_mut().enumerate() {
+                *a += gemv::dot_f32(&x[t * in_dim + c0..t * in_dim + c0 + len], wb);
+            }
+            c0 += len;
+        }
+        for (t, a) in acc[..seq].iter().enumerate() {
+            y[t * out_dim + o] += (*a as f64 / p.scale) as f32;
+        }
+    }
+}
+
+/// Scalar-impl y += x · dequant(M)ᵀ: unpack each packed row once into
+/// the scratch, then dot every activation row against it; divide by the
+/// row's scale at the end (the zero-point was subtracted in the integer
+/// domain during unpacking).
+fn accumulate_matrix_scalar(
     y: &mut [f32],
     x: &[f32],
     seq: usize,
@@ -265,8 +603,6 @@ fn accumulate_matrix(
     scratch: &mut KernelScratch,
 ) {
     let (out_dim, in_dim) = (m.rows, m.cols);
-    debug_assert_eq!(x.len(), seq * in_dim, "x length");
-    debug_assert_eq!(y.len(), seq * out_dim, "y length");
     if scratch.qz.len() < in_dim {
         scratch.qz.resize(in_dim, 0.0);
     }
@@ -295,16 +631,30 @@ fn accumulate_matrix(
     }
 }
 
-/// Dense f32 fallback path (same dot kernel, full-precision weights).
-fn dense_gemm(y: &mut [f32], x: &[f32], seq: usize, w: &Tensor) {
+/// Dense f32 fallback path: y += x · Wᵀ with the same dot kernel over
+/// full-precision weights. Under the LUT impl, large seq==1 calls shard
+/// output rows across the scratch's row pool (per-row dots are
+/// independent, so sharding is bit-exact).
+fn accumulate_dense(y: &mut [f32], x: &[f32], seq: usize, w: &Tensor, scratch: &KernelScratch) {
     let (out_dim, in_dim) = (w.shape()[0], w.shape()[1]);
     debug_assert_eq!(x.len(), seq * in_dim, "x length");
     debug_assert_eq!(y.len(), seq * out_dim, "y length");
+    if let Some(pool) = scratch.row_parallel(seq, out_dim, out_dim * in_dim) {
+        let chunk = shard_rows(out_dim, pool.size());
+        pool.parallel_chunks(y, chunk, |i, rows| {
+            let o0 = i * chunk;
+            for (r, yo) in rows.iter_mut().enumerate() {
+                let o = o0 + r;
+                *yo += gemv::dot_f32(x, &w.data()[o * in_dim..(o + 1) * in_dim]);
+            }
+        });
+        return;
+    }
     for t in 0..seq {
         let xr = &x[t * in_dim..(t + 1) * in_dim];
         let yr = &mut y[t * out_dim..(t + 1) * out_dim];
-        for o in 0..out_dim {
-            yr[o] = gemv::dot_f32(xr, &w.data()[o * in_dim..(o + 1) * in_dim]);
+        for (o, yo) in yr.iter_mut().enumerate() {
+            *yo += gemv::dot_f32(xr, &w.data()[o * in_dim..(o + 1) * in_dim]);
         }
     }
 }
@@ -315,7 +665,9 @@ fn dense_gemm(y: &mut [f32], x: &[f32], seq: usize, w: &Tensor) {
 /// activation-quantization error (~1/254 relative per activation) on top
 /// of the weight quantization; use [`gemm`] where functional equivalence
 /// with the dequantized reference is required. Dense fallback layers run
-/// the f32 path.
+/// the f32 path. The LUT impl streams i32 byte tables through the same
+/// [`LUT_BLOCK`] blocking as the f32 path; integer sums are exact, so
+/// both impls return bit-identical outputs.
 pub fn gemm_int8(
     y: &mut [f32],
     x: &[f32],
@@ -327,7 +679,7 @@ pub fn gemm_int8(
     let planes = match lin {
         PackedLinear::Planes(p) => p,
         PackedLinear::Dense(w) => {
-            dense_gemm(y, x, seq, w);
+            accumulate_dense(y, x, seq, w, scratch);
             return;
         }
     };
@@ -351,22 +703,80 @@ pub fn gemm_int8(
         }
     }
 
-    if scratch.qz_i.len() < in_dim {
-        scratch.qz_i.resize(in_dim, 0);
-    }
-    for m in planes {
-        for o in 0..out_dim {
-            let p = m.param_of_row(o);
-            let z = p.zero_point;
-            gemv::unpack_row_qz_i32(m.row_bytes(o), in_dim, m.bits, z, &mut scratch.qz_i);
-            let wrow = &scratch.qz_i[..in_dim];
-            for t in 0..seq {
-                let s = scratch.sx[t];
-                if s == 0.0 {
-                    continue; // all-zero activation row contributes 0
+    if scratch.imp == KernelImpl::Scalar {
+        if scratch.qz_i.len() < in_dim {
+            scratch.qz_i.resize(in_dim, 0);
+        }
+        for m in planes {
+            for o in 0..out_dim {
+                let p = m.param_of_row(o);
+                let z = p.zero_point;
+                gemv::unpack_row_qz_i32(m.row_bytes(o), in_dim, m.bits, z, &mut scratch.qz_i);
+                let wrow = &scratch.qz_i[..in_dim];
+                for t in 0..seq {
+                    let s = scratch.sx[t];
+                    if s == 0.0 {
+                        continue; // all-zero activation row contributes 0
+                    }
+                    let acc = gemv::dot_qi32(&scratch.qx[t * in_dim..(t + 1) * in_dim], wrow);
+                    y[t * out_dim + o] += (acc as f64 / (s * p.scale)) as f32;
                 }
-                let acc = gemv::dot_qi32(&scratch.qx[t * in_dim..(t + 1) * in_dim], wrow);
-                y[t * out_dim + o] += (acc as f64 / (s * p.scale)) as f32;
+            }
+        }
+        return;
+    }
+
+    for m in planes {
+        for &z in &m.zps {
+            scratch.luts.ensure_i32(m.bits, z);
+        }
+    }
+    let KernelScratch { qx, sx, acc_i, luts, .. } = scratch;
+    for m in planes {
+        accumulate_int8_lut(y, &qx[..seq * in_dim], &sx[..], seq, m, acc_i, luts);
+    }
+}
+
+/// Blocked i32-LUT twin of the scalar integer loop: expand each packed
+/// row block through the i32 byte table ([`LUT_BLOCK`] ≤ [`INT_BLOCK`],
+/// so per-block i32 accumulation cannot overflow) and fold block dots
+/// into per-position i64 totals. Integer addition is associative, so
+/// the totals — and the exact-zero guarantee for masked levels — are
+/// bit-identical to the whole-row unpack.
+fn accumulate_int8_lut(
+    y: &mut [f32],
+    qx: &[i8],
+    sx: &[f64],
+    seq: usize,
+    m: &PackedMatrix,
+    acc: &mut Vec<i64>,
+    luts: &gemv::LutCache,
+) {
+    let (out_dim, in_dim) = (m.rows, m.cols);
+    if acc.len() < seq {
+        acc.resize(seq, 0);
+    }
+    let mut buf = [0i32; LUT_BLOCK];
+    for o in 0..out_dim {
+        let p = m.param_of_row(o);
+        let tab = luts.i32_table(m.bits, p.zero_point);
+        let row = m.row_bytes(o);
+        acc[..seq].fill(0);
+        let mut c0 = 0;
+        while c0 < in_dim {
+            let len = LUT_BLOCK.min(in_dim - c0);
+            gemv::expand_block(row, c0, len, m.bits, tab, &mut buf);
+            let wb = &buf[..len];
+            for (t, a) in acc[..seq].iter_mut().enumerate() {
+                if sx[t] != 0.0 {
+                    *a += gemv::dot_qi32(&qx[t * in_dim + c0..t * in_dim + c0 + len], wb);
+                }
+            }
+            c0 += len;
+        }
+        for (t, a) in acc[..seq].iter().enumerate() {
+            if sx[t] != 0.0 {
+                y[t * out_dim + o] += (*a as f64 / (sx[t] * p.scale)) as f32;
             }
         }
     }
@@ -391,6 +801,22 @@ mod tests {
         matmul(x, &eff.transpose())
     }
 
+    fn scalar_scratch() -> KernelScratch {
+        let mut s = KernelScratch::new();
+        s.set_kernel_impl(KernelImpl::Scalar);
+        s
+    }
+
+    #[test]
+    fn kernel_impl_parse_and_default() {
+        assert_eq!(KernelImpl::default(), KernelImpl::Lut);
+        assert_eq!(KernelImpl::parse("lut").unwrap(), KernelImpl::Lut);
+        assert_eq!(KernelImpl::parse("scalar").unwrap(), KernelImpl::Scalar);
+        assert!(KernelImpl::parse("simd").is_err());
+        assert_eq!(KernelImpl::Lut.name(), "lut");
+        assert_eq!(KernelImpl::Scalar.name(), "scalar");
+    }
+
     #[test]
     fn packed_matrix_roundtrips_levels_and_rows() {
         let w = random_tensor(1, 5, 7, 0.3);
@@ -398,6 +824,7 @@ mod tests {
             let q = quantize_per_tensor(&w, bits);
             let m = PackedMatrix::from_quantized(&q).unwrap();
             assert_eq!((m.rows(), m.cols()), (5, 7));
+            assert_eq!(m.zero_points().len(), 1, "per-tensor plane has one zero-point");
             let dq = q.dequantize();
             let mut row = vec![0.0f32; 7];
             for r in 0..5 {
@@ -427,6 +854,51 @@ mod tests {
                 "{bits:?}: diff {}",
                 max_abs_diff(&y, want.data())
             );
+        }
+    }
+
+    #[test]
+    fn lut_and_scalar_impls_agree() {
+        let w = random_tensor(40, 19, 37, 0.4);
+        let x = random_tensor(41, 3, 37, 1.0);
+        let mut lut = KernelScratch::new();
+        let mut scalar = scalar_scratch();
+        for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+            let q = quantize_per_channel(&w, bits);
+            let lin = PackedLinear::from_planes(vec![PackedMatrix::from_quantized(&q).unwrap()])
+                .unwrap();
+            for seq in [1usize, 3] {
+                let mut ya = vec![0.0f32; seq * 19];
+                let mut yb = vec![0.0f32; seq * 19];
+                gemm(&mut ya, &x.data()[..seq * 37], seq, &lin, &mut lut);
+                gemm(&mut yb, &x.data()[..seq * 37], seq, &lin, &mut scalar);
+                let scale = yb.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1.0) as f64;
+                assert!(
+                    max_abs_diff(&ya, &yb) < 1e-5 * scale,
+                    "{bits:?} seq={seq}: lut drifted {} from scalar",
+                    max_abs_diff(&ya, &yb)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn row_parallel_is_bit_identical_to_serial_lut() {
+        let w = random_tensor(50, 67, 129, 0.3);
+        let x = random_tensor(51, 1, 129, 1.0);
+        for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+            let q = quantize_per_channel(&w, bits);
+            let lin = PackedLinear::from_planes(vec![PackedMatrix::from_quantized(&q).unwrap()])
+                .unwrap();
+            let mut serial = KernelScratch::new();
+            let mut par = KernelScratch::new();
+            par.set_row_pool(Some(Arc::new(Pool::new(4))));
+            par.set_min_par_work(0);
+            let mut ys = vec![0.0f32; 67];
+            let mut yp = vec![0.0f32; 67];
+            gemv(&mut ys, x.data(), &lin, &mut serial);
+            gemv(&mut yp, x.data(), &lin, &mut par);
+            assert_eq!(ys, yp, "{bits:?}: sharding changed results");
         }
     }
 
@@ -465,6 +937,26 @@ mod tests {
     }
 
     #[test]
+    fn gemm_int8_lut_is_bit_identical_to_scalar() {
+        // Integer sums are exact, so the blocked i32-LUT path must equal
+        // the whole-row unpack path bit-for-bit.
+        let w = random_tensor(60, 11, 700, 0.3);
+        let x = random_tensor(61, 3, 700, 1.0);
+        for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+            let q = quantize_per_channel(&w, bits);
+            let lin = PackedLinear::from_planes(vec![PackedMatrix::from_quantized(&q).unwrap()])
+                .unwrap();
+            let mut lut = KernelScratch::new();
+            let mut scalar = scalar_scratch();
+            let mut ya = vec![0.0f32; 3 * 11];
+            let mut yb = vec![0.0f32; 3 * 11];
+            gemm_int8(&mut ya, x.data(), 3, &lin, &mut lut);
+            gemm_int8(&mut yb, x.data(), 3, &lin, &mut scalar);
+            assert_eq!(ya, yb, "{bits:?}: integer LUT path drifted");
+        }
+    }
+
+    #[test]
     fn dense_fallback_matches_matmul() {
         let w = random_tensor(8, 7, 5, 0.4);
         let x = random_tensor(9, 3, 5, 1.0);
@@ -492,23 +984,61 @@ mod tests {
 
     #[test]
     fn single_row_fast_path_matches_batched() {
-        // The seq==1 decode path must produce the same outputs as the
-        // same row pushed through the batched loop.
+        // The seq==1 decode path (row tile) must produce the same
+        // outputs as the same row pushed through the batched loop, on
+        // both implementations.
         let w = random_tensor(21, 11, 17, 0.3);
         let x = random_tensor(22, 3, 17, 1.0);
-        for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
-            let q = quantize_per_channel(&w, bits);
-            let lin = PackedLinear::from_planes(vec![PackedMatrix::from_quantized(&q).unwrap()])
-                .unwrap();
-            let mut scratch = KernelScratch::with_capacity(17);
-            let mut batched = vec![0.0f32; 3 * 11];
-            gemm(&mut batched, x.data(), 3, &lin, &mut scratch);
-            for t in 0..3 {
-                let mut single = vec![0.0f32; 11];
-                gemv(&mut single, x.row(t), &lin, &mut scratch);
-                assert_eq!(&single[..], &batched[t * 11..(t + 1) * 11], "{bits:?} row {t}");
+        for imp in [KernelImpl::Lut, KernelImpl::Scalar] {
+            for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+                let q = quantize_per_channel(&w, bits);
+                let lin =
+                    PackedLinear::from_planes(vec![PackedMatrix::from_quantized(&q).unwrap()])
+                        .unwrap();
+                let mut scratch = KernelScratch::with_capacity(17);
+                scratch.set_kernel_impl(imp);
+                let mut batched = vec![0.0f32; 3 * 11];
+                gemm(&mut batched, x.data(), 3, &lin, &mut scratch);
+                for t in 0..3 {
+                    let mut single = vec![0.0f32; 11];
+                    gemv(&mut single, x.row(t), &lin, &mut scratch);
+                    assert_eq!(
+                        &single[..],
+                        &batched[t * 11..(t + 1) * 11],
+                        "{imp:?} {bits:?} row {t}"
+                    );
+                }
             }
         }
+    }
+
+    #[test]
+    fn prewarm_prevents_hot_path_lut_builds() {
+        let w = random_tensor(23, 9, 29, 0.3);
+        let q = quantize_per_channel(&w, Bits::Int4);
+        let lin =
+            PackedLinear::from_planes(vec![PackedMatrix::from_quantized(&q).unwrap()]).unwrap();
+        let x = random_tensor(24, 1, 29, 1.0);
+        let mut y = vec![0.0f32; 9];
+
+        let mut cold = KernelScratch::new();
+        assert_eq!(cold.lut_builds(), 0);
+        gemv(&mut y, x.data(), &lin, &mut cold);
+        assert!(cold.lut_builds() > 0, "cold scratch builds tables lazily");
+
+        let mut warm = KernelScratch::new();
+        warm.prewarm_linear(&lin);
+        let built = warm.lut_builds();
+        assert!(built > 0);
+        gemv(&mut y, x.data(), &lin, &mut warm);
+        assert_eq!(warm.lut_builds(), built, "prewarmed f32 hot path must not build LUTs");
+        // The integer path builds its i32 flavor lazily on first use,
+        // then stays flat too.
+        gemm_int8(&mut y, x.data(), 1, &lin, &mut warm);
+        let with_int = warm.lut_builds();
+        assert!(with_int > built, "i32 tables are lazy, built on first gemm_int8");
+        gemm_int8(&mut y, x.data(), 1, &lin, &mut warm);
+        assert_eq!(warm.lut_builds(), with_int, "steady-state gemm_int8 must not rebuild");
     }
 
     #[test]

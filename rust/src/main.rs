@@ -47,6 +47,7 @@ fn app() -> App {
                 .flag("no-amplify", "skip outlier amplification")
                 .flag("runtime", "score through PJRT instead of the CPU reference")
                 .opt("engine", "reference", "CPU engine for quantized arms: packed|reference")
+                .opt("kernel-impl", "lut", "packed kernel inner loops: lut|scalar")
                 .opt("export-dir", "", "also export packed arms to this dir")
                 .opt("threads", "0", "pipeline worker threads (0 = all cores)")
                 .opt("log", "info", "log level"),
@@ -62,6 +63,8 @@ fn app() -> App {
                 .opt("max-batch", "16", "executor batch size (CPU engines)")
                 .opt("max-wait-ms", "5", "batcher fill deadline in milliseconds")
                 .opt("workers", "0", "executor pool workers, CPU engines (0 = all cores)")
+                .opt("kernel-impl", "lut", "packed kernel inner loops: lut|scalar")
+                .opt("row-workers", "0", "row-parallel GEMV threads (0 = cores left after batch workers)")
                 .opt("prefix-cache", "32", "prompt-prefix LRU capacity (0 = disabled)")
                 .flag("full-recompute", "score via full prompt+option recompute (baseline)")
                 .opt("threads", "0", "pipeline worker threads (0 = all cores)")
@@ -136,6 +139,7 @@ fn cmd_eval(m: &Matches) -> Result<()> {
     let mut spec = PipelineSpec::new(m.get("ckpt")?, m.get("problems")?);
     spec.use_runtime = m.flag("runtime");
     spec.engine = ExecEngine::parse(m.get("engine")?)?;
+    spec.kernel_impl = splitquant::kernels::KernelImpl::parse(m.get("kernel-impl")?)?;
     if spec.use_runtime && spec.engine == ExecEngine::Packed {
         bail!("--engine packed cannot combine with --runtime (PJRT executes the batch); pick one");
     }
@@ -224,6 +228,8 @@ fn cmd_serve(m: &Matches) -> Result<()> {
         workers: m.get_usize("workers")?,
         prefix_cache: m.get_usize("prefix-cache")?,
         reuse_prefix: !m.flag("full-recompute"),
+        kernel_impl: splitquant::kernels::KernelImpl::parse(m.get("kernel-impl")?)?,
+        row_workers: m.get_usize("row-workers")?,
         ..Default::default()
     };
     let server = Server::start(backend, config)?;

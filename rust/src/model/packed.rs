@@ -183,10 +183,19 @@ impl PackedModel {
             .unwrap_or(0)
     }
 
-    /// A kernel scratch pre-grown to this model's widest layer, so
-    /// long-lived workers never pay incremental growth on the hot path.
+    /// A kernel scratch pre-grown to this model's widest layer, with
+    /// the byte→lane LUTs of every plane (linears + the packed
+    /// embedding read by the tied LM head) pre-built — so a long-lived
+    /// worker's first decode token pays neither buffer growth nor LUT
+    /// construction (`scratch.lut_builds()` stays flat across
+    /// forwards; asserted in `kernel_micro` and the tests below).
     pub fn prewarmed_scratch(&self) -> KernelScratch {
-        KernelScratch::with_capacity(self.max_in_dim())
+        let mut scratch = KernelScratch::with_capacity(self.max_in_dim());
+        for lin in self.linears.values() {
+            scratch.prewarm_linear(lin);
+        }
+        scratch.prewarm_matrix(&self.embedding);
+        scratch
     }
 
     /// Weight bytes one full-sequence forward streams: packed linear
@@ -347,6 +356,41 @@ mod tests {
             assert!((lp - want).abs() < 1e-6, "{lp} vs {want}");
         }
         assert!(pm.max_in_dim() >= pm.config.d_model);
+    }
+
+    #[test]
+    fn prewarmed_scratch_never_builds_luts_on_the_hot_path() {
+        let ck = ck();
+        let qm =
+            quantize_model(&ck, Bits::Int4, &Method::SplitQuant(SplitConfig::default())).unwrap();
+        let pm = PackedModel::from_qmodel(&qm).unwrap();
+        let mut ws = Workspace::new(&ck.config, 16);
+        let mut scratch = pm.prewarmed_scratch();
+        let built = scratch.lut_builds();
+        assert!(built > 0, "prewarm builds the planes' tables");
+        let mut state = DecodeState::new(&ck.config);
+        pm.forward_with(&[1, 6, 11], &mut ws, &mut scratch).unwrap();
+        pm.forward_extend(&[3], 0, &mut ws, &mut scratch, &mut state).unwrap();
+        assert_eq!(scratch.lut_builds(), built, "forward built LUTs after prewarm");
+    }
+
+    #[test]
+    fn scalar_and_lut_engines_agree_on_logits() {
+        use crate::kernels::KernelImpl;
+        let ck = ck();
+        let toks = [1usize, 6, 11, 3, 2];
+        let qm =
+            quantize_model(&ck, Bits::Int4, &Method::SplitQuant(SplitConfig::default())).unwrap();
+        let pm = PackedModel::from_qmodel(&qm).unwrap();
+        let mut ws = Workspace::new(&ck.config, 16);
+        let mut lut = pm.prewarmed_scratch();
+        let mut scalar = pm.prewarmed_scratch();
+        scalar.set_kernel_impl(KernelImpl::Scalar);
+        let a = pm.forward_with(&toks, &mut ws, &mut lut).unwrap();
+        let b = pm.forward_with(&toks, &mut ws, &mut scalar).unwrap();
+        let scale = b.data().iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1.0) as f64;
+        let diff = max_abs_diff(a.data(), b.data());
+        assert!(diff < 1e-4 * scale, "LUT logits drifted {diff} from the scalar oracle");
     }
 
     #[test]

@@ -10,10 +10,17 @@
 use super::Bits;
 use anyhow::{bail, Result};
 
+/// Values stored per packed byte at a bit width: 1 (INT8), 2 (INT4) or
+/// 4 (INT2). Shared by the packers here and the LUT-fused kernels
+/// (`crate::kernels`), whose byte tables hold exactly this many lanes
+/// per entry.
+pub fn lanes_per_byte(bits: Bits) -> usize {
+    8 / bits.width() as usize
+}
+
 /// Bytes needed to pack `n` values at a bit width.
 pub fn packed_len(n: usize, bits: Bits) -> usize {
-    let per_byte = 8 / bits.width() as usize;
-    n.div_ceil(per_byte)
+    n.div_ceil(lanes_per_byte(bits))
 }
 
 /// Pack signed levels into bytes. Values must be within the bit width's
@@ -21,7 +28,7 @@ pub fn packed_len(n: usize, bits: Bits) -> usize {
 pub fn pack(values: &[i8], bits: Bits) -> Vec<u8> {
     let qmin = bits.qmin();
     let width = bits.width() as usize;
-    let per_byte = 8 / width;
+    let per_byte = lanes_per_byte(bits);
     let mask = ((1u32 << width) - 1) as u8;
     let mut out = vec![0u8; packed_len(values.len(), bits)];
     for (i, &v) in values.iter().enumerate() {
@@ -62,7 +69,7 @@ pub fn pack_rows(values: &[i8], rows: usize, cols: usize, bits: Bits) -> Vec<u8>
 /// value index. Accessor for tests/tools; kernels unpack whole blocks.
 pub fn get_packed(bytes: &[u8], i: usize, bits: Bits) -> i8 {
     let width = bits.width() as usize;
-    let per_byte = 8 / width;
+    let per_byte = lanes_per_byte(bits);
     let mask = ((1u32 << width) - 1) as u8;
     let u = (bytes[i / per_byte] >> ((i % per_byte) * width)) & mask;
     (u as i32 + bits.qmin()) as i8
@@ -82,7 +89,7 @@ pub fn unpack(bytes: &[u8], n: usize, bits: Bits) -> Result<Vec<i8>> {
     }
     let qmin = bits.qmin();
     let width = bits.width() as usize;
-    let per_byte = 8 / width;
+    let per_byte = lanes_per_byte(bits);
     let mask = ((1u32 << width) - 1) as u8;
     let mut out = Vec::with_capacity(n);
     for i in 0..n {
@@ -98,6 +105,13 @@ pub fn unpack(bytes: &[u8], n: usize, bits: Bits) -> Result<Vec<i8>> {
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
+
+    #[test]
+    fn lanes_per_byte_by_width() {
+        assert_eq!(lanes_per_byte(Bits::Int8), 1);
+        assert_eq!(lanes_per_byte(Bits::Int4), 2);
+        assert_eq!(lanes_per_byte(Bits::Int2), 4);
+    }
 
     #[test]
     fn lengths() {

@@ -144,6 +144,44 @@ impl Pool {
         out.into_iter().map(|v| v.expect("all slots filled")).collect()
     }
 
+    /// Visit `data.chunks_mut(chunk)` in parallel: `f(i, chunk_i)` runs
+    /// exactly once per chunk, chunks are handed out dynamically (a slow
+    /// chunk does not stall the others), and the call blocks until all
+    /// complete. This is how the row-sharded GEMV path of
+    /// `crate::kernels` gives each worker a disjoint output-row range
+    /// without copies or unsafe aliasing — the chunk iterator itself is
+    /// the work queue. Panics in `f` propagate (scoped-thread semantics).
+    pub fn parallel_chunks<T, F>(&self, data: &mut [T], chunk: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        if data.is_empty() {
+            return;
+        }
+        let chunk = chunk.max(1);
+        let n_chunks = data.len().div_ceil(chunk);
+        let workers = self.size.min(n_chunks);
+        if workers <= 1 {
+            for (i, c) in data.chunks_mut(chunk).enumerate() {
+                f(i, c);
+            }
+            return;
+        }
+        let queue = Mutex::new(data.chunks_mut(chunk).enumerate());
+        thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let next = queue.lock().unwrap().next();
+                    match next {
+                        Some((i, c)) => f(i, c),
+                        None => break,
+                    }
+                });
+            }
+        });
+    }
+
     /// Like [`parallel_map`](Pool::parallel_map), but with a bounded
     /// reorder window (see
     /// [`parallel_consume_ordered`](Pool::parallel_consume_ordered)).
@@ -310,6 +348,21 @@ impl Pool {
             unreachable!("ordered sweep poisoned without a panic payload");
         }
     }
+}
+
+/// Split `total` threads between batch-level and row-level parallelism:
+/// returns `(batch_workers, row_workers)` with `batch_workers =
+/// min(total, items)` and the leftover cores folded into per-item row
+/// parallelism (`row_workers = total / batch_workers`). A full batch
+/// gets `(total, 1)` — all cores sharding items; a single decode stream
+/// gets `(1, total)` — all cores sharding GEMV output rows. This is the
+/// thread-budget rule shared by `eval::evaluate_packed` and the serving
+/// executor so batch sharding and intra-forward row sharding never
+/// oversubscribe each other.
+pub fn thread_budget(total: usize, items: usize) -> (usize, usize) {
+    let total = total.max(1);
+    let batch = total.min(items.max(1));
+    (batch, (total / batch).max(1))
 }
 
 impl Drop for Pool {
@@ -512,6 +565,61 @@ mod tests {
             )
         }));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn parallel_chunks_visits_every_chunk_once() {
+        for workers in [1usize, 2, 4, 8] {
+            for chunk in [1usize, 3, 16, 100] {
+                let pool = Pool::new(workers);
+                let mut data = vec![0u32; 37];
+                pool.parallel_chunks(&mut data, chunk, |i, c| {
+                    for (j, v) in c.iter_mut().enumerate() {
+                        *v += (i * chunk + j) as u32 + 1;
+                    }
+                });
+                let want: Vec<u32> = (1..=37).collect();
+                assert_eq!(data, want, "workers={workers} chunk={chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_chunks_edge_cases() {
+        let pool = Pool::new(4);
+        let mut empty: Vec<u8> = Vec::new();
+        pool.parallel_chunks(&mut empty, 4, |_, _| panic!("must not run"));
+        let mut one = vec![0u8];
+        pool.parallel_chunks(&mut one, 0, |i, c| {
+            assert_eq!(i, 0);
+            c[0] = 7; // chunk size clamps to 1
+        });
+        assert_eq!(one, vec![7]);
+    }
+
+    #[test]
+    fn parallel_chunks_panic_propagates() {
+        let pool = Pool::new(4);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let mut data = vec![0u8; 64];
+            pool.parallel_chunks(&mut data, 4, |i, _| {
+                if i == 7 {
+                    panic!("chunk 7 exploded");
+                }
+            });
+        }));
+        assert!(r.is_err(), "chunk panic must escape");
+    }
+
+    #[test]
+    fn thread_budget_splits_batch_then_rows() {
+        assert_eq!(thread_budget(8, 1), (1, 8));
+        assert_eq!(thread_budget(8, 8), (8, 1));
+        assert_eq!(thread_budget(8, 3), (3, 2));
+        assert_eq!(thread_budget(4, 100), (4, 1));
+        assert_eq!(thread_budget(1, 5), (1, 1));
+        assert_eq!(thread_budget(6, 0), (1, 6), "zero items still budgets one batch slot");
+        assert_eq!(thread_budget(0, 3), (1, 1), "degenerate totals clamp to 1");
     }
 
     #[test]

@@ -1,0 +1,373 @@
+//! Property tests for the LUT-fused blocked kernel engine (DESIGN.md
+//! §7): the LUT, blocked and row-parallel paths are pinned against the
+//! scalar unpack-whole-row oracle (`KernelImpl::Scalar`) across every
+//! bit width, odd column counts (tail lanes), per-row parameters,
+//! empty-cluster split planes and seq ∈ {1, 2, 7} — ≤1e-5 relative
+//! tolerance for the f32 paths, *exact* integer equality for the
+//! unpacked levels and the INT8-activation path. Plus the accumulate
+//! contract (no double-accumulate across plane kinds) and the
+//! chunked ≡ full decode property on both kernel implementations.
+
+use std::sync::Arc;
+
+use splitquant::kernels::{self, KernelImpl, KernelScratch, PackedLinear, PackedMatrix};
+use splitquant::kmeans::Clustering1D;
+use splitquant::model::decode::DecodeState;
+use splitquant::model::packed::{pack_linear, PackedModel};
+use splitquant::model::quantized::{quantize_model, Method, QuantParam};
+use splitquant::model::{forward::Workspace, Checkpoint, PicoLlamaConfig};
+use splitquant::quant::{self, pack, Bits, QuantParams};
+use splitquant::split::{split_quantize, QuantizedSplitLayer, SplitConfig, Strategy};
+use splitquant::tensor::{Tensor, TensorI8};
+use splitquant::util::pool::Pool;
+use splitquant::util::rng::Rng;
+use splitquant::util::stats::max_abs_diff;
+
+/// LLM-like weights: mostly small values, a few large outliers.
+fn heavy_tensor(seed: u64, rows: usize, cols: usize) -> Tensor {
+    let mut r = Rng::new(seed);
+    let mut data: Vec<f32> = (0..rows * cols).map(|_| r.normal_f32(0.0, 0.05)).collect();
+    let n_out = (data.len() / 40).max(1);
+    for _ in 0..n_out {
+        let i = r.below(data.len());
+        data[i] = r.uniform_in(1.0, 2.5) * if r.uniform() < 0.5 { -1.0 } else { 1.0 };
+    }
+    Tensor::new(&[rows, cols], data)
+}
+
+fn random_x(seed: u64, seq: usize, cols: usize) -> Vec<f32> {
+    let mut r = Rng::new(seed);
+    let mut data = vec![0.0f32; seq * cols];
+    r.fill_normal(&mut data, 0.0, 1.0);
+    data
+}
+
+fn scratch_with(imp: KernelImpl) -> KernelScratch {
+    let mut s = KernelScratch::new();
+    s.set_kernel_impl(imp);
+    s
+}
+
+fn parallel_scratch(workers: usize) -> KernelScratch {
+    let mut s = KernelScratch::new();
+    s.set_row_pool(Some(Arc::new(Pool::new(workers))));
+    s.set_min_par_work(0); // force sharding even on tiny test shapes
+    s
+}
+
+/// A degenerate split layer whose second plane is an empty cluster:
+/// every level 0, scale 1, zero-point 0 — it must contribute exactly 0.
+fn with_empty_cluster(w: &Tensor, bits: Bits) -> QuantParam {
+    let qa = quant::quantize_per_tensor(w, bits);
+    let (rows, cols) = (w.shape()[0], w.shape()[1]);
+    let zero_plane = quant::QuantizedTensor {
+        plane: TensorI8::zeros(&[rows, cols]),
+        granularity: quant::Granularity::PerTensor,
+        params: vec![QuantParams::from_range(bits, 0.0, 0.0)],
+    };
+    let clustering = Clustering1D {
+        centroids: vec![0.0, 0.0],
+        boundaries: vec![f64::INFINITY],
+        inertia: 0.0,
+        sizes: vec![w.len() as f64, 0.0],
+        member_ranges: None,
+    };
+    QuantParam::Split(QuantizedSplitLayer {
+        planes: vec![qa, zero_plane],
+        clustering,
+        strategy: Strategy::MaskedSum,
+    })
+}
+
+/// Every (bits × shape × param-kind × seq) cell: the LUT path and the
+/// row-parallel LUT path must stay within 1e-5 relative of the scalar
+/// oracle, and the two LUT variants must agree bit-for-bit at seq==1.
+#[test]
+fn lut_blocked_and_row_parallel_match_scalar_oracle() {
+    let mut seed = 500;
+    for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+        // Odd cols exercise the tail lanes of every byte width; 513/515
+        // straddle one LUT_BLOCK boundary; 37 rows exercises the 4-row
+        // tile's 1-row tail; 130 rows splits into many row-parallel
+        // shards (out_dim must clear the 32-row sharding floor — the
+        // smaller shapes run the parallel arm serially by design).
+        for (rows, cols) in [(5usize, 7usize), (37, 33), (130, 129), (8, 513), (4, 515)] {
+            seed += 1;
+            let w = heavy_tensor(seed, rows, cols);
+            let params: Vec<(&str, QuantParam)> = vec![
+                ("plain", QuantParam::Plain(quant::quantize_per_tensor(&w, bits))),
+                (
+                    "per-channel",
+                    QuantParam::Plain(quant::quantize_per_channel(&w, bits)),
+                ),
+                (
+                    "split",
+                    QuantParam::Split(split_quantize(&w, &SplitConfig::default(), bits)),
+                ),
+                ("empty-cluster", with_empty_cluster(&w, bits)),
+            ];
+            for (kind, qp) in &params {
+                let lin = pack_linear(qp).unwrap();
+                for seq in [1usize, 2, 7] {
+                    let label = format!("{bits:?} {rows}x{cols} {kind} seq={seq}");
+                    let x = random_x(seed * 13 + seq as u64, seq, cols);
+                    let mut y_scalar = vec![0.0f32; seq * rows];
+                    let mut y_lut = vec![0.0f32; seq * rows];
+                    kernels::gemm(
+                        &mut y_scalar,
+                        &x,
+                        seq,
+                        &lin,
+                        &mut scratch_with(KernelImpl::Scalar),
+                    );
+                    kernels::gemm(&mut y_lut, &x, seq, &lin, &mut scratch_with(KernelImpl::Lut));
+                    let scale =
+                        y_scalar.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1.0) as f64;
+                    assert!(
+                        max_abs_diff(&y_lut, &y_scalar) < 1e-5 * scale,
+                        "{label}: lut drifted {} (magnitude {scale})",
+                        max_abs_diff(&y_lut, &y_scalar)
+                    );
+                    if seq == 1 {
+                        let mut y_par = vec![0.0f32; rows];
+                        kernels::gemm(&mut y_par, &x, 1, &lin, &mut parallel_scratch(4));
+                        assert_eq!(y_par, y_lut, "{label}: row sharding changed results");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The INT8-activation path is exact integer arithmetic after the
+/// activation quantization, so its LUT-blocked variant must be
+/// bit-identical to the scalar oracle — across split planes too.
+#[test]
+fn int8_lut_path_is_bit_identical_to_scalar_across_planes() {
+    for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+        let w = heavy_tensor(900 + bits.width() as u64, 9, 521);
+        for qp in [
+            QuantParam::Plain(quant::quantize_per_channel(&w, bits)),
+            QuantParam::Split(split_quantize(&w, &SplitConfig::default(), bits)),
+        ] {
+            let lin = pack_linear(&qp).unwrap();
+            for seq in [1usize, 2, 7] {
+                let x = random_x(7 + seq as u64, seq, 521);
+                let mut a = vec![0.0f32; seq * 9];
+                let mut b = vec![0.0f32; seq * 9];
+                kernels::gemm_int8(&mut a, &x, seq, &lin, &mut scratch_with(KernelImpl::Lut));
+                kernels::gemm_int8(&mut b, &x, seq, &lin, &mut scratch_with(KernelImpl::Scalar));
+                assert_eq!(a, b, "{bits:?} seq={seq}: integer paths diverged");
+            }
+        }
+    }
+}
+
+/// The byte tables hold the *exact* zero-adjusted integer levels: every
+/// lane of every byte equals the packed accessor's `q − z`, in both the
+/// f32 and i32 flavors.
+#[test]
+fn lut_tables_pin_exact_integer_levels() {
+    for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+        let lanes = pack::lanes_per_byte(bits);
+        for z in bits.qmin()..=bits.qmax() {
+            let f = kernels::lut_table_f32(bits, z);
+            let i = kernels::lut_table_i32(bits, z);
+            assert_eq!(f.len(), 256 * lanes, "{bits:?}");
+            for byte in 0..=255u8 {
+                for lane in 0..lanes {
+                    let level = pack::get_packed(&[byte], lane, bits) as i32 - z;
+                    assert_eq!(i[byte as usize * lanes + lane], level, "{bits:?} z={z} {byte}");
+                    assert_eq!(
+                        f[byte as usize * lanes + lane],
+                        level as f32,
+                        "{bits:?} z={z} byte={byte} lane={lane}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// One-hot activations read single weights through the full public
+/// kernel: the output must equal `(q − z) / S` computed from the scalar
+/// accessor *exactly*, on both implementations — the end-to-end form of
+/// the exact-level guarantee.
+#[test]
+fn one_hot_gemv_reads_exact_levels_on_both_impls() {
+    for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+        let w = heavy_tensor(40 + bits.width() as u64, 6, 21);
+        let q = quant::quantize_per_channel(&w, bits);
+        let m = PackedMatrix::from_quantized(&q).unwrap();
+        let lin = PackedLinear::from_planes(vec![m.clone()]).unwrap();
+        for c in [0usize, 1, 19, 20] {
+            let mut x = vec![0.0f32; 21];
+            x[c] = 1.0;
+            for imp in [KernelImpl::Lut, KernelImpl::Scalar] {
+                let mut y = vec![0.0f32; 6];
+                kernels::gemv(&mut y, &x, &lin, &mut scratch_with(imp));
+                for (o, &got) in y.iter().enumerate() {
+                    let p = m.param_of_row(o);
+                    let level = m.get(o, c) as i32 - p.zero_point;
+                    let want = (level as f64 / p.scale) as f32;
+                    assert_eq!(got, want, "{bits:?} {imp:?} ({o},{c})");
+                }
+            }
+        }
+    }
+}
+
+/// The accumulate contract: entry points overwrite, helpers `+=`.
+/// Running the same gemm twice into the same (dirty) output must give
+/// the same answer for every linear form — a double-accumulate anywhere
+/// (plain plane, k split planes, dense fallback) fails this.
+#[test]
+fn no_double_accumulate_across_plain_split_and_dense() {
+    let w = heavy_tensor(60, 11, 29);
+    let forms: Vec<(&str, PackedLinear)> = vec![
+        (
+            "plain",
+            pack_linear(&QuantParam::Plain(quant::quantize_per_tensor(&w, Bits::Int4))).unwrap(),
+        ),
+        (
+            "split",
+            pack_linear(&QuantParam::Split(split_quantize(
+                &w,
+                &SplitConfig::default(),
+                Bits::Int4,
+            )))
+            .unwrap(),
+        ),
+        (
+            "dense",
+            pack_linear(&QuantParam::OcsEffective {
+                effective: w.clone(),
+                packed_len: 0,
+            })
+            .unwrap(),
+        ),
+    ];
+    let x = random_x(61, 2, 29);
+    for imp in [KernelImpl::Lut, KernelImpl::Scalar] {
+        let mut scratch = scratch_with(imp);
+        for (kind, lin) in &forms {
+            let mut first = vec![0.0f32; 2 * 11];
+            kernels::gemm(&mut first, &x, 2, lin, &mut scratch);
+            // Re-run into the dirty buffer: entry points must zero-fill.
+            let mut second = first.clone();
+            kernels::gemm(&mut second, &x, 2, lin, &mut scratch);
+            assert_eq!(first, second, "{imp:?} {kind}: gemm accumulated into dirty output");
+
+            let mut int_first = vec![0.0f32; 2 * 11];
+            kernels::gemm_int8(&mut int_first, &x, 2, lin, &mut scratch);
+            let mut int_second = int_first.clone();
+            kernels::gemm_int8(&mut int_second, &x, 2, lin, &mut scratch);
+            assert_eq!(int_first, int_second, "{imp:?} {kind}: gemm_int8 double-accumulated");
+        }
+    }
+    // gemm_matrix (the tied-LM-head path) honors the same contract.
+    let q = quant::quantize_per_channel(&w, Bits::Int8);
+    let m = PackedMatrix::from_quantized(&q).unwrap();
+    let mut scratch = KernelScratch::new();
+    let mut first = vec![0.0f32; 2 * 11];
+    kernels::gemm_matrix(&mut first, &x, 2, &m, &mut scratch);
+    let mut second = first.clone();
+    kernels::gemm_matrix(&mut second, &x, 2, &m, &mut scratch);
+    assert_eq!(first, second, "gemm_matrix double-accumulated");
+}
+
+/// Row-parallel sharding is deterministic: repeated runs and different
+/// worker counts all equal the serial LUT result bit-for-bit (the
+/// plane-outer/row-inner order is preserved inside every shard).
+#[test]
+fn row_parallel_is_deterministic_across_worker_counts() {
+    let w = heavy_tensor(70, 67, 130);
+    let qp = QuantParam::Split(split_quantize(&w, &SplitConfig::default(), Bits::Int4));
+    let lin = pack_linear(&qp).unwrap();
+    let x = random_x(71, 1, 130);
+    let mut serial = vec![0.0f32; 67];
+    kernels::gemv(&mut serial, &x, &lin, &mut scratch_with(KernelImpl::Lut));
+    for workers in [2usize, 3, 8] {
+        let mut scratch = parallel_scratch(workers);
+        for run in 0..3 {
+            let mut y = vec![0.0f32; 67];
+            kernels::gemv(&mut y, &x, &lin, &mut scratch);
+            assert_eq!(y, serial, "workers={workers} run={run}");
+        }
+    }
+}
+
+fn test_checkpoint() -> Checkpoint {
+    let mut ck = Checkpoint::random_init(&PicoLlamaConfig::test(), 91);
+    ck.amplify_outliers(0.002, 10.0, 4);
+    ck
+}
+
+/// The decode-state acceptance property on the packed engine, per
+/// kernel implementation: chunked extension through a DecodeState is
+/// bit-identical to the whole-sequence forward (the LUT path's blocked
+/// per-row order is seq-independent by construction), and the two
+/// implementations' logits stay within FP tolerance of each other.
+#[test]
+fn packed_chunked_extend_equals_full_forward_on_both_impls() {
+    let ck = test_checkpoint();
+    let toks = [1usize, 6, 11, 3, 2, 9, 4, 7];
+    let qm = quantize_model(&ck, Bits::Int4, &Method::SplitQuant(SplitConfig::default())).unwrap();
+    let pm = PackedModel::from_qmodel(&qm).unwrap();
+    let mut ws = Workspace::new(&ck.config, 16);
+    let mut full_logits = Vec::new();
+    for imp in [KernelImpl::Lut, KernelImpl::Scalar] {
+        let mut scratch = pm.prewarmed_scratch();
+        scratch.set_kernel_impl(imp);
+        let full = pm.forward_with(&toks, &mut ws, &mut scratch).unwrap();
+        for split in [1usize, 3, 7] {
+            let mut state = DecodeState::new(&ck.config);
+            let head = pm
+                .forward_extend(&toks[..split], 0, &mut ws, &mut scratch, &mut state)
+                .unwrap();
+            let tail = pm
+                .forward_extend(&toks[split..], split, &mut ws, &mut scratch, &mut state)
+                .unwrap();
+            for t in 0..split {
+                assert_eq!(head.row(t), full.row(t), "{imp:?} split={split} head row {t}");
+            }
+            for t in split..toks.len() {
+                assert_eq!(
+                    tail.row(t - split),
+                    full.row(t),
+                    "{imp:?} split={split} tail row {t}"
+                );
+            }
+        }
+        full_logits.push(full);
+    }
+    let scale = full_logits[1]
+        .data()
+        .iter()
+        .fold(0.0f32, |m, &v| m.max(v.abs()))
+        .max(1.0) as f64;
+    let diff = max_abs_diff(full_logits[0].data(), full_logits[1].data());
+    assert!(diff < 1e-4 * scale, "impls drifted {diff} apart (magnitude {scale})");
+}
+
+/// Row-parallel scoring through the full packed model matches the
+/// serial engine exactly (the eval/serving thread-budget path).
+#[test]
+fn packed_forward_with_row_pool_matches_serial() {
+    let ck = test_checkpoint();
+    let qm = quantize_model(&ck, Bits::Int8, &Method::Baseline).unwrap();
+    let pm = PackedModel::from_qmodel(&qm).unwrap();
+    let toks = [2usize, 5, 1, 8];
+    let mut ws = Workspace::new(&ck.config, 16);
+    let mut serial = pm.prewarmed_scratch();
+    let mut par = pm.prewarmed_scratch();
+    par.set_row_pool(Some(Arc::new(Pool::new(4))));
+    par.set_min_par_work(0);
+    let mut sa = DecodeState::new(&ck.config);
+    let mut sb = DecodeState::new(&ck.config);
+    for (i, &t) in toks.iter().enumerate() {
+        let a = pm.forward_extend(&[t], i, &mut ws, &mut serial, &mut sa).unwrap();
+        let b = pm.forward_extend(&[t], i, &mut ws, &mut par, &mut sb).unwrap();
+        assert_eq!(a, b, "token {i}: row-parallel decode diverged");
+    }
+}
