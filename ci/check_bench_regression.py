@@ -1,21 +1,84 @@
 #!/usr/bin/env python3
-"""Bench regression gate for the packed kernel engine.
+"""Bench regression gate for the packed kernel engine and the server.
 
-Reads the BENCH_gemv.json report written by
-`cargo bench --bench perf_probe -- --gemv-json BENCH_gemv.json`
-and fails (exit 1) if the LUT-fused INT4 GEMV kernel is not at least
-MIN_SPEEDUP x faster than the scalar unpack-whole-row baseline on the
-fixed-iteration smoke run. This is the CI contract behind DESIGN.md §7:
-the LUT engine exists to be faster; a regression below the floor means
-the fused path has rotted into a slow path and must not merge silently.
+Two checks, both wired into the CI bench-smoke job:
 
-Usage: check_bench_regression.py BENCH_gemv.json [--min 1.5]
+1. Kernel floor (positional REPORT): reads the BENCH_gemv.json report
+   written by `cargo bench --bench perf_probe -- --gemv-json ...` and
+   fails (exit 1) if the LUT-fused INT4 GEMV kernel is not at least
+   MIN_SPEEDUP x faster than the scalar unpack-whole-row baseline on
+   the fixed-iteration smoke run. This is the CI contract behind
+   DESIGN.md §7: the LUT engine exists to be faster; a regression below
+   the floor means the fused path has rotted into a slow path and must
+   not merge silently.
+
+2. Serving gate (--serving BENCH_serving.json): validates the
+   continuous-batching generation tiers emitted by
+   `perf_probe --serving-json` — at least three concurrency tiers, each
+   with finite p50/p99 TTFT (p50 <= p99) and positive aggregate
+   tokens/s. This is the DESIGN.md §8 contract: the streaming service
+   must sustain 100/1k/10k concurrent sessions and report honest TTFT,
+   and a tier that vanishes or degenerates (NaN timing, zero
+   throughput) must not merge silently.
+
+Usage:
+  check_bench_regression.py BENCH_gemv.json [--min 1.5]
+                            [--serving BENCH_serving.json]
 """
 
 import argparse
 import json
 import math
 import sys
+
+
+def _load(path):
+    with open(path, encoding="utf-8") as f:
+        return json.load(f)
+
+
+def _finite(v):
+    return isinstance(v, (int, float)) and math.isfinite(v)
+
+
+def check_serving(path: str) -> int:
+    try:
+        report = _load(path)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"FAIL: cannot read serving report {path}: {e}")
+        return 1
+
+    tiers = report.get("generation_tiers")
+    if not isinstance(tiers, list) or len(tiers) < 3:
+        n = len(tiers) if isinstance(tiers, list) else 0
+        print(f"FAIL: {path} has {n} generation tiers; the gate requires >= 3")
+        return 1
+
+    failures = 0
+    for tier in tiers:
+        sessions = tier.get("concurrent_sessions")
+        p50 = tier.get("ttft_p50_ms")
+        p99 = tier.get("ttft_p99_ms")
+        tps = tier.get("tokens_per_s")
+        label = f"serving tier x{sessions}"
+        if not (_finite(p50) and _finite(p99) and _finite(tps)):
+            print(f"FAIL: {label}: non-finite metrics (p50={p50!r} p99={p99!r} tok/s={tps!r})")
+            failures += 1
+            continue
+        if p50 < 0 or p99 < p50:
+            print(f"FAIL: {label}: inconsistent TTFT percentiles p50={p50:.2f} p99={p99:.2f}")
+            failures += 1
+            continue
+        if tps <= 0:
+            print(f"FAIL: {label}: non-positive throughput {tps:.2f} tok/s")
+            failures += 1
+            continue
+        print(f"{label}: ttft p50 {p50:.2f}ms p99 {p99:.2f}ms  {tps:.0f} tok/s")
+
+    if failures:
+        return 1
+    print(f"OK: {len(tiers)} serving tiers clear the gate")
+    return 0
 
 
 def main() -> int:
@@ -28,26 +91,31 @@ def main() -> int:
         dest="min_speedup",
         help="minimum INT4 LUT-vs-scalar GEMV speedup (default 1.5)",
     )
+    ap.add_argument(
+        "--serving",
+        default=None,
+        metavar="BENCH_serving.json",
+        help="also gate the streaming-generation serving tiers",
+    )
     args = ap.parse_args()
 
     try:
-        with open(args.report, encoding="utf-8") as f:
-            report = json.load(f)
+        report = _load(args.report)
     except (OSError, json.JSONDecodeError) as e:
         print(f"FAIL: cannot read bench report {args.report}: {e}")
         return 1
 
     speedup = report.get("int4_lut_speedup")
-    if not isinstance(speedup, (int, float)) or not math.isfinite(speedup):
+    if not _finite(speedup):
         print(f"FAIL: {args.report} has no finite 'int4_lut_speedup' (got {speedup!r})")
         return 1
 
     par = report.get("int4_lut_parallel_speedup")
     extend = (report.get("extend") or {}).get("lut_extend_speedup")
     print(f"INT4 GEMV: lut {speedup:.2f}x scalar (floor {args.min_speedup:.2f}x)")
-    if isinstance(par, (int, float)) and math.isfinite(par):
+    if _finite(par):
         print(f"INT4 GEMV: lut+row-parallel {par:.2f}x scalar")
-    if isinstance(extend, (int, float)) and math.isfinite(extend):
+    if _finite(extend):
         print(f"1-token forward_extend: lut {extend:.2f}x scalar")
 
     if speedup < args.min_speedup:
@@ -57,6 +125,9 @@ def main() -> int:
         )
         return 1
     print("OK: LUT kernels clear the regression floor")
+
+    if args.serving is not None:
+        return check_serving(args.serving)
     return 0
 
 

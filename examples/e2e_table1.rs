@@ -17,7 +17,8 @@
 //!      (requires `make artifacts` to have produced artifacts/)
 
 use anyhow::Result;
-use splitquant::coordinator::{Coordinator, ExecEngine, PipelineSpec};
+use splitquant::coordinator::{Coordinator, PipelineSpec};
+use splitquant::runtime::EngineKind;
 use splitquant::split::SplitConfig;
 use splitquant::util::fmt::{human_bytes, Table};
 use splitquant::util::timer::format_duration;
@@ -71,8 +72,8 @@ fn main() -> Result<()> {
 
     for arm in Coordinator::table1_arms(&SplitConfig::default()) {
         let (qm, qtime) = coord.quantize_arm(&ck, &arm)?;
-        let cpu = coord.evaluate_qm(&qm, &problems, false, ExecEngine::Reference)?;
-        let pjrt = coord.evaluate_qm(&qm, &problems, true, ExecEngine::Reference)?;
+        let cpu = coord.evaluate_qm(&qm, &problems, false, EngineKind::Reference)?;
+        let pjrt = coord.evaluate_qm(&qm, &problems, true, EngineKind::Reference)?;
         assert!(
             (cpu.accuracy - pjrt.accuracy).abs() < 0.02,
             "{}: CPU {} vs PJRT {}",

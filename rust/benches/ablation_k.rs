@@ -4,7 +4,8 @@
 //! implemented here and measured on the accuracy-vs-size frontier.
 
 use splitquant::bench::{banner, Bench, BenchConfig};
-use splitquant::coordinator::{Arm, Coordinator, ExecEngine, PipelineSpec};
+use splitquant::coordinator::{Arm, Coordinator, PipelineSpec};
+use splitquant::runtime::EngineKind;
 use splitquant::model::quantized::Method;
 use splitquant::quant::Bits;
 use splitquant::split::{DynamicK, SplitConfig};
@@ -44,7 +45,7 @@ fn main() -> anyhow::Result<()> {
         };
         let (qm, _) = coord.quantize_arm(&ck, &arm)?;
         let planes: usize = qm.linears.values().map(|q| q.n_planes()).sum();
-        let rep = coord.evaluate_qm(&qm, &problems, false, ExecEngine::Reference)?;
+        let rep = coord.evaluate_qm(&qm, &problems, false, EngineKind::Reference)?;
         bench.record_metric(&format!("accuracy[{label}]"), rep.accuracy * 100.0, "%");
         table.row(&[
             label.clone(),

@@ -10,7 +10,8 @@
 //!   * the calibration-data requirement (GPTQ: yes, SQv2: no).
 
 use splitquant::bench::{banner, Bench, BenchConfig};
-use splitquant::coordinator::{Arm, Coordinator, ExecEngine, PipelineSpec};
+use splitquant::coordinator::{Arm, Coordinator, PipelineSpec};
+use splitquant::runtime::EngineKind;
 use splitquant::gptq::gptq_quantize_model;
 use splitquant::model::quantized::Method;
 use splitquant::quant::Bits;
@@ -83,7 +84,7 @@ fn main() -> anyhow::Result<()> {
     // GPTQ-lite (timed including its mandatory calibration pass).
     let (gptq_qm, gptq_time) = time_it(|| gptq_quantize_model(&ck, Bits::Int4, &calib, 0.01));
     let gptq_qm = gptq_qm?;
-    let gptq_rep = coord.evaluate_qm(&gptq_qm, &problems, false, ExecEngine::Reference)?;
+    let gptq_rep = coord.evaluate_qm(&gptq_qm, &problems, false, EngineKind::Reference)?;
     bench.record_metric("time_gptq_s", gptq_time.as_secs_f64(), "s");
     bench.record_metric("accuracy_gptq", gptq_rep.accuracy * 100.0, "%");
     table.row(&[

@@ -527,6 +527,15 @@ fn serving_section(path: &str) {
         "serving: prefix-reuse speedup {speedup:.2}x at 1 worker; \
          1→4 worker scaling {scaling:.2}x"
     );
+
+    // Continuous-batching generation tiers: N concurrent streaming
+    // sessions over the paged KV arena, reporting honest per-request
+    // TTFT (queue + prefill, from the stream's own RequestTiming) and
+    // aggregate decoded tokens/s. One arena block per session (prompt 3
+    // + 4 new tokens ≤ 8 block positions) keeps the 10k tier inside a
+    // CI-friendly memory budget.
+    let gen_tiers = generation_tiers(&pm, &problems);
+
     let report = Json::obj(vec![
         ("bench", Json::str("perf_probe.serving")),
         ("n_requests", Json::num((REPEATS * problems.len()) as f64)),
@@ -535,7 +544,75 @@ fn serving_section(path: &str) {
         ("reuse_speedup_1worker", Json::num(speedup)),
         ("scaling_1_to_4_workers", Json::num(scaling)),
         ("sections", Json::arr(sections)),
+        ("generation_tiers", Json::arr(gen_tiers)),
     ]);
     std::fs::write(path, report.to_string_pretty()).expect("write serving json report");
     println!("wrote {path}");
+}
+
+/// Streaming-generation load tiers for the serving report: submit
+/// `concurrency` generation requests up front (continuous batching
+/// admits them between decode steps), drain every stream, and report
+/// p50/p99 TTFT plus aggregate tokens/s per tier.
+fn generation_tiers(
+    pm: &splitquant::model::packed::PackedModel,
+    problems: &[splitquant::data::McqProblem],
+) -> Vec<Json> {
+    use splitquant::coordinator::server::{Backend, GenerateRequest, Server, ServerConfig};
+    use splitquant::util::stats::percentile_sorted;
+    use std::time::Instant;
+
+    const MAX_TOKENS: usize = 4;
+    let mut tiers = Vec::new();
+    for &concurrency in &[100usize, 1_000, 10_000] {
+        let config = ServerConfig::builder()
+            .workers(8)
+            .max_sessions(concurrency)
+            .kv_block_positions(8)
+            .kv_blocks(concurrency)
+            .queue_cap(concurrency)
+            .build()
+            .expect("serving bench config");
+        let server =
+            Server::start(Backend::Packed(Box::new(pm.clone())), config).expect("start server");
+        let t0 = Instant::now();
+        let streams: Vec<_> = (0..concurrency)
+            .map(|i| {
+                let p = &problems[i % problems.len()];
+                server
+                    .submit_generate(GenerateRequest {
+                        prompt: p.prompt.clone(),
+                        max_tokens: MAX_TOKENS,
+                        deadline: None,
+                    })
+                    .expect("under queue_cap")
+            })
+            .collect();
+        let mut ttft_ms = Vec::with_capacity(concurrency);
+        let mut tokens = 0usize;
+        for s in streams {
+            let done = s.wait().expect("stream completes");
+            tokens += done.tokens.len();
+            ttft_ms.push(done.timing.ttft().as_secs_f64() * 1e3);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        ttft_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p50 = percentile_sorted(&ttft_ms, 50.0);
+        let p99 = percentile_sorted(&ttft_ms, 99.0);
+        let tps = tokens as f64 / wall.max(1e-9);
+        println!(
+            "serving[generate x{concurrency}]: ttft p50 {p50:.2}ms p99 {p99:.2}ms  \
+             {tps:.0} tok/s  ({tokens} tokens in {wall:.2}s)"
+        );
+        tiers.push(Json::obj(vec![
+            ("concurrent_sessions", Json::num(concurrency as f64)),
+            ("max_tokens", Json::num(MAX_TOKENS as f64)),
+            ("ttft_p50_ms", Json::num(p50)),
+            ("ttft_p99_ms", Json::num(p99)),
+            ("tokens_per_s", Json::num(tps)),
+            ("tokens", Json::num(tokens as f64)),
+        ]));
+        assert_eq!(server.kv_blocks_in_use(), 0, "all arena blocks returned");
+    }
+    tiers
 }

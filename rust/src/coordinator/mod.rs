@@ -24,41 +24,20 @@ use crate::io::{checkpoint::load_checkpoint, qmodel::save_qmodel};
 use crate::model::quantized::{Method, QuantizedModel};
 use crate::model::Checkpoint;
 use crate::quant::Bits;
-use crate::runtime::{scoring, Engine};
+use crate::runtime::{scoring, Engine, EngineKind};
 use crate::split::SplitConfig;
 use crate::util::pool::Pool;
 use crate::util::timer::Profiler;
 use crate::{log_debug, log_error, log_info};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
-/// Which execution engine scores quantized arms on the CPU.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum ExecEngine {
-    /// Dequantize every plane to an effective f32 checkpoint and run the
-    /// reference forward (simulated quantization — full f32 bandwidth).
-    Reference,
-    /// Run straight on the bit-packed planes through the
-    /// [`crate::kernels`] engine (no f32 weight matrices materialized).
-    Packed,
-}
-
-impl ExecEngine {
-    pub fn parse(s: &str) -> Result<ExecEngine> {
-        Ok(match s {
-            "reference" => ExecEngine::Reference,
-            "packed" => ExecEngine::Packed,
-            other => bail!("unknown engine '{other}' (use packed|reference)"),
-        })
-    }
-
-    pub fn name(self) -> &'static str {
-        match self {
-            ExecEngine::Reference => "reference",
-            ExecEngine::Packed => "packed",
-        }
-    }
-}
+/// Deprecated alias for the unified engine selector: the pipeline-side
+/// enum merged into [`crate::runtime::EngineKind`] (one PR's grace
+/// period, then this alias goes away). `EngineKind::parse_cpu` replaces
+/// the old `ExecEngine::parse` (which rejected `pjrt` too).
+#[deprecated(note = "use crate::runtime::EngineKind")]
+pub type ExecEngine = EngineKind;
 
 /// One arm of the experiment grid.
 #[derive(Clone, Debug)]
@@ -97,7 +76,7 @@ pub struct PipelineSpec {
     /// CPU reference forward.
     pub use_runtime: bool,
     /// CPU execution engine for quantized arms (`--engine` on the CLI).
-    pub engine: ExecEngine,
+    pub engine: EngineKind,
     /// Packed-kernel inner loops (`--kernel-impl` on the CLI): the
     /// LUT-fused default or the scalar oracle path.
     pub kernel_impl: KernelImpl,
@@ -112,7 +91,7 @@ impl PipelineSpec {
             out_dir: None,
             amplify: Some((0.003, 4.0)),
             use_runtime: false,
-            engine: ExecEngine::Reference,
+            engine: EngineKind::Reference,
             kernel_impl: KernelImpl::default(),
             seed: 7,
         }
@@ -219,7 +198,7 @@ impl Coordinator {
         qm: &QuantizedModel,
         problems: &[McqProblem],
         use_runtime: bool,
-        engine: ExecEngine,
+        engine: EngineKind,
     ) -> Result<EvalReport> {
         self.evaluate_qm_impl(qm, problems, use_runtime, engine, KernelImpl::default())
     }
@@ -232,7 +211,7 @@ impl Coordinator {
         qm: &QuantizedModel,
         problems: &[McqProblem],
         use_runtime: bool,
-        engine: ExecEngine,
+        engine: EngineKind,
         kernel_impl: KernelImpl,
     ) -> Result<EvalReport> {
         if use_runtime {
@@ -257,7 +236,7 @@ impl Coordinator {
                 }
             }
         }
-        if engine == ExecEngine::Packed {
+        if engine == EngineKind::Packed {
             let pm = self
                 .profiler
                 .section("pack_model", || crate::model::packed::PackedModel::from_qmodel(qm))?;
@@ -383,7 +362,7 @@ mod tests {
             out_dir: None,
             amplify: None,
             use_runtime: false,
-            engine: ExecEngine::Packed,
+            engine: EngineKind::Packed,
             kernel_impl: KernelImpl::default(),
             seed: 1,
         };
@@ -416,7 +395,7 @@ mod tests {
             out_dir: Some(dir.clone()),
             amplify: None,
             use_runtime: false,
-            engine: ExecEngine::Reference,
+            engine: EngineKind::Reference,
             kernel_impl: KernelImpl::default(),
             seed: 1,
         };

@@ -1,36 +1,63 @@
-//! Batched inference server: the deployment-side driver (examples/
-//! edge_deploy.rs) that serves MCQ scoring requests from a quantized
-//! model with dynamic batching — the "edge AI device" role the paper
-//! targets.
+//! Serving front-end: MCQ scoring with dynamic batching **and**
+//! continuous-batching streaming generation from one unified API — the
+//! deployment-side driver (examples/edge_deploy.rs) for the "edge AI
+//! device" role the paper targets.
 //!
 //! Architecture (std threads; no tokio in the offline build):
 //!
 //! ```text
-//!   clients ──(mpsc)──▶ batcher ──(collect ≤B, ≤max_wait)──▶ executor
-//!                          ▲                 │ shard across worker pool
-//!                          │                 │ (per-worker ScoreBuffers,
-//!                          │                 │  shared prompt-prefix LRU)
-//!                          └──────── responses (per-request oneshot)
+//!   clients ──(mpsc Request)──▶ serve loop ──▶ executor
+//!     ▲   ▲                        │  scoring: collect ≤B, ≤max_wait,
+//!     │   │                        │           shard across worker pool
+//!     │   └── TokenEvent stream ◀──┤  generation: one decode step per
+//!     └────── ScoreResponse ◀──────┘      live session per iteration,
+//!                                         admission at every step
 //! ```
 //!
-//! The batcher groups pending requests up to the executor's batch size
-//! or until `max_wait` expires — standard dynamic batching (the
-//! vLLM-router pattern, scaled to this workload). The CPU executors
-//! then **shard the batch across a worker pool** (`workers` threads,
-//! each holding its own workspace/decode-state/kernel-scratch) and
-//! score each problem with **prefix reuse**: one prompt pass + one
-//! short extension per option, consulting a bounded LRU
-//! [`PrefixCache`] keyed by prompt tokens so concurrent requests that
-//! share a prompt reuse its computed K/V instead of recomputing it.
+//! **Scoring** keeps the original dynamic-batching behavior: requests
+//! group up to the executor's batch size or until `max_wait` expires,
+//! then the CPU executors shard the batch across a worker pool
+//! (per-worker [`ScoreBuffers`], shared prompt-prefix LRU
+//! [`PrefixCache`]) and score with prefix reuse.
 //!
-//! Three execution backends ([`Backend`]):
+//! **Generation** is continuously batched (the vLLM pattern, scaled to
+//! this workload): every live session holds a *paged*
+//! [`DecodeState`] renting fixed-size K/V blocks from one shared
+//! [`KvArena`], the serve loop runs one decode step across all live
+//! sessions per iteration (sharded over the same worker pool), and new
+//! requests are admitted between *steps* — not between completed
+//! generations. Per-session decode replays [`generate_greedy_ops`]'s
+//! exact call sequence (one prompt pass, then single-position extends),
+//! and paged K/V reads are row-identical to the contiguous backing, so
+//! continuous-batched output is **bit-identical** to sequential greedy
+//! decoding (property-tested in `rust/tests/serving_stream.rs`).
+//!
+//! Overload handling is explicit and typed ([`ServeError`]):
+//! * a bounded admission queue (`queue_cap`) sheds with `Overloaded`
+//!   *synchronously* at submit time;
+//! * sessions reserve their worst-case block count at admission —
+//!   a request that can *never* fit the arena sheds with `KvExhausted`,
+//!   one that is temporarily starved waits in a FIFO backlog;
+//! * deadlines are enforced while queued and between decode steps
+//!   (`DeadlineExceeded`), never by hanging;
+//! * a dropped [`TokenStream`] cancels its session at the next step and
+//!   returns its K/V blocks to the arena.
+//!
+//! Three execution backends ([`Backend`], constructed uniformly from an
+//! [`EngineKind`] via [`Backend::from_kind`]):
 //! * **Packed** — the packed-integer kernel engine
 //!   ([`crate::model::packed::PackedModel`]): scores straight on the
 //!   bit-packed planes, no PJRT artifacts or f32 weight dequants needed.
 //! * **Reference** — the CPU reference forward over an effective
 //!   (dequantized) f32 checkpoint.
-//! * **Pjrt** — the AOT-compiled PJRT variants (requires `artifacts/`).
+//! * **Pjrt** — the AOT-compiled PJRT variants (requires `artifacts/`);
+//!   scoring only — generation requests shed with `Unsupported`.
+//!
+//! [`generate_greedy_ops`]: crate::model::forward::generate_greedy
+//! [`ScoreBuffers`]: crate::eval::ScoreBuffers
+//! [`PrefixCache`]: crate::model::decode::PrefixCache
 
+use std::collections::{BTreeMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -38,53 +65,204 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::data::McqProblem;
-use crate::eval::{self, nan_safe_argmax, ProblemResult, ScoreBuffers};
+use crate::eval::{self, nan_safe_argmax, PhaseTimes, ProblemResult, ScoreBuffers};
 use crate::kernels::KernelImpl;
-use crate::model::decode::PrefixCache;
+use crate::model::decode::{DecodeState, KvArena, PrefixCache};
+use crate::model::forward::{self, CkOps, ForwardOps, Workspace};
 use crate::model::packed::PackedModel;
-use crate::model::Checkpoint;
-use crate::runtime::{ArgValue, Engine};
+use crate::model::quantized::QuantizedModel;
+use crate::model::{Checkpoint, PicoLlamaConfig};
+use crate::runtime::{ArgValue, Engine, EngineKind};
 use crate::util::pool::{thread_budget, Pool};
 
 use anyhow::{anyhow, bail, Result};
-use std::collections::BTreeMap;
 
-/// One scoring request.
-pub struct Request {
-    pub problem: McqProblem,
-    /// Sender for the response.
-    respond: mpsc::Sender<Result<Response>>,
-    enqueued: Instant,
+/// Typed serving failures. Carried through `anyhow::Error` so callers
+/// can `downcast_ref::<ServeError>()` on any error path.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request's deadline passed before it completed (while queued
+    /// or between decode steps).
+    DeadlineExceeded,
+    /// The bounded admission queue is full; the request was shed at
+    /// submit time.
+    Overloaded,
+    /// The request's worst-case K/V footprint exceeds the arena's total
+    /// capacity — it can never be admitted.
+    KvExhausted,
+    /// The backend cannot serve this request kind (PJRT generation).
+    Unsupported(String),
+    /// The request failed validation (empty prompt, out-of-vocab token).
+    Invalid(String),
+    /// An engine error surfaced mid-generation.
+    Internal(String),
 }
 
-/// One scoring response with timing.
-#[derive(Clone, Debug)]
-pub struct Response {
-    pub result: ProblemResult,
-    /// Time spent queued (enqueue → the batch starting to execute).
-    pub queue_time: Duration,
-    /// Time the batch spent executing (shared by its members).
-    pub exec_time: Duration,
-    pub batch_size: usize,
-}
-
-impl Response {
-    /// End-to-end latency: queueing plus batch execution.
-    pub fn latency(&self) -> Duration {
-        self.queue_time + self.exec_time
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::DeadlineExceeded => write!(f, "deadline exceeded"),
+            ServeError::Overloaded => write!(f, "server overloaded: admission queue full"),
+            ServeError::KvExhausted => write!(f, "kv arena too small for this request"),
+            ServeError::Unsupported(what) => write!(f, "unsupported request: {what}"),
+            ServeError::Invalid(why) => write!(f, "invalid request: {why}"),
+            ServeError::Internal(why) => write!(f, "generation failed: {why}"),
+        }
     }
 }
 
-/// Server handle: submit requests, join on drop.
+impl std::error::Error for ServeError {}
+
+/// Wall-clock phases of one served request. `queue` is enqueue →
+/// admission into an executing batch/step; `prefill` is the prompt
+/// pass (or prefix-cache restore); `decode` is everything after it
+/// (option extensions for scoring, per-token steps for generation).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RequestTiming {
+    pub queue: Duration,
+    pub prefill: Duration,
+    pub decode: Duration,
+}
+
+impl RequestTiming {
+    /// Time to first token: everything that precedes the first emitted
+    /// token (queueing plus prefill) — the serving-latency headline.
+    pub fn ttft(&self) -> Duration {
+        self.queue + self.prefill
+    }
+
+    /// End-to-end latency.
+    pub fn total(&self) -> Duration {
+        self.queue + self.prefill + self.decode
+    }
+}
+
+/// One scoring response with per-phase timing.
+#[derive(Clone, Debug)]
+pub struct ScoreResponse {
+    pub result: ProblemResult,
+    pub timing: RequestTiming,
+    pub batch_size: usize,
+}
+
+impl ScoreResponse {
+    /// End-to-end latency (queue + prefill + decode).
+    pub fn latency(&self) -> Duration {
+        self.timing.total()
+    }
+}
+
+/// Pre-split name for the scoring response.
+#[deprecated(note = "use ScoreResponse")]
+pub type Response = ScoreResponse;
+
+/// A streaming generation request: greedy-decode up to `max_tokens`
+/// new tokens after `prompt`, optionally bounded by a deadline
+/// (measured from submission; `None` falls back to the server's
+/// `default_deadline`).
+#[derive(Clone, Debug)]
+pub struct GenerateRequest {
+    pub prompt: Vec<usize>,
+    pub max_tokens: usize,
+    pub deadline: Option<Duration>,
+}
+
+/// Why a generation stream completed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Produced the requested number of new tokens.
+    MaxTokens,
+    /// Hit the model's context limit.
+    MaxSeq,
+}
+
+/// Terminal summary of one generation stream.
+#[derive(Clone, Debug)]
+pub struct GenerateResponse {
+    /// All generated tokens, in order (the same tokens previously
+    /// streamed as [`TokenEvent::Token`]).
+    pub tokens: Vec<usize>,
+    pub timing: RequestTiming,
+    pub finish: FinishReason,
+}
+
+/// One event on a generation stream: zero or more `Token`s followed by
+/// exactly one terminal `Done` or `Error`.
+#[derive(Clone, Debug)]
+pub enum TokenEvent {
+    /// The `index`-th generated token (0-based).
+    Token { index: usize, token: usize },
+    Done(GenerateResponse),
+    Error(ServeError),
+}
+
+/// Receiving half of a generation stream. Dropping it cancels the
+/// session: the serve loop notices at the next decode step and returns
+/// the session's K/V blocks to the arena.
+pub struct TokenStream {
+    rx: mpsc::Receiver<TokenEvent>,
+}
+
+impl TokenStream {
+    /// Next event, blocking; `None` once the stream is exhausted.
+    pub fn recv(&self) -> Option<TokenEvent> {
+        self.rx.recv().ok()
+    }
+
+    /// Iterate events until the stream is exhausted.
+    pub fn iter(&self) -> impl Iterator<Item = TokenEvent> + '_ {
+        self.rx.iter()
+    }
+
+    /// Drain the stream to completion and return the terminal summary.
+    /// [`ServeError`]s come back downcastable through `anyhow`.
+    pub fn wait(self) -> Result<GenerateResponse> {
+        for ev in self.rx.iter() {
+            match ev {
+                TokenEvent::Token { .. } => {}
+                TokenEvent::Done(resp) => return Ok(resp),
+                TokenEvent::Error(e) => return Err(e.into()),
+            }
+        }
+        bail!("generation stream ended without a terminal event")
+    }
+}
+
+/// One serving request — the wire type of the server's queue.
+pub enum Request {
+    /// MCQ scoring (the original serving workload).
+    Score {
+        problem: McqProblem,
+        respond: mpsc::Sender<Result<ScoreResponse>>,
+        enqueued: Instant,
+        deadline: Option<Instant>,
+    },
+    /// Streaming greedy generation.
+    Generate {
+        spec: GenerateRequest,
+        events: mpsc::Sender<TokenEvent>,
+        enqueued: Instant,
+        deadline: Option<Instant>,
+    },
+}
+
+/// Server handle: submit scoring or generation requests, join on drop.
 pub struct Server {
     tx: Option<mpsc::Sender<Request>>,
     worker: Option<thread::JoinHandle<()>>,
+    /// The shared K/V block arena (CPU backends only) — exposed for
+    /// occupancy introspection; the serve loop owns all mutation.
+    arena: Option<Arc<KvArena>>,
+    /// Generation requests submitted but not yet terminal — the bounded
+    /// admission queue's synchronous backpressure counter.
+    pending: Arc<AtomicUsize>,
+    config: ServerConfig,
 }
 
-/// How the worker thread executes a batch.
+/// How the worker thread executes requests.
 pub enum Backend {
     /// AOT-compiled PJRT variants. The engine is constructed *inside*
-    /// the worker thread (the xla client is not Send).
+    /// the worker thread (the xla client is not Send). Scoring only.
     Pjrt {
         artifacts_dir: PathBuf,
         weight_args: BTreeMap<String, ArgValue>,
@@ -95,19 +273,52 @@ pub enum Backend {
     Reference(Box<Checkpoint>),
 }
 
-/// Server configuration.
+impl Backend {
+    /// Build the backend for an [`EngineKind`] from one quantized model
+    /// — the single constructor the CLI and benches route through. The
+    /// PJRT kind additionally needs the compiled artifacts directory;
+    /// its weight args are derived for the default `score_quant_k3`
+    /// variant.
+    pub fn from_kind(
+        kind: EngineKind,
+        qm: &QuantizedModel,
+        artifacts_dir: Option<&std::path::Path>,
+    ) -> Result<Backend> {
+        Ok(match kind {
+            EngineKind::Packed => Backend::Packed(Box::new(PackedModel::from_qmodel(qm)?)),
+            EngineKind::Reference => Backend::Reference(Box::new(qm.effective_checkpoint())),
+            EngineKind::Pjrt => Backend::Pjrt {
+                artifacts_dir: artifacts_dir
+                    .ok_or_else(|| anyhow!("the pjrt backend needs an artifacts directory"))?
+                    .to_path_buf(),
+                weight_args: crate::runtime::scoring::quant_args(qm, 3)?,
+            },
+        })
+    }
+
+    fn model_config(&self) -> Option<&PicoLlamaConfig> {
+        match self {
+            Backend::Pjrt { .. } => None,
+            Backend::Packed(pm) => Some(&pm.config),
+            Backend::Reference(ck) => Some(&ck.config),
+        }
+    }
+}
+
+/// Server configuration. Prefer [`ServerConfig::builder`] — it rejects
+/// inconsistent settings at construction instead of at serve time.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
-    /// Maximum time the batcher waits to fill a batch.
+    /// Maximum time the batcher waits to fill a scoring batch.
     pub max_wait: Duration,
     /// PJRT variant to execute (e.g. "score_quant_k3"); ignored by the
     /// CPU backends.
     pub variant: String,
     /// Batch size for the CPU backends (PJRT uses the compiled batch).
     pub max_batch: usize,
-    /// Worker threads a CPU executor shards a batch across (each holds
-    /// its own `ScoreBuffers`). 0 = available parallelism; PJRT ignores
-    /// this (the compiled executable is the batch executor).
+    /// Worker threads a CPU executor shards a batch (or a decode step)
+    /// across, each holding its own `ScoreBuffers`. 0 = available
+    /// parallelism; PJRT ignores this.
     pub workers: usize,
     /// Prompt-prefix LRU capacity in entries (0 disables the cache).
     pub prefix_cache: usize,
@@ -119,11 +330,24 @@ pub struct ServerConfig {
     /// oracle (`--kernel-impl`). The reference backend ignores this.
     pub kernel_impl: KernelImpl,
     /// Threads each packed executor worker shards large GEMV output
-    /// rows across (`--row-workers`). 0 = auto: the cores left over
-    /// after batch-level sharding (`thread_budget`), so a one-worker
-    /// server decoding a single stream uses every core per token while
-    /// a saturated batch pool stays row-serial.
+    /// rows across (`--row-workers`). 0 = auto ([`thread_budget`]).
     pub row_workers: usize,
+    /// Maximum concurrently *decoding* generation sessions; excess
+    /// admitted requests wait in a FIFO backlog.
+    pub max_sessions: usize,
+    /// K/V positions per arena block (the paging granularity).
+    pub kv_block_positions: usize,
+    /// Total arena blocks. 0 = auto: enough for `max_sessions` sessions
+    /// at the model's full context length.
+    pub kv_blocks: usize,
+    /// Bound on generation requests in flight (submitted, not yet
+    /// terminal); beyond it `submit_generate` sheds with
+    /// [`ServeError::Overloaded`] without enqueueing.
+    pub queue_cap: usize,
+    /// Deadline applied to requests that don't carry their own.
+    pub default_deadline: Option<Duration>,
+    /// Per-request token budget: `max_tokens` is clamped to this.
+    pub max_new_tokens: usize,
 }
 
 impl Default for ServerConfig {
@@ -137,11 +361,54 @@ impl Default for ServerConfig {
             reuse_prefix: true,
             kernel_impl: KernelImpl::default(),
             row_workers: 0,
+            max_sessions: 64,
+            kv_block_positions: 16,
+            kv_blocks: 0,
+            queue_cap: 1024,
+            default_deadline: None,
+            max_new_tokens: 256,
         }
     }
 }
 
 impl ServerConfig {
+    /// A validating builder starting from the defaults.
+    pub fn builder() -> ServerConfigBuilder {
+        ServerConfigBuilder {
+            config: ServerConfig::default(),
+        }
+    }
+
+    /// Reject inconsistent settings. Also enforced by [`Server::start`]
+    /// for configs assembled by hand.
+    pub fn validate(&self) -> Result<()> {
+        if self.max_batch == 0 {
+            bail!("max_batch must be at least 1");
+        }
+        if self.max_sessions == 0 {
+            bail!("max_sessions must be at least 1");
+        }
+        if self.kv_block_positions == 0 {
+            bail!("kv_block_positions must be at least 1");
+        }
+        if self.queue_cap == 0 {
+            bail!("queue_cap must be at least 1");
+        }
+        if self.max_new_tokens == 0 {
+            bail!("max_new_tokens must be at least 1");
+        }
+        if let Some(d) = self.default_deadline {
+            if d < self.max_wait {
+                bail!(
+                    "default_deadline {d:?} is shorter than max_wait {:?}: \
+                     every queued request would expire before the batcher fires",
+                    self.max_wait
+                );
+            }
+        }
+        Ok(())
+    }
+
     fn make_pool(&self) -> Pool {
         if self.workers == 0 {
             Pool::new_auto()
@@ -161,17 +428,108 @@ impl ServerConfig {
         };
         (row > 1).then(|| Arc::new(Pool::new(row)))
     }
+
+    /// Arena size in blocks: explicit, or enough for `max_sessions`
+    /// full-context sessions.
+    fn arena_blocks(&self, cfg: &PicoLlamaConfig) -> usize {
+        if self.kv_blocks > 0 {
+            self.kv_blocks
+        } else {
+            self.max_sessions * cfg.max_seq.div_ceil(self.kv_block_positions)
+        }
+    }
+}
+
+/// Builder for [`ServerConfig`]; `build()` validates the combination.
+#[derive(Clone, Debug)]
+pub struct ServerConfigBuilder {
+    config: ServerConfig,
+}
+
+impl ServerConfigBuilder {
+    pub fn max_wait(mut self, v: Duration) -> Self {
+        self.config.max_wait = v;
+        self
+    }
+    pub fn variant(mut self, v: impl Into<String>) -> Self {
+        self.config.variant = v.into();
+        self
+    }
+    pub fn max_batch(mut self, v: usize) -> Self {
+        self.config.max_batch = v;
+        self
+    }
+    pub fn workers(mut self, v: usize) -> Self {
+        self.config.workers = v;
+        self
+    }
+    pub fn prefix_cache(mut self, v: usize) -> Self {
+        self.config.prefix_cache = v;
+        self
+    }
+    pub fn reuse_prefix(mut self, v: bool) -> Self {
+        self.config.reuse_prefix = v;
+        self
+    }
+    pub fn kernel_impl(mut self, v: KernelImpl) -> Self {
+        self.config.kernel_impl = v;
+        self
+    }
+    pub fn row_workers(mut self, v: usize) -> Self {
+        self.config.row_workers = v;
+        self
+    }
+    pub fn max_sessions(mut self, v: usize) -> Self {
+        self.config.max_sessions = v;
+        self
+    }
+    pub fn kv_block_positions(mut self, v: usize) -> Self {
+        self.config.kv_block_positions = v;
+        self
+    }
+    pub fn kv_blocks(mut self, v: usize) -> Self {
+        self.config.kv_blocks = v;
+        self
+    }
+    pub fn queue_cap(mut self, v: usize) -> Self {
+        self.config.queue_cap = v;
+        self
+    }
+    pub fn default_deadline(mut self, v: Option<Duration>) -> Self {
+        self.config.default_deadline = v;
+        self
+    }
+    pub fn max_new_tokens(mut self, v: usize) -> Self {
+        self.config.max_new_tokens = v;
+        self
+    }
+
+    pub fn build(self) -> Result<ServerConfig> {
+        self.config.validate()?;
+        Ok(self.config)
+    }
 }
 
 impl Server {
-    /// Spawn the batcher/executor thread for a backend. Startup errors
-    /// (e.g. PJRT compile failures) are returned synchronously through a
-    /// handshake channel.
+    /// Spawn the serve-loop thread for a backend. Startup errors (an
+    /// invalid config, PJRT compile failures) are returned synchronously
+    /// through a handshake channel.
     pub fn start(backend: Backend, config: ServerConfig) -> Result<Server> {
+        config.validate()?;
+        // The arena outlives the loop thread so the handle can report
+        // occupancy; PJRT (scoring-only) serves without one.
+        let arena = backend
+            .model_config()
+            .map(|cfg| Arc::new(KvArena::new(cfg, config.kv_block_positions, config.arena_blocks(cfg))));
+        let pending = Arc::new(AtomicUsize::new(0));
         let (tx, rx) = mpsc::channel::<Request>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let loop_arena = arena.clone();
+        let loop_pending = Arc::clone(&pending);
+        let loop_config = config.clone();
         let worker = thread::spawn(move || {
-            let mut exec = match backend {
+            let config = loop_config;
+            let exec = match backend {
                 Backend::Pjrt {
                     artifacts_dir,
                     weight_args,
@@ -187,8 +545,8 @@ impl Server {
                 },
                 // CPU backends own a worker pool, a shared prefix cache
                 // and one checkout slot of scoring buffers per worker,
-                // all for the batcher thread's lifetime — the serving
-                // hot path does no per-batch buffer allocation.
+                // all for the serve loop's lifetime — the serving hot
+                // path does no per-batch buffer allocation.
                 Backend::Packed(pm) => {
                     let pool = config.make_pool();
                     // Thread budget: cores beyond the batch-level pool
@@ -225,7 +583,7 @@ impl Server {
                 }
             };
             let _ = ready_tx.send(Ok(()));
-            batch_loop(&mut exec, &config, rx);
+            serve_loop(&exec, &config, rx, &loop_pending, loop_arena.as_ref());
         });
         ready_rx
             .recv()
@@ -233,46 +591,97 @@ impl Server {
         Ok(Server {
             tx: Some(tx),
             worker: Some(worker),
+            arena,
+            pending,
+            config,
         })
     }
 
-    /// Submit a problem; returns a receiver for the response.
-    pub fn submit(&self, problem: McqProblem) -> mpsc::Receiver<Result<Response>> {
+    /// Submit a scoring problem; returns a receiver for the response.
+    pub fn submit(&self, problem: McqProblem) -> mpsc::Receiver<Result<ScoreResponse>> {
         let (rtx, rrx) = mpsc::channel();
-        let req = Request {
+        let req = Request::Score {
             problem,
             respond: rtx,
             enqueued: Instant::now(),
+            deadline: self.config.default_deadline.map(|d| Instant::now() + d),
         };
         if let Some(tx) = &self.tx {
-            // A dropped batcher surfaces as a closed response channel.
+            // A dropped serve loop surfaces as a closed response channel.
             let _ = tx.send(req);
         }
         rrx
     }
 
-    /// Submit synchronously.
-    pub fn score(&self, problem: McqProblem) -> Result<Response> {
+    /// Score synchronously.
+    pub fn score(&self, problem: McqProblem) -> Result<ScoreResponse> {
         self.submit(problem)
             .recv()
             .map_err(|_| anyhow!("server stopped"))?
+    }
+
+    /// Submit a generation request; returns the per-token event stream.
+    /// Sheds synchronously with [`ServeError::Overloaded`] when more
+    /// than `queue_cap` generation requests are already in flight.
+    pub fn submit_generate(&self, spec: GenerateRequest) -> Result<TokenStream> {
+        if self.pending.fetch_add(1, Ordering::SeqCst) >= self.config.queue_cap {
+            self.pending.fetch_sub(1, Ordering::SeqCst);
+            return Err(ServeError::Overloaded.into());
+        }
+        let (etx, erx) = mpsc::channel();
+        let enqueued = Instant::now();
+        let deadline = spec
+            .deadline
+            .or(self.config.default_deadline)
+            .map(|d| enqueued + d);
+        let req = Request::Generate {
+            spec,
+            events: etx,
+            enqueued,
+            deadline,
+        };
+        match &self.tx {
+            Some(tx) if tx.send(req).is_ok() => Ok(TokenStream { rx: erx }),
+            _ => {
+                self.pending.fetch_sub(1, Ordering::SeqCst);
+                Err(anyhow!("server stopped"))
+            }
+        }
+    }
+
+    /// Generate synchronously: stream to completion, return the summary.
+    pub fn generate(&self, prompt: &[usize], max_tokens: usize) -> Result<GenerateResponse> {
+        self.submit_generate(GenerateRequest {
+            prompt: prompt.to_vec(),
+            max_tokens,
+            deadline: None,
+        })?
+        .wait()
+    }
+
+    /// K/V arena blocks currently rented by live sessions (0 for PJRT,
+    /// which has no arena). Lock-free read of the shared occupancy
+    /// counter — safe to poll from any thread.
+    pub fn kv_blocks_in_use(&self) -> usize {
+        self.arena.as_ref().map_or(0, |a| a.blocks_in_use())
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        drop(self.tx.take()); // closes the queue → batcher exits
+        drop(self.tx.take()); // closes the queue → the serve loop drains and exits
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
     }
 }
 
-/// The worker-side executor (lives entirely on the batcher thread). The
-/// CPU backends shard each batch across their pool; every pool worker
-/// checks out one batcher-lifetime [`ScoreBuffers`] slot (workspace +
-/// decode state + prewarmed kernel scratch, reused across batches) and
-/// the workers share the batcher-lifetime prompt-prefix cache.
+/// The worker-side executor (lives entirely on the serve-loop thread).
+/// The CPU backends shard scoring batches *and* generation decode steps
+/// across their pool; every pool worker checks out one loop-lifetime
+/// [`ScoreBuffers`] slot (workspace + decode state + prewarmed kernel
+/// scratch, reused across batches and steps) and the workers share the
+/// loop-lifetime prompt-prefix cache.
 enum Executor {
     Pjrt {
         engine: Engine,
@@ -292,27 +701,24 @@ enum Executor {
     },
 }
 
-/// Shard one batch across the executor pool: every sweep worker checks
-/// out a distinct long-lived buffer slot (the atomic ticket makes
-/// indices unique and `workers <= bufs.len()` — the pool never runs
-/// more workers than its size — so the lock never blocks) and scores
-/// the problems it claims through `score_one`. Shared by the Packed and
-/// Reference arms so the sharding/checkout logic cannot drift between
-/// engines.
-fn shard_batch<F>(
-    pool: &Pool,
-    bufs: &[Mutex<ScoreBuffers>],
-    problems: &[McqProblem],
-    score_one: F,
-) -> Vec<Result<ProblemResult>>
+/// Shard one work list across the executor pool: every sweep worker
+/// checks out a distinct long-lived buffer slot (the atomic ticket
+/// makes indices unique and `workers <= bufs.len()` — the pool never
+/// runs more workers than its size — so the lock never blocks) and
+/// processes the items it claims through `work_one`. Shared by the
+/// scoring batch path and the generation step path so the
+/// sharding/checkout logic cannot drift between them.
+fn shard_batch<T, R, F>(pool: &Pool, bufs: &[Mutex<ScoreBuffers>], items: &[T], work_one: F) -> Vec<R>
 where
-    F: Fn(&mut ScoreBuffers, &McqProblem) -> Result<ProblemResult> + Sync,
+    T: Sync,
+    R: Send,
+    F: Fn(&mut ScoreBuffers, &T) -> R + Sync,
 {
     let ticket = AtomicUsize::new(0);
     pool.parallel_map_init(
-        problems.len(),
+        items.len(),
         || bufs[ticket.fetch_add(1, Ordering::Relaxed) % bufs.len()].lock().unwrap(),
-        |guard, i| score_one(guard, &problems[i]),
+        |guard, i| work_one(guard, &items[i]),
     )
 }
 
@@ -324,15 +730,27 @@ impl Executor {
         }
     }
 
+    /// The model config of the CPU backends; `None` for PJRT (which
+    /// cannot serve generation).
+    fn model_config(&self) -> Option<&PicoLlamaConfig> {
+        match self {
+            Executor::Pjrt { .. } => None,
+            Executor::Packed { pm, .. } => Some(&pm.config),
+            Executor::Reference { ck, .. } => Some(&ck.config),
+        }
+    }
+
     /// Score a batch. The outer `Err` is a whole-batch failure (e.g. a
     /// PJRT execution error); the inner per-problem `Result`s carry
     /// request-level errors (a malformed problem fails alone — valid
-    /// requests batched with it still succeed).
+    /// requests batched with it still succeed). Each success carries its
+    /// own prefill/decode wall-clock split.
+    #[allow(clippy::type_complexity)]
     fn score(
-        &mut self,
+        &self,
         config: &ServerConfig,
         problems: &[McqProblem],
-    ) -> Result<Vec<Result<ProblemResult>>> {
+    ) -> Result<Vec<Result<(ProblemResult, PhaseTimes)>>> {
         match self {
             Executor::Pjrt {
                 engine,
@@ -340,9 +758,9 @@ impl Executor {
             } => {
                 // Per-problem shape validation: a mismatched or
                 // malformed request fails alone (instead of panicking
-                // the batcher); the valid subset still executes.
+                // the serve loop); the valid subset still executes.
                 let plen = engine.prompt_len;
-                let mut out: Vec<Option<Result<ProblemResult>>> = problems
+                let mut out: Vec<Option<Result<(ProblemResult, PhaseTimes)>>> = problems
                     .iter()
                     .map(|p| {
                         if p.prompt.len() != plen {
@@ -386,9 +804,19 @@ impl Executor {
                     eval::validate_problem(&pm.config, p)?;
                     if config.reuse_prefix {
                         let ScoreBuffers { ws, state, scratch } = bufs;
-                        eval::score_problem_session(&mut pm.ops(scratch), p, ws, state, Some(cache))
+                        eval::score_problem_session_timed(
+                            &mut pm.ops(scratch),
+                            p,
+                            ws,
+                            state,
+                            Some(cache),
+                        )
                     } else {
-                        eval::score_problem_packed_full(pm, p, &mut bufs.ws, &mut bufs.scratch)
+                        // The full-recompute oracle has no prefill/decode
+                        // boundary: the whole recompute counts as decode.
+                        let t0 = Instant::now();
+                        let r = eval::score_problem_packed_full(pm, p, &mut bufs.ws, &mut bufs.scratch)?;
+                        Ok((r, PhaseTimes { prefill: Duration::ZERO, decode: t0.elapsed() }))
                     }
                 }))
             }
@@ -403,8 +831,8 @@ impl Executor {
                 Ok(shard_batch(pool, bufs, problems, |bufs, p| {
                     eval::validate_problem(&ck.config, p)?;
                     if config.reuse_prefix {
-                        let mut ops = crate::model::forward::CkOps::new(ck);
-                        eval::score_problem_session(
+                        let mut ops = CkOps::new(ck);
+                        eval::score_problem_session_timed(
                             &mut ops,
                             p,
                             &mut bufs.ws,
@@ -412,64 +840,441 @@ impl Executor {
                             Some(cache),
                         )
                     } else {
-                        eval::score_problem_full(ck, p, &mut bufs.ws)
+                        let t0 = Instant::now();
+                        let r = eval::score_problem_full(ck, p, &mut bufs.ws)?;
+                        Ok((r, PhaseTimes { prefill: Duration::ZERO, decode: t0.elapsed() }))
                     }
                 }))
             }
         }
     }
-}
 
-fn batch_loop(exec: &mut Executor, config: &ServerConfig, rx: mpsc::Receiver<Request>) {
-    let max_batch = exec.max_batch(config);
-    loop {
-        // Block for the first request.
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return, // queue closed
-        };
-        let mut batch = vec![first];
-        let deadline = Instant::now() + config.max_wait;
-        // Fill greedily until the batch is full or the deadline passes.
-        while batch.len() < max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
+    /// One decode step for every live session, sharded across the pool
+    /// exactly like a scoring batch. Each session advances by one token
+    /// on its own paged state; token emission stays on the serve loop
+    /// (the event `Sender` is not `Sync`).
+    fn step_sessions(&self, sessions: &[Mutex<GenSession>]) -> Vec<Result<()>> {
+        match self {
+            Executor::Packed { pm, pool, bufs, .. } => {
+                let pm: &PackedModel = pm;
+                shard_batch(pool, bufs, sessions, |bufs, slot| {
+                    let ScoreBuffers { ws, scratch, .. } = bufs;
+                    slot.lock().unwrap().advance(&mut pm.ops(scratch), ws)
+                })
             }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => batch.push(r),
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            Executor::Reference { ck, pool, bufs, .. } => {
+                let ck: &Checkpoint = ck;
+                shard_batch(pool, bufs, sessions, |bufs, slot| {
+                    let mut ops = CkOps::new(ck);
+                    slot.lock().unwrap().advance(&mut ops, &mut bufs.ws)
+                })
             }
+            // Admission rejects every generation request on PJRT.
+            Executor::Pjrt { .. } => unreachable!("pjrt sessions are rejected at admission"),
         }
-        execute_batch(exec, config, batch);
     }
 }
 
-fn execute_batch(exec: &mut Executor, config: &ServerConfig, batch: Vec<Request>) {
-    let problems: Vec<McqProblem> = batch.iter().map(|r| r.problem.clone()).collect();
-    let n = batch.len();
+/// One live generation session. Its decode replays
+/// `generate_greedy_ops`'s exact call sequence — one prompt pass, then
+/// one single-position extend per token, greedy argmax between — on a
+/// paged [`DecodeState`], which is what makes continuous-batched output
+/// bit-identical to sequential greedy decoding.
+struct GenSession {
+    prompt: Vec<usize>,
+    /// Effective budget (the request's `max_tokens` clamped to the
+    /// server's `max_new_tokens`).
+    max_tokens: usize,
+    max_seq: usize,
+    deadline: Option<Instant>,
+    events: mpsc::Sender<TokenEvent>,
+    state: DecodeState,
+    tokens: Vec<usize>,
+    queue: Duration,
+    prefill: Duration,
+    decode: Duration,
+    prefilled: bool,
+}
+
+impl GenSession {
+    /// Advance by one token: prefill on the first call (the first token
+    /// comes straight from the prompt logits), a single-position extend
+    /// afterwards.
+    fn advance<O: ForwardOps>(&mut self, ops: &mut O, ws: &mut Workspace) -> Result<()> {
+        let row = if self.prefilled {
+            let t0 = Instant::now();
+            let last = *self.tokens.last().expect("decode step before first token");
+            let logits = forward::forward_extend(ops, &[last], self.state.len(), ws, &mut self.state)?;
+            let row = logits.row(0).to_vec();
+            self.decode += t0.elapsed();
+            row
+        } else {
+            let t0 = Instant::now();
+            let row = forward::prompt_pass(ops, &self.prompt, ws, &mut self.state)?;
+            self.prefill = t0.elapsed();
+            self.prefilled = true;
+            row
+        };
+        self.tokens.push(forward::greedy_token(&row));
+        Ok(())
+    }
+
+    /// `Some` once the session has produced its last token (the same
+    /// stop rule, in the same order, as `generate_greedy_ops`).
+    fn finish_reason(&self) -> Option<FinishReason> {
+        if self.tokens.len() >= self.max_tokens {
+            Some(FinishReason::MaxTokens)
+        } else if self.prompt.len() + self.tokens.len() >= self.max_seq {
+            Some(FinishReason::MaxSeq)
+        } else {
+            None
+        }
+    }
+
+    fn timing(&self) -> RequestTiming {
+        RequestTiming {
+            queue: self.queue,
+            prefill: self.prefill,
+            decode: self.decode,
+        }
+    }
+}
+
+/// A generation request waiting for admission.
+struct GenJob {
+    spec: GenerateRequest,
+    events: mpsc::Sender<TokenEvent>,
+    enqueued: Instant,
+    deadline: Option<Instant>,
+}
+
+impl GenJob {
+    /// Terminal error without admission; consumes the job.
+    fn shed(self, e: ServeError, pending: &AtomicUsize) {
+        let _ = self.events.send(TokenEvent::Error(e));
+        pending.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Terminal empty completion (zero-token requests); consumes the job.
+    fn finish_empty(self, finish: FinishReason, pending: &AtomicUsize) {
+        let _ = self.events.send(TokenEvent::Done(GenerateResponse {
+            tokens: Vec::new(),
+            timing: RequestTiming {
+                queue: self.enqueued.elapsed(),
+                ..RequestTiming::default()
+            },
+            finish,
+        }));
+        pending.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// A scoring request waiting for a batch slot.
+struct ScoreJob {
+    problem: McqProblem,
+    respond: mpsc::Sender<Result<ScoreResponse>>,
+    enqueued: Instant,
+    deadline: Option<Instant>,
+}
+
+/// The unified serve loop. With no generation in flight it behaves
+/// exactly like the original dynamic batcher (block for the first
+/// request, fill the scoring batch up to `max_wait`). With live
+/// sessions it runs in *step mode*: each iteration drains the queue
+/// without blocking (admission at every decode step — continuous
+/// batching), executes any pending scoring batch, then advances every
+/// live session by one token.
+fn serve_loop(
+    exec: &Executor,
+    config: &ServerConfig,
+    rx: mpsc::Receiver<Request>,
+    pending: &AtomicUsize,
+    arena: Option<&Arc<KvArena>>,
+) {
+    let max_batch = exec.max_batch(config);
+    let mut sessions: Vec<Mutex<GenSession>> = Vec::new();
+    let mut backlog: VecDeque<GenJob> = VecDeque::new();
+    let mut closed = false;
+    loop {
+        let mut scores: Vec<ScoreJob> = Vec::new();
+        let mut fresh: Vec<GenJob> = Vec::new();
+        if sessions.is_empty() && backlog.is_empty() {
+            if closed {
+                return;
+            }
+            // Idle: block for the first request.
+            match rx.recv() {
+                Ok(r) => route(r, &mut scores, &mut fresh),
+                Err(_) => return,
+            }
+            // Legacy dynamic batching: a lone scoring request waits up
+            // to max_wait for batch-mates — but only while no
+            // generation work is pending.
+            if fresh.is_empty() && !scores.is_empty() {
+                let deadline = Instant::now() + config.max_wait;
+                while scores.len() < max_batch && fresh.is_empty() {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(r) => route(r, &mut scores, &mut fresh),
+                        Err(mpsc::RecvTimeoutError::Timeout) => break,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            closed = true;
+                            break;
+                        }
+                    }
+                }
+            }
+        } else {
+            // Step mode: admit whatever is queued, without blocking.
+            loop {
+                match rx.try_recv() {
+                    Ok(r) => route(r, &mut scores, &mut fresh),
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        closed = true;
+                        break;
+                    }
+                }
+            }
+        }
+
+        // Admission, FIFO: the backlog ahead of this iteration's
+        // arrivals. Jobs that still don't fit (sessions full, blocks
+        // temporarily rented out) go back to the backlog.
+        let candidates = std::mem::take(&mut backlog);
+        for job in candidates.into_iter().chain(fresh) {
+            if let Some(waiting) = admit(job, exec, config, arena, &mut sessions, pending) {
+                backlog.push_back(waiting);
+            }
+        }
+
+        // Scoring: execute everything drained, in batch-sized chunks.
+        while !scores.is_empty() {
+            let take = scores.len().min(max_batch);
+            let chunk: Vec<ScoreJob> = scores.drain(..take).collect();
+            execute_score_batch(exec, config, chunk);
+        }
+
+        // One decode step across all live sessions.
+        shed_expired(&mut sessions, pending);
+        if !sessions.is_empty() {
+            let results = exec.step_sessions(&sessions);
+            retire_and_emit(&mut sessions, results, pending);
+        }
+    }
+}
+
+fn route(req: Request, scores: &mut Vec<ScoreJob>, fresh: &mut Vec<GenJob>) {
+    match req {
+        Request::Score {
+            problem,
+            respond,
+            enqueued,
+            deadline,
+        } => scores.push(ScoreJob {
+            problem,
+            respond,
+            enqueued,
+            deadline,
+        }),
+        Request::Generate {
+            spec,
+            events,
+            enqueued,
+            deadline,
+        } => fresh.push(GenJob {
+            spec,
+            events,
+            enqueued,
+            deadline,
+        }),
+    }
+}
+
+/// Try to admit one generation request. Terminal outcomes (validation
+/// failure, expired deadline, impossible K/V footprint, zero-token
+/// requests) are emitted here; `Some(job)` hands the request back for
+/// the backlog (sessions full, or blocks temporarily rented out).
+fn admit(
+    job: GenJob,
+    exec: &Executor,
+    config: &ServerConfig,
+    arena: Option<&Arc<KvArena>>,
+    sessions: &mut Vec<Mutex<GenSession>>,
+    pending: &AtomicUsize,
+) -> Option<GenJob> {
+    if job.deadline.is_some_and(|d| Instant::now() >= d) {
+        job.shed(ServeError::DeadlineExceeded, pending);
+        return None;
+    }
+    let Some(cfg) = exec.model_config() else {
+        job.shed(
+            ServeError::Unsupported("the pjrt backend serves scoring only".into()),
+            pending,
+        );
+        return None;
+    };
+    if job.spec.prompt.is_empty() {
+        job.shed(ServeError::Invalid("empty prompt".into()), pending);
+        return None;
+    }
+    if let Some(&t) = job.spec.prompt.iter().find(|&&t| t >= cfg.vocab) {
+        job.shed(
+            ServeError::Invalid(format!("token {t} out of vocab {}", cfg.vocab)),
+            pending,
+        );
+        return None;
+    }
+    // Degenerate budgets complete immediately with zero tokens — the
+    // same outcome as `generate_greedy_ops`'s early return.
+    let max_tokens = job.spec.max_tokens.min(config.max_new_tokens);
+    if job.spec.prompt.len() >= cfg.max_seq {
+        job.finish_empty(FinishReason::MaxSeq, pending);
+        return None;
+    }
+    if max_tokens == 0 {
+        job.finish_empty(FinishReason::MaxTokens, pending);
+        return None;
+    }
+    let arena = arena.expect("cpu backends always serve with an arena");
+    // Conservative reservation: rent the worst-case block count now so
+    // an admitted session can never hit arena exhaustion mid-decode.
+    let need = (job.spec.prompt.len() + max_tokens).min(cfg.max_seq);
+    if arena.blocks_for(need) > arena.total_blocks() {
+        job.shed(ServeError::KvExhausted, pending);
+        return None;
+    }
+    if sessions.len() >= config.max_sessions {
+        return Some(job);
+    }
+    let mut state = DecodeState::paged(cfg, Arc::clone(arena));
+    if state.reserve(need).is_err() {
+        // Blocks are rented out to live sessions; dropping `state`
+        // returns any partial rental. Retry as sessions retire.
+        return Some(job);
+    }
+    sessions.push(Mutex::new(GenSession {
+        prompt: job.spec.prompt,
+        max_tokens,
+        max_seq: cfg.max_seq,
+        deadline: job.deadline,
+        events: job.events,
+        state,
+        tokens: Vec::with_capacity(max_tokens),
+        queue: job.enqueued.elapsed(),
+        prefill: Duration::ZERO,
+        decode: Duration::ZERO,
+        prefilled: false,
+    }));
+    None
+}
+
+/// Retire sessions whose deadline passed between steps: typed error,
+/// blocks returned, no hang.
+fn shed_expired(sessions: &mut Vec<Mutex<GenSession>>, pending: &AtomicUsize) {
+    let now = Instant::now();
+    sessions.retain(|slot| {
+        let s = slot.lock().unwrap();
+        if s.deadline.is_some_and(|d| now >= d) {
+            let _ = s.events.send(TokenEvent::Error(ServeError::DeadlineExceeded));
+            pending.fetch_sub(1, Ordering::SeqCst);
+            false // dropping the session frees its arena blocks
+        } else {
+            true
+        }
+    });
+}
+
+/// Emit this step's token for every session and retire the finished,
+/// failed, and cancelled ones (a dropped [`TokenStream`] turns the
+/// emit into a send error — that is the cancellation signal).
+fn retire_and_emit(
+    sessions: &mut Vec<Mutex<GenSession>>,
+    results: Vec<Result<()>>,
+    pending: &AtomicUsize,
+) {
+    let mut keep = Vec::with_capacity(sessions.len());
+    for (slot, res) in std::mem::take(sessions).into_iter().zip(results) {
+        let s = slot.into_inner().unwrap();
+        match res {
+            Err(e) => {
+                let _ = s
+                    .events
+                    .send(TokenEvent::Error(ServeError::Internal(format!("{e:#}"))));
+                pending.fetch_sub(1, Ordering::SeqCst);
+            }
+            Ok(()) => {
+                let index = s.tokens.len() - 1;
+                let token = s.tokens[index];
+                if s.events.send(TokenEvent::Token { index, token }).is_err() {
+                    // Receiver dropped → cancelled; free the blocks now.
+                    pending.fetch_sub(1, Ordering::SeqCst);
+                } else if let Some(finish) = s.finish_reason() {
+                    let timing = s.timing();
+                    let GenSession {
+                        events,
+                        tokens,
+                        state,
+                        ..
+                    } = s;
+                    // Blocks return to the arena *before* Done is
+                    // visible, so a client that observed the terminal
+                    // event sees occupancy already released.
+                    drop(state);
+                    let _ = events.send(TokenEvent::Done(GenerateResponse {
+                        tokens,
+                        timing,
+                        finish,
+                    }));
+                    pending.fetch_sub(1, Ordering::SeqCst);
+                } else {
+                    keep.push(Mutex::new(s));
+                }
+            }
+        }
+    }
+    *sessions = keep;
+}
+
+fn execute_score_batch(exec: &Executor, config: &ServerConfig, jobs: Vec<ScoreJob>) {
     let started = Instant::now();
+    // Shed requests whose deadline passed while queued — typed, no hang.
+    let mut live = Vec::with_capacity(jobs.len());
+    for job in jobs {
+        if job.deadline.is_some_and(|d| started >= d) {
+            let _ = job.respond.send(Err(ServeError::DeadlineExceeded.into()));
+        } else {
+            live.push(job);
+        }
+    }
+    if live.is_empty() {
+        return;
+    }
+    let problems: Vec<McqProblem> = live.iter().map(|j| j.problem.clone()).collect();
+    let batch_size = live.len();
     match exec.score(config, &problems) {
         Ok(results) => {
-            let exec_time = started.elapsed();
-            for (req, result) in batch.into_iter().zip(results) {
-                let resp = result.map(|result| Response {
+            for (job, result) in live.into_iter().zip(results) {
+                let resp = result.map(|(result, phases)| ScoreResponse {
                     result,
-                    queue_time: started.duration_since(req.enqueued),
-                    exec_time,
-                    batch_size: n,
+                    timing: RequestTiming {
+                        queue: started.duration_since(job.enqueued),
+                        prefill: phases.prefill,
+                        decode: phases.decode,
+                    },
+                    batch_size,
                 });
-                let _ = req.respond.send(resp);
+                let _ = job.respond.send(resp);
             }
         }
-        Err(e) => fail_all(batch, &e),
-    }
-}
-
-fn fail_all(batch: Vec<Request>, e: &anyhow::Error) {
-    for req in batch {
-        let _ = req.respond.send(Err(anyhow!("batch failed: {e}")));
+        Err(e) => {
+            for job in live {
+                let _ = job.respond.send(Err(anyhow!("batch failed: {e}")));
+            }
+        }
     }
 }
 
@@ -477,13 +1282,16 @@ fn fail_all(batch: Vec<Request>, e: &anyhow::Error) {
 /// ([`Executor::score`]) have already shape-validated every problem
 /// (prompt length, non-empty options); token-range errors that only
 /// surface against the executed logits (an out-of-vocab option) come
-/// back as that problem's inner `Err`.
+/// back as that problem's inner `Err`. The device executes the whole
+/// padded batch in one call — that call *is* each member's prefill;
+/// scoring reads the returned logits with no further decode.
+#[allow(clippy::type_complexity)]
 fn per_problem_results(
     engine: &Engine,
     weight_args: &BTreeMap<String, ArgValue>,
     config: &ServerConfig,
     problems: &[McqProblem],
-) -> Result<Vec<Result<ProblemResult>>> {
+) -> Result<Vec<Result<(ProblemResult, PhaseTimes)>>> {
     // score_problems pads internally; its report is aggregate only, so
     // inline the batching here for per-problem outputs.
     let b = engine.batch;
@@ -500,7 +1308,12 @@ fn per_problem_results(
         tokens.resize(b * plen, crate::data::PAD as i32);
         let mut args = (*weight_args).clone();
         args.insert("tokens".to_string(), ArgValue::I32(tokens));
+        let exec_started = Instant::now();
         let logits = engine.execute(&config.variant, &args)?;
+        let phases = PhaseTimes {
+            prefill: exec_started.elapsed(),
+            decode: Duration::ZERO,
+        };
         let vocab = logits.shape()[1];
         for (i, p) in chunk.iter().enumerate() {
             let row = logits.row(i);
@@ -516,10 +1329,15 @@ fn per_problem_results(
                 .collect();
             // NaN logprobs (a poisoned batch) must not panic the batch
             // thread: treat them as -inf and let the result surface.
-            results.push(lps.map(|lps| ProblemResult {
-                chosen: nan_safe_argmax(&lps),
-                correct: p.correct,
-                logprobs: lps,
+            results.push(lps.map(|lps| {
+                (
+                    ProblemResult {
+                        chosen: nan_safe_argmax(&lps),
+                        correct: p.correct,
+                        logprobs: lps,
+                    },
+                    phases,
+                )
             }));
         }
     }
@@ -530,7 +1348,8 @@ fn per_problem_results(
 mod tests {
     // Server tests that need real PJRT artifacts live in rust/tests/
     // integration; here we test the queueing scaffolding with the CPU
-    // backends and the config defaults.
+    // backends and the config defaults. The generation bit-identity and
+    // overload-behavior suite lives in rust/tests/serving_stream.rs.
     use super::*;
     use crate::model::quantized::{quantize_model, Method};
     use crate::model::PicoLlamaConfig;
@@ -545,6 +1364,40 @@ mod tests {
         assert!(c.max_batch >= 1);
         assert!(c.workers >= 1, "default avoids surprise thread fan-out");
         assert!(c.reuse_prefix, "prefix reuse is the default scoring path");
+        assert!(c.max_sessions >= 1);
+        assert!(c.kv_block_positions >= 1);
+        assert_eq!(c.kv_blocks, 0, "arena auto-sizes by default");
+        assert!(c.queue_cap >= c.max_sessions);
+        assert!(c.max_new_tokens >= 1);
+        c.validate().expect("defaults must validate");
+    }
+
+    #[test]
+    fn builder_validates_config() {
+        // The builder accepts a sensible combination...
+        let c = ServerConfig::builder()
+            .max_batch(4)
+            .max_sessions(8)
+            .kv_block_positions(8)
+            .queue_cap(64)
+            .default_deadline(Some(Duration::from_secs(1)))
+            .build()
+            .unwrap();
+        assert_eq!(c.max_batch, 4);
+        assert_eq!(c.max_sessions, 8);
+        // ...and rejects nonsense.
+        assert!(ServerConfig::builder().max_batch(0).build().is_err());
+        assert!(ServerConfig::builder().max_sessions(0).build().is_err());
+        assert!(ServerConfig::builder().kv_block_positions(0).build().is_err());
+        assert!(ServerConfig::builder().queue_cap(0).build().is_err());
+        assert!(ServerConfig::builder().max_new_tokens(0).build().is_err());
+        // A default deadline shorter than the batching window would
+        // expire every queued request before the batcher fires.
+        assert!(ServerConfig::builder()
+            .max_wait(Duration::from_millis(50))
+            .default_deadline(Some(Duration::from_millis(10)))
+            .build()
+            .is_err());
     }
 
     fn setup() -> (crate::model::quantized::QuantizedModel, Vec<McqProblem>) {
@@ -577,7 +1430,8 @@ mod tests {
         for r in rx {
             let resp = r.recv().unwrap().unwrap();
             assert!(resp.batch_size >= 1 && resp.batch_size <= 8);
-            assert!(resp.latency() >= resp.queue_time);
+            assert!(resp.latency() >= resp.timing.queue);
+            assert!(resp.latency() >= resp.timing.ttft());
             max_batch = max_batch.max(resp.batch_size);
             n += 1;
         }
@@ -601,9 +1455,9 @@ mod tests {
         .unwrap();
         let resp = waiting.score(problems[0].clone()).unwrap();
         assert!(
-            resp.queue_time >= Duration::from_millis(90),
+            resp.timing.queue >= Duration::from_millis(90),
             "lone request should wait near the deadline, waited {:?}",
-            resp.queue_time
+            resp.timing.queue
         );
         assert_eq!(resp.batch_size, 1);
 
@@ -815,5 +1669,78 @@ mod tests {
                 assert!((la - lb).abs() < 1e-6, "{la} vs {lb}");
             }
         }
+    }
+
+    #[test]
+    fn generation_streams_and_frees_blocks() {
+        let (qm, problems) = setup();
+        let pm = PackedModel::from_qmodel(&qm).unwrap();
+        let cfg = pm.config.clone();
+        let server = Server::start(
+            Backend::Packed(Box::new(pm.clone())),
+            ServerConfig::builder().kv_block_positions(4).build().unwrap(),
+        )
+        .unwrap();
+        let prompt = &problems[0].prompt;
+        let n_new = 6usize;
+        // Sequential oracle on a contiguous (owned) state.
+        let mut ws = Workspace::new(&cfg, cfg.max_seq);
+        let mut scratch = pm.prewarmed_scratch();
+        let mut state = DecodeState::new(&cfg);
+        let oracle = pm
+            .generate_greedy(prompt, n_new, &mut ws, &mut scratch, &mut state)
+            .unwrap();
+        // Streamed continuous-batching path.
+        let stream = server
+            .submit_generate(GenerateRequest {
+                prompt: prompt.clone(),
+                max_tokens: n_new,
+                deadline: None,
+            })
+            .unwrap();
+        let mut streamed = Vec::new();
+        let mut done = None;
+        for ev in stream.iter() {
+            match ev {
+                TokenEvent::Token { index, token } => {
+                    assert_eq!(index, streamed.len(), "tokens arrive in order");
+                    streamed.push(token);
+                }
+                TokenEvent::Done(resp) => done = Some(resp),
+                TokenEvent::Error(e) => panic!("stream failed: {e}"),
+            }
+        }
+        let done = done.expect("stream must end with Done");
+        assert_eq!(streamed, oracle, "streamed tokens must match sequential greedy");
+        assert_eq!(done.tokens, oracle);
+        assert_eq!(done.finish, FinishReason::MaxTokens);
+        assert!(done.timing.ttft() <= done.timing.total());
+        // All blocks return to the arena once the session retires.
+        assert_eq!(server.kv_blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn scoring_and_generation_interleave() {
+        let (qm, problems) = setup();
+        let pm = PackedModel::from_qmodel(&qm).unwrap();
+        let server = Server::start(
+            Backend::Packed(Box::new(pm)),
+            ServerConfig::default(),
+        )
+        .unwrap();
+        // Kick off a generation, then score while it streams; both must
+        // complete and agree with their solo counterparts.
+        let stream = server
+            .submit_generate(GenerateRequest {
+                prompt: problems[0].prompt.clone(),
+                max_tokens: 8,
+                deadline: None,
+            })
+            .unwrap();
+        let scored = server.score(problems[1].clone()).unwrap();
+        assert_eq!(scored.result.logprobs.len(), problems[1].options.len());
+        let gen = stream.wait().unwrap();
+        assert!(!gen.tokens.is_empty());
+        assert_eq!(server.kv_blocks_in_use(), 0);
     }
 }

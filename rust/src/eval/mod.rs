@@ -16,6 +16,7 @@
 //! (all paths are cross-checked in integration tests).
 
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::data::McqProblem;
 use crate::kernels::{KernelImpl, KernelScratch};
@@ -199,6 +200,19 @@ impl ScoreBuffers {
     }
 }
 
+/// Wall-clock split of one scored/generated request into serving
+/// phases: `prefill` covers prompt resolution (the prompt pass, or a
+/// prefix-cache restore), `decode` covers everything after it (option
+/// extensions for scoring, per-token steps for generation). The server
+/// folds these into its `RequestTiming` so TTFT is reported from the
+/// phases that actually precede the first token, not from batch wall
+/// clock.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimes {
+    pub prefill: Duration,
+    pub decode: Duration,
+}
+
 /// The engine-generic prefix-reuse scoring session: resolve the prompt
 /// (from the shared prefix cache when one is attached, else one prompt
 /// pass — inserting the snapshot on miss), then score every option as a
@@ -210,8 +224,22 @@ pub(crate) fn score_problem_session<O: ForwardOps>(
     state: &mut DecodeState,
     cache: Option<&Mutex<PrefixCache>>,
 ) -> Result<ProblemResult> {
+    score_problem_session_timed(ops, problem, ws, state, cache).map(|(r, _)| r)
+}
+
+/// [`score_problem_session`] with the prefill/decode wall-clock split
+/// measured alongside the result. The scoring math is byte-identical —
+/// the untimed entry point delegates here.
+pub(crate) fn score_problem_session_timed<O: ForwardOps>(
+    ops: &mut O,
+    problem: &McqProblem,
+    ws: &mut Workspace,
+    state: &mut DecodeState,
+    cache: Option<&Mutex<PrefixCache>>,
+) -> Result<(ProblemResult, PhaseTimes)> {
     anyhow::ensure!(!problem.prompt.is_empty(), "problem has an empty prompt");
     let plen = problem.prompt.len();
+    let prefill_started = Instant::now();
     let cached = cache.and_then(|c| c.lock().unwrap().get(&problem.prompt));
     let last_row = match cached {
         Some(entry) => {
@@ -229,12 +257,18 @@ pub(crate) fn score_problem_session<O: ForwardOps>(
             last
         }
     };
+    let prefill = prefill_started.elapsed();
+    let decode_started = Instant::now();
     let logprobs = forward::option_logprobs(ops, plen, &last_row, &problem.options, ws, state)?;
-    Ok(ProblemResult {
-        chosen: nan_safe_argmax(&logprobs),
-        correct: problem.correct,
-        logprobs,
-    })
+    let decode = decode_started.elapsed();
+    Ok((
+        ProblemResult {
+            chosen: nan_safe_argmax(&logprobs),
+            correct: problem.correct,
+            logprobs,
+        },
+        PhaseTimes { prefill, decode },
+    ))
 }
 
 /// Longest prompt+option sequence in a problem set (workspace sizing).

@@ -7,10 +7,11 @@
 //!   inspect    dump a checkpoint / quantized container
 //!   report     per-layer resolution report (Figure 1 numbers)
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Result};
-use splitquant::coordinator::{Coordinator, ExecEngine, PipelineSpec};
+use splitquant::coordinator::{Coordinator, PipelineSpec};
+use splitquant::runtime::EngineKind;
 use splitquant::io::{checkpoint::load_checkpoint, qmodel, read_file};
 use splitquant::model::quantized::Method;
 use splitquant::model::{param_inventory, ParamKind};
@@ -67,6 +68,11 @@ fn app() -> App {
                 .opt("row-workers", "0", "row-parallel GEMV threads (0 = cores left after batch workers)")
                 .opt("prefix-cache", "32", "prompt-prefix LRU capacity (0 = disabled)")
                 .flag("full-recompute", "score via full prompt+option recompute (baseline)")
+                .flag("stream", "streaming generation instead of MCQ scoring (CPU engines)")
+                .opt("max-sessions", "64", "concurrent generation sessions (stream mode)")
+                .opt("kv-blocks", "0", "KV arena blocks (0 = auto for max-sessions)")
+                .opt("max-new-tokens", "8", "tokens to generate per request (stream mode)")
+                .opt("deadline-ms", "0", "per-request deadline in milliseconds (0 = none)")
                 .opt("threads", "0", "pipeline worker threads (0 = all cores)")
                 .opt("log", "info", "log level"),
         )
@@ -138,9 +144,9 @@ fn cmd_quantize(m: &Matches) -> Result<()> {
 fn cmd_eval(m: &Matches) -> Result<()> {
     let mut spec = PipelineSpec::new(m.get("ckpt")?, m.get("problems")?);
     spec.use_runtime = m.flag("runtime");
-    spec.engine = ExecEngine::parse(m.get("engine")?)?;
+    spec.engine = EngineKind::parse_cpu(m.get("engine")?)?;
     spec.kernel_impl = splitquant::kernels::KernelImpl::parse(m.get("kernel-impl")?)?;
-    if spec.use_runtime && spec.engine == ExecEngine::Packed {
+    if spec.use_runtime && spec.engine == EngineKind::Packed {
         bail!("--engine packed cannot combine with --runtime (PJRT executes the batch); pick one");
     }
     if m.flag("no-amplify") {
@@ -211,28 +217,29 @@ fn cmd_serve(m: &Matches) -> Result<()> {
         m.get("engine")?
     );
 
-    let backend = match m.get("engine")? {
-        "packed" => Backend::Packed(Box::new(
-            splitquant::model::packed::PackedModel::from_qmodel(&qm)?,
-        )),
-        "reference" => Backend::Reference(Box::new(qm.effective_checkpoint())),
-        "pjrt" => Backend::Pjrt {
-            artifacts_dir: PathBuf::from(m.get("artifacts")?),
-            weight_args: splitquant::runtime::scoring::quant_args(&qm, 3)?,
-        },
-        other => bail!("unknown engine '{other}' (use packed|reference|pjrt)"),
-    };
-    let config = ServerConfig {
-        max_wait: m.get_ms("max-wait-ms")?,
-        max_batch: m.get_usize("max-batch")?,
-        workers: m.get_usize("workers")?,
-        prefix_cache: m.get_usize("prefix-cache")?,
-        reuse_prefix: !m.flag("full-recompute"),
-        kernel_impl: splitquant::kernels::KernelImpl::parse(m.get("kernel-impl")?)?,
-        row_workers: m.get_usize("row-workers")?,
-        ..Default::default()
-    };
+    let kind = EngineKind::parse(m.get("engine")?)?;
+    let backend = Backend::from_kind(kind, &qm, Some(Path::new(m.get("artifacts")?)))?;
+    let deadline = m.get_ms("deadline-ms")?;
+    let config = ServerConfig::builder()
+        .max_wait(m.get_ms("max-wait-ms")?)
+        .max_batch(m.get_usize("max-batch")?)
+        .workers(m.get_usize("workers")?)
+        .prefix_cache(m.get_usize("prefix-cache")?)
+        .reuse_prefix(!m.flag("full-recompute"))
+        .kernel_impl(splitquant::kernels::KernelImpl::parse(m.get("kernel-impl")?)?)
+        .row_workers(m.get_usize("row-workers")?)
+        .max_sessions(m.get_usize("max-sessions")?)
+        .kv_blocks(m.get_usize("kv-blocks")?)
+        .max_new_tokens(m.get_usize("max-new-tokens")?.max(1))
+        .default_deadline((!deadline.is_zero()).then_some(deadline))
+        .build()?;
+    let max_new_tokens = config.max_new_tokens;
     let server = Server::start(backend, config)?;
+
+    if m.flag("stream") {
+        return serve_stream_demo(&server, &problems, n_requests, max_new_tokens);
+    }
+
     let t0 = Instant::now();
     let mut rx = Vec::new();
     for p in problems.iter().take(n_requests) {
@@ -240,6 +247,7 @@ fn cmd_serve(m: &Matches) -> Result<()> {
     }
     let mut correct = 0usize;
     let mut lat = Vec::new();
+    let mut ttft = Vec::new();
     let mut batch_sizes = Vec::new();
     for r in rx {
         let resp = r.recv()??;
@@ -247,22 +255,76 @@ fn cmd_serve(m: &Matches) -> Result<()> {
             correct += 1;
         }
         lat.push(resp.latency().as_secs_f64() * 1e3);
+        ttft.push(resp.timing.ttft().as_secs_f64() * 1e3);
         batch_sizes.push(resp.batch_size as f64);
     }
     let wall = t0.elapsed();
     let s = splitquant::util::stats::Summary::of(&lat);
+    let t = splitquant::util::stats::Summary::of(&ttft);
     println!(
         "served {n_requests} requests in {}  ({:.1} req/s)",
         format_duration(wall),
         n_requests as f64 / wall.as_secs_f64()
     );
     println!(
-        "accuracy {:.2}%  latency p50 {:.1}ms p95 {:.1}ms  mean batch {:.1}",
+        "accuracy {:.2}%  latency p50 {:.1}ms p95 {:.1}ms  ttft p50 {:.1}ms  mean batch {:.1}",
         100.0 * correct as f64 / n_requests as f64,
         s.median,
         s.p95,
+        t.median,
         splitquant::util::stats::Summary::of(&batch_sizes).mean
     );
+    Ok(())
+}
+
+/// `serve --stream`: fire one streaming generation per request (prompts
+/// taken from the problem set), drain every token stream, and report
+/// TTFT percentiles plus aggregate decode throughput.
+fn serve_stream_demo(
+    server: &splitquant::coordinator::server::Server,
+    problems: &[splitquant::data::McqProblem],
+    n_requests: usize,
+    max_tokens: usize,
+) -> Result<()> {
+    use splitquant::coordinator::server::GenerateRequest;
+    use std::time::Instant;
+
+    let t0 = Instant::now();
+    let streams: Vec<_> = (0..n_requests)
+        .map(|i| {
+            server.submit_generate(GenerateRequest {
+                prompt: problems[i % problems.len()].prompt.clone(),
+                max_tokens,
+                deadline: None,
+            })
+        })
+        .collect::<Result<_>>()?;
+    let mut ttft = Vec::with_capacity(n_requests);
+    let mut total_tokens = 0usize;
+    let mut sample = Vec::new();
+    for (i, s) in streams.into_iter().enumerate() {
+        let done = s.wait()?;
+        total_tokens += done.tokens.len();
+        ttft.push(done.timing.ttft().as_secs_f64() * 1e3);
+        if i == 0 {
+            sample = done.tokens;
+        }
+    }
+    let wall = t0.elapsed();
+    let t = splitquant::util::stats::Summary::of(&ttft);
+    println!(
+        "streamed {n_requests} generations ({total_tokens} tokens) in {}  \
+         ({:.0} tok/s)",
+        format_duration(wall),
+        total_tokens as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "ttft p50 {:.2}ms p95 {:.2}ms  kv blocks in use after drain: {}",
+        t.median,
+        t.p95,
+        server.kv_blocks_in_use()
+    );
+    println!("sample generation: {sample:?}");
     Ok(())
 }
 

@@ -11,6 +11,19 @@
 //! what lets MCQ scoring replay N option continuations against one
 //! computed prompt.
 //!
+//! Two storage backings sit behind the same API. The *owned* backing
+//! (the original) keeps one contiguous `Vec<f32>` of `[len, kv_dim]`
+//! rows per layer — ideal for a handful of long-lived states. The
+//! *paged* backing rents fixed-size blocks from a shared [`KvArena`]
+//! so thousands of concurrent generation sessions share one bounded
+//! pool: a session holding 3 cached positions pins one block, not a
+//! `max_seq`-sized buffer, and cancelling it returns its blocks to the
+//! pool immediately (on drop). The forward path reads the cache through
+//! per-position row accessors ([`k_row`](DecodeState::k_row) /
+//! [`v_row`](DecodeState::v_row)) whose float layout within a row is
+//! identical for both backings, which is what keeps paged decode
+//! bit-identical to contiguous decode.
+//!
 //! [`PrefixCache`] extends the reuse *across requests*: a bounded LRU
 //! from prompt token ids to a compact [`DecodeState`] snapshot plus the
 //! prompt's last-position logits row. Concurrent server workers that
@@ -19,35 +32,204 @@
 //! clone under the lock; the K/V payload is copied outside it.
 
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use super::PicoLlamaConfig;
 
+/// A paged state could not rent enough blocks from its [`KvArena`].
+///
+/// Surfaced to the serving layer as a typed admission failure (shed the
+/// request) rather than a panic: the arena being full is an expected
+/// overload condition, not a bug.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvArenaExhausted {
+    /// Blocks still needed beyond what the state already holds.
+    pub requested: usize,
+    /// Total blocks the arena can ever hand out.
+    pub total: usize,
+}
+
+impl std::fmt::Display for KvArenaExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "KV arena exhausted: {} more block(s) requested, {} total in pool",
+            self.requested, self.total
+        )
+    }
+}
+
+impl std::error::Error for KvArenaExhausted {}
+
+/// Shared pool of fixed-size K/V blocks (the paged-attention slab).
+///
+/// One block stores `block_positions` positions of K *and* V for every
+/// layer, laid out `[layer][k|v][position][kv_dim]`, so renting blocks
+/// is the only allocation decision a session ever makes — no per-layer
+/// bookkeeping. Blocks are created lazily up to `total_blocks` and then
+/// recycled through a free list; occupancy is readable lock-free via
+/// [`blocks_in_use`](KvArena::blocks_in_use), which is what the serving
+/// tests use to prove cancellation returns memory.
+#[derive(Debug)]
+pub struct KvArena {
+    n_layers: usize,
+    kv_dim: usize,
+    block_positions: usize,
+    block_floats: usize,
+    total_blocks: usize,
+    created: AtomicUsize,
+    in_use: AtomicUsize,
+    free: Mutex<Vec<Box<[f32]>>>,
+}
+
+impl KvArena {
+    /// Pool for `cfg`'s geometry: `total_blocks` blocks of
+    /// `block_positions` positions each.
+    pub fn new(cfg: &PicoLlamaConfig, block_positions: usize, total_blocks: usize) -> KvArena {
+        assert!(block_positions > 0, "block_positions must be positive");
+        KvArena {
+            n_layers: cfg.n_layers,
+            kv_dim: cfg.kv_dim(),
+            block_positions,
+            block_floats: cfg.n_layers * 2 * block_positions * cfg.kv_dim(),
+            total_blocks,
+            created: AtomicUsize::new(0),
+            in_use: AtomicUsize::new(0),
+            free: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Positions one block holds.
+    pub fn block_positions(&self) -> usize {
+        self.block_positions
+    }
+
+    /// Total blocks the pool can hand out.
+    pub fn total_blocks(&self) -> usize {
+        self.total_blocks
+    }
+
+    /// Blocks currently rented by live states (lock-free read).
+    pub fn blocks_in_use(&self) -> usize {
+        self.in_use.load(Ordering::SeqCst)
+    }
+
+    /// Blocks needed to cache `positions` positions.
+    pub fn blocks_for(&self, positions: usize) -> usize {
+        positions.div_ceil(self.block_positions)
+    }
+
+    /// Payload bytes of one block.
+    pub fn block_bytes(&self) -> usize {
+        self.block_floats * 4
+    }
+
+    /// Rent one block: recycle from the free list, else create lazily
+    /// while under the cap. `None` means the pool is exhausted.
+    fn alloc(&self) -> Option<Box<[f32]>> {
+        if let Some(b) = self.free.lock().unwrap().pop() {
+            self.in_use.fetch_add(1, Ordering::SeqCst);
+            return Some(b);
+        }
+        loop {
+            let created = self.created.load(Ordering::SeqCst);
+            if created >= self.total_blocks {
+                return None;
+            }
+            if self
+                .created
+                .compare_exchange(created, created + 1, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok()
+            {
+                self.in_use.fetch_add(1, Ordering::SeqCst);
+                return Some(vec![0.0f32; self.block_floats].into_boxed_slice());
+            }
+        }
+    }
+
+    /// Return a rented block to the free list.
+    fn release(&self, block: Box<[f32]>) {
+        self.free.lock().unwrap().push(block);
+        self.in_use.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Storage behind a [`DecodeState`]: contiguous per-layer vectors, or
+/// blocks rented from a shared [`KvArena`].
+#[derive(Debug)]
+enum Backing {
+    Owned {
+        k: Vec<Vec<f32>>,
+        v: Vec<Vec<f32>>,
+    },
+    Paged {
+        arena: Arc<KvArena>,
+        blocks: Vec<Box<[f32]>>,
+    },
+}
+
 /// Per-layer K/V cache with O(1) truncation (snapshot/rollback).
 ///
-/// Layout: one `Vec<f32>` of `[len, kv_dim]` rows per layer. The
-/// physical vectors only grow; `len` is the logical number of cached
-/// positions and everything beyond it is dead until overwritten by the
-/// next [`append_layer`](DecodeState::append_layer).
-#[derive(Clone, Debug)]
+/// Owned layout: one `Vec<f32>` of `[len, kv_dim]` rows per layer.
+/// Paged layout: rented [`KvArena`] blocks, position `p` living in
+/// block `p / block_positions`. Either way the physical storage only
+/// grows; `len` is the logical number of cached positions and
+/// everything beyond it is dead until overwritten by the next
+/// [`append_layer`](DecodeState::append_layer).
+#[derive(Debug)]
 pub struct DecodeState {
-    k: Vec<Vec<f32>>,
-    v: Vec<Vec<f32>>,
+    backing: Backing,
+    n_layers: usize,
     kv_dim: usize,
     max_seq: usize,
     len: usize,
 }
 
 impl DecodeState {
-    /// Empty state for a model config. Buffers grow lazily up to
+    /// Empty owned state for a model config. Buffers grow lazily up to
     /// `max_seq` positions, so constructing one is allocation-light.
     pub fn new(cfg: &PicoLlamaConfig) -> DecodeState {
         DecodeState {
-            k: vec![Vec::new(); cfg.n_layers],
-            v: vec![Vec::new(); cfg.n_layers],
+            backing: Backing::Owned {
+                k: vec![Vec::new(); cfg.n_layers],
+                v: vec![Vec::new(); cfg.n_layers],
+            },
+            n_layers: cfg.n_layers,
             kv_dim: cfg.kv_dim(),
             max_seq: cfg.max_seq,
             len: 0,
+        }
+    }
+
+    /// Empty paged state renting its storage from `arena`. Blocks are
+    /// rented by [`reserve`](DecodeState::reserve) and returned when
+    /// the state is dropped.
+    pub fn paged(cfg: &PicoLlamaConfig, arena: Arc<KvArena>) -> DecodeState {
+        assert_eq!(arena.n_layers, cfg.n_layers, "arena layer count mismatch");
+        assert_eq!(arena.kv_dim, cfg.kv_dim(), "arena kv_dim mismatch");
+        DecodeState {
+            backing: Backing::Paged {
+                arena,
+                blocks: Vec::new(),
+            },
+            n_layers: cfg.n_layers,
+            kv_dim: cfg.kv_dim(),
+            max_seq: cfg.max_seq,
+            len: 0,
+        }
+    }
+
+    /// Whether this state rents blocks from a [`KvArena`].
+    pub fn is_paged(&self) -> bool {
+        matches!(self.backing, Backing::Paged { .. })
+    }
+
+    /// Blocks currently rented (0 for owned states).
+    pub fn blocks_held(&self) -> usize {
+        match &self.backing {
+            Backing::Owned { .. } => 0,
+            Backing::Paged { blocks, .. } => blocks.len(),
         }
     }
 
@@ -65,6 +247,32 @@ impl DecodeState {
         self.max_seq
     }
 
+    /// Ensure storage exists for `positions` cached positions (clamped
+    /// to `max_seq`). A no-op for owned states, which grow on append;
+    /// paged states rent the missing blocks here — and keep whatever
+    /// they already hold on failure, so a shed request can retry.
+    pub fn reserve(&mut self, positions: usize) -> Result<(), KvArenaExhausted> {
+        let positions = positions.min(self.max_seq);
+        match &mut self.backing {
+            Backing::Owned { .. } => Ok(()),
+            Backing::Paged { arena, blocks } => {
+                let needed = arena.blocks_for(positions);
+                while blocks.len() < needed {
+                    match arena.alloc() {
+                        Some(b) => blocks.push(b),
+                        None => {
+                            return Err(KvArenaExhausted {
+                                requested: needed - blocks.len(),
+                                total: arena.total_blocks,
+                            })
+                        }
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+
     /// Rewind to `len` cached positions (O(1): later rows stay in the
     /// buffers until the next extension overwrites them). This is the
     /// rollback half of snapshot/rollback scoring.
@@ -77,24 +285,38 @@ impl DecodeState {
         self.len = len;
     }
 
-    /// Drop every cached position.
+    /// Drop every cached position. Paged states keep their rented
+    /// blocks for reuse; drop the state to return them.
     pub fn reset(&mut self) {
         self.len = 0;
     }
 
     /// Bytes of live K/V payload (cache accounting).
     pub fn kv_bytes(&self) -> usize {
-        2 * self.k.len() * self.len * self.kv_dim * 4
+        2 * self.n_layers * self.len * self.kv_dim * 4
     }
 
-    /// Compact copy of the first `len` positions (the snapshot half of
-    /// snapshot/rollback; what the prefix cache stores).
+    /// Compact *owned* copy of the first `len` positions (the snapshot
+    /// half of snapshot/rollback; what the prefix cache stores). Paged
+    /// states snapshot to owned storage, so snapshots never pin arena
+    /// blocks.
     pub fn snapshot(&self, len: usize) -> DecodeState {
         assert!(len <= self.len, "snapshot of {len} > cached {}", self.len);
-        let n = len * self.kv_dim;
+        let mut k = Vec::with_capacity(self.n_layers);
+        let mut v = Vec::with_capacity(self.n_layers);
+        for l in 0..self.n_layers {
+            let mut kl = Vec::with_capacity(len * self.kv_dim);
+            let mut vl = Vec::with_capacity(len * self.kv_dim);
+            for p in 0..len {
+                kl.extend_from_slice(self.k_row(l, p));
+                vl.extend_from_slice(self.v_row(l, p));
+            }
+            k.push(kl);
+            v.push(vl);
+        }
         DecodeState {
-            k: self.k.iter().map(|kl| kl[..n].to_vec()).collect(),
-            v: self.v.iter().map(|vl| vl[..n].to_vec()).collect(),
+            backing: Backing::Owned { k, v },
+            n_layers: self.n_layers,
             kv_dim: self.kv_dim,
             max_seq: self.max_seq,
             len,
@@ -102,18 +324,37 @@ impl DecodeState {
     }
 
     /// Overwrite this state with `other`'s cached positions, reusing
-    /// this state's allocations (the cache-hit restore path).
+    /// this state's allocations (the cache-hit restore path). Works
+    /// across backings; a paged destination rents blocks as needed.
     pub fn copy_from(&mut self, other: &DecodeState) {
         assert_eq!(self.kv_dim, other.kv_dim, "kv_dim mismatch");
-        assert_eq!(self.k.len(), other.k.len(), "layer count mismatch");
-        let n = other.len * other.kv_dim;
-        for (dst, src) in self.k.iter_mut().zip(&other.k) {
-            dst.clear();
-            dst.extend_from_slice(&src[..n]);
-        }
-        for (dst, src) in self.v.iter_mut().zip(&other.v) {
-            dst.clear();
-            dst.extend_from_slice(&src[..n]);
+        assert_eq!(self.n_layers, other.n_layers, "layer count mismatch");
+        self.len = 0;
+        self.reserve(other.len)
+            .expect("KV arena exhausted restoring a snapshot");
+        let kvd = self.kv_dim;
+        match &mut self.backing {
+            Backing::Owned { k, v } => {
+                for l in 0..other.n_layers {
+                    k[l].clear();
+                    v[l].clear();
+                    for p in 0..other.len {
+                        k[l].extend_from_slice(other.k_row(l, p));
+                        v[l].extend_from_slice(other.v_row(l, p));
+                    }
+                }
+            }
+            Backing::Paged { arena, blocks } => {
+                let bp = arena.block_positions;
+                for l in 0..other.n_layers {
+                    for p in 0..other.len {
+                        let kb = ((l * 2) * bp + (p % bp)) * kvd;
+                        blocks[p / bp][kb..kb + kvd].copy_from_slice(other.k_row(l, p));
+                        let vb = ((l * 2 + 1) * bp + (p % bp)) * kvd;
+                        blocks[p / bp][vb..vb + kvd].copy_from_slice(other.v_row(l, p));
+                    }
+                }
+            }
         }
         self.len = other.len;
     }
@@ -121,29 +362,110 @@ impl DecodeState {
     /// Write one layer's K/V rows for positions `start..start+m` (the
     /// chunk being extended). Overwrites anything previously cached at
     /// or after `start`; the caller commits the new logical length once
-    /// every layer has been written.
+    /// every layer has been written. Paged callers must have
+    /// [`reserve`](DecodeState::reserve)d `start + m` positions first.
     pub(crate) fn append_layer(&mut self, l: usize, start: usize, k: &[f32], v: &[f32]) {
         debug_assert_eq!(k.len(), v.len());
         debug_assert_eq!(k.len() % self.kv_dim, 0);
-        let base = start * self.kv_dim;
-        debug_assert!(base <= self.k[l].len(), "append past cached prefix");
-        self.k[l].truncate(base);
-        self.k[l].extend_from_slice(k);
-        self.v[l].truncate(base);
-        self.v[l].extend_from_slice(v);
+        let kvd = self.kv_dim;
+        match &mut self.backing {
+            Backing::Owned { k: ks, v: vs } => {
+                let base = start * kvd;
+                debug_assert!(base <= ks[l].len(), "append past cached prefix");
+                ks[l].truncate(base);
+                ks[l].extend_from_slice(k);
+                vs[l].truncate(base);
+                vs[l].extend_from_slice(v);
+            }
+            Backing::Paged { arena, blocks } => {
+                let bp = arena.block_positions;
+                let m = k.len() / kvd;
+                assert!(
+                    blocks.len() * bp >= start + m,
+                    "append_layer without reserve: {} blocks hold {} positions, need {}",
+                    blocks.len(),
+                    blocks.len() * bp,
+                    start + m
+                );
+                for i in 0..m {
+                    let p = start + i;
+                    let kb = ((l * 2) * bp + (p % bp)) * kvd;
+                    blocks[p / bp][kb..kb + kvd].copy_from_slice(&k[i * kvd..(i + 1) * kvd]);
+                    let vb = ((l * 2 + 1) * bp + (p % bp)) * kvd;
+                    blocks[p / bp][vb..vb + kvd].copy_from_slice(&v[i * kvd..(i + 1) * kvd]);
+                }
+            }
+        }
+    }
+
+    /// One cached K row (`kv_dim` floats) for layer `l`, position `p`.
+    /// Identical float layout for both backings — the attention loop
+    /// reads through this, which is what makes paged ≡ contiguous.
+    #[inline]
+    pub(crate) fn k_row(&self, l: usize, p: usize) -> &[f32] {
+        let kvd = self.kv_dim;
+        match &self.backing {
+            Backing::Owned { k, .. } => &k[l][p * kvd..(p + 1) * kvd],
+            Backing::Paged { arena, blocks } => {
+                let bp = arena.block_positions;
+                let base = ((l * 2) * bp + (p % bp)) * kvd;
+                &blocks[p / bp][base..base + kvd]
+            }
+        }
+    }
+
+    /// One cached V row (`kv_dim` floats) for layer `l`, position `p`.
+    #[inline]
+    pub(crate) fn v_row(&self, l: usize, p: usize) -> &[f32] {
+        let kvd = self.kv_dim;
+        match &self.backing {
+            Backing::Owned { v, .. } => &v[l][p * kvd..(p + 1) * kvd],
+            Backing::Paged { arena, blocks } => {
+                let bp = arena.block_positions;
+                let base = ((l * 2 + 1) * bp + (p % bp)) * kvd;
+                &blocks[p / bp][base..base + kvd]
+            }
+        }
     }
 
     /// One layer's cached K/V for positions `0..upto` (row-major
-    /// `[upto, kv_dim]` slices).
+    /// `[upto, kv_dim]` slices). Only the owned backing is contiguous;
+    /// paged callers must use the row accessors.
     pub(crate) fn layer_kv(&self, l: usize, upto: usize) -> (&[f32], &[f32]) {
         let n = upto * self.kv_dim;
-        (&self.k[l][..n], &self.v[l][..n])
+        match &self.backing {
+            Backing::Owned { k, v } => (&k[l][..n], &v[l][..n]),
+            Backing::Paged { .. } => {
+                panic!("layer_kv needs contiguous storage; paged states expose k_row/v_row")
+            }
+        }
     }
 
     /// Commit the logical length after an extension wrote all layers.
     pub(crate) fn commit(&mut self, len: usize) {
         debug_assert!(len <= self.max_seq);
         self.len = len;
+    }
+}
+
+impl Clone for DecodeState {
+    /// Clones are always owned compact copies (see
+    /// [`snapshot`](DecodeState::snapshot)) so cloning a paged state
+    /// never doubles arena pressure.
+    fn clone(&self) -> DecodeState {
+        self.snapshot(self.len)
+    }
+}
+
+impl Drop for DecodeState {
+    /// Paged states return their rented blocks to the arena — dropping
+    /// a cancelled session is what brings occupancy back to zero.
+    fn drop(&mut self) {
+        if let Backing::Paged { arena, blocks } = &mut self.backing {
+            for b in blocks.drain(..) {
+                arena.release(b);
+            }
+        }
     }
 }
 
@@ -299,6 +621,118 @@ mod tests {
     fn truncate_beyond_len_panics() {
         let mut st = DecodeState::new(&cfg());
         st.truncate(1);
+    }
+
+    #[test]
+    fn paged_rows_match_owned_rows() {
+        let cfg = cfg();
+        let kvd = cfg.kv_dim();
+        let arena = Arc::new(KvArena::new(&cfg, 3, 16));
+        let mut owned = DecodeState::new(&cfg);
+        let mut paged = DecodeState::paged(&cfg, Arc::clone(&arena));
+        // Write 7 positions in two ragged chunks (4 then 3), distinct
+        // values per (layer, position, lane).
+        let row = |l: usize, p: usize, which: usize| -> Vec<f32> {
+            (0..kvd)
+                .map(|d| (l * 1000 + p * 100 + which * 10 + d) as f32)
+                .collect()
+        };
+        for (start, m) in [(0usize, 4usize), (4, 3)] {
+            paged.reserve(start + m).unwrap();
+            for l in 0..cfg.n_layers {
+                let mut kc = Vec::new();
+                let mut vc = Vec::new();
+                for i in 0..m {
+                    kc.extend(row(l, start + i, 0));
+                    vc.extend(row(l, start + i, 1));
+                }
+                owned.append_layer(l, start, &kc, &vc);
+                paged.append_layer(l, start, &kc, &vc);
+            }
+            owned.commit(start + m);
+            paged.commit(start + m);
+        }
+        assert!(paged.is_paged() && !owned.is_paged());
+        for l in 0..cfg.n_layers {
+            for p in 0..7 {
+                assert_eq!(owned.k_row(l, p), paged.k_row(l, p), "k layer {l} pos {p}");
+                assert_eq!(owned.v_row(l, p), paged.v_row(l, p), "v layer {l} pos {p}");
+            }
+        }
+        // Snapshots gather paged rows into owned contiguous storage.
+        let snap = paged.snapshot(7);
+        assert!(!snap.is_paged());
+        for l in 0..cfg.n_layers {
+            let (k, v) = snap.layer_kv(l, 7);
+            let (ko, vo) = owned.layer_kv(l, 7);
+            assert_eq!(k, ko);
+            assert_eq!(v, vo);
+        }
+    }
+
+    #[test]
+    fn arena_occupancy_tracks_reserve_and_drop() {
+        let cfg = cfg();
+        let arena = Arc::new(KvArena::new(&cfg, 2, 4));
+        assert_eq!(arena.blocks_for(0), 0);
+        assert_eq!(arena.blocks_for(1), 1);
+        assert_eq!(arena.blocks_for(5), 3);
+        let mut a = DecodeState::paged(&cfg, Arc::clone(&arena));
+        let mut b = DecodeState::paged(&cfg, Arc::clone(&arena));
+        a.reserve(3).unwrap(); // 2 blocks
+        b.reserve(4).unwrap(); // 2 blocks
+        assert_eq!(arena.blocks_in_use(), 4);
+        assert_eq!(a.blocks_held(), 2);
+        // Pool is now exhausted; the next renter gets a typed error and
+        // keeps what it already holds.
+        let err = a.reserve(5).unwrap_err();
+        assert_eq!(err.requested, 1);
+        assert_eq!(err.total, 4);
+        assert_eq!(a.blocks_held(), 2);
+        // Cancelling a session (dropping its state) frees its blocks...
+        drop(b);
+        assert_eq!(arena.blocks_in_use(), 2);
+        // ...which the retry then rents (recycled, not re-created).
+        a.reserve(5).unwrap();
+        assert_eq!(arena.blocks_in_use(), 3);
+        drop(a);
+        assert_eq!(arena.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn paged_clone_is_owned_and_does_not_rent() {
+        let cfg = cfg();
+        let kvd = cfg.kv_dim();
+        let arena = Arc::new(KvArena::new(&cfg, 4, 8));
+        let mut st = DecodeState::paged(&cfg, Arc::clone(&arena));
+        st.reserve(2).unwrap();
+        for l in 0..cfg.n_layers {
+            let rows = vec![5.0; 2 * kvd];
+            st.append_layer(l, 0, &rows, &rows);
+        }
+        st.commit(2);
+        let before = arena.blocks_in_use();
+        let cl = st.clone();
+        assert_eq!(arena.blocks_in_use(), before, "clone rents no blocks");
+        assert!(!cl.is_paged());
+        assert_eq!(cl.len(), 2);
+        assert_eq!(cl.k_row(0, 1), st.k_row(0, 1));
+    }
+
+    #[test]
+    fn copy_from_restores_into_paged_destination() {
+        let cfg = cfg();
+        let arena = Arc::new(KvArena::new(&cfg, 2, 8));
+        let src = state_with(&cfg, 3, 6.5);
+        let mut dst = DecodeState::paged(&cfg, Arc::clone(&arena));
+        dst.copy_from(&src);
+        assert_eq!(dst.len(), 3);
+        for l in 0..cfg.n_layers {
+            for p in 0..3 {
+                assert_eq!(dst.k_row(l, p), src.k_row(l, p));
+                assert_eq!(dst.v_row(l, p), src.v_row(l, p));
+            }
+        }
     }
 
     #[test]

@@ -320,6 +320,7 @@ fn forward_extend_rows<O: ForwardOps>(
         state.len()
     );
     state.truncate(start_pos);
+    state.reserve(total)?;
     let d = cfg.d_model;
     let hd = cfg.head_dim();
     let kvd = cfg.kv_dim();
@@ -346,9 +347,12 @@ fn forward_extend_rows<O: ForwardOps>(
         rope_from(&mut ws.k[..seq * kvd], seq, start_pos, cfg.n_kv_heads, hd, cfg.rope_theta);
 
         // Commit the chunk's K/V, then attend over every cached
-        // position (prefix + chunk) — causal per new position.
+        // position (prefix + chunk) — causal per new position. Cached
+        // rows are read through the per-position accessors, which have
+        // the same within-row float layout for the owned and paged
+        // backings: the FP operation order below is byte-identical for
+        // both, so paged decode ≡ contiguous decode bit-for-bit.
         state.append_layer(l, start_pos, &ws.k[..seq * kvd], &ws.v[..seq * kvd]);
-        let (cached_k, cached_v) = state.layer_kv(l, total);
 
         let scale = 1.0 / (hd as f64).sqrt();
         for h in 0..cfg.n_heads {
@@ -357,7 +361,7 @@ fn forward_extend_rows<O: ForwardOps>(
                 let abs = start_pos + t;
                 let qv = &ws.q[t * d + h * hd..t * d + (h + 1) * hd];
                 for s in 0..=abs {
-                    let kv = &cached_k[s * kvd + kvh * hd..s * kvd + (kvh + 1) * hd];
+                    let kv = &state.k_row(l, s)[kvh * hd..(kvh + 1) * hd];
                     let dot: f32 = qv.iter().zip(kv).map(|(&a, &b)| a * b).sum();
                     ws.scores[s] = (dot as f64 * scale) as f32;
                 }
@@ -366,7 +370,7 @@ fn forward_extend_rows<O: ForwardOps>(
                 out.iter_mut().for_each(|v| *v = 0.0);
                 for s in 0..=abs {
                     let w = ws.scores[s];
-                    let vv = &cached_v[s * kvd + kvh * hd..s * kvd + (kvh + 1) * hd];
+                    let vv = &state.v_row(l, s)[kvh * hd..(kvh + 1) * hd];
                     for i in 0..hd {
                         out[i] += w * vv[i];
                     }
@@ -538,6 +542,53 @@ pub fn continuation_logprob(
     Ok(continuation_logprob_from_logits(&logits, prompt.len(), continuation))
 }
 
+/// Greedy argmax over one logits row: highest logit wins, ties broken
+/// toward the higher index (the `Iterator::max_by` convention the
+/// original decode loop used). Every greedy decoder in the crate — the
+/// sequential loops below, the packed engine's, and the continuous-
+/// batching server's per-session step — picks tokens through this one
+/// function, so their choices cannot drift on ties.
+pub fn greedy_token(logits_row: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits_row.iter().enumerate() {
+        if v >= best_v {
+            best = i;
+            best_v = v;
+        }
+    }
+    best
+}
+
+/// The shared greedy decode loop: one prompt pass, then one
+/// position-extend per new token, over any engine and any state
+/// backing. The serving step-loop replays this exact call sequence one
+/// token at a time per session, which is what makes continuous-batched
+/// generation bit-identical to this sequential function.
+pub(crate) fn generate_greedy_ops<O: ForwardOps>(
+    ops: &mut O,
+    prompt: &[usize],
+    n_new: usize,
+    ws: &mut Workspace,
+    state: &mut DecodeState,
+) -> Result<Vec<usize>> {
+    let max_seq = ops.config().max_seq;
+    if n_new == 0 || prompt.len() >= max_seq {
+        return Ok(Vec::new());
+    }
+    let mut last = prompt_pass(ops, prompt, ws, state)?;
+    let mut out = Vec::with_capacity(n_new);
+    loop {
+        let next = greedy_token(&last);
+        out.push(next);
+        if out.len() == n_new || prompt.len() + out.len() >= max_seq {
+            return Ok(out);
+        }
+        let logits = forward_extend(ops, &[next], state.len(), ws, state)?;
+        last = logits.row(0).to_vec();
+    }
+}
+
 /// Greedy generation (used by the INT2 "random characters" probe, E11).
 /// Decodes incrementally on a [`DecodeState`]: the prompt is forwarded
 /// once, then each new token costs one position-extend instead of the
@@ -548,27 +599,8 @@ pub fn generate_greedy(
     n_new: usize,
     ws: &mut Workspace,
 ) -> Result<Vec<usize>> {
-    let mut ops = CkOps::new(ck);
     let mut state = DecodeState::new(&ck.config);
-    if n_new == 0 || prompt.len() >= ck.config.max_seq {
-        return Ok(Vec::new());
-    }
-    let mut last = prompt_pass(&mut ops, prompt, ws, &mut state)?;
-    let mut out = Vec::with_capacity(n_new);
-    loop {
-        let next = last
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap();
-        out.push(next);
-        if out.len() == n_new || prompt.len() + out.len() >= ck.config.max_seq {
-            return Ok(out);
-        }
-        let logits = forward_extend(&mut ops, &[next], state.len(), ws, &mut state)?;
-        last = logits.row(0).to_vec();
-    }
+    generate_greedy_ops(&mut CkOps::new(ck), prompt, n_new, ws, &mut state)
 }
 
 #[cfg(test)]
@@ -780,6 +812,53 @@ mod tests {
         assert_eq!(out.len(), 2, "generation is clipped at max_seq");
         let none = generate_greedy(&ck, &vec![1; ck.config.max_seq], 4, &mut ws).unwrap();
         assert!(none.is_empty());
+    }
+
+    #[test]
+    fn greedy_token_matches_max_by_convention() {
+        // Last-max tie-break, exactly like `Iterator::max_by`.
+        assert_eq!(greedy_token(&[0.0, 3.0, 3.0, 1.0]), 2);
+        assert_eq!(greedy_token(&[5.0]), 0);
+        assert_eq!(greedy_token(&[-1.0, -3.0, -1.0]), 2);
+        let row = [0.3f32, 9.1, -2.0, 9.1, 4.4];
+        let via_max_by = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        assert_eq!(greedy_token(&row), via_max_by);
+    }
+
+    #[test]
+    fn paged_state_forward_matches_owned_bitwise() {
+        // The same chunked extension through an arena-backed state must
+        // produce byte-identical logits and greedy continuations.
+        use crate::model::decode::KvArena;
+        use std::sync::Arc;
+        let ck = test_ck();
+        let toks = [3usize, 1, 4, 1, 5, 9, 2, 6];
+        let mut ws = Workspace::new(&ck.config, 16);
+        let arena = Arc::new(KvArena::new(&ck.config, 3, 32));
+        for split in [1usize, 4, 7] {
+            let mut owned = DecodeState::new(&ck.config);
+            let mut paged = DecodeState::paged(&ck.config, Arc::clone(&arena));
+            let ho = forward_extend_ck(&ck, &toks[..split], 0, &mut ws, &mut owned).unwrap();
+            let hp = forward_extend_ck(&ck, &toks[..split], 0, &mut ws, &mut paged).unwrap();
+            assert_eq!(ho, hp, "split {split} head");
+            let to = forward_extend_ck(&ck, &toks[split..], split, &mut ws, &mut owned).unwrap();
+            let tp = forward_extend_ck(&ck, &toks[split..], split, &mut ws, &mut paged).unwrap();
+            assert_eq!(to, tp, "split {split} tail");
+            assert!(paged.blocks_held() > 0, "paged state rented blocks");
+        }
+        assert_eq!(arena.blocks_in_use(), 0, "dropped states returned their blocks");
+
+        // Greedy decode over a paged state picks identical tokens.
+        let want = generate_greedy(&ck, &[1, 2], 5, &mut ws).unwrap();
+        let mut paged = DecodeState::paged(&ck.config, Arc::clone(&arena));
+        let got =
+            generate_greedy_ops(&mut CkOps::new(&ck), &[1, 2], 5, &mut ws, &mut paged).unwrap();
+        assert_eq!(want, got);
     }
 
     #[test]

@@ -154,6 +154,22 @@ impl PackedModel {
         self.option_logprobs(prompt.len(), &last, options, ws, scratch, state)
     }
 
+    /// Greedy generation on the packed engine: the same shared decode
+    /// loop as `forward::generate_greedy`, over any state backing —
+    /// pass a paged state to decode out of a shared [`KvArena`]
+    /// (`crate::model::decode::KvArena`).
+    pub fn generate_greedy(
+        &self,
+        prompt: &[usize],
+        n_new: usize,
+        ws: &mut Workspace,
+        scratch: &mut KernelScratch,
+        state: &mut DecodeState,
+    ) -> Result<Vec<usize>> {
+        let mut ops = PackedOps { pm: self, scratch };
+        crate::model::forward::generate_greedy_ops(&mut ops, prompt, n_new, ws, state)
+    }
+
     /// Teacher-forced continuation log-likelihood (the MCQ scoring rule)
     /// via a full `prompt+continuation` recompute — the seed oracle path
     /// mirroring `forward::continuation_logprob` on the packed engine;
@@ -391,6 +407,31 @@ mod tests {
         let scale = b.data().iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1.0) as f64;
         let diff = max_abs_diff(a.data(), b.data());
         assert!(diff < 1e-4 * scale, "LUT logits drifted {diff} from the scalar oracle");
+    }
+
+    #[test]
+    fn packed_greedy_paged_matches_owned() {
+        use crate::model::decode::KvArena;
+        use std::sync::Arc;
+        let ck = ck();
+        let qm =
+            quantize_model(&ck, Bits::Int4, &Method::SplitQuant(SplitConfig::default())).unwrap();
+        let pm = PackedModel::from_qmodel(&qm).unwrap();
+        let mut ws = Workspace::new(&ck.config, 16);
+        let mut scratch = pm.prewarmed_scratch();
+        let mut owned = DecodeState::new(&ck.config);
+        let want = pm
+            .generate_greedy(&[2, 7], 5, &mut ws, &mut scratch, &mut owned)
+            .unwrap();
+        assert_eq!(want.len(), 5);
+        let arena = Arc::new(KvArena::new(&ck.config, 4, 8));
+        let mut paged = DecodeState::paged(&ck.config, Arc::clone(&arena));
+        let got = pm
+            .generate_greedy(&[2, 7], 5, &mut ws, &mut scratch, &mut paged)
+            .unwrap();
+        assert_eq!(want, got, "paged greedy decode must match owned");
+        drop(paged);
+        assert_eq!(arena.blocks_in_use(), 0);
     }
 
     #[test]

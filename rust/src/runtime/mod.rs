@@ -16,6 +16,59 @@ use crate::tensor::Tensor;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
 
+/// Which execution engine runs a model — the one selector shared by
+/// the CLI, the pipeline coordinator and the scoring/generation server.
+/// (Previously three overlapping types — `runtime::Engine` loading,
+/// `coordinator::server::Backend` construction and the pipeline-side
+/// `ExecEngine` — each re-matched the same strings; they now all parse
+/// through here.)
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Dequantize to an effective f32 checkpoint and run the CPU
+    /// reference forward (simulated quantization — full f32 bandwidth).
+    Reference,
+    /// Run straight on the bit-packed planes through the
+    /// [`crate::kernels`] engine (no f32 weight matrices materialized).
+    Packed,
+    /// AOT-compiled PJRT artifacts executed by [`Engine`].
+    Pjrt,
+}
+
+impl EngineKind {
+    /// Parse a CLI `--engine` value.
+    pub fn parse(s: &str) -> Result<EngineKind> {
+        Ok(match s {
+            "reference" => EngineKind::Reference,
+            "packed" => EngineKind::Packed,
+            "pjrt" => EngineKind::Pjrt,
+            other => bail!("unknown engine '{other}' (use packed|reference|pjrt)"),
+        })
+    }
+
+    /// Parse restricted to the CPU engines — the pipeline path, which
+    /// routes PJRT through its separate `--runtime` flag instead.
+    pub fn parse_cpu(s: &str) -> Result<EngineKind> {
+        let kind = EngineKind::parse(s)?;
+        if !kind.is_cpu() {
+            bail!("engine '{}' is not a CPU engine here (use packed|reference)", kind.name());
+        }
+        Ok(kind)
+    }
+
+    /// Whether this engine executes on the CPU forward paths (vs PJRT).
+    pub fn is_cpu(self) -> bool {
+        !matches!(self, EngineKind::Pjrt)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineKind::Reference => "reference",
+            EngineKind::Packed => "packed",
+            EngineKind::Pjrt => "pjrt",
+        }
+    }
+}
+
 /// Argument spec from the manifest.
 #[derive(Clone, Debug)]
 pub struct ArgSpec {
@@ -225,6 +278,17 @@ impl Engine {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn engine_kind_parses_and_rejects() {
+        assert_eq!(EngineKind::parse("packed").unwrap(), EngineKind::Packed);
+        assert_eq!(EngineKind::parse("reference").unwrap(), EngineKind::Reference);
+        assert_eq!(EngineKind::parse("pjrt").unwrap(), EngineKind::Pjrt);
+        assert!(EngineKind::parse("gpu").is_err());
+        assert!(EngineKind::parse_cpu("pjrt").is_err(), "pipeline path is CPU-only");
+        assert_eq!(EngineKind::parse_cpu("packed").unwrap().name(), "packed");
+        assert!(!EngineKind::Pjrt.is_cpu());
+    }
 
     fn artifacts_dir() -> Option<PathBuf> {
         let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");

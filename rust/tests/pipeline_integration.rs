@@ -7,7 +7,8 @@
 
 use std::path::{Path, PathBuf};
 
-use splitquant::coordinator::{Arm, Coordinator, ExecEngine, PipelineSpec};
+use splitquant::coordinator::{Arm, Coordinator, PipelineSpec};
+use splitquant::runtime::EngineKind;
 use splitquant::data::load_problems;
 use splitquant::io::checkpoint::load_checkpoint;
 use splitquant::io::qmodel::{load_qmodel, save_qmodel};
@@ -68,7 +69,7 @@ fn full_arm_roundtrip_through_disk() {
     // Accuracy identical before/after the disk roundtrip — on both CPU
     // engines (the packed engine consumes the same packed planes the
     // container stores).
-    for engine in [ExecEngine::Reference, ExecEngine::Packed] {
+    for engine in [EngineKind::Reference, EngineKind::Packed] {
         let a = coord.evaluate_qm(&qm, sample, false, engine).unwrap();
         let b = coord.evaluate_qm(&back, sample, false, engine).unwrap();
         assert_eq!(a.n_correct, b.n_correct, "{}", engine.name());
@@ -114,10 +115,10 @@ fn packed_engine_matches_reference_choices() {
         }
         // Aggregate accuracies also agree through the coordinator path.
         let a = coord
-            .evaluate_qm(&qm, sample, false, ExecEngine::Reference)
+            .evaluate_qm(&qm, sample, false, EngineKind::Reference)
             .unwrap();
         let b = coord
-            .evaluate_qm(&qm, sample, false, ExecEngine::Packed)
+            .evaluate_qm(&qm, sample, false, EngineKind::Packed)
             .unwrap();
         assert!(
             (a.accuracy - b.accuracy).abs() <= 2.0 / sample.len() as f64,
@@ -168,10 +169,10 @@ fn cpu_and_pjrt_scoring_agree_quantized_arms() {
         };
         let (qm, _) = coord.quantize_arm(&ck, &arm).unwrap();
         let cpu = coord
-            .evaluate_qm(&qm, sample, false, ExecEngine::Reference)
+            .evaluate_qm(&qm, sample, false, EngineKind::Reference)
             .unwrap();
         let pjrt = coord
-            .evaluate_qm(&qm, sample, true, ExecEngine::Reference)
+            .evaluate_qm(&qm, sample, true, EngineKind::Reference)
             .unwrap();
         assert!(
             (cpu.accuracy - pjrt.accuracy).abs() <= 2.0 / sample.len() as f64,
@@ -234,7 +235,7 @@ fn server_batches_and_matches_offline_scoring() {
     let qm = quantize_model(&ck, Bits::Int4, &Method::SplitQuant(SplitConfig::default()))
         .unwrap();
     let offline = coord
-        .evaluate_qm(&qm, sample, false, ExecEngine::Reference)
+        .evaluate_qm(&qm, sample, false, EngineKind::Reference)
         .unwrap();
 
     let weights = scoring::quant_args(&qm, 3).unwrap();
@@ -277,7 +278,7 @@ fn gptq_arm_integrates_with_eval() {
     let qm = splitquant::gptq::gptq_quantize_model(&ck, Bits::Int4, &calib, 0.01).unwrap();
     // Per-channel GPTQ grids run through the packed engine natively.
     let gptq = coord
-        .evaluate_qm(&qm, sample, false, ExecEngine::Packed)
+        .evaluate_qm(&qm, sample, false, EngineKind::Packed)
         .unwrap();
     let base_arm = Arm {
         bits: Bits::Int4,

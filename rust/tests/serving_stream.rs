@@ -1,0 +1,407 @@
+//! Integration suite for the continuous-batching streaming generation
+//! service (DESIGN.md §8):
+//!
+//! * **Bit-identity** — generations admitted *mid-step* into a running
+//!   continuous batch must match sequential `generate_greedy` exactly,
+//!   token for token, on both CPU engines. This is the core serving
+//!   correctness contract: paged K/V + step-interleaved decoding must
+//!   be invisible in the output.
+//! * **Resource hygiene** — cancellation (dropping the stream) and
+//!   completion both return every K/V block to the shared arena.
+//! * **Typed overload behavior** — deadlines, queue caps, and
+//!   impossible K/V footprints shed with a typed [`ServeError`], never
+//!   by hanging.
+
+use std::time::{Duration, Instant};
+
+use splitquant::coordinator::server::{
+    Backend, FinishReason, GenerateRequest, ServeError, Server, ServerConfig, TokenEvent,
+};
+use splitquant::data::{generate_problems, FactWorld, McqProblem};
+use splitquant::model::decode::DecodeState;
+use splitquant::model::forward::{generate_greedy, Workspace};
+use splitquant::model::packed::PackedModel;
+use splitquant::model::quantized::{quantize_model, Method, QuantizedModel};
+use splitquant::model::{Checkpoint, PicoLlamaConfig};
+use splitquant::quant::Bits;
+use splitquant::split::SplitConfig;
+
+fn setup() -> (QuantizedModel, Vec<McqProblem>) {
+    let world = FactWorld::generate(16, 4, 8, 1);
+    let mut cfg = PicoLlamaConfig::test();
+    cfg.vocab = world.vocab_size();
+    let ck = Checkpoint::random_init(&cfg, 7);
+    let qm = quantize_model(&ck, Bits::Int4, &Method::SplitQuant(SplitConfig::default())).unwrap();
+    let problems = generate_problems(&world, 12, 5);
+    (qm, problems)
+}
+
+/// Sequential greedy oracle on the packed engine (owned, contiguous
+/// decode state — the pre-serving code path).
+fn packed_oracle(pm: &PackedModel, prompt: &[usize], n_new: usize) -> Vec<usize> {
+    let mut ws = Workspace::new(&pm.config, pm.config.max_seq);
+    let mut scratch = pm.prewarmed_scratch();
+    let mut state = DecodeState::new(&pm.config);
+    pm.generate_greedy(prompt, n_new, &mut ws, &mut scratch, &mut state)
+        .unwrap()
+}
+
+/// Sequential greedy oracle on the reference engine.
+fn reference_oracle(ck: &Checkpoint, prompt: &[usize], n_new: usize) -> Vec<usize> {
+    let mut ws = Workspace::new(&ck.config, ck.config.max_seq);
+    generate_greedy(ck, prompt, n_new, &mut ws).unwrap()
+}
+
+/// Drive one server through a mid-step admission schedule and compare
+/// every stream against its oracle: the first request starts decoding
+/// alone, the rest are only submitted after its first token arrives —
+/// i.e. they join a batch that is already mid-generation.
+fn assert_continuous_matches_sequential(
+    server: &Server,
+    prompts: &[Vec<usize>],
+    budgets: &[usize],
+    oracle: impl Fn(&[usize], usize) -> Vec<usize>,
+) {
+    let first = server
+        .submit_generate(GenerateRequest {
+            prompt: prompts[0].clone(),
+            max_tokens: budgets[0],
+            deadline: None,
+        })
+        .unwrap();
+    // Hold the first token so we know the batch is live before the
+    // rest are admitted (true mid-step admission, not a cold start).
+    let first_event = first.recv().expect("first stream yields an event");
+    assert!(matches!(first_event, TokenEvent::Token { index: 0, .. }));
+    let rest: Vec<_> = prompts
+        .iter()
+        .zip(budgets)
+        .skip(1)
+        .map(|(p, &n)| {
+            server
+                .submit_generate(GenerateRequest {
+                    prompt: p.clone(),
+                    max_tokens: n,
+                    deadline: None,
+                })
+                .unwrap()
+        })
+        .collect();
+
+    // Drain the first stream manually (its first token is already out).
+    let mut first_tokens = match first_event {
+        TokenEvent::Token { token, .. } => vec![token],
+        _ => unreachable!(),
+    };
+    let mut first_done = false;
+    for ev in first.iter() {
+        match ev {
+            TokenEvent::Token { index, token } => {
+                assert_eq!(index, first_tokens.len(), "in-order emission");
+                first_tokens.push(token);
+            }
+            TokenEvent::Done(resp) => {
+                assert_eq!(resp.tokens, first_tokens, "Done echoes the streamed tokens");
+                first_done = true;
+            }
+            TokenEvent::Error(e) => panic!("stream 0 failed: {e}"),
+        }
+    }
+    assert!(first_done, "stream 0 must terminate with Done");
+    assert_eq!(
+        first_tokens,
+        oracle(&prompts[0], budgets[0]),
+        "stream 0 diverged from sequential greedy"
+    );
+
+    for (i, s) in rest.into_iter().enumerate() {
+        let done = s.wait().unwrap();
+        let want = oracle(&prompts[i + 1], budgets[i + 1]);
+        assert_eq!(
+            done.tokens,
+            want,
+            "mid-step-admitted stream {} diverged from sequential greedy",
+            i + 1
+        );
+    }
+    assert_eq!(server.kv_blocks_in_use(), 0, "all arena blocks returned");
+}
+
+fn gen_inputs(problems: &[McqProblem], cfg: &PicoLlamaConfig) -> (Vec<Vec<usize>>, Vec<usize>) {
+    let prompts: Vec<Vec<usize>> = problems.iter().take(8).map(|p| p.prompt.clone()).collect();
+    // Varied budgets: some hit max_tokens, some run into max_seq.
+    let budgets: Vec<usize> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| match i % 3 {
+            0 => 3 + i,
+            1 => cfg.max_seq - p.len(), // exactly to the context edge
+            _ => cfg.max_seq,           // clamped by max_seq mid-flight
+        })
+        .collect();
+    (prompts, budgets)
+}
+
+#[test]
+fn continuous_batching_matches_sequential_greedy_packed() {
+    let (qm, problems) = setup();
+    let pm = PackedModel::from_qmodel(&qm).unwrap();
+    let (prompts, budgets) = gen_inputs(&problems, &pm.config);
+    let server = Server::start(
+        Backend::Packed(Box::new(pm.clone())),
+        ServerConfig::builder()
+            .workers(4)
+            .kv_block_positions(4)
+            .build()
+            .unwrap(),
+    )
+    .unwrap();
+    assert_continuous_matches_sequential(&server, &prompts, &budgets, |p, n| {
+        packed_oracle(&pm, p, n)
+    });
+}
+
+#[test]
+fn continuous_batching_matches_sequential_greedy_reference() {
+    let (qm, problems) = setup();
+    let ck = qm.effective_checkpoint();
+    let (prompts, budgets) = gen_inputs(&problems, &ck.config);
+    let server = Server::start(
+        Backend::Reference(Box::new(ck.clone())),
+        ServerConfig::builder()
+            .workers(4)
+            .kv_block_positions(4)
+            .build()
+            .unwrap(),
+    )
+    .unwrap();
+    assert_continuous_matches_sequential(&server, &prompts, &budgets, |p, n| {
+        reference_oracle(&ck, p, n)
+    });
+}
+
+#[test]
+fn session_backlog_preserves_results_when_sessions_are_capped() {
+    // max_sessions=1 forces every other request through the FIFO
+    // backlog; outputs must still match the sequential oracle.
+    let (qm, problems) = setup();
+    let pm = PackedModel::from_qmodel(&qm).unwrap();
+    let server = Server::start(
+        Backend::Packed(Box::new(pm.clone())),
+        ServerConfig::builder()
+            .max_sessions(1)
+            .kv_block_positions(4)
+            .build()
+            .unwrap(),
+    )
+    .unwrap();
+    let streams: Vec<_> = problems
+        .iter()
+        .take(4)
+        .map(|p| {
+            server
+                .submit_generate(GenerateRequest {
+                    prompt: p.prompt.clone(),
+                    max_tokens: 5,
+                    deadline: None,
+                })
+                .unwrap()
+        })
+        .collect();
+    for (p, s) in problems.iter().zip(streams) {
+        let done = s.wait().unwrap();
+        assert_eq!(done.tokens, packed_oracle(&pm, &p.prompt, 5));
+        assert_eq!(done.finish, FinishReason::MaxTokens);
+    }
+    assert_eq!(server.kv_blocks_in_use(), 0);
+}
+
+#[test]
+fn cancellation_returns_kv_blocks_to_the_arena() {
+    let (qm, problems) = setup();
+    let pm = PackedModel::from_qmodel(&qm).unwrap();
+    let server = Server::start(
+        Backend::Packed(Box::new(pm)),
+        ServerConfig::builder()
+            .kv_block_positions(2)
+            .build()
+            .unwrap(),
+    )
+    .unwrap();
+    let stream = server
+        .submit_generate(GenerateRequest {
+            prompt: problems[0].prompt.clone(),
+            max_tokens: 64, // long enough that we cancel mid-flight
+            deadline: None,
+        })
+        .unwrap();
+    // The session is live once the first token arrives — and holding
+    // blocks for its reserved worst case.
+    assert!(matches!(stream.recv(), Some(TokenEvent::Token { .. })));
+    assert!(server.kv_blocks_in_use() > 0, "live session rents blocks");
+    // Dropping the stream is the cancellation signal; the serve loop
+    // notices at the next decode step and frees the session.
+    drop(stream);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while server.kv_blocks_in_use() > 0 {
+        assert!(
+            Instant::now() < deadline,
+            "cancelled session never returned its {} blocks",
+            server.kv_blocks_in_use()
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+#[test]
+fn expired_deadline_sheds_with_a_typed_error() {
+    let (qm, problems) = setup();
+    let pm = PackedModel::from_qmodel(&qm).unwrap();
+    let server = Server::start(Backend::Packed(Box::new(pm)), ServerConfig::default()).unwrap();
+    // A deadline that has effectively already passed must come back as
+    // a typed DeadlineExceeded — promptly, not as a hang.
+    let err = server
+        .submit_generate(GenerateRequest {
+            prompt: problems[0].prompt.clone(),
+            max_tokens: 8,
+            deadline: Some(Duration::from_nanos(1)),
+        })
+        .unwrap()
+        .wait()
+        .unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<ServeError>(),
+        Some(&ServeError::DeadlineExceeded),
+        "got: {err:#}"
+    );
+    // A generous deadline still completes normally.
+    let done = server
+        .submit_generate(GenerateRequest {
+            prompt: problems[0].prompt.clone(),
+            max_tokens: 4,
+            deadline: Some(Duration::from_secs(60)),
+        })
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(done.tokens.len(), 4);
+    assert_eq!(server.kv_blocks_in_use(), 0);
+}
+
+#[test]
+fn overload_sheds_synchronously_with_a_typed_error() {
+    let (qm, problems) = setup();
+    let pm = PackedModel::from_qmodel(&qm).unwrap();
+    let server = Server::start(
+        Backend::Packed(Box::new(pm)),
+        ServerConfig::builder().queue_cap(1).build().unwrap(),
+    )
+    .unwrap();
+    // First request occupies the only queue slot until it completes.
+    let stream = server
+        .submit_generate(GenerateRequest {
+            prompt: problems[0].prompt.clone(),
+            max_tokens: 64,
+            deadline: None,
+        })
+        .unwrap();
+    // The second submit must shed *synchronously* — the bounded queue
+    // rejects it before it ever reaches the serve loop.
+    let err = server
+        .submit_generate(GenerateRequest {
+            prompt: problems[1].prompt.clone(),
+            max_tokens: 1,
+            deadline: None,
+        })
+        .map(|_| ())
+        .unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<ServeError>(),
+        Some(&ServeError::Overloaded),
+        "got: {err:#}"
+    );
+    // Once the first request drains, capacity frees up again.
+    stream.wait().unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let done = loop {
+        match server.submit_generate(GenerateRequest {
+            prompt: problems[1].prompt.clone(),
+            max_tokens: 2,
+            deadline: None,
+        }) {
+            Ok(s) => break s.wait().unwrap(),
+            Err(_) => {
+                assert!(Instant::now() < deadline, "queue slot never freed");
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+    };
+    assert_eq!(done.tokens.len(), 2);
+}
+
+#[test]
+fn impossible_kv_footprint_sheds_with_a_typed_error() {
+    let (qm, problems) = setup();
+    let pm = PackedModel::from_qmodel(&qm).unwrap();
+    // One 4-position block total: any request needing more can never
+    // be admitted and must shed as KvExhausted, not wait forever.
+    let server = Server::start(
+        Backend::Packed(Box::new(pm)),
+        ServerConfig::builder()
+            .kv_block_positions(4)
+            .kv_blocks(1)
+            .build()
+            .unwrap(),
+    )
+    .unwrap();
+    let err = server
+        .submit_generate(GenerateRequest {
+            prompt: problems[0].prompt.clone(),
+            max_tokens: 16,
+            deadline: None,
+        })
+        .unwrap()
+        .wait()
+        .unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<ServeError>(),
+        Some(&ServeError::KvExhausted),
+        "got: {err:#}"
+    );
+    // A request that fits the single block still serves fine.
+    let small = server
+        .submit_generate(GenerateRequest {
+            prompt: problems[0].prompt[..2].to_vec(),
+            max_tokens: 2,
+            deadline: None,
+        })
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(small.tokens.len(), 2);
+    assert_eq!(server.kv_blocks_in_use(), 0);
+}
+
+#[test]
+fn invalid_generation_requests_are_typed() {
+    let (qm, _) = setup();
+    let pm = PackedModel::from_qmodel(&qm).unwrap();
+    let vocab = pm.config.vocab;
+    let server = Server::start(Backend::Packed(Box::new(pm)), ServerConfig::default()).unwrap();
+    // Empty prompt and out-of-vocab tokens are validation errors.
+    for bad in [Vec::new(), vec![vocab + 5]] {
+        let err = server
+            .submit_generate(GenerateRequest {
+                prompt: bad,
+                max_tokens: 4,
+                deadline: None,
+            })
+            .unwrap()
+            .wait()
+            .unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<ServeError>(), Some(ServeError::Invalid(_))),
+            "got: {err:#}"
+        );
+    }
+}
