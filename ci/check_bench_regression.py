@@ -12,6 +12,15 @@ Two checks, both wired into the CI bench-smoke job:
    the floor means the fused path has rotted into a slow path and must
    not merge silently.
 
+   On hosts where the report says `simd_available` is true the same
+   check also gates the SIMD tier: the INT4 SIMD GEMV must be at least
+   MIN_SIMD x faster than scalar (DESIGN.md §9 / EXPERIMENTS.md E16).
+   On hosts without AVX2/NEON the SIMD kernels fall back to the LUT
+   path, the timing is a duplicate, and the tier is skipped — skipped,
+   not failed, so the gate stays honest on feature-poor runners.
+   Reports from before the SIMD tier existed (no `int4_simd_speedup`
+   field) are likewise skipped with a notice.
+
 2. Serving gate (--serving BENCH_serving.json): validates the
    continuous-batching generation tiers emitted by
    `perf_probe --serving-json` — at least three concurrency tiers, each
@@ -22,7 +31,7 @@ Two checks, both wired into the CI bench-smoke job:
    throughput) must not merge silently.
 
 Usage:
-  check_bench_regression.py BENCH_gemv.json [--min 1.5]
+  check_bench_regression.py BENCH_gemv.json [--min 1.5] [--min-simd 3.0]
                             [--serving BENCH_serving.json]
 """
 
@@ -92,6 +101,15 @@ def main() -> int:
         help="minimum INT4 LUT-vs-scalar GEMV speedup (default 1.5)",
     )
     ap.add_argument(
+        "--min-simd",
+        type=float,
+        default=3.0,
+        dest="min_simd",
+        help="minimum INT4 SIMD-vs-scalar GEMV speedup on SIMD-capable "
+        "hosts (default 3.0); skipped when the report says "
+        "simd_available is false or predates the SIMD tier",
+    )
+    ap.add_argument(
         "--serving",
         default=None,
         metavar="BENCH_serving.json",
@@ -125,6 +143,31 @@ def main() -> int:
         )
         return 1
     print("OK: LUT kernels clear the regression floor")
+
+    simd_speedup = report.get("int4_simd_speedup")
+    simd_available = report.get("simd_available")
+    if simd_speedup is None:
+        print("SKIP: report predates the SIMD tier (no 'int4_simd_speedup')")
+    elif not simd_available:
+        print(
+            "SKIP: SIMD not available on this host (AVX2+FMA / NEON absent "
+            "or vetoed); SIMD tier is a LUT duplicate and is not gated"
+        )
+    elif not _finite(simd_speedup):
+        print(f"FAIL: {args.report} has non-finite 'int4_simd_speedup' ({simd_speedup!r})")
+        return 1
+    else:
+        print(
+            f"INT4 GEMV: simd {simd_speedup:.2f}x scalar "
+            f"(floor {args.min_simd:.2f}x)"
+        )
+        if simd_speedup < args.min_simd:
+            print(
+                f"FAIL: INT4 SIMD GEMV speedup {simd_speedup:.2f}x is below "
+                f"the {args.min_simd:.2f}x regression floor"
+            )
+            return 1
+        print("OK: SIMD kernels clear the regression floor")
 
     if args.serving is not None:
         return check_serving(args.serving)

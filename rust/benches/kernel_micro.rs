@@ -90,16 +90,32 @@ fn main() -> anyhow::Result<()> {
         });
     }
 
-    banner("L3: LUT-fused kernels vs the scalar oracle (1024x4096, k=3, INT4)");
-    // The default scratch above already runs the LUT engine; pin the
-    // scalar oracle and the row-parallel variant next to it.
+    banner("L3: kernel impls vs the scalar oracle (1024x4096, k=3, INT4)");
+    // The default scratch above runs Auto (SIMD where available, LUT
+    // otherwise); pin each impl explicitly next to it.
     let mut scalar_scratch = KernelScratch::new();
     scalar_scratch.set_kernel_impl(KernelImpl::Scalar);
     b.run("packed_gemv_scalar[1024x4096,k=3]", || {
         kernels::gemv(&mut y1, &x1, &lin, &mut scalar_scratch);
         black_box(y1[0])
     });
+    let mut lut_scratch = KernelScratch::new();
+    lut_scratch.set_kernel_impl(KernelImpl::Lut);
+    b.run("packed_gemv_lut[1024x4096,k=3]", || {
+        kernels::gemv(&mut y1, &x1, &lin, &mut lut_scratch);
+        black_box(y1[0])
+    });
+    // Falls back to the LUT impl (a duplicate timing) on hosts without
+    // the CPU features — `kernels::simd_available()` says which.
+    let mut simd_scratch = KernelScratch::new();
+    simd_scratch.set_kernel_impl(KernelImpl::Simd);
+    b.run("packed_gemv_simd[1024x4096,k=3]", || {
+        kernels::gemv(&mut y1, &x1, &lin, &mut simd_scratch);
+        black_box(y1[0])
+    });
+    println!("  simd_available: {}", kernels::simd_available());
     let mut par_scratch = KernelScratch::new();
+    par_scratch.set_kernel_impl(KernelImpl::Lut);
     par_scratch.set_row_pool(Some(std::sync::Arc::new(
         splitquant::util::pool::Pool::new_auto(),
     )));
@@ -122,7 +138,7 @@ fn main() -> anyhow::Result<()> {
         built,
         "prewarmed scratch built LUTs on the first token"
     );
-    let t_steady = b.run("packed_gemv_lut_prewarmed[1024x4096,k=3]", || {
+    let t_steady = b.run("packed_gemv_auto_prewarmed[1024x4096,k=3]", || {
         kernels::gemv(&mut y1, &x1, &lin, &mut warm);
         black_box(y1[0])
     });

@@ -17,13 +17,15 @@
 //!                       (`BENCH_serving.json` in CI, uploaded as an
 //!                       artifact)
 //!   --gemv-json PATH    run the GEMV section — ns/row and effective
-//!                       GB/s per bit width for scalar vs LUT vs
-//!                       LUT+row-parallel kernels, plus single-token
+//!                       GB/s per bit width for scalar vs LUT vs SIMD
+//!                       vs LUT+row-parallel kernels, plus single-token
 //!                       `forward_extend` tokens/s — and write it as
 //!                       JSON (`BENCH_gemv.json` in CI; the
 //!                       `ci/check_bench_regression.py` gate fails the
 //!                       smoke job if the INT4 LUT kernel is not ≥1.5×
-//!                       the scalar baseline)
+//!                       the scalar baseline, or — on hosts where
+//!                       `simd_available` — if the SIMD kernel is not
+//!                       ≥3× scalar)
 
 use splitquant::bench::{black_box, Bench, BenchConfig};
 use splitquant::kernels::{self, KernelScratch};
@@ -252,13 +254,16 @@ fn main() {
 
 /// GEMV section: the LUT-fused kernel trajectory (DESIGN.md §7). For
 /// every bit width, one 1024×4096 plain-quantized layer is driven as a
-/// single-token GEMV by three configurations — the scalar oracle, the
-/// LUT-fused blocked kernel, and LUT + row-parallel sharding on an
-/// auto-sized pool — recording ns per output row, effective packed-GB/s
-/// and tokens/s each. A second block times a real single-token
-/// `forward_extend` on a packed model per configuration. The JSON lands
-/// in CI as `BENCH_gemv.json`; `ci/check_bench_regression.py` fails the
-/// smoke job if `int4_lut_speedup` < 1.5.
+/// single-token GEMV by four configurations — the scalar oracle, the
+/// LUT-fused blocked kernel, the SIMD kernels (where the host supports
+/// them; `simd_available` in the report says whether the tier is
+/// meaningful), and LUT + row-parallel sharding on an auto-sized pool —
+/// recording ns per output row, effective packed-GB/s and tokens/s
+/// each. A second block times a real single-token `forward_extend` on a
+/// packed model per configuration. The JSON lands in CI as
+/// `BENCH_gemv.json`; `ci/check_bench_regression.py` fails the smoke
+/// job if `int4_lut_speedup` < 1.5 or (on SIMD-capable hosts) if
+/// `int4_simd_speedup` < 3.0.
 fn gemv_section(path: &str, fixed_iters: Option<usize>) {
     use splitquant::kernels::KernelImpl;
     use splitquant::model::decode::DecodeState;
@@ -300,8 +305,10 @@ fn gemv_section(path: &str, fixed_iters: Option<usize>) {
     let mut y = vec![0.0f32; rows];
 
     let row_pool = Arc::new(Pool::new_auto());
+    let simd_on = kernels::simd_available();
     let mut sections = Vec::new();
     let mut int4_lut_speedup = 0.0;
+    let mut int4_simd_speedup = 0.0;
     let mut int4_par_speedup = 0.0;
     for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
         let lin = pack_linear(&QuantParam::Plain(quant::quantize_per_tensor(&w, bits)))
@@ -310,8 +317,16 @@ fn gemv_section(path: &str, fixed_iters: Option<usize>) {
         let mut scalar = KernelScratch::new();
         scalar.set_kernel_impl(KernelImpl::Scalar);
         let mut lut = KernelScratch::new();
+        lut.set_kernel_impl(KernelImpl::Lut);
         lut.prewarm_linear(&lin);
+        // On hosts without the CPU features the Simd request resolves
+        // to Lut, so this tier degenerates to a duplicate LUT run —
+        // `simd_available` in the report marks it meaningless there.
+        let mut simd = KernelScratch::new();
+        simd.set_kernel_impl(KernelImpl::Simd);
+        simd.prewarm_linear(&lin);
         let mut par = KernelScratch::new();
+        par.set_kernel_impl(KernelImpl::Lut);
         par.prewarm_linear(&lin);
         par.set_row_pool(Some(Arc::clone(&row_pool)));
         let t_scalar = gb.run(&format!("gemv_scalar[1024x4096,{}]", bits.name()), || {
@@ -322,6 +337,10 @@ fn gemv_section(path: &str, fixed_iters: Option<usize>) {
             kernels::gemv(&mut y, &x, &lin, &mut lut);
             black_box(y[0])
         });
+        let t_simd = gb.run(&format!("gemv_simd[1024x4096,{}]", bits.name()), || {
+            kernels::gemv(&mut y, &x, &lin, &mut simd);
+            black_box(y[0])
+        });
         let t_par = gb.run(&format!("gemv_lut_parallel[1024x4096,{}]", bits.name()), || {
             kernels::gemv(&mut y, &x, &lin, &mut par);
             black_box(y[0])
@@ -329,17 +348,21 @@ fn gemv_section(path: &str, fixed_iters: Option<usize>) {
         let ns_per_row = |d: Duration| d.as_secs_f64() * 1e9 / rows as f64;
         let gbps = |d: Duration| bytes / d.as_secs_f64() / 1e9;
         let lut_speedup = t_scalar.as_secs_f64() / t_lut.as_secs_f64().max(1e-12);
+        let simd_speedup = t_scalar.as_secs_f64() / t_simd.as_secs_f64().max(1e-12);
         let par_speedup = t_scalar.as_secs_f64() / t_par.as_secs_f64().max(1e-12);
         if bits == Bits::Int4 {
             int4_lut_speedup = lut_speedup;
+            int4_simd_speedup = simd_speedup;
             int4_par_speedup = par_speedup;
         }
         println!(
             "gemv[{}]: scalar {:.0} ns/row, lut {:.0} ns/row ({lut_speedup:.2}x), \
+             simd {:.0} ns/row ({simd_speedup:.2}x), \
              lut+parallel {:.0} ns/row ({par_speedup:.2}x)",
             bits.name(),
             ns_per_row(t_scalar),
             ns_per_row(t_lut),
+            ns_per_row(t_simd),
             ns_per_row(t_par)
         );
         sections.push(Json::obj(vec![
@@ -347,17 +370,21 @@ fn gemv_section(path: &str, fixed_iters: Option<usize>) {
             ("packed_bytes", Json::num(bytes)),
             ("scalar_ns_per_row", Json::num(ns_per_row(t_scalar))),
             ("lut_ns_per_row", Json::num(ns_per_row(t_lut))),
+            ("simd_ns_per_row", Json::num(ns_per_row(t_simd))),
             ("lut_parallel_ns_per_row", Json::num(ns_per_row(t_par))),
             ("scalar_gbps", Json::num(gbps(t_scalar))),
             ("lut_gbps", Json::num(gbps(t_lut))),
+            ("simd_gbps", Json::num(gbps(t_simd))),
             ("lut_parallel_gbps", Json::num(gbps(t_par))),
             ("scalar_tokens_per_s", Json::num(1.0 / t_scalar.as_secs_f64().max(1e-12))),
             ("lut_tokens_per_s", Json::num(1.0 / t_lut.as_secs_f64().max(1e-12))),
+            ("simd_tokens_per_s", Json::num(1.0 / t_simd.as_secs_f64().max(1e-12))),
             (
                 "lut_parallel_tokens_per_s",
                 Json::num(1.0 / t_par.as_secs_f64().max(1e-12)),
             ),
             ("lut_speedup", Json::num(lut_speedup)),
+            ("simd_speedup", Json::num(simd_speedup)),
             ("lut_parallel_speedup", Json::num(par_speedup)),
         ]));
     }
@@ -388,6 +415,7 @@ fn gemv_section(path: &str, fixed_iters: Option<usize>) {
     for (label, imp, pool) in [
         ("scalar", KernelImpl::Scalar, None),
         ("lut", KernelImpl::Lut, None),
+        ("simd", KernelImpl::Simd, None),
         ("lut_parallel", KernelImpl::Lut, Some(Arc::clone(&row_pool))),
     ] {
         let mut scratch = pm.prewarmed_scratch();
@@ -404,16 +432,18 @@ fn gemv_section(path: &str, fixed_iters: Option<usize>) {
         extend_fields.push((format!("{label}_tokens_per_s"), 1.0 / t.as_secs_f64().max(1e-12)));
     }
     let extend_speedup = extend_fields[1].1 / extend_fields[0].1.max(1e-12);
+    let simd_extend_speedup = extend_fields[2].1 / extend_fields[0].1.max(1e-12);
     println!(
-        "forward_extend 1-token: lut {extend_speedup:.2}x scalar \
-         ({:.0} vs {:.0} tok/s)",
-        extend_fields[1].1, extend_fields[0].1
+        "forward_extend 1-token: lut {extend_speedup:.2}x, simd {simd_extend_speedup:.2}x \
+         scalar ({:.0} / {:.0} vs {:.0} tok/s)",
+        extend_fields[1].1, extend_fields[2].1, extend_fields[0].1
     );
     let mut extend_obj: Vec<(&str, Json)> = extend_fields
         .iter()
         .map(|(k, v)| (k.as_str(), Json::num(*v)))
         .collect();
     extend_obj.push(("lut_extend_speedup", Json::num(extend_speedup)));
+    extend_obj.push(("simd_extend_speedup", Json::num(simd_extend_speedup)));
 
     let results: Vec<Json> =
         gb.results().iter().chain(eb.results().iter()).map(|r| r.to_json()).collect();
@@ -423,7 +453,9 @@ fn gemv_section(path: &str, fixed_iters: Option<usize>) {
         ("rows", Json::num(rows as f64)),
         ("cols", Json::num(cols as f64)),
         ("row_pool_workers", Json::num(row_pool.size() as f64)),
+        ("simd_available", Json::Bool(simd_on)),
         ("int4_lut_speedup", Json::num(int4_lut_speedup)),
+        ("int4_simd_speedup", Json::num(int4_simd_speedup)),
         ("int4_lut_parallel_speedup", Json::num(int4_par_speedup)),
         ("sections", Json::arr(sections)),
         ("extend", Json::obj(extend_obj)),

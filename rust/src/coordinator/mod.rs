@@ -77,8 +77,9 @@ pub struct PipelineSpec {
     pub use_runtime: bool,
     /// CPU execution engine for quantized arms (`--engine` on the CLI).
     pub engine: EngineKind,
-    /// Packed-kernel inner loops (`--kernel-impl` on the CLI): the
-    /// LUT-fused default or the scalar oracle path.
+    /// Packed-kernel inner loops (`--kernel-impl` on the CLI):
+    /// `Auto` (default, SIMD where the host supports it, LUT
+    /// otherwise), or an explicit `simd`/`lut`/`scalar` request.
     pub kernel_impl: KernelImpl,
     pub seed: u64,
 }

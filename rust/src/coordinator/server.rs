@@ -326,8 +326,11 @@ pub struct ServerConfig {
     /// extensions). `false` falls back to the seed full-recompute path —
     /// kept as a benchmarking baseline (`perf_probe --serving-json`).
     pub reuse_prefix: bool,
-    /// Packed-kernel inner loops: the LUT-fused default or the scalar
-    /// oracle (`--kernel-impl`). The reference backend ignores this.
+    /// Packed-kernel inner loops (`--kernel-impl`): `Auto` (the
+    /// default) resolves to the SIMD kernels on capable hosts and the
+    /// LUT path otherwise; `Simd`/`Lut`/`Scalar` request a specific
+    /// impl (see DESIGN.md §9). Resolution happens once per executor
+    /// worker at startup. The reference backend ignores this.
     pub kernel_impl: KernelImpl,
     /// Threads each packed executor worker shards large GEMV output
     /// rows across (`--row-workers`). 0 = auto ([`thread_budget`]).

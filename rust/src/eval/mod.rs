@@ -347,6 +347,8 @@ pub fn score_problem_packed_full(
 /// worker holds one long-lived [`ScoreBuffers`] (workspace, decode
 /// state, prewarmed kernel scratch — LUTs included) reused across every
 /// problem it claims; malformed problems are carried as report errors.
+/// Kernels run the `Auto` impl — SIMD where the host supports it, the
+/// LUT path otherwise (see [`crate::kernels::KernelImpl`]).
 pub fn evaluate_packed(
     pm: &PackedModel,
     problems: &[McqProblem],

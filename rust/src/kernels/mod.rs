@@ -16,14 +16,15 @@
 //!   accumulated across planes with per-cluster scales), or a dense f32
 //!   fallback for layers with no integer-plane form (OCS).
 //!
-//! Two inner-loop implementations ([`KernelImpl`], selected per
-//! [`KernelScratch`]; `--kernel-impl` on the CLI):
+//! Three inner-loop implementations plus a runtime dispatcher
+//! ([`KernelImpl`], selected per [`KernelScratch`]; `--kernel-impl` on
+//! the CLI):
 //!
 //! * **`Scalar`** — the original scheme: each packed row is unpacked
 //!   once per pass into a row-sized scratch of zero-adjusted levels
 //!   `(q − z)` with shift/mask arithmetic, then every activation row
 //!   dots against it. Kept as the equivalence oracle.
-//! * **`Lut`** (default) — byte-granularity lookup tables fused into a
+//! * **`Lut`** — byte-granularity lookup tables fused into a
 //!   column-blocked microkernel (DESIGN.md §7): a per-`(bits,
 //!   zero_point)` table maps each packed byte straight to its 1/2/4
 //!   zero-adjusted f32 lanes, packed bytes stream through a
@@ -37,6 +38,29 @@
 //!   each output's FP summation order exactly, so tiled ≡ untiled ≡
 //!   row-parallel bit-for-bit, and chunked decode ≡ full forwards stay
 //!   bit-identical.
+//! * **`Simd`** — fused in-register decode-and-dot twins of the LUT
+//!   kernels (DESIGN.md §9): AVX2+FMA on x86_64 (`pshufb` nibble table
+//!   for INT4, widen-add for INT8, byte-LUT gather for INT2) and NEON
+//!   on aarch64, sharing the LUT path's block layout, scale
+//!   application, row-parallel sharding, and the i32-table `gemm_int8`
+//!   twin. Lane values are the same exact integers, so equivalence
+//!   with the scalar oracle is pinned at ≤1e-5 relative (f32 fan-in
+//!   order differs); *within* the impl results are bit-stable across
+//!   seq chunking, tiling, and sharding. Requesting `Simd` on a host
+//!   without the features falls back to `Lut`.
+//! * **`Auto`** (default) — resolves to `Simd` when [`simd_available`]
+//!   (CPU features present and [`NO_SIMD_ENV`] unset), else `Lut`.
+//!   Resolution happens when the scratch is constructed or
+//!   [`KernelScratch::set_kernel_impl`] is called, never per GEMV.
+//!
+//! # Safety
+//!
+//! All `unsafe` in this module lives in the SIMD kernels'
+//! `#[target_feature]` functions. They are only reachable through a
+//! *resolved* `Simd` impl, which [`KernelImpl::resolve`] produces only
+//! after probing the CPU at runtime — so the features are always
+//! present when the `unsafe` blocks run, and every intrinsic body
+//! documents the slice-bound invariants it relies on.
 //!
 //! Accumulation contract: the public entry points ([`gemm`],
 //! [`gemm_matrix`], [`gemm_int8`]) zero-fill `y` exactly once, and every
@@ -49,9 +73,12 @@
 //! quantized to symmetric INT8 and products accumulate in i32 per column
 //! block, trading a small activation-quantization error for integer-only
 //! inner loops. Its blocked LUT path uses i32 tables and returns sums
-//! bit-identical to the whole-row unpack (integer addition is exact).
+//! bit-identical to the whole-row unpack (integer addition is exact) —
+//! as does the SIMD integer twin, for the same reason.
+#![deny(missing_docs)]
 
 mod gemv;
+mod simd;
 
 use std::sync::Arc;
 
@@ -63,6 +90,13 @@ use anyhow::{bail, Result};
 pub use gemv::{INT_BLOCK, LUT_BLOCK};
 
 /// Which inner-loop implementation the packed kernels run.
+///
+/// `Scalar` and `Lut` always mean themselves; `Simd` and `Auto` are
+/// *requests* that [`resolve`](Self::resolve) turns into a concrete
+/// impl against the host CPU (see the dispatch decision table in
+/// DESIGN.md §9). A [`KernelScratch`] stores both the request and the
+/// resolved impl, so resolution cost is paid at configuration time,
+/// never per GEMV.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum KernelImpl {
     /// Unpack-whole-row shift/mask scheme — the original path, kept as
@@ -70,27 +104,73 @@ pub enum KernelImpl {
     /// rows: it is the strictly sequential baseline.
     Scalar,
     /// LUT-fused blocked kernels with the seq==1 row tile and optional
-    /// row-parallel sharding (the default).
-    #[default]
+    /// row-parallel sharding — the portable fast path.
     Lut,
+    /// Vectorized twins of the LUT kernels (AVX2+FMA / NEON) with
+    /// in-register byte decoding (DESIGN.md §9). Resolves to
+    /// [`Lut`](Self::Lut) when the host lacks the features or
+    /// [`NO_SIMD_ENV`] vetoes them.
+    Simd,
+    /// Runtime dispatch (the default): [`Simd`](Self::Simd) when
+    /// [`simd_available`], else [`Lut`](Self::Lut).
+    #[default]
+    Auto,
 }
 
 impl KernelImpl {
+    /// Parse a `--kernel-impl` flag value (`auto|simd|lut|scalar`).
     pub fn parse(s: &str) -> Result<KernelImpl> {
         Ok(match s {
             "scalar" => KernelImpl::Scalar,
             "lut" => KernelImpl::Lut,
-            other => bail!("unknown kernel impl '{other}' (use lut|scalar)"),
+            "simd" => KernelImpl::Simd,
+            "auto" => KernelImpl::Auto,
+            other => bail!("unknown kernel impl '{other}' (use auto|simd|lut|scalar)"),
         })
     }
 
+    /// The flag spelling of this impl (inverse of [`Self::parse`]).
     pub fn name(self) -> &'static str {
         match self {
             KernelImpl::Scalar => "scalar",
             KernelImpl::Lut => "lut",
+            KernelImpl::Simd => "simd",
+            KernelImpl::Auto => "auto",
+        }
+    }
+
+    /// Resolve a request into the concrete impl that will run on this
+    /// host: `Scalar` and `Lut` are themselves; `Simd` and `Auto`
+    /// become `Simd` when [`simd_available`] and `Lut` otherwise.
+    /// Never returns `Auto`.
+    pub fn resolve(self) -> KernelImpl {
+        match self {
+            KernelImpl::Scalar | KernelImpl::Lut => self,
+            KernelImpl::Simd | KernelImpl::Auto => {
+                if simd_available() {
+                    KernelImpl::Simd
+                } else {
+                    KernelImpl::Lut
+                }
+            }
         }
     }
 }
+
+/// True when the SIMD kernels can be dispatched on this host: AVX2+FMA
+/// on x86_64 or NEON on aarch64, and [`NO_SIMD_ENV`] does not veto
+/// them. This is what `Auto`/`Simd` resolution consults; benches and
+/// CI gates use it to report whether a `simd` tier is meaningful.
+pub fn simd_available() -> bool {
+    simd::available()
+}
+
+/// Environment variable that vetoes SIMD dispatch: set to anything but
+/// empty or `0`, it makes [`simd_available`] report false, so `Auto`
+/// and `Simd` requests resolve to the LUT impl. Read at resolve time
+/// (scratch construction / [`KernelScratch::set_kernel_impl`]), never
+/// cached — the dispatch fallback is testable on SIMD-capable hosts.
+pub const NO_SIMD_ENV: &str = simd::NO_SIMD_ENV;
 
 /// Minimum output rows per row-parallel shard. Below this the per-shard
 /// dispatch cost (one scoped-thread handoff) outweighs the dot work.
@@ -168,14 +248,17 @@ impl PackedMatrix {
         })
     }
 
+    /// Output rows (the GEMV's output dimension).
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Input columns (lanes per row before packing).
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// Bit width of the packed integer levels.
     pub fn bits(&self) -> Bits {
         self.bits
     }
@@ -256,6 +339,7 @@ impl PackedLinear {
         Ok(PackedLinear::Dense(w))
     }
 
+    /// Output dimension (rows of the logical weight matrix).
     pub fn out_dim(&self) -> usize {
         match self {
             PackedLinear::Planes(p) => p[0].rows,
@@ -263,6 +347,7 @@ impl PackedLinear {
         }
     }
 
+    /// Input dimension (columns of the logical weight matrix).
     pub fn in_dim(&self) -> usize {
         match self {
             PackedLinear::Planes(p) => p[0].cols,
@@ -270,6 +355,7 @@ impl PackedLinear {
         }
     }
 
+    /// Plane count: 1 for plain/dense layers, k for split layers.
     pub fn n_planes(&self) -> usize {
         match self {
             PackedLinear::Planes(p) => p.len(),
@@ -303,9 +389,13 @@ pub struct KernelScratch {
     /// i64 twin for the blocked `gemm_int8` path.
     acc_i: Vec<i64>,
     luts: gemv::LutCache,
+    /// The requested impl as configured (may be `Auto`/`Simd`).
     imp: KernelImpl,
-    /// Pool GEMV output rows shard across (seq==1, LUT impl, work ≥
-    /// `min_par_work`). `None` = always serial.
+    /// `imp` resolved against the host at configuration time — what
+    /// dispatch actually consults. Never `Auto`.
+    eff: KernelImpl,
+    /// Pool GEMV output rows shard across (seq==1, LUT/SIMD impl,
+    /// work ≥ `min_par_work`). `None` = always serial.
     row_pool: Option<Arc<Pool>>,
     min_par_work: usize,
 }
@@ -321,6 +411,7 @@ impl Default for KernelScratch {
             acc_i: Vec::new(),
             luts: gemv::LutCache::default(),
             imp: KernelImpl::default(),
+            eff: KernelImpl::default().resolve(),
             row_pool: None,
             min_par_work: DEFAULT_PAR_MIN_WORK,
         }
@@ -328,6 +419,8 @@ impl Default for KernelScratch {
 }
 
 impl KernelScratch {
+    /// A default scratch: `Auto` impl (resolved against this host), no
+    /// row pool, empty buffers that grow on first use.
     pub fn new() -> KernelScratch {
         KernelScratch::default()
     }
@@ -346,13 +439,24 @@ impl KernelScratch {
         }
     }
 
-    /// Select the inner-loop implementation (default [`KernelImpl::Lut`]).
+    /// Select the inner-loop implementation (default
+    /// [`KernelImpl::Auto`]). Resolution against the host CPU happens
+    /// here, once — see [`KernelImpl::resolve`].
     pub fn set_kernel_impl(&mut self, imp: KernelImpl) {
         self.imp = imp;
+        self.eff = imp.resolve();
     }
 
+    /// The impl as requested via [`Self::set_kernel_impl`] (may be
+    /// `Auto`/`Simd` even when the host resolved them to `Lut`).
     pub fn kernel_impl(&self) -> KernelImpl {
         self.imp
+    }
+
+    /// The impl dispatch actually runs: [`Self::kernel_impl`] resolved
+    /// against this host. Never [`KernelImpl::Auto`].
+    pub fn effective_impl(&self) -> KernelImpl {
+        self.eff
     }
 
     /// Attach (or detach) the pool large GEMVs shard output rows across.
@@ -395,11 +499,12 @@ impl KernelScratch {
     }
 
     /// The pool to shard `out_dim` rows across, if this call qualifies:
-    /// LUT impl, single activation row, work above the floor, enough
+    /// a blocked impl (LUT or SIMD — the scalar oracle stays strictly
+    /// sequential), single activation row, work above the floor, enough
     /// rows to cut into ≥ 2 shards. Returns an owned handle so callers
     /// can keep borrowing the scratch's LUT cache.
     fn row_parallel(&self, seq: usize, out_dim: usize, work: usize) -> Option<Arc<Pool>> {
-        if self.imp != KernelImpl::Lut
+        if self.eff == KernelImpl::Scalar
             || seq != 1
             || work < self.min_par_work
             || out_dim < 2 * MIN_ROWS_PER_SHARD
@@ -453,17 +558,20 @@ fn accumulate_planes(
     let (out_dim, in_dim) = (planes[0].rows, planes[0].cols);
     debug_assert_eq!(x.len(), seq * in_dim, "x length");
     debug_assert_eq!(y.len(), seq * out_dim, "y length");
-    if scratch.imp == KernelImpl::Scalar {
+    if scratch.eff == KernelImpl::Scalar {
         for m in planes {
             accumulate_matrix_scalar(y, x, seq, m, scratch);
         }
         return;
     }
+    // Both blocked impls consume the f32 byte tables: the LUT path for
+    // every lane, the SIMD path for INT2 gathers and row-end tails.
     for m in planes {
         for &z in &m.zps {
             scratch.luts.ensure_f32(m.bits, z);
         }
     }
+    let use_simd = scratch.eff == KernelImpl::Simd;
     let work: usize = planes.iter().map(|m| m.rows * m.cols).sum();
     if let Some(pool) = scratch.row_parallel(seq, out_dim, work) {
         let luts = &scratch.luts;
@@ -471,7 +579,11 @@ fn accumulate_planes(
         pool.parallel_chunks(y, chunk, |i, rows| {
             let o0 = i * chunk;
             for m in planes {
-                gemv_rows_lut(rows, x, m, o0, luts);
+                if use_simd {
+                    gemv_rows_simd(rows, x, m, o0, luts);
+                } else {
+                    gemv_rows_lut(rows, x, m, o0, luts);
+                }
             }
         });
         return;
@@ -479,7 +591,17 @@ fn accumulate_planes(
     if seq == 1 {
         let luts = &scratch.luts;
         for m in planes {
-            gemv_rows_lut(y, x, m, 0, luts);
+            if use_simd {
+                gemv_rows_simd(y, x, m, 0, luts);
+            } else {
+                gemv_rows_lut(y, x, m, 0, luts);
+            }
+        }
+        return;
+    }
+    if use_simd {
+        for m in planes {
+            accumulate_matrix_simd(y, x, seq, m, &scratch.luts);
         }
         return;
     }
@@ -587,6 +709,74 @@ fn accumulate_matrix_lut(
         }
         for (t, a) in acc[..seq].iter().enumerate() {
             y[t * out_dim + o] += (*a as f64 / p.scale) as f32;
+        }
+    }
+}
+
+/// SIMD twin of [`gemv_rows_lut`]: same row-range semantics over
+/// output rows `o0..o0+y.len()`, but every block runs the fused
+/// in-register decode-and-dot (`simd::dot_block_f32`) instead of
+/// expand-then-dot. The register tile is the 32-lane accumulator bank
+/// *within* a row rather than a 4-row tile — the fused kernel has no
+/// expanded block buffer whose fill cost a row tile would amortize.
+/// One fixed kernel per (row, block), so tiling and sharding cannot
+/// change results within this impl.
+fn gemv_rows_simd(y: &mut [f32], x: &[f32], m: &PackedMatrix, o0: usize, luts: &gemv::LutCache) {
+    let in_dim = m.cols;
+    for (r, yo) in y.iter_mut().enumerate() {
+        let o = o0 + r;
+        let p = m.param_of_row(o);
+        let tab = luts.f32_table(m.bits, p.zero_point);
+        let row = m.row_bytes(o);
+        let mut acc = 0.0f32;
+        let mut c0 = 0;
+        while c0 < in_dim {
+            let len = LUT_BLOCK.min(in_dim - c0);
+            acc += simd::dot_block_f32(row, c0, len, m.bits, p.zero_point, tab, &x[c0..c0 + len]);
+            c0 += len;
+        }
+        *yo += (acc as f64 / p.scale) as f32;
+    }
+}
+
+/// Batched (seq > 1) SIMD path: the identical fused per-(row, block)
+/// kernel as [`gemv_rows_simd`], run per position. Re-decoding the
+/// packed bytes per position is cheaper than a memory round-trip
+/// through an expanded block buffer (the bytes are 2–8× smaller than
+/// the f32 lanes and L1/L2-resident across positions), and reusing one
+/// kernel keeps chunked (seq==1) ≡ whole-sequence execution
+/// bit-for-bit within the impl — the property the decode stack rests
+/// on.
+fn accumulate_matrix_simd(
+    y: &mut [f32],
+    x: &[f32],
+    seq: usize,
+    m: &PackedMatrix,
+    luts: &gemv::LutCache,
+) {
+    let (out_dim, in_dim) = (m.rows, m.cols);
+    for o in 0..out_dim {
+        let p = m.param_of_row(o);
+        let tab = luts.f32_table(m.bits, p.zero_point);
+        let row = m.row_bytes(o);
+        for t in 0..seq {
+            let xr = &x[t * in_dim..(t + 1) * in_dim];
+            let mut acc = 0.0f32;
+            let mut c0 = 0;
+            while c0 < in_dim {
+                let len = LUT_BLOCK.min(in_dim - c0);
+                acc += simd::dot_block_f32(
+                    row,
+                    c0,
+                    len,
+                    m.bits,
+                    p.zero_point,
+                    tab,
+                    &xr[c0..c0 + len],
+                );
+                c0 += len;
+            }
+            y[t * out_dim + o] += (acc as f64 / p.scale) as f32;
         }
     }
 }
@@ -703,7 +893,7 @@ pub fn gemm_int8(
         }
     }
 
-    if scratch.imp == KernelImpl::Scalar {
+    if scratch.eff == KernelImpl::Scalar {
         if scratch.qz_i.len() < in_dim {
             scratch.qz_i.resize(in_dim, 0);
         }
@@ -731,9 +921,10 @@ pub fn gemm_int8(
             scratch.luts.ensure_i32(m.bits, z);
         }
     }
+    let use_simd = scratch.eff == KernelImpl::Simd;
     let KernelScratch { qx, sx, acc_i, luts, .. } = scratch;
     for m in planes {
-        accumulate_int8_lut(y, &qx[..seq * in_dim], &sx[..], seq, m, acc_i, luts);
+        accumulate_int8_lut(y, &qx[..seq * in_dim], &sx[..], seq, m, acc_i, luts, use_simd);
     }
 }
 
@@ -742,7 +933,11 @@ pub fn gemm_int8(
 /// so per-block i32 accumulation cannot overflow) and fold block dots
 /// into per-position i64 totals. Integer addition is associative, so
 /// the totals — and the exact-zero guarantee for masked levels — are
-/// bit-identical to the whole-row unpack.
+/// bit-identical to the whole-row unpack. With `use_simd`, the block
+/// dot runs the vectorized integer kernel instead of the scalar one;
+/// integer sums are order-independent, so the SIMD choice cannot change
+/// a single bit of the output.
+#[allow(clippy::too_many_arguments)]
 fn accumulate_int8_lut(
     y: &mut [f32],
     qx: &[i8],
@@ -751,6 +946,7 @@ fn accumulate_int8_lut(
     m: &PackedMatrix,
     acc: &mut Vec<i64>,
     luts: &gemv::LutCache,
+    use_simd: bool,
 ) {
     let (out_dim, in_dim) = (m.rows, m.cols);
     if acc.len() < seq {
@@ -769,7 +965,12 @@ fn accumulate_int8_lut(
             let wb = &buf[..len];
             for (t, a) in acc[..seq].iter_mut().enumerate() {
                 if sx[t] != 0.0 {
-                    *a += gemv::dot_qi32(&qx[t * in_dim + c0..t * in_dim + c0 + len], wb);
+                    let xb = &qx[t * in_dim + c0..t * in_dim + c0 + len];
+                    *a += if use_simd {
+                        simd::dot_block_i32(xb, wb)
+                    } else {
+                        gemv::dot_qi32(xb, wb)
+                    };
                 }
             }
             c0 += len;
@@ -809,12 +1010,41 @@ mod tests {
 
     #[test]
     fn kernel_impl_parse_and_default() {
-        assert_eq!(KernelImpl::default(), KernelImpl::Lut);
+        assert_eq!(KernelImpl::default(), KernelImpl::Auto);
         assert_eq!(KernelImpl::parse("lut").unwrap(), KernelImpl::Lut);
         assert_eq!(KernelImpl::parse("scalar").unwrap(), KernelImpl::Scalar);
-        assert!(KernelImpl::parse("simd").is_err());
+        assert_eq!(KernelImpl::parse("simd").unwrap(), KernelImpl::Simd);
+        assert_eq!(KernelImpl::parse("auto").unwrap(), KernelImpl::Auto);
+        assert!(KernelImpl::parse("avx2").is_err());
         assert_eq!(KernelImpl::Lut.name(), "lut");
         assert_eq!(KernelImpl::Scalar.name(), "scalar");
+        assert_eq!(KernelImpl::Simd.name(), "simd");
+        assert_eq!(KernelImpl::Auto.name(), "auto");
+        // Resolution: explicit impls are honored verbatim; Auto and Simd
+        // both land on Simd exactly when the host supports it, Lut
+        // otherwise — and resolve() never returns Auto.
+        assert_eq!(KernelImpl::Scalar.resolve(), KernelImpl::Scalar);
+        assert_eq!(KernelImpl::Lut.resolve(), KernelImpl::Lut);
+        assert_eq!(KernelImpl::Auto.resolve(), KernelImpl::Simd.resolve());
+        let want = if simd_available() { KernelImpl::Simd } else { KernelImpl::Lut };
+        assert_eq!(KernelImpl::Auto.resolve(), want);
+    }
+
+    #[test]
+    fn auto_resolution_and_effective_impl() {
+        let scratch = KernelScratch::new();
+        assert_eq!(scratch.kernel_impl(), KernelImpl::Auto, "default request is Auto");
+        let eff = scratch.effective_impl();
+        assert_ne!(eff, KernelImpl::Auto, "eff is always resolved");
+        assert_eq!(eff == KernelImpl::Simd, simd_available(), "Auto tracks the host");
+
+        let mut s = KernelScratch::new();
+        s.set_kernel_impl(KernelImpl::Scalar);
+        assert_eq!(s.effective_impl(), KernelImpl::Scalar);
+        s.set_kernel_impl(KernelImpl::Simd);
+        let eff = s.effective_impl();
+        assert!(eff == KernelImpl::Simd || eff == KernelImpl::Lut, "Simd may fall back to Lut");
+        assert_eq!(eff == KernelImpl::Simd, simd_available());
     }
 
     #[test]
@@ -858,7 +1088,10 @@ mod tests {
     }
 
     #[test]
-    fn lut_and_scalar_impls_agree() {
+    fn default_impl_agrees_with_scalar_oracle() {
+        // The default scratch resolves Auto to the fastest available
+        // blocked impl (SIMD where the host supports it, LUT otherwise);
+        // whichever it picked must stay pinned to the scalar oracle.
         let w = random_tensor(40, 19, 37, 0.4);
         let x = random_tensor(41, 3, 37, 1.0);
         let mut lut = KernelScratch::new();
@@ -939,7 +1172,9 @@ mod tests {
     #[test]
     fn gemm_int8_lut_is_bit_identical_to_scalar() {
         // Integer sums are exact, so the blocked i32-LUT path must equal
-        // the whole-row unpack path bit-for-bit.
+        // the whole-row unpack path bit-for-bit — and the default scratch
+        // (Auto → SIMD on capable hosts) rides the same guarantee, since
+        // the vectorized integer dot reassociates exact i32/i64 sums.
         let w = random_tensor(60, 11, 700, 0.3);
         let x = random_tensor(61, 3, 700, 1.0);
         for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
@@ -989,7 +1224,7 @@ mod tests {
         // both implementations.
         let w = random_tensor(21, 11, 17, 0.3);
         let x = random_tensor(22, 3, 17, 1.0);
-        for imp in [KernelImpl::Lut, KernelImpl::Scalar] {
+        for imp in [KernelImpl::Lut, KernelImpl::Scalar, KernelImpl::Simd] {
             for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
                 let q = quantize_per_channel(&w, bits);
                 let lin =

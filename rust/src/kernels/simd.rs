@@ -1,0 +1,714 @@
+//! Runtime-dispatched SIMD twins of the LUT-fused block kernels
+//! (DESIGN.md §9): AVX2+FMA on x86_64, NEON on aarch64, and a portable
+//! (unreachable-by-dispatch) fallback everywhere else.
+//!
+//! One fused `dot_block_*` microkernel per bit width replaces the LUT
+//! path's expand-block-then-dot: packed bytes are decoded to
+//! zero-adjusted integer levels *inside vector registers* and fused
+//! into the activation dot, so the unpacked lanes are never written to
+//! memory at all — the logical conclusion of DESIGN §7's "never
+//! materialize the row".
+//!
+//! Decoding scheme per bit width (the "shuffle-LUT trick"):
+//!
+//! * **INT4** — a 16-entry in-register nibble table holding
+//!   `nibble + (qmin − z)` is indexed by a single byte shuffle
+//!   (`pshufb` / `tbl`): 16 packed bytes decode to 32 lanes per
+//!   shuffle pair. The table is rebuilt per row from `z` (16 adds) —
+//!   cheaper than a cache lookup.
+//! * **INT8** — no table: the base `qmin − z` spans `[−255, 0]`, which
+//!   does not fit the i8 shuffle domain, so bytes widen to i32 and the
+//!   base is added arithmetically (identical integer levels).
+//! * **INT2** — byte-granularity gather: each packed byte loads its 4
+//!   precomputed f32 lanes straight from the cached byte table
+//!   (`LutCache` f32 flavor), 4 lanes per load.
+//!
+//! Decoded levels are exact small integers — bit-identical to the
+//! scalar and LUT paths' lanes; only the f32 *summation order* differs
+//! (wider accumulator fan-in), which is why cross-impl equivalence is
+//! pinned at ≤1e-5 relative rather than bit-for-bit. Within this impl
+//! the fold order is fixed: vector accumulators fold pairwise, a
+//! fixed-order horizontal sum follows, and tail lanes (row end only)
+//! append sequentially through the byte table. One fused kernel serves
+//! seq==1, batched, tiled, and row-parallel execution, so results are
+//! bit-stable across chunking and sharding — the same chunked ≡ full
+//! and sharded ≡ serial guarantees the LUT path makes.
+//!
+//! # Safety
+//!
+//! Every arch-specific kernel is an `unsafe fn` whose only soundness
+//! requirement beyond slice bounds is `#[target_feature]` presence.
+//! Callers uphold it by construction: dispatch only reaches these
+//! kernels through a resolved `KernelImpl::Simd`, and resolution only
+//! produces `Simd` when [`available`] observed the features (CPU
+//! features cannot disappear at runtime). In-kernel pointer arithmetic
+//! stays inside `row`/`x`/`lut` by the same block-length invariants
+//! the safe paths use (`full ≤ len ≤ x.len()`, byte tables are always
+//! `256 · lanes` entries), debug-asserted at the dispatch boundary.
+
+use crate::quant::Bits;
+
+/// Environment variable that vetoes SIMD dispatch: any value other
+/// than empty or `0` makes [`available`] report false, so `Auto` and
+/// `Simd` requests resolve to the LUT impl. Read at resolve time
+/// (scratch construction / `set_kernel_impl`), never cached — tests
+/// toggle it to exercise the fallback on SIMD-capable hosts.
+pub const NO_SIMD_ENV: &str = "SPLITQUANT_NO_SIMD";
+
+/// True when the SIMD kernels may be dispatched: the CPU features are
+/// present ([`detect`]) and [`NO_SIMD_ENV`] does not veto them.
+pub(crate) fn available() -> bool {
+    detect() && !env_disabled()
+}
+
+/// CPU-feature probe: AVX2+FMA on x86_64, NEON on aarch64, false on
+/// every other architecture. `std` caches the cpuid/hwcap query, so
+/// this is an atomic load after the first call.
+#[cfg(target_arch = "x86_64")]
+fn detect() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+/// CPU-feature probe (aarch64 flavor — see the x86_64 doc).
+#[cfg(target_arch = "aarch64")]
+fn detect() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+/// CPU-feature probe: no SIMD kernels exist for this architecture.
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect() -> bool {
+    false
+}
+
+/// [`NO_SIMD_ENV`] veto state, read fresh on every resolution.
+fn env_disabled() -> bool {
+    match std::env::var_os(NO_SIMD_ENV) {
+        Some(v) => !v.is_empty() && v != "0",
+        None => false,
+    }
+}
+
+/// Fused unpack-dot over one column block of one packed row:
+/// `Σ_i level(row, col0 + i) · x[i]` for `i in 0..len`, decoded through
+/// the level math of `(bits, z)` with `lut` as the matching f32 byte
+/// table (used for tail lanes and the INT2 gather). `col0` must be
+/// byte-aligned (every `LUT_BLOCK` boundary is) and `x.len() == len`.
+/// Callers stream blocks of at most `LUT_BLOCK` lanes, accumulating
+/// block results sequentially per output — exactly like the LUT path.
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn dot_block_f32(
+    row: &[u8],
+    col0: usize,
+    len: usize,
+    bits: Bits,
+    z: i32,
+    lut: &[f32],
+    x: &[f32],
+) -> f32 {
+    debug_assert_eq!(x.len(), len);
+    debug_assert_eq!(col0 % crate::quant::pack::lanes_per_byte(bits), 0);
+    debug_assert!(detect(), "Simd impl dispatched without AVX2+FMA");
+    let base = bits.qmin() - z;
+    // SAFETY: resolved-dispatch contract (module docs) guarantees
+    // AVX2+FMA; slice bounds hold because `full ≤ len` chunks never
+    // read past `len` lanes of `row`/`x` and `lut` is 256·lanes long.
+    unsafe {
+        match bits {
+            Bits::Int4 if (-15..=0).contains(&base) => {
+                x86::dot_int4(&row[col0 / 2..], len, base, lut, x)
+            }
+            // A zero-point outside [qmin, qmax] (the LutBank overflow
+            // corner) pushes INT4 levels out of the i8 shuffle domain
+            // — decode through the byte table instead. Same z always
+            // takes the same branch, so determinism is unaffected.
+            Bits::Int4 => dot_block_via_table(row, col0, len, bits, lut, x),
+            Bits::Int8 => x86::dot_int8(&row[col0..], len, base, lut, x),
+            Bits::Int2 => x86::dot_int2(&row[col0 / 4..], len, lut, x),
+        }
+    }
+}
+
+/// Fused unpack-dot over one column block (see the x86_64 doc).
+#[cfg(target_arch = "aarch64")]
+pub(crate) fn dot_block_f32(
+    row: &[u8],
+    col0: usize,
+    len: usize,
+    bits: Bits,
+    z: i32,
+    lut: &[f32],
+    x: &[f32],
+) -> f32 {
+    debug_assert_eq!(x.len(), len);
+    debug_assert_eq!(col0 % crate::quant::pack::lanes_per_byte(bits), 0);
+    debug_assert!(detect(), "Simd impl dispatched without NEON");
+    let base = bits.qmin() - z;
+    // SAFETY: resolved-dispatch contract (module docs) guarantees NEON;
+    // bounds as in the x86_64 twin.
+    unsafe {
+        match bits {
+            Bits::Int4 if (-15..=0).contains(&base) => {
+                neon::dot_int4(&row[col0 / 2..], len, base, lut, x)
+            }
+            // LutBank overflow corner — see the x86_64 twin.
+            Bits::Int4 => dot_block_via_table(row, col0, len, bits, lut, x),
+            Bits::Int8 => neon::dot_int8(&row[col0..], len, base, lut, x),
+            Bits::Int2 => neon::dot_int2(&row[col0 / 4..], len, lut, x),
+        }
+    }
+}
+
+/// Portable stand-in (see the x86_64 doc): unreachable through normal
+/// dispatch — [`available`] is false here, so `Auto`/`Simd` resolve to
+/// the LUT impl — but kept correct (the LUT path's own
+/// expand-then-dot) so the crate builds and tests on any target.
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub(crate) fn dot_block_f32(
+    row: &[u8],
+    col0: usize,
+    len: usize,
+    bits: Bits,
+    _z: i32,
+    lut: &[f32],
+    x: &[f32],
+) -> f32 {
+    debug_assert_eq!(x.len(), len);
+    dot_block_via_table(row, col0, len, bits, lut, x)
+}
+
+/// Expand-then-dot through the byte table — the LUT path's own block
+/// scheme. Serves as the whole-block body off x86_64/aarch64 and as
+/// the in-dispatch fallback for parameter corners the in-register
+/// decoders cannot represent (INT4 zero-points outside `[qmin, qmax]`).
+fn dot_block_via_table(
+    row: &[u8],
+    col0: usize,
+    len: usize,
+    bits: Bits,
+    lut: &[f32],
+    x: &[f32],
+) -> f32 {
+    debug_assert!(len <= super::gemv::LUT_BLOCK);
+    let mut buf = [0.0f32; super::gemv::LUT_BLOCK];
+    super::gemv::expand_block(row, col0, len, bits, lut, &mut buf);
+    super::gemv::dot_f32(x, &buf[..len])
+}
+
+/// Integer twin for `gemm_int8` blocks: `Σ qx[i] · w[i]` with i32
+/// vector accumulation folded to i64. Integer addition is exact, so
+/// the result is bit-identical to `gemv::dot_qi32` regardless of lane
+/// order — the SIMD integer path needs no tolerance carve-out. Callers
+/// keep blocks ≤ `INT_BLOCK` lanes so per-lane i32 partials cannot
+/// overflow (worst case 127 · 255 per product).
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn dot_block_i32(qx: &[i8], w: &[i32]) -> i64 {
+    debug_assert_eq!(qx.len(), w.len());
+    debug_assert!(qx.len() <= super::gemv::INT_BLOCK);
+    debug_assert!(detect(), "Simd impl dispatched without AVX2+FMA");
+    // SAFETY: resolved-dispatch contract (module docs).
+    unsafe { x86::dot_i32(qx, w) }
+}
+
+/// Integer twin for `gemm_int8` blocks (see the x86_64 doc).
+#[cfg(target_arch = "aarch64")]
+pub(crate) fn dot_block_i32(qx: &[i8], w: &[i32]) -> i64 {
+    debug_assert_eq!(qx.len(), w.len());
+    debug_assert!(qx.len() <= super::gemv::INT_BLOCK);
+    debug_assert!(detect(), "Simd impl dispatched without NEON");
+    // SAFETY: resolved-dispatch contract (module docs).
+    unsafe { neon::dot_i32(qx, w) }
+}
+
+/// Integer twin, portable stand-in (see [`dot_block_f32`]'s portable
+/// doc): delegates to the scalar block dot — identical sums.
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub(crate) fn dot_block_i32(qx: &[i8], w: &[i32]) -> i64 {
+    super::gemv::dot_qi32(qx, w)
+}
+
+/// Sequential tail lanes `from..len` appended to `acc` through the
+/// byte table — shared by every arch so the delicate end-of-row
+/// handling cannot diverge between them. `lanes` is the
+/// lanes-per-byte count of the bit width; lane `i` of the block lives
+/// in packed byte `i / lanes` (the block start is byte-aligned).
+fn tail_f32(
+    mut acc: f32,
+    bytes: &[u8],
+    from: usize,
+    len: usize,
+    lanes: usize,
+    lut: &[f32],
+    x: &[f32],
+) -> f32 {
+    for i in from..len {
+        acc += x[i] * lut[bytes[i / lanes] as usize * lanes + i % lanes];
+    }
+    acc
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    use super::tail_f32;
+
+    /// INT4 fused block dot: nibble-shuffle decode, 32 lanes and four
+    /// 8-lane FMA accumulators per iteration.
+    ///
+    /// # Safety
+    /// Caller guarantees AVX2+FMA and `x.len() == len`, with `bytes`
+    /// holding at least `ceil(len / 2)` packed bytes.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub(super) unsafe fn dot_int4(
+        bytes: &[u8],
+        len: usize,
+        base: i32,
+        lut: &[f32],
+        x: &[f32],
+    ) -> f32 {
+        // In-register nibble table: entry i = i + base (base ∈ [−15, 0],
+        // so every level fits i8 — the pshufb domain).
+        let mut tb = [0i8; 16];
+        for (i, t) in tb.iter_mut().enumerate() {
+            *t = i as i8 + base as i8;
+        }
+        let tbl = _mm_loadu_si128(tb.as_ptr() as *const __m128i);
+        let nib = _mm_set1_epi8(0x0F);
+        let mut a0 = _mm256_setzero_ps();
+        let mut a1 = _mm256_setzero_ps();
+        let mut a2 = _mm256_setzero_ps();
+        let mut a3 = _mm256_setzero_ps();
+        let full = len / 32 * 32;
+        let mut c = 0usize;
+        while c < full {
+            let b = _mm_loadu_si128(bytes.as_ptr().add(c / 2) as *const __m128i);
+            let lo = _mm_and_si128(b, nib);
+            // 16-bit shift smears across byte pairs; the nibble mask
+            // drops the smeared-in bits, leaving each byte's own high
+            // nibble.
+            let hi = _mm_and_si128(_mm_srli_epi16::<4>(b), nib);
+            let ll = _mm_shuffle_epi8(tbl, lo);
+            let lh = _mm_shuffle_epi8(tbl, hi);
+            // Interleave restores pack order (low nibble = even lane):
+            // i0 = lanes c..c+15, i1 = lanes c+16..c+31.
+            let i0 = _mm_unpacklo_epi8(ll, lh);
+            let i1 = _mm_unpackhi_epi8(ll, lh);
+            let xp = x.as_ptr().add(c);
+            a0 = _mm256_fmadd_ps(cvt8(i0), _mm256_loadu_ps(xp), a0);
+            a1 = _mm256_fmadd_ps(cvt8(_mm_srli_si128::<8>(i0)), _mm256_loadu_ps(xp.add(8)), a1);
+            a2 = _mm256_fmadd_ps(cvt8(i1), _mm256_loadu_ps(xp.add(16)), a2);
+            a3 = _mm256_fmadd_ps(cvt8(_mm_srli_si128::<8>(i1)), _mm256_loadu_ps(xp.add(24)), a3);
+            c += 32;
+        }
+        let acc = hsum(_mm256_add_ps(_mm256_add_ps(a0, a1), _mm256_add_ps(a2, a3)));
+        tail_f32(acc, bytes, full, len, 2, lut, x)
+    }
+
+    /// Sign-extend the low 8 i8 lanes of `v` to f32.
+    ///
+    /// # Safety
+    /// Caller guarantees AVX2.
+    #[target_feature(enable = "avx2")]
+    unsafe fn cvt8(v: __m128i) -> __m256 {
+        _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(v))
+    }
+
+    /// INT8 fused block dot: widen-and-add decode (no shuffle table —
+    /// the base spans [−255, 0], outside the i8 shuffle domain), 32
+    /// lanes per iteration.
+    ///
+    /// # Safety
+    /// Caller guarantees AVX2+FMA, `x.len() == len`, `bytes.len() ≥ len`.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub(super) unsafe fn dot_int8(
+        bytes: &[u8],
+        len: usize,
+        base: i32,
+        lut: &[f32],
+        x: &[f32],
+    ) -> f32 {
+        let basev = _mm256_set1_epi32(base);
+        let mut a0 = _mm256_setzero_ps();
+        let mut a1 = _mm256_setzero_ps();
+        let mut a2 = _mm256_setzero_ps();
+        let mut a3 = _mm256_setzero_ps();
+        let full = len / 32 * 32;
+        let mut c = 0usize;
+        while c < full {
+            let bp = bytes.as_ptr().add(c);
+            let xp = x.as_ptr().add(c);
+            a0 = _mm256_fmadd_ps(lvl8(bp, basev), _mm256_loadu_ps(xp), a0);
+            a1 = _mm256_fmadd_ps(lvl8(bp.add(8), basev), _mm256_loadu_ps(xp.add(8)), a1);
+            a2 = _mm256_fmadd_ps(lvl8(bp.add(16), basev), _mm256_loadu_ps(xp.add(16)), a2);
+            a3 = _mm256_fmadd_ps(lvl8(bp.add(24), basev), _mm256_loadu_ps(xp.add(24)), a3);
+            c += 32;
+        }
+        let acc = hsum(_mm256_add_ps(_mm256_add_ps(a0, a1), _mm256_add_ps(a2, a3)));
+        tail_f32(acc, bytes, full, len, 1, lut, x)
+    }
+
+    /// 8 raw bytes at `p` → zero-adjusted f32 levels (`byte + base`).
+    ///
+    /// # Safety
+    /// Caller guarantees AVX2 and 8 readable bytes at `p`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn lvl8(p: *const u8, base: __m256i) -> __m256 {
+        let raw = _mm256_cvtepu8_epi32(_mm_loadl_epi64(p as *const __m128i));
+        _mm256_cvtepi32_ps(_mm256_add_epi32(raw, base))
+    }
+
+    /// INT2 fused block dot: byte-LUT gather (each packed byte loads
+    /// its 4 precomputed f32 lanes from the cached table), 16 lanes
+    /// and four 4-lane FMA accumulators per iteration.
+    ///
+    /// # Safety
+    /// Caller guarantees AVX2+FMA, `x.len() == len`, `bytes` holding
+    /// at least `ceil(len / 4)` packed bytes, and `lut.len() == 1024`
+    /// (every byte's gather stays in bounds by construction).
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub(super) unsafe fn dot_int2(bytes: &[u8], len: usize, lut: &[f32], x: &[f32]) -> f32 {
+        let mut a0 = _mm_setzero_ps();
+        let mut a1 = _mm_setzero_ps();
+        let mut a2 = _mm_setzero_ps();
+        let mut a3 = _mm_setzero_ps();
+        let lp = lut.as_ptr();
+        let full = len / 16 * 16;
+        let mut c = 0usize;
+        while c < full {
+            let b = c / 4;
+            let xp = x.as_ptr().add(c);
+            a0 = _mm_fmadd_ps(_mm_loadu_ps(lp.add(bytes[b] as usize * 4)), _mm_loadu_ps(xp), a0);
+            a1 = _mm_fmadd_ps(
+                _mm_loadu_ps(lp.add(bytes[b + 1] as usize * 4)),
+                _mm_loadu_ps(xp.add(4)),
+                a1,
+            );
+            a2 = _mm_fmadd_ps(
+                _mm_loadu_ps(lp.add(bytes[b + 2] as usize * 4)),
+                _mm_loadu_ps(xp.add(8)),
+                a2,
+            );
+            a3 = _mm_fmadd_ps(
+                _mm_loadu_ps(lp.add(bytes[b + 3] as usize * 4)),
+                _mm_loadu_ps(xp.add(12)),
+                a3,
+            );
+            c += 16;
+        }
+        let acc = hsum4(_mm_add_ps(_mm_add_ps(a0, a1), _mm_add_ps(a2, a3)));
+        tail_f32(acc, bytes, full, len, 4, lut, x)
+    }
+
+    /// Integer block dot: 8 lanes per iteration, i32 lane partials.
+    ///
+    /// # Safety
+    /// Caller guarantees AVX2 and `qx.len() == w.len() ≤ INT_BLOCK`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_i32(qx: &[i8], w: &[i32]) -> i64 {
+        let n = qx.len();
+        let full = n / 8 * 8;
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i < full {
+            let a = _mm256_cvtepi8_epi32(_mm_loadl_epi64(qx.as_ptr().add(i) as *const __m128i));
+            let b = _mm256_loadu_si256(w.as_ptr().add(i) as *const __m256i);
+            acc = _mm256_add_epi32(acc, _mm256_mullo_epi32(a, b));
+            i += 8;
+        }
+        let mut t = [0i32; 8];
+        _mm256_storeu_si256(t.as_mut_ptr() as *mut __m256i, acc);
+        let mut total: i64 = t.iter().map(|&v| v as i64).sum();
+        while i < n {
+            total += qx[i] as i64 * w[i] as i64;
+            i += 1;
+        }
+        total
+    }
+
+    /// Fixed-order horizontal sum of 8 f32 lanes: lanes pair across
+    /// the 128-bit halves, then fold pairwise — one deterministic
+    /// parenthesization, always.
+    ///
+    /// # Safety
+    /// Caller guarantees AVX.
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let mut t = [0.0f32; 8];
+        _mm256_storeu_ps(t.as_mut_ptr(), v);
+        ((t[0] + t[4]) + (t[1] + t[5])) + ((t[2] + t[6]) + (t[3] + t[7]))
+    }
+
+    /// Fixed-order horizontal sum of 4 f32 lanes.
+    ///
+    /// # Safety
+    /// SSE baseline on x86_64 — always present.
+    unsafe fn hsum4(v: __m128) -> f32 {
+        let mut t = [0.0f32; 4];
+        _mm_storeu_ps(t.as_mut_ptr(), v);
+        (t[0] + t[1]) + (t[2] + t[3])
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    use super::tail_f32;
+
+    /// INT4 fused block dot: `tbl`-shuffle decode, 32 lanes per
+    /// iteration across four 4-lane FMA accumulators (each takes two
+    /// fused multiply-adds per iteration — fixed order).
+    ///
+    /// # Safety
+    /// Caller guarantees NEON and `x.len() == len`, with `bytes`
+    /// holding at least `ceil(len / 2)` packed bytes.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot_int4(
+        bytes: &[u8],
+        len: usize,
+        base: i32,
+        lut: &[f32],
+        x: &[f32],
+    ) -> f32 {
+        let mut tb = [0i8; 16];
+        for (i, t) in tb.iter_mut().enumerate() {
+            *t = i as i8 + base as i8;
+        }
+        let tbl = vld1q_s8(tb.as_ptr());
+        let nib = vdupq_n_u8(0x0F);
+        let mut a0 = vdupq_n_f32(0.0);
+        let mut a1 = vdupq_n_f32(0.0);
+        let mut a2 = vdupq_n_f32(0.0);
+        let mut a3 = vdupq_n_f32(0.0);
+        let full = len / 32 * 32;
+        let mut c = 0usize;
+        while c < full {
+            let b = vld1q_u8(bytes.as_ptr().add(c / 2));
+            let lo = vandq_u8(b, nib);
+            // Per-byte shift: no cross-byte smear to mask off.
+            let hi = vshrq_n_u8::<4>(b);
+            let ll = vqtbl1q_s8(tbl, lo);
+            let lh = vqtbl1q_s8(tbl, hi);
+            // Interleave restores pack order (low nibble = even lane).
+            let z0 = vzip1q_s8(ll, lh); // lanes c..c+15
+            let z1 = vzip2q_s8(ll, lh); // lanes c+16..c+31
+            let s0 = vmovl_s8(vget_low_s8(z0));
+            let s1 = vmovl_s8(vget_high_s8(z0));
+            let s2 = vmovl_s8(vget_low_s8(z1));
+            let s3 = vmovl_s8(vget_high_s8(z1));
+            let xp = x.as_ptr().add(c);
+            a0 = vfmaq_f32(a0, vcvtq_f32_s32(vmovl_s16(vget_low_s16(s0))), vld1q_f32(xp));
+            a1 = vfmaq_f32(a1, vcvtq_f32_s32(vmovl_s16(vget_high_s16(s0))), vld1q_f32(xp.add(4)));
+            a2 = vfmaq_f32(a2, vcvtq_f32_s32(vmovl_s16(vget_low_s16(s1))), vld1q_f32(xp.add(8)));
+            a3 = vfmaq_f32(a3, vcvtq_f32_s32(vmovl_s16(vget_high_s16(s1))), vld1q_f32(xp.add(12)));
+            a0 = vfmaq_f32(a0, vcvtq_f32_s32(vmovl_s16(vget_low_s16(s2))), vld1q_f32(xp.add(16)));
+            a1 = vfmaq_f32(a1, vcvtq_f32_s32(vmovl_s16(vget_high_s16(s2))), vld1q_f32(xp.add(20)));
+            a2 = vfmaq_f32(a2, vcvtq_f32_s32(vmovl_s16(vget_low_s16(s3))), vld1q_f32(xp.add(24)));
+            a3 = vfmaq_f32(a3, vcvtq_f32_s32(vmovl_s16(vget_high_s16(s3))), vld1q_f32(xp.add(28)));
+            c += 32;
+        }
+        let acc = hsum(a0, a1, a2, a3);
+        tail_f32(acc, bytes, full, len, 2, lut, x)
+    }
+
+    /// INT8 fused block dot: widen-and-add decode, 16 lanes per
+    /// iteration.
+    ///
+    /// # Safety
+    /// Caller guarantees NEON, `x.len() == len`, `bytes.len() ≥ len`.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot_int8(
+        bytes: &[u8],
+        len: usize,
+        base: i32,
+        lut: &[f32],
+        x: &[f32],
+    ) -> f32 {
+        let basev = vdupq_n_s32(base);
+        let mut a0 = vdupq_n_f32(0.0);
+        let mut a1 = vdupq_n_f32(0.0);
+        let mut a2 = vdupq_n_f32(0.0);
+        let mut a3 = vdupq_n_f32(0.0);
+        let full = len / 16 * 16;
+        let mut c = 0usize;
+        while c < full {
+            let b = vld1q_u8(bytes.as_ptr().add(c));
+            let w0 = vmovl_u8(vget_low_u8(b));
+            let w1 = vmovl_u8(vget_high_u8(b));
+            let xp = x.as_ptr().add(c);
+            a0 = vfmaq_f32(a0, lvl(vget_low_u16(w0), basev), vld1q_f32(xp));
+            a1 = vfmaq_f32(a1, lvl(vget_high_u16(w0), basev), vld1q_f32(xp.add(4)));
+            a2 = vfmaq_f32(a2, lvl(vget_low_u16(w1), basev), vld1q_f32(xp.add(8)));
+            a3 = vfmaq_f32(a3, lvl(vget_high_u16(w1), basev), vld1q_f32(xp.add(12)));
+            c += 16;
+        }
+        let acc = hsum(a0, a1, a2, a3);
+        tail_f32(acc, bytes, full, len, 1, lut, x)
+    }
+
+    /// 4 widened bytes → zero-adjusted f32 levels (`byte + base`).
+    ///
+    /// # Safety
+    /// Caller guarantees NEON.
+    #[target_feature(enable = "neon")]
+    unsafe fn lvl(h: uint16x4_t, base: int32x4_t) -> float32x4_t {
+        vcvtq_f32_s32(vaddq_s32(vreinterpretq_s32_u32(vmovl_u16(h)), base))
+    }
+
+    /// INT2 fused block dot: byte-LUT gather, 16 lanes per iteration.
+    ///
+    /// # Safety
+    /// Caller guarantees NEON, `x.len() == len`, `bytes` holding at
+    /// least `ceil(len / 4)` packed bytes, `lut.len() == 1024`.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot_int2(bytes: &[u8], len: usize, lut: &[f32], x: &[f32]) -> f32 {
+        let mut a0 = vdupq_n_f32(0.0);
+        let mut a1 = vdupq_n_f32(0.0);
+        let mut a2 = vdupq_n_f32(0.0);
+        let mut a3 = vdupq_n_f32(0.0);
+        let lp = lut.as_ptr();
+        let full = len / 16 * 16;
+        let mut c = 0usize;
+        while c < full {
+            let b = c / 4;
+            let xp = x.as_ptr().add(c);
+            a0 = vfmaq_f32(a0, vld1q_f32(lp.add(bytes[b] as usize * 4)), vld1q_f32(xp));
+            a1 = vfmaq_f32(a1, vld1q_f32(lp.add(bytes[b + 1] as usize * 4)), vld1q_f32(xp.add(4)));
+            a2 = vfmaq_f32(a2, vld1q_f32(lp.add(bytes[b + 2] as usize * 4)), vld1q_f32(xp.add(8)));
+            a3 = vfmaq_f32(a3, vld1q_f32(lp.add(bytes[b + 3] as usize * 4)), vld1q_f32(xp.add(12)));
+            c += 16;
+        }
+        let acc = hsum(a0, a1, a2, a3);
+        tail_f32(acc, bytes, full, len, 4, lut, x)
+    }
+
+    /// Integer block dot: 8 lanes per iteration, i32 lane partials.
+    ///
+    /// # Safety
+    /// Caller guarantees NEON and `qx.len() == w.len() ≤ INT_BLOCK`.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot_i32(qx: &[i8], w: &[i32]) -> i64 {
+        let n = qx.len();
+        let full = n / 8 * 8;
+        let mut acc = vdupq_n_s32(0);
+        let mut i = 0usize;
+        while i < full {
+            let a = vmovl_s8(vld1_s8(qx.as_ptr().add(i)));
+            acc = vmlaq_s32(acc, vmovl_s16(vget_low_s16(a)), vld1q_s32(w.as_ptr().add(i)));
+            acc = vmlaq_s32(acc, vmovl_s16(vget_high_s16(a)), vld1q_s32(w.as_ptr().add(i + 4)));
+            i += 8;
+        }
+        let mut t = [0i32; 4];
+        vst1q_s32(t.as_mut_ptr(), acc);
+        let mut total: i64 = t.iter().map(|&v| v as i64).sum();
+        while i < n {
+            total += qx[i] as i64 * w[i] as i64;
+            i += 1;
+        }
+        total
+    }
+
+    /// Fixed-order horizontal sum: accumulators fold pairwise, then
+    /// lanes fold pairwise — one deterministic parenthesization.
+    ///
+    /// # Safety
+    /// Caller guarantees NEON.
+    #[target_feature(enable = "neon")]
+    unsafe fn hsum(a0: float32x4_t, a1: float32x4_t, a2: float32x4_t, a3: float32x4_t) -> f32 {
+        let s = vaddq_f32(vaddq_f32(a0, a1), vaddq_f32(a2, a3));
+        let mut t = [0.0f32; 4];
+        vst1q_f32(t.as_mut_ptr(), s);
+        (t[0] + t[1]) + (t[2] + t[3])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::gemv;
+    use super::*;
+    use crate::quant::pack;
+    use crate::util::rng::Rng;
+
+    /// f64 reference for one block through the byte table.
+    fn ref_dot(bytes: &[u8], col0: usize, len: usize, lanes: usize, lut: &[f32], x: &[f32]) -> f64 {
+        let b0 = col0 / lanes;
+        (0..len)
+            .map(|i| x[i] as f64 * lut[bytes[b0 + i / lanes] as usize * lanes + i % lanes] as f64)
+            .sum()
+    }
+
+    #[test]
+    fn fused_block_dot_matches_lut_expansion_for_all_widths_and_tails() {
+        if !available() {
+            eprintln!("skipping: SIMD unavailable on this host");
+            return;
+        }
+        let mut rng = Rng::new(77);
+        for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+            let lanes = pack::lanes_per_byte(bits);
+            for z in [bits.qmin(), 1.min(bits.qmax()), bits.qmax()] {
+                let lut = gemv::build_lut_f32(bits, z);
+                for len in [1usize, 7, 15, 16, 31, 32, 33, 63, 100, 511, 512] {
+                    let nbytes = len.div_ceil(lanes);
+                    let bytes: Vec<u8> = (0..nbytes).map(|i| (i * 37 + 11) as u8).collect();
+                    let mut x = vec![0.0f32; len];
+                    rng.fill_normal(&mut x, 0.0, 1.0);
+                    let got = dot_block_f32(&bytes, 0, len, bits, z, &lut, &x) as f64;
+                    let want = ref_dot(&bytes, 0, len, lanes, &lut, &x);
+                    let scale = (0..len)
+                        .map(|i| {
+                            let w = lut[bytes[i / lanes] as usize * lanes + i % lanes] as f64;
+                            (x[i] as f64 * w).abs()
+                        })
+                        .sum::<f64>()
+                        .max(1.0);
+                    assert!(
+                        (got - want).abs() < 1e-4 * scale,
+                        "{bits:?} z={z} len={len}: {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_block_dot_is_deterministic_across_calls() {
+        if !available() {
+            eprintln!("skipping: SIMD unavailable on this host");
+            return;
+        }
+        let lut = gemv::build_lut_f32(Bits::Int4, 3);
+        let bytes: Vec<u8> = (0..100).map(|i| (i * 17 + 5) as u8).collect();
+        let mut rng = Rng::new(78);
+        let mut x = vec![0.0f32; 200];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let a = dot_block_f32(&bytes, 0, 200, Bits::Int4, 3, &lut, &x);
+        let b = dot_block_f32(&bytes, 0, 200, Bits::Int4, 3, &lut, &x);
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    #[test]
+    fn integer_block_dot_is_bit_identical_to_scalar() {
+        if !available() {
+            eprintln!("skipping: SIMD unavailable on this host");
+            return;
+        }
+        for n in [0usize, 1, 7, 8, 9, 63, 64, 100, 512] {
+            let qx: Vec<i8> = (0..n).map(|i| ((i * 29 + 3) % 255) as u8 as i8).collect();
+            let w: Vec<i32> = (0..n).map(|i| (i as i32 * 151 % 511) - 255).collect();
+            assert_eq!(dot_block_i32(&qx, &w), gemv::dot_qi32(&qx, &w), "n={n}");
+        }
+    }
+
+    #[test]
+    fn env_veto_disables_availability_logic() {
+        // Pure logic check on the veto parser — the end-to-end env
+        // round-trip lives in rust/tests/kernel_lut.rs (integration
+        // tests own the process env; unit tests must not race on it).
+        assert_eq!(available(), detect() && !env_disabled());
+    }
+}

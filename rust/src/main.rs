@@ -48,7 +48,7 @@ fn app() -> App {
                 .flag("no-amplify", "skip outlier amplification")
                 .flag("runtime", "score through PJRT instead of the CPU reference")
                 .opt("engine", "reference", "CPU engine for quantized arms: packed|reference")
-                .opt("kernel-impl", "lut", "packed kernel inner loops: lut|scalar")
+                .opt("kernel-impl", "auto", "packed kernel inner loops: auto|simd|lut|scalar")
                 .opt("export-dir", "", "also export packed arms to this dir")
                 .opt("threads", "0", "pipeline worker threads (0 = all cores)")
                 .opt("log", "info", "log level"),
@@ -64,7 +64,7 @@ fn app() -> App {
                 .opt("max-batch", "16", "executor batch size (CPU engines)")
                 .opt("max-wait-ms", "5", "batcher fill deadline in milliseconds")
                 .opt("workers", "0", "executor pool workers, CPU engines (0 = all cores)")
-                .opt("kernel-impl", "lut", "packed kernel inner loops: lut|scalar")
+                .opt("kernel-impl", "auto", "packed kernel inner loops: auto|simd|lut|scalar")
                 .opt("row-workers", "0", "row-parallel GEMV threads (0 = cores left after batch workers)")
                 .opt("prefix-cache", "32", "prompt-prefix LRU capacity (0 = disabled)")
                 .flag("full-recompute", "score via full prompt+option recompute (baseline)")

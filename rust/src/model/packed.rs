@@ -204,7 +204,11 @@ impl PackedModel {
     /// embedding read by the tied LM head) pre-built — so a long-lived
     /// worker's first decode token pays neither buffer growth nor LUT
     /// construction (`scratch.lut_builds()` stays flat across
-    /// forwards; asserted in `kernel_micro` and the tests below).
+    /// forwards; asserted in `kernel_micro` and the tests below). The
+    /// same f32 tables serve every blocked impl — the SIMD kernels
+    /// read them for INT2 gathers and row-end tails, and rebuild only
+    /// the 16-entry in-register nibble table per row — so prewarming
+    /// is impl-agnostic and nothing extra is needed for `Auto`/`Simd`.
     pub fn prewarmed_scratch(&self) -> KernelScratch {
         let mut scratch = KernelScratch::with_capacity(self.max_in_dim());
         for lin in self.linears.values() {

@@ -1,12 +1,16 @@
-//! Property tests for the LUT-fused blocked kernel engine (DESIGN.md
-//! §7): the LUT, blocked and row-parallel paths are pinned against the
-//! scalar unpack-whole-row oracle (`KernelImpl::Scalar`) across every
-//! bit width, odd column counts (tail lanes), per-row parameters,
-//! empty-cluster split planes and seq ∈ {1, 2, 7} — ≤1e-5 relative
-//! tolerance for the f32 paths, *exact* integer equality for the
-//! unpacked levels and the INT8-activation path. Plus the accumulate
-//! contract (no double-accumulate across plane kinds) and the
-//! chunked ≡ full decode property on both kernel implementations.
+//! Property tests for the blocked kernel engine (DESIGN.md §7, §9):
+//! the LUT, SIMD, blocked and row-parallel paths are pinned against
+//! the scalar unpack-whole-row oracle (`KernelImpl::Scalar`) across
+//! every bit width, odd column counts (tail lanes), per-row
+//! parameters, empty-cluster split planes and seq ∈ {1, 2, 7} — ≤1e-5
+//! relative tolerance for the f32 paths, *exact* integer equality for
+//! the unpacked levels and the INT8-activation path. Plus the
+//! accumulate contract (no double-accumulate across plane kinds), the
+//! chunked ≡ full decode property on every kernel implementation, and
+//! the runtime-dispatch contract (`Auto` resolution and the
+//! `SPLITQUANT_NO_SIMD` fallback — the env round-trip lives here, in
+//! the integration binary, because a test binary owns its process env;
+//! CI runs this suite once with the veto set and once without).
 
 use std::sync::Arc;
 
@@ -48,11 +52,19 @@ fn scratch_with(imp: KernelImpl) -> KernelScratch {
     s
 }
 
-fn parallel_scratch(workers: usize) -> KernelScratch {
+fn parallel_scratch_with(imp: KernelImpl, workers: usize) -> KernelScratch {
     let mut s = KernelScratch::new();
+    s.set_kernel_impl(imp);
     s.set_row_pool(Some(Arc::new(Pool::new(workers))));
     s.set_min_par_work(0); // force sharding even on tiny test shapes
     s
+}
+
+fn parallel_scratch(workers: usize) -> KernelScratch {
+    // Explicitly LUT: the bit-exact sharded ≡ serial assertions below
+    // compare against the serial LUT result, so the sharded scratch
+    // must not let Auto resolve to SIMD on capable hosts.
+    parallel_scratch_with(KernelImpl::Lut, workers)
 }
 
 /// A degenerate split layer whose second plane is an empty cluster:
@@ -79,9 +91,12 @@ fn with_empty_cluster(w: &Tensor, bits: Bits) -> QuantParam {
     })
 }
 
-/// Every (bits × shape × param-kind × seq) cell: the LUT path and the
-/// row-parallel LUT path must stay within 1e-5 relative of the scalar
-/// oracle, and the two LUT variants must agree bit-for-bit at seq==1.
+/// Every (bits × shape × param-kind × seq) cell: the LUT and SIMD
+/// paths and their row-parallel variants must stay within 1e-5
+/// relative of the scalar oracle, and each impl's sharded run must
+/// agree with its own serial run bit-for-bit at seq==1. On hosts
+/// without the CPU features the SIMD arm resolves to LUT and the
+/// assertions still hold (they become LUT-vs-LUT).
 #[test]
 fn lut_blocked_and_row_parallel_match_scalar_oracle() {
     let mut seed = 500;
@@ -121,6 +136,8 @@ fn lut_blocked_and_row_parallel_match_scalar_oracle() {
                         &mut scratch_with(KernelImpl::Scalar),
                     );
                     kernels::gemm(&mut y_lut, &x, seq, &lin, &mut scratch_with(KernelImpl::Lut));
+                    let mut y_simd = vec![0.0f32; seq * rows];
+                    kernels::gemm(&mut y_simd, &x, seq, &lin, &mut scratch_with(KernelImpl::Simd));
                     let scale =
                         y_scalar.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1.0) as f64;
                     assert!(
@@ -128,10 +145,26 @@ fn lut_blocked_and_row_parallel_match_scalar_oracle() {
                         "{label}: lut drifted {} (magnitude {scale})",
                         max_abs_diff(&y_lut, &y_scalar)
                     );
+                    assert!(
+                        max_abs_diff(&y_simd, &y_scalar) < 1e-5 * scale,
+                        "{label}: simd drifted {} (magnitude {scale})",
+                        max_abs_diff(&y_simd, &y_scalar)
+                    );
                     if seq == 1 {
                         let mut y_par = vec![0.0f32; rows];
                         kernels::gemm(&mut y_par, &x, 1, &lin, &mut parallel_scratch(4));
                         assert_eq!(y_par, y_lut, "{label}: row sharding changed results");
+                        // Pin the serial reference to the sharded
+                        // scratch's *resolved* impl (never Auto), so the
+                        // comparison stays bit-exact even if the env-veto
+                        // test flips `Auto` resolution concurrently.
+                        let mut spar = parallel_scratch_with(KernelImpl::Simd, 4);
+                        let mut sserial = scratch_with(spar.effective_impl());
+                        let mut y_sref = vec![0.0f32; rows];
+                        kernels::gemm(&mut y_sref, &x, 1, &lin, &mut sserial);
+                        let mut y_spar = vec![0.0f32; rows];
+                        kernels::gemm(&mut y_spar, &x, 1, &lin, &mut spar);
+                        assert_eq!(y_spar, y_sref, "{label}: simd sharding changed results");
                     }
                 }
             }
@@ -155,9 +188,12 @@ fn int8_lut_path_is_bit_identical_to_scalar_across_planes() {
                 let x = random_x(7 + seq as u64, seq, 521);
                 let mut a = vec![0.0f32; seq * 9];
                 let mut b = vec![0.0f32; seq * 9];
+                let mut c = vec![0.0f32; seq * 9];
                 kernels::gemm_int8(&mut a, &x, seq, &lin, &mut scratch_with(KernelImpl::Lut));
                 kernels::gemm_int8(&mut b, &x, seq, &lin, &mut scratch_with(KernelImpl::Scalar));
+                kernels::gemm_int8(&mut c, &x, seq, &lin, &mut scratch_with(KernelImpl::Simd));
                 assert_eq!(a, b, "{bits:?} seq={seq}: integer paths diverged");
+                assert_eq!(c, b, "{bits:?} seq={seq}: simd integer path diverged");
             }
         }
     }
@@ -203,7 +239,7 @@ fn one_hot_gemv_reads_exact_levels_on_both_impls() {
         for c in [0usize, 1, 19, 20] {
             let mut x = vec![0.0f32; 21];
             x[c] = 1.0;
-            for imp in [KernelImpl::Lut, KernelImpl::Scalar] {
+            for imp in [KernelImpl::Lut, KernelImpl::Scalar, KernelImpl::Simd] {
                 let mut y = vec![0.0f32; 6];
                 kernels::gemv(&mut y, &x, &lin, &mut scratch_with(imp));
                 for (o, &got) in y.iter().enumerate() {
@@ -248,7 +284,7 @@ fn no_double_accumulate_across_plain_split_and_dense() {
         ),
     ];
     let x = random_x(61, 2, 29);
-    for imp in [KernelImpl::Lut, KernelImpl::Scalar] {
+    for imp in [KernelImpl::Lut, KernelImpl::Scalar, KernelImpl::Simd] {
         let mut scratch = scratch_with(imp);
         for (kind, lin) in &forms {
             let mut first = vec![0.0f32; 2 * 11];
@@ -305,9 +341,10 @@ fn test_checkpoint() -> Checkpoint {
 
 /// The decode-state acceptance property on the packed engine, per
 /// kernel implementation: chunked extension through a DecodeState is
-/// bit-identical to the whole-sequence forward (the LUT path's blocked
-/// per-row order is seq-independent by construction), and the two
-/// implementations' logits stay within FP tolerance of each other.
+/// bit-identical to the whole-sequence forward (each blocked path's
+/// per-(row, block) order is seq-independent by construction), and
+/// every implementation's logits stay within FP tolerance of the
+/// scalar oracle's.
 #[test]
 fn packed_chunked_extend_equals_full_forward_on_both_impls() {
     let ck = test_checkpoint();
@@ -316,7 +353,7 @@ fn packed_chunked_extend_equals_full_forward_on_both_impls() {
     let pm = PackedModel::from_qmodel(&qm).unwrap();
     let mut ws = Workspace::new(&ck.config, 16);
     let mut full_logits = Vec::new();
-    for imp in [KernelImpl::Lut, KernelImpl::Scalar] {
+    for imp in [KernelImpl::Lut, KernelImpl::Simd, KernelImpl::Scalar] {
         let mut scratch = pm.prewarmed_scratch();
         scratch.set_kernel_impl(imp);
         let full = pm.forward_with(&toks, &mut ws, &mut scratch).unwrap();
@@ -341,13 +378,13 @@ fn packed_chunked_extend_equals_full_forward_on_both_impls() {
         }
         full_logits.push(full);
     }
-    let scale = full_logits[1]
-        .data()
-        .iter()
-        .fold(0.0f32, |m, &v| m.max(v.abs()))
-        .max(1.0) as f64;
-    let diff = max_abs_diff(full_logits[0].data(), full_logits[1].data());
-    assert!(diff < 1e-4 * scale, "impls drifted {diff} apart (magnitude {scale})");
+    // The scalar oracle ran last; pin every blocked impl against it.
+    let oracle = &full_logits[2];
+    let scale = oracle.data().iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1.0) as f64;
+    for (name, logits) in [("lut", &full_logits[0]), ("simd", &full_logits[1])] {
+        let diff = max_abs_diff(logits.data(), oracle.data());
+        assert!(diff < 1e-4 * scale, "{name} drifted {diff} from scalar (magnitude {scale})");
+    }
 }
 
 /// Row-parallel scoring through the full packed model matches the
@@ -369,5 +406,56 @@ fn packed_forward_with_row_pool_matches_serial() {
         let a = pm.forward_extend(&[t], i, &mut ws, &mut serial, &mut sa).unwrap();
         let b = pm.forward_extend(&[t], i, &mut ws, &mut par, &mut sb).unwrap();
         assert_eq!(a, b, "token {i}: row-parallel decode diverged");
+    }
+}
+
+/// The runtime-dispatch contract end to end: `Auto` resolves against
+/// the host, and setting `SPLITQUANT_NO_SIMD` makes both `Auto` and
+/// `Simd` requests fall back to the LUT impl — with correct numerics
+/// under the fallback. This is the one test that mutates the process
+/// environment; it lives in this integration binary (not the lib unit
+/// tests) so it cannot race concurrently-running unit tests that
+/// consult `simd_available()`, and it restores the prior value so the
+/// suite behaves identically whether CI exported the veto or not.
+#[test]
+fn auto_dispatch_resolves_and_env_override_falls_back_to_lut() {
+    let prior = std::env::var_os(kernels::NO_SIMD_ENV);
+    if prior.is_none() {
+        // Unvetoed: Auto must resolve to SIMD exactly when the host
+        // has the features.
+        let s = KernelScratch::new();
+        assert_eq!(s.kernel_impl(), KernelImpl::Auto);
+        let want = if kernels::simd_available() { KernelImpl::Simd } else { KernelImpl::Lut };
+        assert_eq!(s.effective_impl(), want, "Auto must track the host");
+    }
+
+    std::env::set_var(kernels::NO_SIMD_ENV, "1");
+    assert!(!kernels::simd_available(), "the env veto must disable SIMD dispatch");
+    let vetoed = KernelScratch::new();
+    assert_eq!(vetoed.effective_impl(), KernelImpl::Lut, "vetoed Auto must resolve to Lut");
+    let mut forced = KernelScratch::new();
+    forced.set_kernel_impl(KernelImpl::Simd);
+    assert_eq!(forced.kernel_impl(), KernelImpl::Simd, "the request is preserved");
+    assert_eq!(forced.effective_impl(), KernelImpl::Lut, "vetoed Simd must fall back to Lut");
+
+    // The fallback is not just a label: numerics under the veto match
+    // the scalar oracle.
+    let w = heavy_tensor(81, 9, 37);
+    let qp = QuantParam::Plain(quant::quantize_per_channel(&w, Bits::Int4));
+    let lin = pack_linear(&qp).unwrap();
+    let x = random_x(82, 1, 37);
+    let mut y_fallback = vec![0.0f32; 9];
+    kernels::gemv(&mut y_fallback, &x, &lin, &mut forced);
+    let mut y_scalar = vec![0.0f32; 9];
+    kernels::gemv(&mut y_scalar, &x, &lin, &mut scratch_with(KernelImpl::Scalar));
+    let scale = y_scalar.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1.0) as f64;
+    assert!(
+        max_abs_diff(&y_fallback, &y_scalar) < 1e-5 * scale,
+        "vetoed-fallback gemv drifted from the scalar oracle"
+    );
+
+    match prior {
+        Some(v) => std::env::set_var(kernels::NO_SIMD_ENV, v),
+        None => std::env::remove_var(kernels::NO_SIMD_ENV),
     }
 }
