@@ -30,8 +30,17 @@ Two checks, both wired into the CI bench-smoke job:
    and a tier that vanishes or degenerates (NaN timing, zero
    throughput) must not merge silently.
 
+3. Telemetry overhead gate (same REPORT): the `metrics_overhead`
+   object written by the gemv section times the INT4 decode with
+   metrics recording off vs on; the gate fails if `overhead_frac`
+   exceeds --max-metrics-overhead (default 0.03). This is the
+   DESIGN.md §10 contract: telemetry must be cheap enough to leave on
+   in a serving deployment. Reports from before the telemetry tier
+   existed (no `metrics_overhead` field) are skipped with a notice.
+
 Usage:
   check_bench_regression.py BENCH_gemv.json [--min 1.5] [--min-simd 3.0]
+                            [--max-metrics-overhead 0.03]
                             [--serving BENCH_serving.json]
 """
 
@@ -90,7 +99,37 @@ def check_serving(path: str) -> int:
     return 0
 
 
-def main() -> int:
+def check_metrics_overhead(report, path: str, max_overhead: float) -> int:
+    """Gate the telemetry-overhead tier; SKIP (0) when the report
+    predates it, FAIL (1) on a non-finite or above-threshold fraction."""
+    overhead = report.get("metrics_overhead")
+    if overhead is None:
+        print("SKIP: report predates the telemetry tier (no 'metrics_overhead')")
+        return 0
+    frac = overhead.get("overhead_frac") if isinstance(overhead, dict) else None
+    if not _finite(frac):
+        print(f"FAIL: {path} has non-finite 'metrics_overhead.overhead_frac' ({frac!r})")
+        return 1
+    off = overhead.get("off_tokens_per_s")
+    on = overhead.get("on_tokens_per_s")
+    detail = ""
+    if _finite(off) and _finite(on):
+        detail = f"  (off {off:.0f} vs on {on:.0f} tok/s)"
+    print(
+        f"telemetry overhead: {frac * 100.0:.2f}% of 1-token decode "
+        f"(ceiling {max_overhead * 100.0:.2f}%){detail}"
+    )
+    if frac > max_overhead:
+        print(
+            f"FAIL: telemetry overhead {frac * 100.0:.2f}% exceeds the "
+            f"{max_overhead * 100.0:.2f}% ceiling"
+        )
+        return 1
+    print("OK: telemetry overhead clears the ceiling")
+    return 0
+
+
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("report", help="path to BENCH_gemv.json")
     ap.add_argument(
@@ -110,12 +149,21 @@ def main() -> int:
         "simd_available is false or predates the SIMD tier",
     )
     ap.add_argument(
+        "--max-metrics-overhead",
+        type=float,
+        default=0.03,
+        dest="max_metrics_overhead",
+        help="maximum fraction of 1-token decode throughput telemetry "
+        "recording may cost (default 0.03); skipped when the report "
+        "predates the telemetry tier",
+    )
+    ap.add_argument(
         "--serving",
         default=None,
         metavar="BENCH_serving.json",
         help="also gate the streaming-generation serving tiers",
     )
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     try:
         report = _load(args.report)
@@ -168,6 +216,9 @@ def main() -> int:
             )
             return 1
         print("OK: SIMD kernels clear the regression floor")
+
+    if check_metrics_overhead(report, args.report, args.max_metrics_overhead):
+        return 1
 
     if args.serving is not None:
         return check_serving(args.serving)

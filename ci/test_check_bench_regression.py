@@ -1,0 +1,156 @@
+#!/usr/bin/env python3
+"""Smoke tests for check_bench_regression.py against synthetic reports.
+
+Stdlib-only (unittest + tempfile); run directly or via
+`python3 -m unittest discover ci` in the CI smoke job. Each case writes
+a minimal synthetic BENCH_gemv.json / BENCH_serving.json and asserts
+the gate's exit code, so the SKIP-vs-FAIL contract (old reports skip,
+degenerate values fail) cannot rot silently.
+"""
+
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from check_bench_regression import main  # noqa: E402
+
+
+def good_report(**overrides):
+    """A report that clears every gate; override fields per case."""
+    report = {
+        "int4_lut_speedup": 2.5,
+        "int4_simd_speedup": 4.0,
+        "simd_available": True,
+        "metrics_overhead": {
+            "off_tokens_per_s": 1000.0,
+            "on_tokens_per_s": 990.0,
+            "overhead_frac": 0.01,
+        },
+    }
+    for key, value in overrides.items():
+        if value is _ABSENT:
+            report.pop(key, None)
+        else:
+            report[key] = value
+    return report
+
+
+_ABSENT = object()
+
+
+class GateTest(unittest.TestCase):
+    def run_gate(self, report, extra_args=()):
+        with tempfile.NamedTemporaryFile(
+            "w", suffix=".json", delete=False, encoding="utf-8"
+        ) as f:
+            json.dump(report, f)
+            path = f.name
+        try:
+            return main([path, *extra_args])
+        finally:
+            os.unlink(path)
+
+    def test_good_report_passes(self):
+        self.assertEqual(self.run_gate(good_report()), 0)
+
+    def test_lut_below_floor_fails(self):
+        self.assertEqual(self.run_gate(good_report(int4_lut_speedup=1.1)), 1)
+
+    def test_missing_lut_speedup_fails(self):
+        self.assertEqual(self.run_gate(good_report(int4_lut_speedup=_ABSENT)), 1)
+
+    def test_simd_tier_missing_is_skipped(self):
+        # Reports from before the SIMD tier skip, not fail.
+        report = good_report(int4_simd_speedup=_ABSENT, simd_available=_ABSENT)
+        self.assertEqual(self.run_gate(report), 0)
+
+    def test_simd_unavailable_is_skipped(self):
+        report = good_report(int4_simd_speedup=1.0, simd_available=False)
+        self.assertEqual(self.run_gate(report), 0)
+
+    def test_simd_below_floor_fails(self):
+        self.assertEqual(self.run_gate(good_report(int4_simd_speedup=2.0)), 1)
+
+    def test_metrics_overhead_missing_is_skipped(self):
+        # Reports from before the telemetry tier skip, not fail.
+        report = good_report(metrics_overhead=_ABSENT)
+        self.assertEqual(self.run_gate(report), 0)
+
+    def test_metrics_overhead_above_ceiling_fails(self):
+        report = good_report(
+            metrics_overhead={
+                "off_tokens_per_s": 1000.0,
+                "on_tokens_per_s": 950.0,
+                "overhead_frac": 0.05,
+            }
+        )
+        self.assertEqual(self.run_gate(report), 1)
+
+    def test_metrics_overhead_below_ceiling_passes(self):
+        report = good_report(
+            metrics_overhead={
+                "off_tokens_per_s": 1000.0,
+                "on_tokens_per_s": 990.0,
+                "overhead_frac": 0.01,
+            }
+        )
+        self.assertEqual(self.run_gate(report), 0)
+
+    def test_metrics_overhead_non_finite_fails(self):
+        report = good_report(
+            metrics_overhead={"overhead_frac": float("nan")}
+        )
+        self.assertEqual(self.run_gate(report), 1)
+
+    def test_metrics_overhead_custom_ceiling(self):
+        report = good_report(
+            metrics_overhead={"overhead_frac": 0.05}
+        )
+        self.assertEqual(self.run_gate(report, ["--max-metrics-overhead", "0.10"]), 0)
+        self.assertEqual(self.run_gate(report, ["--max-metrics-overhead", "0.02"]), 1)
+
+    def test_serving_tiers_gate(self):
+        tier = {
+            "concurrent_sessions": 100,
+            "ttft_p50_ms": 1.0,
+            "ttft_p99_ms": 2.0,
+            "tokens_per_s": 500.0,
+        }
+        with tempfile.NamedTemporaryFile(
+            "w", suffix=".json", delete=False, encoding="utf-8"
+        ) as f:
+            json.dump({"generation_tiers": [tier, dict(tier), dict(tier)]}, f)
+            serving = f.name
+        try:
+            self.assertEqual(
+                self.run_gate(good_report(), ["--serving", serving]), 0
+            )
+        finally:
+            os.unlink(serving)
+
+    def test_serving_degenerate_tier_fails(self):
+        bad = {
+            "concurrent_sessions": 100,
+            "ttft_p50_ms": float("nan"),
+            "ttft_p99_ms": 2.0,
+            "tokens_per_s": 500.0,
+        }
+        with tempfile.NamedTemporaryFile(
+            "w", suffix=".json", delete=False, encoding="utf-8"
+        ) as f:
+            json.dump({"generation_tiers": [bad, dict(bad), dict(bad)]}, f)
+            serving = f.name
+        try:
+            self.assertEqual(
+                self.run_gate(good_report(), ["--serving", serving]), 1
+            )
+        finally:
+            os.unlink(serving)
+
+
+if __name__ == "__main__":
+    unittest.main()

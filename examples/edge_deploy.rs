@@ -8,18 +8,27 @@
 //!   2. export the packed container (what would be flashed to a device),
 //!   3. load it back (simulating the device side),
 //!   4. start the batched scoring server over the PJRT runtime,
-//!   5. fire MCQ requests and report accuracy, latency and throughput.
+//!   5. fire MCQ requests and report accuracy, latency and throughput,
+//!   6. stream generations on the packed engine (paged KV arena),
+//!   7. dump the deployment's own telemetry — the final
+//!      [`MetricsSnapshot`] with TTFT percentiles, decoded tokens/s and
+//!      the arena's occupancy high-water mark (the same registry
+//!      `serve --metrics-addr` exposes live on `/metrics`).
 //!
 //! Run: cargo run --release --example edge_deploy
+//!
+//! [`MetricsSnapshot`]: splitquant::obs::MetricsSnapshot
 
 use std::path::PathBuf;
 use std::time::Instant;
 
 use anyhow::Result;
-use splitquant::coordinator::server::{Backend, Server, ServerConfig};
+use splitquant::coordinator::server::{Backend, GenerateRequest, Server, ServerConfig};
 use splitquant::io::qmodel::{load_qmodel, save_qmodel};
 use splitquant::io::checkpoint::load_checkpoint;
+use splitquant::model::packed::PackedModel;
 use splitquant::model::quantized::{quantize_model, Method};
+use splitquant::obs;
 use splitquant::quant::Bits;
 use splitquant::runtime::scoring;
 use splitquant::split::SplitConfig;
@@ -28,6 +37,11 @@ use splitquant::util::stats::Summary;
 use splitquant::util::timer::format_duration;
 
 fn main() -> Result<()> {
+    // Telemetry on for the whole deployment loop: every serving-side
+    // series below lands in the global registry and comes back out of
+    // the final snapshot.
+    obs::set_enabled(true);
+
     // 1. Quantize on the "build host".
     let mut ck = load_checkpoint("artifacts/picollama_eval.sqtz")?;
     ck.amplify_outliers(0.003, 4.0, 7);
@@ -108,6 +122,60 @@ fn main() -> Result<()> {
         "\naccuracy over all served: {:.2}%",
         100.0 * correct as f64 / (n_burst + trickle_lat.len()) as f64
     );
+
+    // 6. Streaming generation on the packed engine: the same container
+    //    served with no PJRT artifacts, exercising the paged KV arena.
+    let pm = PackedModel::from_qmodel(&device_qm)?;
+    let gen_server = Server::start(Backend::Packed(Box::new(pm)), ServerConfig::default())?;
+    let n_gen = 32.min(problems.len());
+    let streams: Vec<_> = problems[..n_gen]
+        .iter()
+        .map(|p| {
+            gen_server.submit_generate(GenerateRequest {
+                prompt: p.prompt.clone(),
+                max_tokens: 8,
+                deadline: None,
+            })
+        })
+        .collect::<Result<_>>()?;
+    let mut gen_tokens = 0usize;
+    for s in streams {
+        gen_tokens += s.wait()?.tokens.len();
+    }
+    println!("\n-- generation ({n_gen} streams, packed engine) --");
+    println!(
+        "decoded {gen_tokens} tokens; kv blocks in use after drain: {}",
+        gen_server.kv_blocks_in_use()
+    );
+
+    // 7. The deployment's own telemetry, folded from everything above.
+    let snap = obs::snapshot();
+    let ms = |ns: f64| ns / 1e6;
+    println!("\n-- final metrics snapshot --");
+    if let Some(h) = snap.hist(obs::names::SERVE_TTFT_NS) {
+        println!(
+            "ttft p50 {:.2}ms  p99 {:.2}ms  ({} requests)",
+            ms(h.percentile(50.0)),
+            ms(h.percentile(99.0)),
+            h.count
+        );
+    }
+    if let Some(h) = snap.hist(obs::names::SERVE_LATENCY_NS) {
+        println!(
+            "latency p50 {:.2}ms  p99 {:.2}ms",
+            ms(h.percentile(50.0)),
+            ms(h.percentile(99.0))
+        );
+    }
+    let tokens = snap.counter(obs::names::SERVE_TOKENS_TOTAL).unwrap_or(0);
+    let uptime = snap.uptime.as_secs_f64();
+    println!(
+        "generated tokens: {tokens} ({:.0} tok/s over {uptime:.1}s uptime)",
+        tokens as f64 / uptime.max(1e-9)
+    );
+    let peak = snap.gauge_peak(obs::names::KV_BLOCKS_IN_USE).unwrap_or(0);
+    println!("kv arena occupancy high-water mark: {peak} blocks");
+
     std::fs::remove_file(&packed_path).ok();
     Ok(())
 }

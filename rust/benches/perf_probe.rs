@@ -25,7 +25,15 @@
 //!                       smoke job if the INT4 LUT kernel is not ≥1.5×
 //!                       the scalar baseline, or — on hosts where
 //!                       `simd_available` — if the SIMD kernel is not
-//!                       ≥3× scalar)
+//!                       ≥3× scalar). Also runs the telemetry-overhead
+//!                       tier: the same INT4 decode with metrics
+//!                       recording off vs on; the gate fails if the
+//!                       overhead fraction exceeds
+//!                       `--max-metrics-overhead` (3% by default)
+//!   --metrics-snapshot PATH
+//!                       write the final global metrics snapshot
+//!                       (counters recorded by the probes themselves)
+//!                       as JSON (`metrics_snapshot.json` in CI)
 
 use splitquant::bench::{black_box, Bench, BenchConfig};
 use splitquant::kernels::{self, KernelScratch};
@@ -45,6 +53,7 @@ struct Options {
     kernels_json: Option<String>,
     serving_json: Option<String>,
     gemv_json: Option<String>,
+    metrics_snapshot: Option<String>,
 }
 
 fn parse_args() -> Options {
@@ -54,6 +63,7 @@ fn parse_args() -> Options {
         kernels_json: None,
         serving_json: None,
         gemv_json: None,
+        metrics_snapshot: None,
     };
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
@@ -74,11 +84,16 @@ fn parse_args() -> Options {
             "--gemv-json" => {
                 opts.gemv_json = Some(args.next().expect("--gemv-json needs a path"));
             }
+            "--metrics-snapshot" => {
+                opts.metrics_snapshot =
+                    Some(args.next().expect("--metrics-snapshot needs a path"));
+            }
             "--bench" => {} // passed by `cargo bench`; ignore
             other => {
                 eprintln!(
                     "unknown option '{other}' (supported: --iters N, --json PATH, \
-                     --kernels-json PATH, --serving-json PATH, --gemv-json PATH)"
+                     --kernels-json PATH, --serving-json PATH, --gemv-json PATH, \
+                     --metrics-snapshot PATH)"
                 );
                 std::process::exit(2);
             }
@@ -250,6 +265,15 @@ fn main() {
     if let Some(path) = opts.gemv_json {
         gemv_section(&path, opts.iters);
     }
+
+    if let Some(path) = opts.metrics_snapshot {
+        // Counters accumulated by the probes (the gemv section's
+        // metrics-on tier records kernel dispatches) survive toggling
+        // recording off, so the snapshot is meaningful here.
+        let snap = splitquant::obs::snapshot().to_json().to_string_pretty();
+        std::fs::write(&path, snap).expect("write metrics snapshot");
+        println!("wrote {path}");
+    }
 }
 
 /// GEMV section: the LUT-fused kernel trajectory (DESIGN.md §7). For
@@ -410,7 +434,7 @@ fn gemv_section(path: &str, fixed_iters: Option<usize>) {
     let pm = PackedModel::from_qmodel(&qm).expect("pack extend model");
     let mut ws = Workspace::new(&cfg, 8);
     let prompt = [1usize, 2, 3, 4];
-    let mut eb = Bench::with_config("gemv.extend", config);
+    let mut eb = Bench::with_config("gemv.extend", config.clone());
     let mut extend_fields: Vec<(String, f64)> = Vec::new();
     for (label, imp, pool) in [
         ("scalar", KernelImpl::Scalar, None),
@@ -445,8 +469,46 @@ fn gemv_section(path: &str, fixed_iters: Option<usize>) {
     extend_obj.push(("lut_extend_speedup", Json::num(extend_speedup)));
     extend_obj.push(("simd_extend_speedup", Json::num(simd_extend_speedup)));
 
-    let results: Vec<Json> =
-        gb.results().iter().chain(eb.results().iter()).map(|r| r.to_json()).collect();
+    // --- telemetry overhead tier: the same INT4 LUT 1-token extend,
+    // timed with metrics recording disabled vs enabled. The kernels'
+    // per-dispatch sharded counters are the hottest recording site in
+    // the decode path, so this bounds what `--metrics-addr` costs a
+    // serving deployment; `ci/check_bench_regression.py` fails the
+    // smoke job if `overhead_frac` exceeds `--max-metrics-overhead`
+    // (0.03 by default).
+    let mut ob = Bench::with_config("gemv.metrics", config);
+    let was_enabled = splitquant::obs::enabled();
+    let mut tok_per_s = [0.0f64; 2];
+    for (slot, (label, on)) in [("off", false), ("on", true)].into_iter().enumerate() {
+        splitquant::obs::set_enabled(on);
+        let mut scratch = pm.prewarmed_scratch();
+        scratch.set_kernel_impl(KernelImpl::Lut);
+        let mut state = DecodeState::new(&cfg);
+        pm.prompt_pass(&prompt, &mut ws, &mut scratch, &mut state).expect("prompt pass");
+        let t = ob.run(&format!("forward_extend_1tok[lut,INT4,metrics_{label}]"), || {
+            let logits = pm
+                .forward_extend(&[7], prompt.len(), &mut ws, &mut scratch, &mut state)
+                .expect("extend");
+            black_box(logits.row(0)[0])
+        });
+        tok_per_s[slot] = 1.0 / t.as_secs_f64().max(1e-12);
+    }
+    splitquant::obs::set_enabled(was_enabled);
+    let (off_tps, on_tps) = (tok_per_s[0], tok_per_s[1]);
+    let overhead_frac = (off_tps - on_tps).max(0.0) / off_tps.max(1e-12);
+    println!(
+        "telemetry overhead on 1-token decode: {:.2}%  \
+         (metrics off {off_tps:.0} vs on {on_tps:.0} tok/s)",
+        overhead_frac * 100.0
+    );
+
+    let results: Vec<Json> = gb
+        .results()
+        .iter()
+        .chain(eb.results().iter())
+        .chain(ob.results().iter())
+        .map(|r| r.to_json())
+        .collect();
     let report = Json::obj(vec![
         ("bench", Json::str("perf_probe.gemv")),
         ("fixed_iters", Json::num(fixed_iters.unwrap_or(0) as f64)),
@@ -457,6 +519,14 @@ fn gemv_section(path: &str, fixed_iters: Option<usize>) {
         ("int4_lut_speedup", Json::num(int4_lut_speedup)),
         ("int4_simd_speedup", Json::num(int4_simd_speedup)),
         ("int4_lut_parallel_speedup", Json::num(int4_par_speedup)),
+        (
+            "metrics_overhead",
+            Json::obj(vec![
+                ("off_tokens_per_s", Json::num(off_tps)),
+                ("on_tokens_per_s", Json::num(on_tps)),
+                ("overhead_frac", Json::num(overhead_frac)),
+            ]),
+        ),
         ("sections", Json::arr(sections)),
         ("extend", Json::obj(extend_obj)),
         ("results", Json::arr(results)),

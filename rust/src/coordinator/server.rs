@@ -60,7 +60,7 @@
 use std::collections::{BTreeMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -72,6 +72,7 @@ use crate::model::forward::{self, CkOps, ForwardOps, Workspace};
 use crate::model::packed::PackedModel;
 use crate::model::quantized::QuantizedModel;
 use crate::model::{Checkpoint, PicoLlamaConfig};
+use crate::obs;
 use crate::runtime::{ArgValue, Engine, EngineKind};
 use crate::util::pool::{thread_budget, Pool};
 
@@ -112,6 +113,74 @@ impl std::fmt::Display for ServeError {
 }
 
 impl std::error::Error for ServeError {}
+
+/// Handles into the global metrics registry for every serving-level
+/// series (DESIGN.md §10). Resolved once behind a `OnceLock` so the hot
+/// paths touch pre-looked-up handles; each handle gates its recording
+/// on [`obs::enabled`], so everything here is near-free when telemetry
+/// is off. Global rather than per-[`Server`] because client-side sheds
+/// ([`Server::submit_generate`]'s `Overloaded` fast path) happen off
+/// the serve-loop thread.
+struct ServeMetrics {
+    queue_depth: obs::Gauge,
+    sessions_active: obs::Gauge,
+    admissions: obs::Counter,
+    score_requests: obs::Counter,
+    shed_overloaded: obs::Counter,
+    shed_deadline: obs::Counter,
+    shed_kv: obs::Counter,
+    shed_unsupported: obs::Counter,
+    shed_invalid: obs::Counter,
+    shed_internal: obs::Counter,
+    ttft_ns: obs::Histogram,
+    latency_ns: obs::Histogram,
+    tokens: obs::Counter,
+}
+
+fn serve_metrics() -> &'static ServeMetrics {
+    static M: OnceLock<ServeMetrics> = OnceLock::new();
+    M.get_or_init(|| {
+        let shed = |reason| obs::counter_with(obs::names::SERVE_SHED_TOTAL, &[("reason", reason)]);
+        ServeMetrics {
+            queue_depth: obs::gauge(obs::names::SERVE_QUEUE_DEPTH),
+            sessions_active: obs::gauge(obs::names::SERVE_SESSIONS_ACTIVE),
+            admissions: obs::counter(obs::names::SERVE_ADMISSIONS_TOTAL),
+            score_requests: obs::counter(obs::names::SERVE_SCORE_REQUESTS_TOTAL),
+            shed_overloaded: shed("overloaded"),
+            shed_deadline: shed("deadline"),
+            shed_kv: shed("kv_exhausted"),
+            shed_unsupported: shed("unsupported"),
+            shed_invalid: shed("invalid"),
+            shed_internal: shed("internal"),
+            ttft_ns: obs::histogram(obs::names::SERVE_TTFT_NS),
+            latency_ns: obs::histogram(obs::names::SERVE_LATENCY_NS),
+            tokens: obs::counter(obs::names::SERVE_TOKENS_TOTAL),
+        }
+    })
+}
+
+impl ServeMetrics {
+    /// Bump the `reason`-labeled shed counter matching a typed serve
+    /// error. Called at every site that emits one, so the labeled
+    /// series sum to exactly the typed errors clients observe (pinned
+    /// in `rust/tests/obs_metrics.rs`).
+    fn shed(&self, e: &ServeError) {
+        match e {
+            ServeError::DeadlineExceeded => self.shed_deadline.inc(),
+            ServeError::Overloaded => self.shed_overloaded.inc(),
+            ServeError::KvExhausted => self.shed_kv.inc(),
+            ServeError::Unsupported(_) => self.shed_unsupported.inc(),
+            ServeError::Invalid(_) => self.shed_invalid.inc(),
+            ServeError::Internal(_) => self.shed_internal.inc(),
+        }
+    }
+
+    /// Record a completed request's TTFT and total latency.
+    fn observe_timing(&self, t: &RequestTiming) {
+        self.ttft_ns.record_duration(t.ttft());
+        self.latency_ns.record_duration(t.total());
+    }
+}
 
 /// Wall-clock phases of one served request. `queue` is enqueue →
 /// admission into an executing batch/step; `prefill` is the prompt
@@ -629,6 +698,7 @@ impl Server {
     pub fn submit_generate(&self, spec: GenerateRequest) -> Result<TokenStream> {
         if self.pending.fetch_add(1, Ordering::SeqCst) >= self.config.queue_cap {
             self.pending.fetch_sub(1, Ordering::SeqCst);
+            serve_metrics().shed(&ServeError::Overloaded);
             return Err(ServeError::Overloaded.into());
         }
         let (etx, erx) = mpsc::channel();
@@ -815,11 +885,11 @@ impl Executor {
                             Some(cache),
                         )
                     } else {
-                        // The full-recompute oracle has no prefill/decode
-                        // boundary: the whole recompute counts as decode.
-                        let t0 = Instant::now();
-                        let r = eval::score_problem_packed_full(pm, p, &mut bufs.ws, &mut bufs.scratch)?;
-                        Ok((r, PhaseTimes { prefill: Duration::ZERO, decode: t0.elapsed() }))
+                        // Full recompute with the real prefill/decode
+                        // split: each option's prompt pass is prefill,
+                        // its extension is decode. Logprobs stay
+                        // bit-identical to the untimed oracle.
+                        eval::score_problem_packed_full_timed(pm, p, bufs)
                     }
                 }))
             }
@@ -843,9 +913,7 @@ impl Executor {
                             Some(cache),
                         )
                     } else {
-                        let t0 = Instant::now();
-                        let r = eval::score_problem_full(ck, p, &mut bufs.ws)?;
-                        Ok((r, PhaseTimes { prefill: Duration::ZERO, decode: t0.elapsed() }))
+                        eval::score_problem_full_timed(ck, p, bufs)
                     }
                 }))
             }
@@ -905,6 +973,7 @@ impl GenSession {
     /// afterwards.
     fn advance<O: ForwardOps>(&mut self, ops: &mut O, ws: &mut Workspace) -> Result<()> {
         let row = if self.prefilled {
+            let _span = crate::span!("decode_step");
             let t0 = Instant::now();
             let last = *self.tokens.last().expect("decode step before first token");
             let logits = forward::forward_extend(ops, &[last], self.state.len(), ws, &mut self.state)?;
@@ -912,6 +981,7 @@ impl GenSession {
             self.decode += t0.elapsed();
             row
         } else {
+            let _span = crate::span!("prefill");
             let t0 = Instant::now();
             let row = forward::prompt_pass(ops, &self.prompt, ws, &mut self.state)?;
             self.prefill = t0.elapsed();
@@ -954,6 +1024,7 @@ struct GenJob {
 impl GenJob {
     /// Terminal error without admission; consumes the job.
     fn shed(self, e: ServeError, pending: &AtomicUsize) {
+        serve_metrics().shed(&e);
         let _ = self.events.send(TokenEvent::Error(e));
         pending.fetch_sub(1, Ordering::SeqCst);
     }
@@ -1053,6 +1124,7 @@ fn serve_loop(
                 backlog.push_back(waiting);
             }
         }
+        serve_metrics().queue_depth.set(backlog.len() as i64);
 
         // Scoring: execute everything drained, in batch-sized chunks.
         while !scores.is_empty() {
@@ -1067,6 +1139,7 @@ fn serve_loop(
             let results = exec.step_sessions(&sessions);
             retire_and_emit(&mut sessions, results, pending);
         }
+        serve_metrics().sessions_active.set(sessions.len() as i64);
     }
 }
 
@@ -1172,6 +1245,7 @@ fn admit(
         decode: Duration::ZERO,
         prefilled: false,
     }));
+    serve_metrics().admissions.inc();
     None
 }
 
@@ -1182,6 +1256,7 @@ fn shed_expired(sessions: &mut Vec<Mutex<GenSession>>, pending: &AtomicUsize) {
     sessions.retain(|slot| {
         let s = slot.lock().unwrap();
         if s.deadline.is_some_and(|d| now >= d) {
+            serve_metrics().shed(&ServeError::DeadlineExceeded);
             let _ = s.events.send(TokenEvent::Error(ServeError::DeadlineExceeded));
             pending.fetch_sub(1, Ordering::SeqCst);
             false // dropping the session frees its arena blocks
@@ -1204,9 +1279,9 @@ fn retire_and_emit(
         let s = slot.into_inner().unwrap();
         match res {
             Err(e) => {
-                let _ = s
-                    .events
-                    .send(TokenEvent::Error(ServeError::Internal(format!("{e:#}"))));
+                let err = ServeError::Internal(format!("{e:#}"));
+                serve_metrics().shed(&err);
+                let _ = s.events.send(TokenEvent::Error(err));
                 pending.fetch_sub(1, Ordering::SeqCst);
             }
             Ok(()) => {
@@ -1223,6 +1298,9 @@ fn retire_and_emit(
                         state,
                         ..
                     } = s;
+                    let m = serve_metrics();
+                    m.observe_timing(&timing);
+                    m.tokens.add(tokens.len() as u64);
                     // Blocks return to the arena *before* Done is
                     // visible, so a client that observed the terminal
                     // event sees occupancy already released.
@@ -1248,8 +1326,10 @@ fn execute_score_batch(exec: &Executor, config: &ServerConfig, jobs: Vec<ScoreJo
     let mut live = Vec::with_capacity(jobs.len());
     for job in jobs {
         if job.deadline.is_some_and(|d| started >= d) {
+            serve_metrics().shed(&ServeError::DeadlineExceeded);
             let _ = job.respond.send(Err(ServeError::DeadlineExceeded.into()));
         } else {
+            serve_metrics().score_requests.inc();
             live.push(job);
         }
     }
@@ -1270,6 +1350,9 @@ fn execute_score_batch(exec: &Executor, config: &ServerConfig, jobs: Vec<ScoreJo
                     },
                     batch_size,
                 });
+                if let Ok(r) = &resp {
+                    serve_metrics().observe_timing(&r.timing);
+                }
                 let _ = job.respond.send(resp);
             }
         }

@@ -240,26 +240,32 @@ pub(crate) fn score_problem_session_timed<O: ForwardOps>(
     anyhow::ensure!(!problem.prompt.is_empty(), "problem has an empty prompt");
     let plen = problem.prompt.len();
     let prefill_started = Instant::now();
-    let cached = cache.and_then(|c| c.lock().unwrap().get(&problem.prompt));
-    let last_row = match cached {
-        Some(entry) => {
-            // Hit: restore the prompt's K/V into this worker's state
-            // (payload copy happens outside the cache lock).
-            state.copy_from(&entry.state);
-            entry.last_row.clone()
-        }
-        None => {
-            let last = forward::prompt_pass(ops, &problem.prompt, ws, state)?;
-            if let Some(c) = cache {
-                let entry = PrefixEntry::new(state.snapshot(plen), last.clone());
-                c.lock().unwrap().insert(problem.prompt.clone(), entry);
+    let last_row = {
+        let _span = crate::span!("prefill");
+        let cached = cache.and_then(|c| c.lock().unwrap().get(&problem.prompt));
+        match cached {
+            Some(entry) => {
+                // Hit: restore the prompt's K/V into this worker's state
+                // (payload copy happens outside the cache lock).
+                state.copy_from(&entry.state);
+                entry.last_row.clone()
             }
-            last
+            None => {
+                let last = forward::prompt_pass(ops, &problem.prompt, ws, state)?;
+                if let Some(c) = cache {
+                    let entry = PrefixEntry::new(state.snapshot(plen), last.clone());
+                    c.lock().unwrap().insert(problem.prompt.clone(), entry);
+                }
+                last
+            }
         }
     };
     let prefill = prefill_started.elapsed();
     let decode_started = Instant::now();
-    let logprobs = forward::option_logprobs(ops, plen, &last_row, &problem.options, ws, state)?;
+    let logprobs = {
+        let _span = crate::span!("decode");
+        forward::option_logprobs(ops, plen, &last_row, &problem.options, ws, state)?
+    };
     let decode = decode_started.elapsed();
     Ok((
         ProblemResult {
@@ -340,6 +346,72 @@ pub fn score_problem_packed_full(
     scratch: &mut KernelScratch,
 ) -> Result<ProblemResult> {
     score_with(problem, |prompt, opt| pm.continuation_logprob(prompt, opt, ws, scratch))
+}
+
+/// Full-recompute scoring with the prefill/decode wall-clock split
+/// measured alongside the result. Each option re-runs the prompt pass
+/// (timed as prefill — full recompute deliberately pays the prompt once
+/// per option, that is its cost model) and then scores the option as a
+/// single-option extension (timed as decode). Logprobs are bit-identical
+/// to the untimed `*_full` oracles: the chunked prompt+extension forward
+/// is pinned byte-for-byte against the whole-sequence forward in
+/// `rust/tests/decode_state.rs`.
+fn score_full_session_timed<O: ForwardOps>(
+    ops: &mut O,
+    problem: &McqProblem,
+    ws: &mut Workspace,
+    state: &mut DecodeState,
+) -> Result<(ProblemResult, PhaseTimes)> {
+    let plen = problem.prompt.len();
+    let mut prefill = Duration::ZERO;
+    let mut decode = Duration::ZERO;
+    let mut logprobs = Vec::with_capacity(problem.options.len());
+    for opt in &problem.options {
+        let t0 = Instant::now();
+        let last_row = {
+            let _span = crate::span!("prefill");
+            forward::prompt_pass(ops, &problem.prompt, ws, state)?
+        };
+        prefill += t0.elapsed();
+        let t1 = Instant::now();
+        let lp = {
+            let _span = crate::span!("decode");
+            forward::option_logprobs(ops, plen, &last_row, std::slice::from_ref(opt), ws, state)?
+        };
+        decode += t1.elapsed();
+        logprobs.push(lp[0]);
+    }
+    Ok((
+        ProblemResult {
+            chosen: nan_safe_argmax(&logprobs),
+            correct: problem.correct,
+            logprobs,
+        },
+        PhaseTimes { prefill, decode },
+    ))
+}
+
+/// [`score_problem_full`] with the real prefill/decode split (the
+/// server's `reuse_prefix: false` reference path).
+pub fn score_problem_full_timed(
+    ck: &Checkpoint,
+    problem: &McqProblem,
+    bufs: &mut ScoreBuffers,
+) -> Result<(ProblemResult, PhaseTimes)> {
+    let mut ops = CkOps::new(ck);
+    score_full_session_timed(&mut ops, problem, &mut bufs.ws, &mut bufs.state)
+}
+
+/// [`score_problem_packed_full`] with the real prefill/decode split
+/// (the server's `reuse_prefix: false` packed path).
+pub fn score_problem_packed_full_timed(
+    pm: &PackedModel,
+    problem: &McqProblem,
+    bufs: &mut ScoreBuffers,
+) -> Result<(ProblemResult, PhaseTimes)> {
+    let ScoreBuffers { ws, state, scratch } = bufs;
+    let mut ops = pm.ops(scratch);
+    score_full_session_timed(&mut ops, problem, ws, state)
 }
 
 /// Evaluate a packed model over a problem set, parallelized over

@@ -80,8 +80,9 @@
 mod gemv;
 mod simd;
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
+use crate::obs;
 use crate::quant::{pack, Bits, Granularity, QuantParams, QuantizedTensor};
 use crate::tensor::Tensor;
 use crate::util::pool::Pool;
@@ -154,6 +155,42 @@ impl KernelImpl {
                 }
             }
         }
+    }
+}
+
+/// Telemetry handles for kernel dispatch, looked up once. Indexed by
+/// [`impl_slot`] (scalar/lut/simd — the resolved impls; `Auto` never
+/// reaches dispatch).
+struct KernelMetrics {
+    dispatch: [obs::Counter; 3],
+    rows: [obs::Counter; 3],
+    lut_builds: obs::Counter,
+}
+
+fn kernel_metrics() -> &'static KernelMetrics {
+    static M: OnceLock<KernelMetrics> = OnceLock::new();
+    M.get_or_init(|| {
+        let per = |name: &str| {
+            [
+                obs::counter_with(name, &[("impl", "scalar")]),
+                obs::counter_with(name, &[("impl", "lut")]),
+                obs::counter_with(name, &[("impl", "simd")]),
+            ]
+        };
+        KernelMetrics {
+            dispatch: per(obs::names::KERNEL_DISPATCH_TOTAL),
+            rows: per(obs::names::KERNEL_ROWS_TOTAL),
+            lut_builds: obs::counter(obs::names::KERNEL_LUT_BUILDS_TOTAL),
+        }
+    })
+}
+
+/// Counter slot of a *resolved* impl.
+fn impl_slot(eff: KernelImpl) -> usize {
+    match eff {
+        KernelImpl::Scalar => 0,
+        KernelImpl::Lut | KernelImpl::Auto => 1,
+        KernelImpl::Simd => 2,
     }
 }
 
@@ -442,9 +479,30 @@ impl KernelScratch {
     /// Select the inner-loop implementation (default
     /// [`KernelImpl::Auto`]). Resolution against the host CPU happens
     /// here, once — see [`KernelImpl::resolve`].
+    ///
+    /// A forced `Simd` that the host cannot run is no longer a silent
+    /// fallback: the first occurrence logs a warning, and every
+    /// resolution records a `kernel_resolved_impl{requested,resolved}`
+    /// telemetry gauge (written even while recording is disabled, so
+    /// the dispatch decision is visible in the first snapshot).
     pub fn set_kernel_impl(&mut self, imp: KernelImpl) {
         self.imp = imp;
         self.eff = imp.resolve();
+        if imp == KernelImpl::Simd && self.eff != KernelImpl::Simd {
+            static FALLBACK_WARNED: std::sync::Once = std::sync::Once::new();
+            FALLBACK_WARNED.call_once(|| {
+                crate::log_warn!(
+                    "kernel impl 'simd' was requested but this host cannot run it \
+                     (AVX2+FMA/NEON missing or {NO_SIMD_ENV} veto); falling back to '{}'",
+                    self.eff.name()
+                );
+            });
+        }
+        obs::gauge_with(
+            obs::names::KERNEL_RESOLVED_IMPL,
+            &[("requested", imp.name()), ("resolved", self.eff.name())],
+        )
+        .set_always(1);
     }
 
     /// The impl as requested via [`Self::set_kernel_impl`] (may be
@@ -484,8 +542,13 @@ impl KernelScratch {
     /// path ([`gemm_int8`]) ensures its i32 tables on first use, so a
     /// worker that never scores through it carries no dead tables.
     pub fn prewarm_matrix(&mut self, m: &PackedMatrix) {
+        let builds_before = self.luts.builds();
         for &z in &m.zps {
             self.luts.ensure_f32(m.bits, z);
+        }
+        let built = self.luts.builds() - builds_before;
+        if built > 0 {
+            kernel_metrics().lut_builds.add(built as u64);
         }
     }
 
@@ -558,6 +621,12 @@ fn accumulate_planes(
     let (out_dim, in_dim) = (planes[0].rows, planes[0].cols);
     debug_assert_eq!(x.len(), seq * in_dim, "x length");
     debug_assert_eq!(y.len(), seq * out_dim, "y length");
+    if obs::enabled() {
+        let km = kernel_metrics();
+        let slot = impl_slot(scratch.eff);
+        km.dispatch[slot].inc();
+        km.rows[slot].add((seq * out_dim) as u64);
+    }
     if scratch.eff == KernelImpl::Scalar {
         for m in planes {
             accumulate_matrix_scalar(y, x, seq, m, scratch);
@@ -566,10 +635,15 @@ fn accumulate_planes(
     }
     // Both blocked impls consume the f32 byte tables: the LUT path for
     // every lane, the SIMD path for INT2 gathers and row-end tails.
+    let builds_before = scratch.luts.builds();
     for m in planes {
         for &z in &m.zps {
             scratch.luts.ensure_f32(m.bits, z);
         }
+    }
+    let built = scratch.luts.builds() - builds_before;
+    if built > 0 {
+        kernel_metrics().lut_builds.add(built as u64);
     }
     let use_simd = scratch.eff == KernelImpl::Simd;
     let work: usize = planes.iter().map(|m| m.rows * m.cols).sum();

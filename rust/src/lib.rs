@@ -23,6 +23,11 @@
 //! the worker pool (`--threads` on the CLI), merged deterministically so
 //! the output is bit-identical to the sequential path.
 //!
+//! Runtime telemetry — the global metrics registry, span tracing, and
+//! the `/metrics` endpoint behind `serve --metrics-addr` — lives in
+//! [`obs`] (DESIGN.md §10), zero-dependency and near-free when
+//! disabled.
+//!
 //! See README.md for the stack overview and how to run the tier-1
 //! verify, DESIGN.md (repo root) for the design notes and experiment
 //! index, and EXPERIMENTS.md for results.
@@ -36,6 +41,7 @@ pub mod io;
 pub mod kernels;
 pub mod kmeans;
 pub mod model;
+pub mod obs;
 pub mod pipeline;
 pub mod quant;
 pub mod runtime;

@@ -36,6 +36,7 @@ fn app() -> App {
                 .opt("ocs-ratio", "0.05", "OCS channel expansion ratio")
                 .flag("dynamic-k", "choose k per layer by inertia elbow")
                 .opt("threads", "0", "pipeline worker threads (0 = all cores)")
+                .opt("metrics-json", "", "write a final telemetry snapshot JSON to this path")
                 .opt("log", "info", "log level"),
         )
         .command(
@@ -51,6 +52,7 @@ fn app() -> App {
                 .opt("kernel-impl", "auto", "packed kernel inner loops: auto|simd|lut|scalar")
                 .opt("export-dir", "", "also export packed arms to this dir")
                 .opt("threads", "0", "pipeline worker threads (0 = all cores)")
+                .opt("metrics-json", "", "write a final telemetry snapshot JSON to this path")
                 .opt("log", "info", "log level"),
         )
         .command(
@@ -74,6 +76,8 @@ fn app() -> App {
                 .opt("max-new-tokens", "8", "tokens to generate per request (stream mode)")
                 .opt("deadline-ms", "0", "per-request deadline in milliseconds (0 = none)")
                 .opt("threads", "0", "pipeline worker threads (0 = all cores)")
+                .opt("metrics-addr", "", "serve live metrics on this address (e.g. 127.0.0.1:9100)")
+                .opt("metrics-json", "", "write a final telemetry snapshot JSON to this path")
                 .opt("log", "info", "log level"),
         )
         .command(
@@ -93,6 +97,49 @@ fn parse_bits(m: &Matches) -> Result<Bits> {
     Bits::from_width(m.get_usize("bits")?)
 }
 
+/// Telemetry lifecycle shared by the subcommands that support it:
+/// `--metrics-addr` / `--metrics-json` turn the global registry on,
+/// the former additionally starts the live `/metrics` endpoint (held
+/// alive by this guard), and [`Telemetry::finish`] dumps the final
+/// snapshot. With neither option set everything stays disabled and the
+/// hot paths pay one relaxed atomic load per recording site.
+struct Telemetry {
+    _server: Option<splitquant::obs::http::MetricsServer>,
+    json_path: Option<String>,
+}
+
+impl Telemetry {
+    fn from_matches(m: &Matches) -> Result<Telemetry> {
+        let addr = m.get_opt("metrics-addr").filter(|s| !s.is_empty());
+        let json_path = m.get_opt("metrics-json").filter(|s| !s.is_empty());
+        if addr.is_some() || json_path.is_some() {
+            splitquant::obs::set_enabled(true);
+        }
+        let server = match addr {
+            Some(a) => {
+                let srv = splitquant::obs::http::serve(a)?;
+                log_info!("metrics endpoint listening on http://{}/metrics", srv.addr());
+                Some(srv)
+            }
+            None => None,
+        };
+        Ok(Telemetry {
+            _server: server,
+            json_path: json_path.map(String::from),
+        })
+    }
+
+    /// Write the final snapshot (when `--metrics-json` asked for one).
+    fn finish(&self) -> Result<()> {
+        if let Some(path) = &self.json_path {
+            let snap = splitquant::obs::snapshot().to_json().to_string_pretty();
+            std::fs::write(path, snap)?;
+            log_info!("wrote metrics snapshot to {path}");
+        }
+        Ok(())
+    }
+}
+
 fn split_cfg(m: &Matches) -> Result<SplitConfig> {
     let mut cfg = SplitConfig::with_k(m.get_usize("k")?);
     if m.get_opt("strategy") == Some("rowwise") {
@@ -105,6 +152,7 @@ fn split_cfg(m: &Matches) -> Result<SplitConfig> {
 }
 
 fn cmd_quantize(m: &Matches) -> Result<()> {
+    let telemetry = Telemetry::from_matches(m)?;
     let ck = load_checkpoint(m.get("ckpt")?)?;
     let bits = parse_bits(m)?;
     let method = match m.get("method")? {
@@ -138,10 +186,11 @@ fn cmd_quantize(m: &Matches) -> Result<()> {
         human_bytes(ck.fp32_bytes()),
     );
     println!("{}", report.render());
-    Ok(())
+    telemetry.finish()
 }
 
 fn cmd_eval(m: &Matches) -> Result<()> {
+    let telemetry = Telemetry::from_matches(m)?;
     let mut spec = PipelineSpec::new(m.get("ckpt")?, m.get("problems")?);
     spec.use_runtime = m.flag("runtime");
     spec.engine = EngineKind::parse_cpu(m.get("engine")?)?;
@@ -196,13 +245,14 @@ fn cmd_eval(m: &Matches) -> Result<()> {
     }
     println!("{}", table.render());
     println!("--- stage profile ---\n{}", coord.profiler.report());
-    Ok(())
+    telemetry.finish()
 }
 
 fn cmd_serve(m: &Matches) -> Result<()> {
     use splitquant::coordinator::server::{Backend, Server, ServerConfig};
     use std::time::Instant;
 
+    let telemetry = Telemetry::from_matches(m)?;
     let bits = parse_bits(m)?;
     let ck = load_checkpoint(m.get("ckpt")?)?;
     let (problems, _) = splitquant::data::load_problems(m.get("problems")?)?;
@@ -237,7 +287,8 @@ fn cmd_serve(m: &Matches) -> Result<()> {
     let server = Server::start(backend, config)?;
 
     if m.flag("stream") {
-        return serve_stream_demo(&server, &problems, n_requests, max_new_tokens);
+        serve_stream_demo(&server, &problems, n_requests, max_new_tokens)?;
+        return telemetry.finish();
     }
 
     let t0 = Instant::now();
@@ -274,7 +325,7 @@ fn cmd_serve(m: &Matches) -> Result<()> {
         t.median,
         splitquant::util::stats::Summary::of(&batch_sizes).mean
     );
-    Ok(())
+    telemetry.finish()
 }
 
 /// `serve --stream`: fire one streaming generation per request (prompts

@@ -33,9 +33,30 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use super::PicoLlamaConfig;
+use crate::obs;
+
+/// Telemetry handles for the arena and the prefix cache, looked up
+/// once. The occupancy gauge tracks whichever arena transitioned last;
+/// a serving process has exactly one.
+struct DecodeMetrics {
+    kv_in_use: obs::Gauge,
+    kv_failures: obs::Counter,
+    cache_hits: obs::Counter,
+    cache_misses: obs::Counter,
+}
+
+fn metrics() -> &'static DecodeMetrics {
+    static M: OnceLock<DecodeMetrics> = OnceLock::new();
+    M.get_or_init(|| DecodeMetrics {
+        kv_in_use: obs::gauge(obs::names::KV_BLOCKS_IN_USE),
+        kv_failures: obs::counter(obs::names::KV_RESERVATION_FAILURES),
+        cache_hits: obs::counter(obs::names::PREFIX_CACHE_HITS),
+        cache_misses: obs::counter(obs::names::PREFIX_CACHE_MISSES),
+    })
+}
 
 /// A paged state could not rent enough blocks from its [`KvArena`].
 ///
@@ -130,11 +151,13 @@ impl KvArena {
     fn alloc(&self) -> Option<Box<[f32]>> {
         if let Some(b) = self.free.lock().unwrap().pop() {
             self.in_use.fetch_add(1, Ordering::SeqCst);
+            self.note_occupancy();
             return Some(b);
         }
         loop {
             let created = self.created.load(Ordering::SeqCst);
             if created >= self.total_blocks {
+                metrics().kv_failures.inc();
                 return None;
             }
             if self
@@ -143,6 +166,7 @@ impl KvArena {
                 .is_ok()
             {
                 self.in_use.fetch_add(1, Ordering::SeqCst);
+                self.note_occupancy();
                 return Some(vec![0.0f32; self.block_floats].into_boxed_slice());
             }
         }
@@ -152,6 +176,15 @@ impl KvArena {
     fn release(&self, block: Box<[f32]>) {
         self.free.lock().unwrap().push(block);
         self.in_use.fetch_sub(1, Ordering::SeqCst);
+        self.note_occupancy();
+    }
+
+    /// Mirror the occupancy counter into the telemetry gauge (its peak
+    /// is the arena's high-water mark).
+    fn note_occupancy(&self) {
+        metrics()
+            .kv_in_use
+            .set(self.in_use.load(Ordering::SeqCst) as i64);
     }
 }
 
@@ -538,10 +571,12 @@ impl PrefixCache {
                 self.tick += 1;
                 slot.0 = self.tick;
                 self.hits += 1;
+                metrics().cache_hits.inc();
                 Some(Arc::clone(&slot.1))
             }
             None => {
                 self.misses += 1;
+                metrics().cache_misses.inc();
                 None
             }
         }

@@ -1,0 +1,364 @@
+//! Metric exposition: point-in-time snapshots rendered as Prometheus
+//! text format or JSON.
+//!
+//! [`snapshot`] folds every registered series (plus recent spans) into
+//! a [`MetricsSnapshot`]; [`MetricsSnapshot::to_prometheus`] renders
+//! the text format served on `/metrics` and
+//! [`MetricsSnapshot::to_json`] the JSON served on `/metrics.json` and
+//! dumped by `--metrics-json`.
+//!
+//! Histograms render in the standard Prometheus shape — cumulative
+//! `_bucket{le="..."}` series plus `_sum`/`_count` — with `le` bounds
+//! that are exact for the integer observations this crate records
+//! (nanoseconds, counts). Gauges additionally expose their high-water
+//! mark as a parallel `<name>_peak` gauge family.
+
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+use super::hist::{bucket_bounds, HistData};
+use super::registry;
+use super::span::{recent_spans, SpanRecord};
+
+/// One counter series in a snapshot.
+#[derive(Clone, Debug)]
+pub struct CounterSample {
+    /// Base metric name.
+    pub name: String,
+    /// Rendered label pairs (the inside of the `{}` block; may be empty).
+    pub labels: String,
+    /// Folded value at capture time.
+    pub value: u64,
+}
+
+/// One gauge series in a snapshot (last value + high-water mark).
+#[derive(Clone, Debug)]
+pub struct GaugeSample {
+    /// Base metric name.
+    pub name: String,
+    /// Rendered label pairs (may be empty).
+    pub labels: String,
+    /// Value at capture time.
+    pub value: i64,
+    /// Highest value ever recorded.
+    pub peak: i64,
+}
+
+/// One histogram series in a snapshot.
+#[derive(Clone, Debug)]
+pub struct HistSample {
+    /// Base metric name.
+    pub name: String,
+    /// Rendered label pairs (may be empty).
+    pub labels: String,
+    /// Merged bucket contents at capture time.
+    pub data: HistData,
+}
+
+/// A point-in-time copy of every registered metric plus recent spans.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    /// Process uptime (since the registry was first touched).
+    pub uptime: Duration,
+    /// All counter series, sorted by (name, labels).
+    pub counters: Vec<CounterSample>,
+    /// All gauge series, sorted by (name, labels).
+    pub gauges: Vec<GaugeSample>,
+    /// All histogram series, sorted by (name, labels).
+    pub hists: Vec<HistSample>,
+    /// Recent spans from every thread's ring buffer, start-ordered.
+    pub spans: Vec<SpanRecord>,
+}
+
+/// Capture a snapshot of the global registry.
+pub fn snapshot() -> MetricsSnapshot {
+    let reg = registry();
+    let counters = reg
+        .counters
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|((n, l), c)| CounterSample {
+            name: n.clone(),
+            labels: l.clone(),
+            value: c.value(),
+        })
+        .collect();
+    let gauges = reg
+        .gauges
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|((n, l), g)| GaugeSample {
+            name: n.clone(),
+            labels: l.clone(),
+            value: g.value(),
+            peak: g.peak(),
+        })
+        .collect();
+    let hists = reg
+        .hists
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|((n, l), h)| HistSample {
+            name: n.clone(),
+            labels: l.clone(),
+            data: h.merged(),
+        })
+        .collect();
+    MetricsSnapshot {
+        uptime: reg.uptime(),
+        counters,
+        gauges,
+        hists,
+        spans: recent_spans(),
+    }
+}
+
+fn series_of(name: &str, labels: &str) -> String {
+    if labels.is_empty() {
+        name.to_string()
+    } else {
+        format!("{name}{{{labels}}}")
+    }
+}
+
+fn merge_le(labels: &str, le: &str) -> String {
+    if labels.is_empty() {
+        format!("le=\"{le}\"")
+    } else {
+        format!("{labels},le=\"{le}\"")
+    }
+}
+
+impl MetricsSnapshot {
+    /// Value of the counter whose rendered series equals `series`
+    /// (build the key with [`super::series`]).
+    pub fn counter(&self, series: &str) -> Option<u64> {
+        self.counters
+            .iter()
+            .find(|c| series_of(&c.name, &c.labels) == series)
+            .map(|c| c.value)
+    }
+
+    /// Value of the gauge whose rendered series equals `series`.
+    pub fn gauge(&self, series: &str) -> Option<i64> {
+        self.gauges
+            .iter()
+            .find(|g| series_of(&g.name, &g.labels) == series)
+            .map(|g| g.value)
+    }
+
+    /// High-water mark of the gauge whose rendered series equals
+    /// `series`.
+    pub fn gauge_peak(&self, series: &str) -> Option<i64> {
+        self.gauges
+            .iter()
+            .find(|g| series_of(&g.name, &g.labels) == series)
+            .map(|g| g.peak)
+    }
+
+    /// Merged data of the histogram whose rendered series equals
+    /// `series`.
+    pub fn hist(&self, series: &str) -> Option<&HistData> {
+        self.hists
+            .iter()
+            .find(|h| series_of(&h.name, &h.labels) == series)
+            .map(|h| &h.data)
+    }
+
+    /// Render the Prometheus text exposition format (version 0.0.4).
+    pub fn to_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let mut last = String::new();
+        for c in &self.counters {
+            if c.name != last {
+                let _ = writeln!(out, "# TYPE {} counter", c.name);
+                last.clone_from(&c.name);
+            }
+            let _ = writeln!(out, "{} {}", series_of(&c.name, &c.labels), c.value);
+        }
+        last.clear();
+        for g in &self.gauges {
+            if g.name != last {
+                let _ = writeln!(out, "# TYPE {} gauge", g.name);
+                last.clone_from(&g.name);
+            }
+            let _ = writeln!(out, "{} {}", series_of(&g.name, &g.labels), g.value);
+        }
+        last.clear();
+        for g in &self.gauges {
+            let peak_name = format!("{}_peak", g.name);
+            if peak_name != last {
+                let _ = writeln!(out, "# TYPE {peak_name} gauge");
+                last.clone_from(&peak_name);
+            }
+            let _ = writeln!(out, "{} {}", series_of(&peak_name, &g.labels), g.peak);
+        }
+        last.clear();
+        for h in &self.hists {
+            if h.name != last {
+                let _ = writeln!(out, "# TYPE {} histogram", h.name);
+                last.clone_from(&h.name);
+            }
+            let mut cum = 0u64;
+            for (b, &c) in h.data.buckets.iter().enumerate() {
+                if c == 0 {
+                    continue;
+                }
+                cum += c;
+                // `le` is inclusive; our buckets hold integer values
+                // strictly below the exclusive upper bound, so `hi - 1`
+                // is the exact inclusive bound.
+                let le = bucket_bounds(b).1 - 1;
+                let _ = writeln!(
+                    out,
+                    "{}_bucket{{{}}} {}",
+                    h.name,
+                    merge_le(&h.labels, &le.to_string()),
+                    cum
+                );
+            }
+            let _ = writeln!(
+                out,
+                "{}_bucket{{{}}} {}",
+                h.name,
+                merge_le(&h.labels, "+Inf"),
+                h.data.count
+            );
+            let sum_name = format!("{}_sum", h.name);
+            let _ = writeln!(out, "{} {}", series_of(&sum_name, &h.labels), h.data.sum);
+            let count_name = format!("{}_count", h.name);
+            let _ = writeln!(
+                out,
+                "{} {}",
+                series_of(&count_name, &h.labels),
+                h.data.count
+            );
+        }
+        out
+    }
+
+    /// Render as a JSON object: `uptime_s`, `counters`, `gauges`
+    /// (value + peak), `histograms` (count/sum/mean/p50/p90/p99), and
+    /// `spans`.
+    pub fn to_json(&self) -> Json {
+        let counters = Json::Obj(
+            self.counters
+                .iter()
+                .map(|c| (series_of(&c.name, &c.labels), Json::Num(c.value as f64)))
+                .collect(),
+        );
+        let gauges = Json::Obj(
+            self.gauges
+                .iter()
+                .map(|g| {
+                    (
+                        series_of(&g.name, &g.labels),
+                        Json::obj(vec![
+                            ("value", Json::Num(g.value as f64)),
+                            ("peak", Json::Num(g.peak as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let hists = Json::Obj(
+            self.hists
+                .iter()
+                .map(|h| {
+                    (
+                        series_of(&h.name, &h.labels),
+                        Json::obj(vec![
+                            ("count", Json::Num(h.data.count as f64)),
+                            ("sum", Json::Num(h.data.sum as f64)),
+                            ("mean", Json::Num(h.data.mean())),
+                            ("p50", Json::Num(h.data.percentile(50.0))),
+                            ("p90", Json::Num(h.data.percentile(90.0))),
+                            ("p99", Json::Num(h.data.percentile(99.0))),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let spans = Json::arr(
+            self.spans
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("name", Json::str(s.name)),
+                        ("depth", Json::Num(s.depth as f64)),
+                        ("start_ns", Json::Num(s.start_ns as f64)),
+                        ("dur_ns", Json::Num(s.dur_ns as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("uptime_s", Json::num(self.uptime.as_secs_f64())),
+            ("counters", counters),
+            ("gauges", gauges),
+            ("histograms", hists),
+            ("spans", spans),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs;
+
+    #[test]
+    fn prometheus_rendering_has_type_lines_and_escaped_labels() {
+        let _g = obs::test_guard();
+        obs::set_enabled(true);
+        obs::counter_with("obs_expose_test_total", &[("path", "a\\b\"c\nd")]).add(3);
+        obs::gauge("obs_expose_test_gauge").set(7);
+        let h = obs::histogram("obs_expose_test_ns");
+        h.record(5);
+        h.record(900);
+        let text = snapshot().to_prometheus();
+        assert!(text.contains("# TYPE obs_expose_test_total counter"));
+        assert!(text.contains("obs_expose_test_total{path=\"a\\\\b\\\"c\\nd\"} 3"));
+        assert!(text.contains("# TYPE obs_expose_test_gauge gauge"));
+        assert!(text.contains("obs_expose_test_gauge 7"));
+        assert!(text.contains("obs_expose_test_gauge_peak 7"));
+        assert!(text.contains("# TYPE obs_expose_test_ns histogram"));
+        assert!(text.contains("obs_expose_test_ns_bucket{le=\"5\"} 1"));
+        assert!(text.contains("obs_expose_test_ns_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("obs_expose_test_ns_sum 905"));
+        assert!(text.contains("obs_expose_test_ns_count 2"));
+    }
+
+    #[test]
+    fn json_rendering_round_trips_through_the_parser() {
+        let _g = obs::test_guard();
+        obs::set_enabled(true);
+        obs::counter("obs_expose_json_total").add(11);
+        let json = snapshot().to_json();
+        let parsed = Json::parse(&json.to_string_pretty()).expect("valid JSON");
+        let v = parsed
+            .req("counters")
+            .unwrap()
+            .req("obs_expose_json_total")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!(v >= 11.0, "snapshot carries the recorded counter, got {v}");
+    }
+
+    #[test]
+    fn snapshot_lookup_by_series_name() {
+        let _g = obs::test_guard();
+        obs::set_enabled(true);
+        obs::counter_with("obs_expose_lookup_total", &[("k", "v")]).inc();
+        let snap = snapshot();
+        let key = obs::series("obs_expose_lookup_total", &[("k", "v")]);
+        assert_eq!(snap.counter(&key), Some(1));
+        assert_eq!(snap.counter("obs_expose_lookup_total"), None);
+    }
+}

@@ -1,0 +1,229 @@
+//! Log-bucketed, mergeable, thread-sharded histograms.
+//!
+//! The bucket scheme is log-linear (HdrHistogram-style): values
+//! `0..=3` get exact single-value buckets, and every power-of-two
+//! octave `[2^e, 2^(e+1))` for `e >= 2` is split into 4 equal
+//! sub-buckets keyed by the two mantissa bits after the leading one.
+//! Relative bucket width is therefore at most 25%, which bounds the
+//! error of [`HistData::percentile`] against a sorted-vector oracle
+//! (`util::stats::percentile_sorted`) — the contract pinned by
+//! `tests/obs_metrics.rs`.
+//!
+//! Recording is 3 relaxed `fetch_add`s (bucket, count, sum) on the
+//! calling thread's shard; shards merge losslessly at snapshot time,
+//! so totals are exact once recorders quiesce even though recording
+//! never takes a lock.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::{enabled, shard_index, SHARDS};
+
+/// Number of buckets: 4 exact small values plus 4 sub-buckets for each
+/// of the 62 octaves `[2^2, 2^64)`.
+pub const BUCKETS: usize = 252;
+
+/// Map a value to its bucket index. Monotonic in `v`.
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    if v < 4 {
+        return v as usize;
+    }
+    let exp = 63 - v.leading_zeros() as usize; // 2..=63
+    let sub = ((v >> (exp - 2)) & 0b11) as usize;
+    ((exp - 1) << 2) | sub
+}
+
+/// Inclusive lower / exclusive upper value bounds of bucket `b`
+/// (saturating at `u64::MAX` for the topmost bucket).
+pub fn bucket_bounds(b: usize) -> (u64, u64) {
+    if b < 4 {
+        return (b as u64, b as u64 + 1);
+    }
+    let exp = (b >> 2) + 1;
+    let sub = (b & 0b11) as u64;
+    let lo = (4 + sub) << (exp - 2);
+    let width = 1u64 << (exp - 2);
+    (lo, lo.saturating_add(width))
+}
+
+struct Shard {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Shard {
+    fn new() -> Self {
+        Shard {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+/// A log-bucketed histogram sharded across [`SHARDS`] per-thread
+/// slots. Clones share the same shards; durations are recorded in
+/// nanoseconds by convention (`*_ns` metric names).
+#[derive(Clone)]
+pub struct Histogram {
+    shards: Arc<Vec<Shard>>,
+}
+
+impl Histogram {
+    pub(crate) fn new() -> Self {
+        Histogram {
+            shards: Arc::new((0..SHARDS).map(|_| Shard::new()).collect()),
+        }
+    }
+
+    /// Record one observation. No-op while recording is disabled.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        if !enabled() {
+            return;
+        }
+        let s = &self.shards[shard_index()];
+        s.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        s.count.fetch_add(1, Ordering::Relaxed);
+        s.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration as nanoseconds (saturating at `u64::MAX`).
+    #[inline]
+    pub fn record_duration(&self, d: Duration) {
+        self.record(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
+    }
+
+    /// Fold every shard into a point-in-time [`HistData`].
+    pub fn merged(&self) -> HistData {
+        let mut buckets = vec![0u64; BUCKETS];
+        let mut count = 0u64;
+        let mut sum = 0u64;
+        for s in self.shards.iter() {
+            for (b, a) in buckets.iter_mut().zip(s.buckets.iter()) {
+                *b += a.load(Ordering::Relaxed);
+            }
+            count += s.count.load(Ordering::Relaxed);
+            sum = sum.wrapping_add(s.sum.load(Ordering::Relaxed));
+        }
+        HistData { buckets, count, sum }
+    }
+}
+
+/// Point-in-time merged histogram contents.
+#[derive(Clone, Debug)]
+pub struct HistData {
+    /// Per-bucket observation counts (bounds via [`bucket_bounds`]).
+    pub buckets: Vec<u64>,
+    /// Total observations.
+    pub count: u64,
+    /// Sum of observed values.
+    pub sum: u64,
+}
+
+impl HistData {
+    /// Mean observed value (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Estimate the `p`-th percentile (0..=100): the value of the
+    /// bucket holding that rank — exact for values `0..=3`, the bucket
+    /// midpoint above (within the ≤25% relative bucket width of the
+    /// true sorted-vector percentile). 0 when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = (p.clamp(0.0, 100.0) / 100.0) * (self.count as f64 - 1.0);
+        let mut cum = 0u64;
+        for (b, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            cum += c;
+            if cum as f64 > rank {
+                let (lo, hi) = bucket_bounds(b);
+                if b < 4 {
+                    return lo as f64;
+                }
+                return (lo as f64 + hi as f64) / 2.0;
+            }
+        }
+        // Unreachable: count > 0 means some bucket crossed the rank.
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_monotonic_and_bounds_contain_values() {
+        let mut values: Vec<u64> = Vec::new();
+        for shift in 0..64u32 {
+            for off in [0u64, 1, 3] {
+                values.push((1u64 << shift).saturating_add(off));
+            }
+        }
+        values.push(u64::MAX);
+        values.sort_unstable();
+        let mut prev = 0usize;
+        for v in values {
+            let b = bucket_of(v);
+            assert!(b < BUCKETS);
+            assert!(b >= prev, "bucket_of must be monotonic (v={v})");
+            prev = b;
+            let (lo, hi) = bucket_bounds(b);
+            assert!(
+                lo <= v && (v < hi || hi == u64::MAX),
+                "v={v} b={b} lo={lo} hi={hi}"
+            );
+        }
+    }
+
+    #[test]
+    fn small_values_get_exact_buckets() {
+        for v in 0u64..4 {
+            assert_eq!(bucket_of(v), v as usize);
+            assert_eq!(bucket_bounds(v as usize), (v, v + 1));
+        }
+        // First octave [4,8) is also exact: width-1 sub-buckets.
+        for v in 4u64..8 {
+            let (lo, hi) = bucket_bounds(bucket_of(v));
+            assert_eq!((lo, hi), (v, v + 1));
+        }
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(true);
+        let h = Histogram::new();
+        let d = h.merged();
+        assert_eq!(d.count, 0);
+        assert_eq!(d.mean(), 0.0);
+        assert_eq!(d.percentile(50.0), 0.0);
+    }
+
+    #[test]
+    fn merged_totals_are_exact() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(true);
+        let h = Histogram::new();
+        for v in [0u64, 1, 2, 3, 4, 100, 1000, 1_000_000] {
+            h.record(v);
+        }
+        let d = h.merged();
+        assert_eq!(d.count, 8);
+        assert_eq!(d.sum, 1_001_110);
+    }
+}

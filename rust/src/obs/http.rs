@@ -1,0 +1,166 @@
+//! Live `/metrics` exposition on a std `TcpListener`.
+//!
+//! [`serve`] binds an address and answers scrapes from a background
+//! thread with a deliberately minimal HTTP/1.1 implementation (parse
+//! the request line, write one response, close). Routes:
+//!
+//! * `GET /metrics` — Prometheus text format (content type 0.0.4)
+//! * `GET /metrics.json` (or `/metrics?format=json`) — the JSON
+//!   snapshot, identical to what `--metrics-json` dumps
+//!
+//! Dropping the returned [`MetricsServer`] stops the listener: the
+//! drop sets a stop flag and pokes the socket with a local connection
+//! so the blocking `accept` wakes up and the thread joins. Scrapes are
+//! handled sequentially — a metrics endpoint sees one scraper, not
+//! traffic — and each connection gets a short read timeout so a stuck
+//! client cannot wedge the loop.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::snapshot;
+
+/// Handle to a running metrics endpoint; dropping it stops the
+/// listener thread.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// The bound address (resolves `:0` port requests).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Poke the listener so the blocking accept observes the flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Bind `addr` (e.g. `127.0.0.1:9100`, or port 0 for an ephemeral
+/// port) and serve metrics scrapes until the handle is dropped.
+pub fn serve(addr: &str) -> Result<MetricsServer> {
+    let listener = TcpListener::bind(addr)
+        .with_context(|| format!("binding metrics endpoint on {addr}"))?;
+    let local = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let thread_stop = stop.clone();
+    let handle = std::thread::Builder::new()
+        .name("metrics-http".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                if thread_stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                if let Ok(stream) = conn {
+                    let _ = handle_conn(stream);
+                }
+            }
+        })
+        .context("spawning metrics endpoint thread")?;
+    Ok(MetricsServer {
+        addr: local,
+        stop,
+        handle: Some(handle),
+    })
+}
+
+fn handle_conn(mut stream: TcpStream) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    // Read just enough to see the request line; anything else (headers,
+    // bodies) is irrelevant to a scrape and is dropped with the socket.
+    let mut buf = [0u8; 1024];
+    let mut n = 0;
+    while n < buf.len() {
+        let r = stream.read(&mut buf[n..])?;
+        if r == 0 {
+            break;
+        }
+        n += r;
+        if buf[..n].windows(2).any(|w| w == b"\r\n") {
+            break;
+        }
+    }
+    let line = String::from_utf8_lossy(&buf[..n]);
+    let path = line.split_whitespace().nth(1).unwrap_or("");
+    let (status, ctype, body) = route(path);
+    let header = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(header.as_bytes())?;
+    stream.write_all(body.as_bytes())
+}
+
+fn route(path: &str) -> (&'static str, &'static str, String) {
+    match path {
+        "/metrics" => (
+            "200 OK",
+            "text/plain; version=0.0.4; charset=utf-8",
+            snapshot().to_prometheus(),
+        ),
+        "/metrics.json" | "/metrics?format=json" => (
+            "200 OK",
+            "application/json",
+            snapshot().to_json().to_string_pretty(),
+        ),
+        _ => ("404 Not Found", "text/plain", "not found\n".to_string()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs;
+
+    fn get(addr: SocketAddr, path: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn endpoint_serves_prometheus_and_json_and_stops_on_drop() {
+        let _g = obs::test_guard();
+        obs::set_enabled(true);
+        obs::counter("obs_http_test_total").add(5);
+        let server = serve("127.0.0.1:0").unwrap();
+        let addr = server.addr();
+
+        let text = get(addr, "/metrics");
+        assert!(text.starts_with("HTTP/1.1 200 OK"));
+        assert!(text.contains("obs_http_test_total 5"));
+
+        let json = get(addr, "/metrics.json");
+        assert!(json.starts_with("HTTP/1.1 200 OK"));
+        assert!(json.contains("\"obs_http_test_total\""));
+
+        let missing = get(addr, "/nope");
+        assert!(missing.starts_with("HTTP/1.1 404"));
+
+        drop(server);
+        // The listener thread has joined and the socket is closed, so
+        // new connections are refused.
+        assert!(
+            TcpStream::connect(addr).is_err(),
+            "listener must shut down on drop"
+        );
+    }
+}

@@ -1,0 +1,430 @@
+//! Zero-dependency telemetry: a process-global metrics registry,
+//! lightweight span tracing, and Prometheus/JSON exposition
+//! (DESIGN.md §10).
+//!
+//! The design goals, in order:
+//!
+//! 1. **Near-free when disabled.** Every recording call is gated on a
+//!    single relaxed [`AtomicBool`] load ([`enabled`]); nothing else
+//!    runs — no clock reads, no allocation, no locks. The toggle is
+//!    runtime-switchable ([`set_enabled`]) so the same binary serves
+//!    both instrumented replicas and bare benchmark runs, and
+//!    `ci/check_bench_regression.py --max-metrics-overhead` gates the
+//!    *enabled* cost on the INT4 decode path at ≤ 3%.
+//! 2. **A single relaxed atomic op on the hot path.** Counters and
+//!    histograms are sharded across cache-line-padded slots indexed by
+//!    a per-thread id, so concurrent recorders never contend on one
+//!    cache line; shards are folded only at snapshot time.
+//! 3. **Zero dependencies.** Everything here is `std`: atomics,
+//!    `OnceLock`, `TcpListener` for the [`http`] endpoint, and the
+//!    crate's own [`crate::util::json::Json`] for the JSON exposition.
+//!
+//! Handles ([`Counter`], [`Gauge`], [`hist::Histogram`]) are cheap
+//! `Arc` clones; instrumented code looks them up once (the lookup
+//! takes the registry lock) and stores them, typically in a
+//! `OnceLock`'d struct next to the hot path.
+//!
+//! Span tracing ([`span`], the [`crate::span!`] macro) records RAII
+//! scope durations into per-thread ring buffers; recent spans ride
+//! along in every [`MetricsSnapshot`].
+
+pub mod hist;
+pub mod http;
+pub mod span;
+
+mod expose;
+
+pub use expose::{snapshot, CounterSample, GaugeSample, HistSample, MetricsSnapshot};
+pub use hist::{HistData, Histogram};
+pub use span::{recent_spans, Span, SpanRecord};
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Canonical metric names used by the built-in instrumentation, so
+/// tests, dashboards, and the hot paths all address the same series.
+pub mod names {
+    /// Gauge: request-queue depth sampled by the serve loop every
+    /// scheduling pass.
+    pub const SERVE_QUEUE_DEPTH: &str = "serve_queue_depth";
+    /// Gauge: live generation sessions in the continuous batch.
+    pub const SERVE_SESSIONS_ACTIVE: &str = "serve_sessions_active";
+    /// Counter: generation sessions admitted into the batch.
+    pub const SERVE_ADMISSIONS_TOTAL: &str = "serve_admissions_total";
+    /// Counter: scoring requests executed to completion.
+    pub const SERVE_SCORE_REQUESTS_TOTAL: &str = "serve_score_requests_total";
+    /// Counter (labeled `reason`): requests shed with a typed
+    /// `ServeError` — `overloaded`, `deadline`, `kv_exhausted`,
+    /// `unsupported`, `invalid`, `internal`.
+    pub const SERVE_SHED_TOTAL: &str = "serve_shed_total";
+    /// Histogram (ns): time to first token (queue + prefill).
+    pub const SERVE_TTFT_NS: &str = "serve_ttft_ns";
+    /// Histogram (ns): total request latency (queue + prefill + decode).
+    pub const SERVE_LATENCY_NS: &str = "serve_latency_ns";
+    /// Counter: tokens streamed by generation sessions.
+    pub const SERVE_TOKENS_TOTAL: &str = "serve_generated_tokens_total";
+    /// Counter: prompt-prefix cache hits.
+    pub const PREFIX_CACHE_HITS: &str = "prefix_cache_hits_total";
+    /// Counter: prompt-prefix cache misses.
+    pub const PREFIX_CACHE_MISSES: &str = "prefix_cache_misses_total";
+    /// Gauge: K/V arena blocks currently rented (peak = high-water mark).
+    pub const KV_BLOCKS_IN_USE: &str = "kv_blocks_in_use";
+    /// Counter: K/V arena allocations refused because the arena was at
+    /// capacity.
+    pub const KV_RESERVATION_FAILURES: &str = "kv_reservation_failures_total";
+    /// Counter (labeled `impl`): packed-plane kernel dispatches per
+    /// effective `KernelImpl`.
+    pub const KERNEL_DISPATCH_TOTAL: &str = "kernel_dispatch_total";
+    /// Counter (labeled `impl`): output rows × sequence positions
+    /// produced per effective `KernelImpl`.
+    pub const KERNEL_ROWS_TOTAL: &str = "kernel_rows_total";
+    /// Counter: lookup tables built (cache misses in `LutCache`).
+    pub const KERNEL_LUT_BUILDS_TOTAL: &str = "kernel_lut_builds_total";
+    /// Gauge (labeled `requested`/`resolved`, set to 1): records the
+    /// dispatch decision, including silent-fallback cases where a
+    /// forced `simd` resolves to `lut` on an incapable host.
+    pub const KERNEL_RESOLVED_IMPL: &str = "kernel_resolved_impl";
+    /// Counter (labeled `stage`, ns): pipeline stage time folded from
+    /// `PipelineReport` — `cluster`, `quantize`, `pack`.
+    pub const PIPELINE_STAGE_NS_TOTAL: &str = "pipeline_stage_ns_total";
+    /// Counter: tensor units processed by the quantization pipeline.
+    pub const PIPELINE_UNITS_TOTAL: &str = "pipeline_units_total";
+}
+
+// ---------------------------------------------------------------------
+// Enable gate
+// ---------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Turn hot-path recording on or off at runtime. Disabled is the
+/// default; `--metrics-addr`/`--metrics-json` and the perf probe's
+/// metrics tier switch it on. Gauges keep whatever value they last
+/// recorded while enabled.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+/// Whether recording is enabled — the single relaxed load every
+/// recording call starts (and, when disabled, ends) with.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------
+// Per-thread shard selection
+// ---------------------------------------------------------------------
+
+/// Shard count for counters and histograms. Threads map onto shards by
+/// a monotonically assigned id, so up to [`SHARDS`] concurrent
+/// recorders proceed with zero cache-line contention.
+pub(crate) const SHARDS: usize = 16;
+
+static NEXT_THREAD: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static THREAD_SHARD: usize =
+        NEXT_THREAD.fetch_add(1, Ordering::Relaxed) % SHARDS;
+}
+
+#[inline]
+pub(crate) fn shard_index() -> usize {
+    THREAD_SHARD.with(|s| *s)
+}
+
+/// A cache-line-padded atomic shard: padding keeps neighbouring shards
+/// on distinct lines so relaxed `fetch_add`s from different threads
+/// never false-share.
+#[repr(align(64))]
+#[derive(Default)]
+pub(crate) struct PadU64(pub(crate) AtomicU64);
+
+// ---------------------------------------------------------------------
+// Counter
+// ---------------------------------------------------------------------
+
+/// A monotonically increasing counter. [`Counter::add`] is one relaxed
+/// `fetch_add` on the calling thread's padded shard; [`Counter::value`]
+/// folds the shards. Clones share the same underlying shards.
+#[derive(Clone)]
+pub struct Counter {
+    shards: Arc<[PadU64; SHARDS]>,
+}
+
+impl Counter {
+    fn new() -> Self {
+        Counter {
+            shards: Arc::new(std::array::from_fn(|_| PadU64::default())),
+        }
+    }
+
+    /// Add 1. No-op while recording is disabled.
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `v`. No-op while recording is disabled.
+    #[inline]
+    pub fn add(&self, v: u64) {
+        if !enabled() {
+            return;
+        }
+        self.shards[shard_index()].0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Current total across all shards. Exact once concurrent
+    /// recorders have quiesced (each increment lands in exactly one
+    /// shard; the fold loses nothing).
+    pub fn value(&self) -> u64 {
+        self.shards.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Gauge
+// ---------------------------------------------------------------------
+
+struct GaugeInner {
+    value: AtomicI64,
+    peak: AtomicI64,
+}
+
+/// A last-value gauge with a high-water mark. Updates are single
+/// relaxed stores; there is no sharding because gauges record state,
+/// not events, and their call sites (queue depth per scheduling pass,
+/// arena occupancy per block transition) are not per-token hot.
+#[derive(Clone)]
+pub struct Gauge {
+    inner: Arc<GaugeInner>,
+}
+
+impl Gauge {
+    fn new() -> Self {
+        Gauge {
+            inner: Arc::new(GaugeInner {
+                value: AtomicI64::new(0),
+                peak: AtomicI64::new(0),
+            }),
+        }
+    }
+
+    /// Set the current value. No-op while recording is disabled.
+    #[inline]
+    pub fn set(&self, v: i64) {
+        if !enabled() {
+            return;
+        }
+        self.set_always(v);
+    }
+
+    /// Set even while recording is disabled — for configuration-style
+    /// gauges (e.g. the resolved kernel impl) that must be visible in
+    /// the first snapshot no matter when recording was switched on.
+    pub fn set_always(&self, v: i64) {
+        self.inner.value.store(v, Ordering::Relaxed);
+        self.inner.peak.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Apply a signed delta. No-op while recording is disabled.
+    #[inline]
+    pub fn add(&self, d: i64) {
+        if !enabled() {
+            return;
+        }
+        let v = self.inner.value.fetch_add(d, Ordering::Relaxed) + d;
+        self.inner.peak.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn value(&self) -> i64 {
+        self.inner.value.load(Ordering::Relaxed)
+    }
+
+    /// Highest value ever recorded (high-water mark).
+    pub fn peak(&self) -> i64 {
+        self.inner.peak.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------
+
+/// The process-global registry behind [`counter`], [`gauge`], and
+/// [`histogram`]. Keys are `(base name, rendered label pairs)`; a
+/// `BTreeMap` keeps exposition order deterministic.
+pub struct MetricsRegistry {
+    start: Instant,
+    pub(crate) counters: Mutex<BTreeMap<(String, String), Counter>>,
+    pub(crate) gauges: Mutex<BTreeMap<(String, String), Gauge>>,
+    pub(crate) hists: Mutex<BTreeMap<(String, String), Histogram>>,
+}
+
+impl MetricsRegistry {
+    fn new() -> Self {
+        MetricsRegistry {
+            start: Instant::now(),
+            counters: Mutex::new(BTreeMap::new()),
+            gauges: Mutex::new(BTreeMap::new()),
+            hists: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Time since the registry was first touched; span start offsets
+    /// and snapshot `uptime` are measured from this origin.
+    pub fn uptime(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub(crate) fn start_instant(&self) -> Instant {
+        self.start
+    }
+}
+
+/// The global registry (created on first use).
+pub fn registry() -> &'static MetricsRegistry {
+    static REG: OnceLock<MetricsRegistry> = OnceLock::new();
+    REG.get_or_init(MetricsRegistry::new)
+}
+
+/// Get or register the unlabeled counter `name`.
+pub fn counter(name: &str) -> Counter {
+    counter_with(name, &[])
+}
+
+/// Get or register a counter with label pairs, e.g.
+/// `counter_with(names::SERVE_SHED_TOTAL, &[("reason", "overloaded")])`.
+pub fn counter_with(name: &str, labels: &[(&str, &str)]) -> Counter {
+    let key = (name.to_string(), labels_inner(labels));
+    let mut map = registry().counters.lock().unwrap();
+    map.entry(key).or_insert_with(Counter::new).clone()
+}
+
+/// Get or register the unlabeled gauge `name`.
+pub fn gauge(name: &str) -> Gauge {
+    gauge_with(name, &[])
+}
+
+/// Get or register a gauge with label pairs.
+pub fn gauge_with(name: &str, labels: &[(&str, &str)]) -> Gauge {
+    let key = (name.to_string(), labels_inner(labels));
+    let mut map = registry().gauges.lock().unwrap();
+    map.entry(key).or_insert_with(Gauge::new).clone()
+}
+
+/// Get or register the unlabeled histogram `name`. Durations are
+/// recorded in nanoseconds by convention (`*_ns` names).
+pub fn histogram(name: &str) -> Histogram {
+    histogram_with(name, &[])
+}
+
+/// Get or register a histogram with label pairs.
+pub fn histogram_with(name: &str, labels: &[(&str, &str)]) -> Histogram {
+    let key = (name.to_string(), labels_inner(labels));
+    let mut map = registry().hists.lock().unwrap();
+    map.entry(key).or_insert_with(Histogram::new).clone()
+}
+
+/// Render the full series name (`base{k="v"}`) exactly as the
+/// Prometheus exposition prints it — the addressing scheme for
+/// [`MetricsSnapshot`] lookups.
+pub fn series(name: &str, labels: &[(&str, &str)]) -> String {
+    let inner = labels_inner(labels);
+    if inner.is_empty() {
+        name.to_string()
+    } else {
+        format!("{name}{{{inner}}}")
+    }
+}
+
+/// Render label pairs to the inside of a Prometheus brace block
+/// (`k="v",k2="v2"`), escaping values per the text format.
+pub(crate) fn labels_inner(labels: &[(&str, &str)]) -> String {
+    let mut s = String::new();
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(k);
+        s.push_str("=\"");
+        s.push_str(&escape_label(v));
+        s.push('"');
+    }
+    s
+}
+
+/// Escape a label value per the Prometheus text format: `\` → `\\`,
+/// `"` → `\"`, newline → `\n`.
+pub(crate) fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Serializes unit tests that touch the process-global enabled flag,
+/// so one test's disabled window cannot swallow another's recordings.
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_is_inert_when_disabled_and_exact_when_enabled() {
+        let _g = test_guard();
+        set_enabled(false);
+        let c = counter("obs_mod_test_counter");
+        c.inc();
+        c.add(41);
+        assert_eq!(c.value(), 0, "disabled recording must be a no-op");
+        set_enabled(true);
+        c.inc();
+        c.add(41);
+        assert_eq!(c.value(), 42);
+        // Handles to the same name share state.
+        assert_eq!(counter("obs_mod_test_counter").value(), 42);
+    }
+
+    #[test]
+    fn gauge_tracks_value_and_peak() {
+        let _g = test_guard();
+        set_enabled(true);
+        let g = gauge("obs_mod_test_gauge");
+        g.set(5);
+        g.add(3);
+        g.add(-6);
+        assert_eq!(g.value(), 2);
+        assert_eq!(g.peak(), 8);
+    }
+
+    #[test]
+    fn labeled_series_are_distinct_and_render_escaped() {
+        let _g = test_guard();
+        set_enabled(true);
+        let a = counter_with("obs_mod_test_labeled", &[("k", "a")]);
+        let b = counter_with("obs_mod_test_labeled", &[("k", "b")]);
+        a.inc();
+        assert_eq!(a.value(), 1);
+        assert_eq!(b.value(), 0);
+        assert_eq!(
+            series("m", &[("path", "a\\b\"c\nd")]),
+            "m{path=\"a\\\\b\\\"c\\nd\"}"
+        );
+        assert_eq!(series("m", &[]), "m");
+    }
+}

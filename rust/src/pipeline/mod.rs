@@ -34,6 +34,7 @@ use std::time::Instant;
 
 use crate::model::quantized::{quantize_linear_param, Method, QuantParam, QuantizedModel};
 use crate::model::{param_inventory, Checkpoint, ParamInfo, ParamKind};
+use crate::obs;
 use crate::quant::{self, Bits, QuantizedTensor};
 use crate::split;
 use crate::tensor::Tensor;
@@ -259,6 +260,7 @@ fn quantize_with_pool_cfg(
     bits: Bits,
     method: &Method,
 ) -> Result<(QuantizedModel, PipelineReport)> {
+    let _span = crate::span!("pipeline_run");
     let inventory = param_inventory(&ck.config);
     let t0 = Instant::now();
 
@@ -328,7 +330,28 @@ fn quantize_with_pool_cfg(
         wall: t0.elapsed(),
         units,
     };
+    record_pipeline_metrics(&report);
     Ok((qm, report))
+}
+
+/// Fold one run's per-stage CPU-time totals and unit count into the
+/// global metrics registry (`pipeline_stage_ns_total{stage="..."}` and
+/// `pipeline_units_total`). Cold path — one registry lookup per stage
+/// per quantization run — so handles are not cached.
+fn record_pipeline_metrics(report: &PipelineReport) {
+    if !obs::enabled() {
+        return;
+    }
+    let totals = report.stage_totals();
+    for (stage, d) in [
+        ("cluster", totals.cluster),
+        ("quantize", totals.quantize),
+        ("pack", totals.pack),
+    ] {
+        obs::counter_with(obs::names::PIPELINE_STAGE_NS_TOTAL, &[("stage", stage)])
+            .add(d.as_nanos() as u64);
+    }
+    obs::counter(obs::names::PIPELINE_UNITS_TOTAL).add(report.units.len() as u64);
 }
 
 #[cfg(test)]

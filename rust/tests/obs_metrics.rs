@@ -1,0 +1,299 @@
+//! Integration suite for the telemetry subsystem (DESIGN.md §10):
+//!
+//! * **Histogram fidelity** — log-bucketed percentiles must track a
+//!   sorted-vector oracle within the documented ≤25% relative bucket
+//!   width.
+//! * **Shard-merge exactness** — concurrent recorders across threads
+//!   must fold to exact counts and sums (each event lands in exactly
+//!   one shard; the merge loses nothing).
+//! * **Exposition** — label values render escaped per the Prometheus
+//!   text format, and histogram families emit cumulative buckets.
+//! * **Serving integration** — the `reason`-labeled shed counters must
+//!   sum to exactly the typed [`ServeError`]s clients observe, and
+//!   continuous-batched generation must stay bit-identical to the
+//!   sequential greedy oracle with recording enabled.
+//!
+//! Every test here switches recording *on* and never off (the flag is
+//! process-global; tests in this binary run concurrently), and asserts
+//! on deltas or uniquely named series.
+
+use splitquant::coordinator::server::{Backend, GenerateRequest, ServeError, Server, ServerConfig};
+use splitquant::data::{generate_problems, FactWorld, McqProblem};
+use splitquant::model::decode::DecodeState;
+use splitquant::model::forward::Workspace;
+use splitquant::model::packed::PackedModel;
+use splitquant::model::quantized::{quantize_model, Method, QuantizedModel};
+use splitquant::model::{Checkpoint, PicoLlamaConfig};
+use splitquant::obs;
+use splitquant::quant::Bits;
+use splitquant::split::SplitConfig;
+use splitquant::util::stats::percentile_sorted;
+
+fn setup() -> (QuantizedModel, Vec<McqProblem>) {
+    let world = FactWorld::generate(16, 4, 8, 1);
+    let mut cfg = PicoLlamaConfig::test();
+    cfg.vocab = world.vocab_size();
+    let ck = Checkpoint::random_init(&cfg, 7);
+    let qm = quantize_model(&ck, Bits::Int4, &Method::SplitQuant(SplitConfig::default())).unwrap();
+    let problems = generate_problems(&world, 12, 5);
+    (qm, problems)
+}
+
+/// Sequential greedy oracle on the packed engine (owned, contiguous
+/// decode state — the pre-serving code path).
+fn packed_oracle(pm: &PackedModel, prompt: &[usize], n_new: usize) -> Vec<usize> {
+    let mut ws = Workspace::new(&pm.config, pm.config.max_seq);
+    let mut scratch = pm.prewarmed_scratch();
+    let mut state = DecodeState::new(&pm.config);
+    pm.generate_greedy(prompt, n_new, &mut ws, &mut scratch, &mut state)
+        .unwrap()
+}
+
+fn shed_count(snap: &obs::MetricsSnapshot, reason: &str) -> u64 {
+    let series = obs::series(obs::names::SERVE_SHED_TOTAL, &[("reason", reason)]);
+    snap.counter(&series).unwrap_or(0)
+}
+
+fn counter_of(snap: &obs::MetricsSnapshot, name: &str) -> u64 {
+    snap.counter(name).unwrap_or(0)
+}
+
+#[test]
+fn histogram_percentiles_track_sorted_oracle() {
+    obs::set_enabled(true);
+    let h = obs::histogram("obs_itest_percentile_ns");
+    // Deterministic LCG spread across ~18 octaves, well past the exact
+    // 0..=3 range, so every observation exercises log bucketing.
+    let mut x = 0x9e3779b97f4a7c15u64;
+    let mut values = Vec::with_capacity(10_000);
+    for _ in 0..10_000 {
+        x = x
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        let v = (x >> 33) % 1_000_000 + 4;
+        h.record(v);
+        values.push(v as f64);
+    }
+    values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    let data = h.merged();
+    assert_eq!(data.count, 10_000);
+    assert_eq!(data.sum, values.iter().sum::<f64>() as u64);
+    for p in [50.0, 90.0, 95.0, 99.0] {
+        let got = data.percentile(p);
+        let want = percentile_sorted(&values, p);
+        let rel = (got - want).abs() / want;
+        assert!(
+            rel <= 0.25,
+            "p{p}: bucketed {got:.0} vs oracle {want:.0} (rel err {rel:.3} > 0.25)"
+        );
+    }
+    // The exposition folds the same merged data: the unlabeled family
+    // ends with an exact _count sample.
+    let text = obs::snapshot().to_prometheus();
+    assert!(text.contains("# TYPE obs_itest_percentile_ns histogram"));
+    assert!(text.contains("obs_itest_percentile_ns_count 10000"));
+}
+
+#[test]
+fn concurrent_recording_merges_exactly() {
+    obs::set_enabled(true);
+    let c = obs::counter("obs_itest_concurrent_total");
+    let h = obs::histogram("obs_itest_concurrent_ns");
+    const THREADS: u64 = 8;
+    const PER_THREAD: u64 = 10_000;
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let c = c.clone();
+            let h = h.clone();
+            s.spawn(move || {
+                for i in 0..PER_THREAD {
+                    c.inc();
+                    h.record(t * PER_THREAD + i);
+                }
+            });
+        }
+    });
+    assert_eq!(c.value(), THREADS * PER_THREAD, "counter shards fold exactly");
+    let data = h.merged();
+    assert_eq!(data.count, THREADS * PER_THREAD);
+    // Sum of 0..80000 — exact, independent of which shard each thread
+    // landed on.
+    let n = THREADS * PER_THREAD;
+    assert_eq!(data.sum, n * (n - 1) / 2, "histogram shards fold exactly");
+}
+
+#[test]
+fn prometheus_exposition_escapes_label_values() {
+    obs::set_enabled(true);
+    let raw = "a\\b\"c\nd";
+    obs::counter_with("obs_itest_escaped_total", &[("path", raw)]).inc();
+    let series = obs::series("obs_itest_escaped_total", &[("path", raw)]);
+    // Backslash, quote, and newline all render escaped, so the series
+    // stays a single well-formed exposition line.
+    assert_eq!(series, "obs_itest_escaped_total{path=\"a\\\\b\\\"c\\nd\"}");
+    let snap = obs::snapshot();
+    assert_eq!(snap.counter(&series), Some(1));
+    let text = snap.to_prometheus();
+    assert!(text.contains("# TYPE obs_itest_escaped_total counter"));
+    assert!(text.contains(&format!("{series} 1")));
+}
+
+#[test]
+fn serve_shed_counters_match_typed_errors() {
+    obs::set_enabled(true);
+    let (qm, problems) = setup();
+    let pm = PackedModel::from_qmodel(&qm).unwrap();
+    let before = obs::snapshot();
+
+    // Overloaded: queue_cap(1), second submit sheds synchronously.
+    let server = Server::start(
+        Backend::Packed(Box::new(pm.clone())),
+        ServerConfig::builder().queue_cap(1).build().unwrap(),
+    )
+    .unwrap();
+    let stream = server
+        .submit_generate(GenerateRequest {
+            prompt: problems[0].prompt.clone(),
+            max_tokens: 64,
+            deadline: None,
+        })
+        .unwrap();
+    let err = server
+        .submit_generate(GenerateRequest {
+            prompt: problems[1].prompt.clone(),
+            max_tokens: 1,
+            deadline: None,
+        })
+        .map(|_| ())
+        .unwrap_err();
+    assert_eq!(err.downcast_ref::<ServeError>(), Some(&ServeError::Overloaded));
+    stream.wait().unwrap();
+    drop(server);
+
+    // DeadlineExceeded: an already-expired deadline.
+    let server =
+        Server::start(Backend::Packed(Box::new(pm.clone())), ServerConfig::default()).unwrap();
+    let err = server
+        .submit_generate(GenerateRequest {
+            prompt: problems[0].prompt.clone(),
+            max_tokens: 8,
+            deadline: Some(std::time::Duration::from_nanos(1)),
+        })
+        .unwrap()
+        .wait()
+        .unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<ServeError>(),
+        Some(&ServeError::DeadlineExceeded)
+    );
+    drop(server);
+
+    // KvExhausted: a footprint the one-block arena can never hold.
+    let server = Server::start(
+        Backend::Packed(Box::new(pm.clone())),
+        ServerConfig::builder()
+            .kv_block_positions(4)
+            .kv_blocks(1)
+            .build()
+            .unwrap(),
+    )
+    .unwrap();
+    let err = server
+        .submit_generate(GenerateRequest {
+            prompt: problems[0].prompt.clone(),
+            max_tokens: 16,
+            deadline: None,
+        })
+        .unwrap()
+        .wait()
+        .unwrap_err();
+    assert_eq!(err.downcast_ref::<ServeError>(), Some(&ServeError::KvExhausted));
+    drop(server);
+
+    // Invalid ×2: empty prompt, out-of-vocab token.
+    let vocab = pm.config.vocab;
+    let server = Server::start(Backend::Packed(Box::new(pm)), ServerConfig::default()).unwrap();
+    for bad in [Vec::new(), vec![vocab + 5]] {
+        let err = server
+            .submit_generate(GenerateRequest {
+                prompt: bad,
+                max_tokens: 4,
+                deadline: None,
+            })
+            .unwrap()
+            .wait()
+            .unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<ServeError>(),
+            Some(ServeError::Invalid(_))
+        ));
+    }
+    drop(server);
+
+    // The labeled series sum to exactly the typed errors observed
+    // above — no other test in this binary sheds.
+    let after = obs::snapshot();
+    let delta = |reason: &str| shed_count(&after, reason) - shed_count(&before, reason);
+    assert_eq!(delta("overloaded"), 1);
+    assert_eq!(delta("deadline"), 1);
+    assert_eq!(delta("kv_exhausted"), 1);
+    assert_eq!(delta("invalid"), 2);
+    assert_eq!(delta("unsupported"), 0);
+    assert_eq!(delta("internal"), 0);
+}
+
+#[test]
+fn continuous_batching_stays_bit_identical_with_telemetry_on() {
+    obs::set_enabled(true);
+    let (qm, problems) = setup();
+    let pm = PackedModel::from_qmodel(&qm).unwrap();
+    let before = obs::snapshot();
+    let server = Server::start(
+        Backend::Packed(Box::new(pm.clone())),
+        ServerConfig::builder()
+            .workers(2)
+            .kv_block_positions(4)
+            .build()
+            .unwrap(),
+    )
+    .unwrap();
+    let prompts: Vec<Vec<usize>> = problems.iter().take(6).map(|p| p.prompt.clone()).collect();
+    let streams: Vec<_> = prompts
+        .iter()
+        .map(|p| {
+            server
+                .submit_generate(GenerateRequest {
+                    prompt: p.clone(),
+                    max_tokens: 6,
+                    deadline: None,
+                })
+                .unwrap()
+        })
+        .collect();
+    let mut total = 0u64;
+    for (p, s) in prompts.iter().zip(streams) {
+        let done = s.wait().unwrap();
+        assert_eq!(
+            done.tokens,
+            packed_oracle(&pm, p, 6),
+            "telemetry recording must not perturb generation"
+        );
+        total += done.tokens.len() as u64;
+    }
+    assert_eq!(server.kv_blocks_in_use(), 0, "all arena blocks returned");
+
+    // The serving series moved by at least this test's traffic (other
+    // tests in this binary may add to them concurrently).
+    let after = obs::snapshot();
+    let tokens = counter_of(&after, obs::names::SERVE_TOKENS_TOTAL)
+        - counter_of(&before, obs::names::SERVE_TOKENS_TOTAL);
+    assert!(tokens >= total, "token counter undercounted: {tokens} < {total}");
+    let admissions = counter_of(&after, obs::names::SERVE_ADMISSIONS_TOTAL)
+        - counter_of(&before, obs::names::SERVE_ADMISSIONS_TOTAL);
+    assert!(admissions >= prompts.len() as u64);
+    let ttft = after
+        .hist(obs::names::SERVE_TTFT_NS)
+        .expect("ttft histogram registered by the serve loop");
+    assert!(ttft.count >= prompts.len() as u64);
+}
