@@ -30,6 +30,17 @@ Two checks, both wired into the CI bench-smoke job:
    and a tier that vanishes or degenerates (NaN timing, zero
    throughput) must not merge silently.
 
+   The same serving report also carries the speculative-decoding tiers
+   (`specdec` + `int4_specdec_speedup` headline). When present, each
+   tier must have finite positive plain/speculative tokens/s and an
+   acceptance rate in [0, 1], and the headline INT4-draft speedup at
+   1 session must be at least --min-specdec-speedup (default 1.2) —
+   greedy verification makes speculative output bit-identical to plain
+   decoding, so the only reason to carry the draft model is speed, and
+   a speculative path slower than the floor must not merge silently.
+   Reports predating the tier (no `specdec` section) are skipped with
+   a notice.
+
 3. Telemetry overhead gate (same REPORT): the `metrics_overhead`
    object written by the gemv section times the INT4 decode with
    metrics recording off vs on; the gate fails if `overhead_frac`
@@ -42,6 +53,7 @@ Usage:
   check_bench_regression.py BENCH_gemv.json [--min 1.5] [--min-simd 3.0]
                             [--max-metrics-overhead 0.03]
                             [--serving BENCH_serving.json]
+                            [--min-specdec-speedup 1.2]
 """
 
 import argparse
@@ -59,7 +71,7 @@ def _finite(v):
     return isinstance(v, (int, float)) and math.isfinite(v)
 
 
-def check_serving(path: str) -> int:
+def check_serving(path: str, min_specdec_speedup: float) -> int:
     try:
         report = _load(path)
     except (OSError, json.JSONDecodeError) as e:
@@ -96,6 +108,69 @@ def check_serving(path: str) -> int:
     if failures:
         return 1
     print(f"OK: {len(tiers)} serving tiers clear the gate")
+    return check_specdec(report, path, min_specdec_speedup)
+
+
+def check_specdec(report, path: str, min_speedup: float) -> int:
+    """Gate the speculative-decoding tiers of the serving report; SKIP
+    (0) when the report predates them, FAIL (1) on degenerate tiers or
+    a headline INT4-draft speedup below the floor."""
+    tiers = report.get("specdec")
+    headline = report.get("int4_specdec_speedup")
+    if tiers is None and headline is None:
+        print("SKIP: report predates the speculative-decoding tier (no 'specdec')")
+        return 0
+    if not isinstance(tiers, list) or not tiers:
+        print(f"FAIL: {path} has an empty or malformed 'specdec' section")
+        return 1
+
+    failures = 0
+    for tier in tiers:
+        bits = tier.get("draft_bits")
+        sessions = tier.get("concurrent_sessions")
+        label = f"specdec tier int{bits} x{sessions}"
+        plain = tier.get("plain_tokens_per_s")
+        spec = tier.get("spec_tokens_per_s")
+        acc = tier.get("acceptance_rate")
+        if not (_finite(plain) and _finite(spec) and _finite(acc)):
+            print(
+                f"FAIL: {label}: non-finite metrics "
+                f"(plain={plain!r} spec={spec!r} acceptance={acc!r})"
+            )
+            failures += 1
+            continue
+        if plain <= 0 or spec <= 0:
+            print(
+                f"FAIL: {label}: non-positive throughput "
+                f"(plain {plain:.2f}, spec {spec:.2f} tok/s)"
+            )
+            failures += 1
+            continue
+        if not 0.0 <= acc <= 1.0:
+            print(f"FAIL: {label}: acceptance rate {acc:.3f} outside [0, 1]")
+            failures += 1
+            continue
+        print(
+            f"{label}: plain {plain:.0f} -> spec {spec:.0f} tok/s  "
+            f"acceptance {acc * 100.0:.1f}%"
+        )
+    if failures:
+        return 1
+
+    if not _finite(headline):
+        print(f"FAIL: {path} has no finite 'int4_specdec_speedup' (got {headline!r})")
+        return 1
+    print(
+        f"specdec headline: INT4 draft {headline:.2f}x plain at 1 session "
+        f"(floor {min_speedup:.2f}x)"
+    )
+    if headline < min_speedup:
+        print(
+            f"FAIL: speculative decoding speedup {headline:.2f}x is below "
+            f"the {min_speedup:.2f}x floor"
+        )
+        return 1
+    print("OK: speculative decoding clears the speedup floor")
     return 0
 
 
@@ -163,6 +238,15 @@ def main(argv=None) -> int:
         metavar="BENCH_serving.json",
         help="also gate the streaming-generation serving tiers",
     )
+    ap.add_argument(
+        "--min-specdec-speedup",
+        type=float,
+        default=1.2,
+        dest="min_specdec_speedup",
+        help="minimum speculative-vs-plain tokens/s speedup for the INT4 "
+        "draft at 1 session in the serving report (default 1.2); skipped "
+        "when the report predates the specdec tier",
+    )
     args = ap.parse_args(argv)
 
     try:
@@ -221,7 +305,7 @@ def main(argv=None) -> int:
         return 1
 
     if args.serving is not None:
-        return check_serving(args.serving)
+        return check_serving(args.serving, args.min_specdec_speedup)
     return 0
 
 

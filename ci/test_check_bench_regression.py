@@ -113,6 +113,19 @@ class GateTest(unittest.TestCase):
         self.assertEqual(self.run_gate(report, ["--max-metrics-overhead", "0.10"]), 0)
         self.assertEqual(self.run_gate(report, ["--max-metrics-overhead", "0.02"]), 1)
 
+    def run_serving_gate(self, serving_report, extra_args=()):
+        with tempfile.NamedTemporaryFile(
+            "w", suffix=".json", delete=False, encoding="utf-8"
+        ) as f:
+            json.dump(serving_report, f)
+            serving = f.name
+        try:
+            return self.run_gate(
+                good_report(), ["--serving", serving, *extra_args]
+            )
+        finally:
+            os.unlink(serving)
+
     def test_serving_tiers_gate(self):
         tier = {
             "concurrent_sessions": 100,
@@ -120,17 +133,8 @@ class GateTest(unittest.TestCase):
             "ttft_p99_ms": 2.0,
             "tokens_per_s": 500.0,
         }
-        with tempfile.NamedTemporaryFile(
-            "w", suffix=".json", delete=False, encoding="utf-8"
-        ) as f:
-            json.dump({"generation_tiers": [tier, dict(tier), dict(tier)]}, f)
-            serving = f.name
-        try:
-            self.assertEqual(
-                self.run_gate(good_report(), ["--serving", serving]), 0
-            )
-        finally:
-            os.unlink(serving)
+        report = {"generation_tiers": [tier, dict(tier), dict(tier)]}
+        self.assertEqual(self.run_serving_gate(report), 0)
 
     def test_serving_degenerate_tier_fails(self):
         bad = {
@@ -139,17 +143,79 @@ class GateTest(unittest.TestCase):
             "ttft_p99_ms": 2.0,
             "tokens_per_s": 500.0,
         }
-        with tempfile.NamedTemporaryFile(
-            "w", suffix=".json", delete=False, encoding="utf-8"
-        ) as f:
-            json.dump({"generation_tiers": [bad, dict(bad), dict(bad)]}, f)
-            serving = f.name
-        try:
-            self.assertEqual(
-                self.run_gate(good_report(), ["--serving", serving]), 1
-            )
-        finally:
-            os.unlink(serving)
+        report = {"generation_tiers": [bad, dict(bad), dict(bad)]}
+        self.assertEqual(self.run_serving_gate(report), 1)
+
+    def good_serving_report(self, **overrides):
+        """A serving report with generation + specdec tiers that clears
+        every serving gate; override fields per case."""
+        gen = {
+            "concurrent_sessions": 100,
+            "ttft_p50_ms": 1.0,
+            "ttft_p99_ms": 2.0,
+            "tokens_per_s": 500.0,
+        }
+        spec = {
+            "draft_bits": 4,
+            "concurrent_sessions": 1,
+            "plain_tokens_per_s": 400.0,
+            "spec_tokens_per_s": 600.0,
+            "speedup": 1.5,
+            "acceptance_rate": 0.8,
+        }
+        report = {
+            "generation_tiers": [gen, dict(gen), dict(gen)],
+            "specdec": [spec],
+            "int4_specdec_speedup": 1.5,
+        }
+        for key, value in overrides.items():
+            if value is _ABSENT:
+                report.pop(key, None)
+            else:
+                report[key] = value
+        return report
+
+    def test_specdec_tier_passes(self):
+        self.assertEqual(self.run_serving_gate(self.good_serving_report()), 0)
+
+    def test_specdec_missing_is_skipped(self):
+        # Serving reports from before the specdec tier skip, not fail.
+        report = self.good_serving_report(
+            specdec=_ABSENT, int4_specdec_speedup=_ABSENT
+        )
+        self.assertEqual(self.run_serving_gate(report), 0)
+
+    def test_specdec_headline_below_floor_fails(self):
+        report = self.good_serving_report(int4_specdec_speedup=1.05)
+        self.assertEqual(self.run_serving_gate(report), 1)
+
+    def test_specdec_custom_floor(self):
+        report = self.good_serving_report(int4_specdec_speedup=1.1)
+        self.assertEqual(
+            self.run_serving_gate(report, ["--min-specdec-speedup", "1.0"]), 0
+        )
+        self.assertEqual(
+            self.run_serving_gate(report, ["--min-specdec-speedup", "1.4"]), 1
+        )
+
+    def test_specdec_missing_headline_fails(self):
+        # A specdec section without the headline is malformed, not old.
+        report = self.good_serving_report(int4_specdec_speedup=_ABSENT)
+        self.assertEqual(self.run_serving_gate(report), 1)
+
+    def test_specdec_degenerate_tier_fails(self):
+        for bad in (
+            {"plain_tokens_per_s": 0.0},
+            {"spec_tokens_per_s": float("nan")},
+            {"acceptance_rate": 1.5},
+        ):
+            report = self.good_serving_report()
+            report["specdec"][0].update(bad)
+            self.assertEqual(self.run_serving_gate(report), 1)
+
+    def test_specdec_empty_section_fails(self):
+        report = self.good_serving_report(specdec=[])
+        self.assertEqual(self.run_serving_gate(report), 1)
 
 
 if __name__ == "__main__":

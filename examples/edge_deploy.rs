@@ -10,6 +10,8 @@
 //!   4. start the batched scoring server over the PJRT runtime,
 //!   5. fire MCQ requests and report accuracy, latency and throughput,
 //!   6. stream generations on the packed engine (paged KV arena),
+//!      then again speculatively with an INT2 draft proposing tokens
+//!      the INT4 target verifies (bit-identical output, speed only),
 //!   7. dump the deployment's own telemetry — the final
 //!      [`MetricsSnapshot`] with TTFT percentiles, decoded tokens/s and
 //!      the arena's occupancy high-water mark (the same registry
@@ -20,6 +22,7 @@
 //! [`MetricsSnapshot`]: splitquant::obs::MetricsSnapshot
 
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -148,6 +151,48 @@ fn main() -> Result<()> {
         gen_server.kv_blocks_in_use()
     );
 
+    // 6b. Speculative streaming: an INT2 draft quantized from the same
+    //     checkpoint proposes tokens and the INT4 target verifies them
+    //     in one batched pass per round. Greedy verification keeps the
+    //     output bit-identical to plain decoding, so the draft buys
+    //     speed only. Each speculative session rents a second K/V state
+    //     from the same arena; the default auto-sized arena
+    //     (max_sessions = 64 full-context states) covers the doubled
+    //     reservation for these 32 streams.
+    let draft_qm = quantize_model(&ck, Bits::Int2, &Method::SplitQuant(SplitConfig::default()))?;
+    let draft = Arc::new(PackedModel::from_qmodel(&draft_qm)?);
+    let spec_server = Server::start(
+        Backend::Packed(Box::new(PackedModel::from_qmodel(&device_qm)?)),
+        ServerConfig {
+            draft: Some(draft),
+            draft_k: 4,
+            ..Default::default()
+        },
+    )?;
+    let t_spec = Instant::now();
+    let spec_streams: Vec<_> = problems[..n_gen]
+        .iter()
+        .map(|p| {
+            spec_server.submit_generate(GenerateRequest {
+                prompt: p.prompt.clone(),
+                max_tokens: 8,
+                deadline: None,
+            })
+        })
+        .collect::<Result<_>>()?;
+    let mut spec_tokens = 0usize;
+    for s in spec_streams {
+        spec_tokens += s.wait()?.tokens.len();
+    }
+    let spec_wall = t_spec.elapsed();
+    println!("\n-- speculative generation ({n_gen} streams, INT2 draft -> INT4 target) --");
+    println!(
+        "decoded {spec_tokens} tokens in {} ({:.0} tok/s); kv blocks in use after drain: {}",
+        format_duration(spec_wall),
+        spec_tokens as f64 / spec_wall.as_secs_f64().max(1e-9),
+        spec_server.kv_blocks_in_use()
+    );
+
     // 7. The deployment's own telemetry, folded from everything above.
     let snap = obs::snapshot();
     let ms = |ns: f64| ns / 1e6;
@@ -175,6 +220,14 @@ fn main() -> Result<()> {
     );
     let peak = snap.gauge_peak(obs::names::KV_BLOCKS_IN_USE).unwrap_or(0);
     println!("kv arena occupancy high-water mark: {peak} blocks");
+    let drafted = snap.counter(obs::names::SPECDEC_DRAFT_TOKENS).unwrap_or(0);
+    let accepted = snap.counter(obs::names::SPECDEC_ACCEPTED_TOKENS).unwrap_or(0);
+    if drafted > 0 {
+        println!(
+            "speculative acceptance: {:.1}% ({accepted}/{drafted} draft tokens accepted)",
+            100.0 * accepted as f64 / drafted as f64
+        );
+    }
 
     std::fs::remove_file(&packed_path).ok();
     Ok(())

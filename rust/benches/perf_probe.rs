@@ -13,9 +13,14 @@
 //!   --serving-json PATH run the serving section — req/s and p50/p95
 //!                       queue+exec latency on the packed backend at
 //!                       1/4/8 executor workers with prefix reuse
-//!                       on/off — and write it as JSON
-//!                       (`BENCH_serving.json` in CI, uploaded as an
-//!                       artifact)
+//!                       on/off, the continuous-batching generation
+//!                       tiers, and the speculative-decoding tiers
+//!                       (INT8 target plain vs INT2/INT4 draft at
+//!                       1/8/64 sessions; the regression gate checks
+//!                       `int4_specdec_speedup` when
+//!                       `--min-specdec-speedup` is set) — and write
+//!                       it as JSON (`BENCH_serving.json` in CI,
+//!                       uploaded as an artifact)
 //!   --gemv-json PATH    run the GEMV section — ns/row and effective
 //!                       GB/s per bit width for scalar vs LUT vs SIMD
 //!                       vs LUT+row-parallel kernels, plus single-token
@@ -638,6 +643,12 @@ fn serving_section(path: &str) {
     // CI-friendly memory budget.
     let gen_tiers = generation_tiers(&pm, &problems);
 
+    // Self-speculative decoding tiers: the same streaming workload on
+    // an INT8 SplitQuant target, plain vs with an INT2/INT4 draft
+    // proposing tokens (greedy verification keeps output bit-identical,
+    // so only throughput may differ).
+    let (spec_tiers, int4_specdec_speedup) = specdec_tiers(&ck, &problems);
+
     let report = Json::obj(vec![
         ("bench", Json::str("perf_probe.serving")),
         ("n_requests", Json::num((REPEATS * problems.len()) as f64)),
@@ -647,6 +658,8 @@ fn serving_section(path: &str) {
         ("scaling_1_to_4_workers", Json::num(scaling)),
         ("sections", Json::arr(sections)),
         ("generation_tiers", Json::arr(gen_tiers)),
+        ("specdec", Json::arr(spec_tiers)),
+        ("int4_specdec_speedup", Json::num(int4_specdec_speedup)),
     ]);
     std::fs::write(path, report.to_string_pretty()).expect("write serving json report");
     println!("wrote {path}");
@@ -717,4 +730,131 @@ fn generation_tiers(
         assert_eq!(server.kv_blocks_in_use(), 0, "all arena blocks returned");
     }
     tiers
+}
+
+/// Speculative-decoding load tiers for the serving report: an INT8
+/// SplitQuant target serves the same streaming workload with and
+/// without a low-bit draft model, at 1/8/64 concurrent sessions and
+/// draft widths INT2 and INT4. Each tier reports decoded tokens/s and
+/// TTFT p50/p99 for both servers, the speculative/plain speedup, and
+/// the draft acceptance rate taken from the global specdec counter
+/// deltas around the speculative run. Returns the tier objects plus
+/// the headline `int4_specdec_speedup` (speculative / plain tokens/s
+/// with the INT4 draft at 1 session), which
+/// `ci/check_bench_regression.py --min-specdec-speedup` gates on.
+fn specdec_tiers(
+    ck: &splitquant::model::Checkpoint,
+    problems: &[splitquant::data::McqProblem],
+) -> (Vec<Json>, f64) {
+    use splitquant::coordinator::server::{Backend, GenerateRequest, Server, ServerConfig};
+    use splitquant::model::packed::PackedModel;
+    use splitquant::model::quantized::{quantize_model, Method};
+    use splitquant::util::stats::percentile_sorted;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    const MAX_TOKENS: usize = 12;
+
+    let quantize = |bits: Bits| -> PackedModel {
+        let qm = quantize_model(ck, bits, &Method::SplitQuant(SplitConfig::default()))
+            .expect("quantize specdec model");
+        PackedModel::from_qmodel(&qm).expect("pack specdec model")
+    };
+    let target = quantize(Bits::Int8);
+
+    // One tier run: `concurrency` streaming sessions drained to
+    // completion. Speculative sessions reserve a draft K/V state from
+    // the same arena, so the arena is sized for the doubled worst case.
+    let run = |draft: Option<Arc<PackedModel>>, concurrency: usize| -> (f64, f64, f64) {
+        let config = ServerConfig::builder()
+            .workers(8)
+            .max_sessions(concurrency)
+            .kv_block_positions(8)
+            .kv_blocks(4 * concurrency)
+            .queue_cap(concurrency)
+            .draft(draft)
+            .draft_k(4)
+            .build()
+            .expect("specdec bench config");
+        let server =
+            Server::start(Backend::Packed(Box::new(target.clone())), config).expect("start server");
+        let t0 = Instant::now();
+        let streams: Vec<_> = (0..concurrency)
+            .map(|i| {
+                let p = &problems[i % problems.len()];
+                server
+                    .submit_generate(GenerateRequest {
+                        prompt: p.prompt.clone(),
+                        max_tokens: MAX_TOKENS,
+                        deadline: None,
+                    })
+                    .expect("under queue_cap")
+            })
+            .collect();
+        let mut ttft_ms = Vec::with_capacity(concurrency);
+        let mut tokens = 0usize;
+        for s in streams {
+            let done = s.wait().expect("stream completes");
+            tokens += done.tokens.len();
+            ttft_ms.push(done.timing.ttft().as_secs_f64() * 1e3);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        ttft_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(server.kv_blocks_in_use(), 0, "all arena blocks returned");
+        (
+            tokens as f64 / wall.max(1e-9),
+            percentile_sorted(&ttft_ms, 50.0),
+            percentile_sorted(&ttft_ms, 99.0),
+        )
+    };
+
+    let counter = |name: &str| splitquant::obs::snapshot().counter(name).unwrap_or(0);
+    let was_enabled = splitquant::obs::enabled();
+    splitquant::obs::set_enabled(true);
+    let mut tiers = Vec::new();
+    let mut int4_specdec_speedup = 0.0f64;
+    for &bits in &[Bits::Int2, Bits::Int4] {
+        let draft = Arc::new(quantize(bits));
+        for &concurrency in &[1usize, 8, 64] {
+            let (plain_tps, plain_p50, plain_p99) = run(None, concurrency);
+            let d0 = counter(splitquant::obs::names::SPECDEC_DRAFT_TOKENS);
+            let a0 = counter(splitquant::obs::names::SPECDEC_ACCEPTED_TOKENS);
+            let (spec_tps, spec_p50, spec_p99) = run(Some(Arc::clone(&draft)), concurrency);
+            let drafted = counter(splitquant::obs::names::SPECDEC_DRAFT_TOKENS) - d0;
+            let accepted = counter(splitquant::obs::names::SPECDEC_ACCEPTED_TOKENS) - a0;
+            let acceptance = if drafted == 0 {
+                1.0
+            } else {
+                accepted as f64 / drafted as f64
+            };
+            let speedup = spec_tps / plain_tps.max(1e-9);
+            if bits == Bits::Int4 && concurrency == 1 {
+                int4_specdec_speedup = speedup;
+            }
+            println!(
+                "serving[specdec int{} x{concurrency}]: plain {plain_tps:.0} -> \
+                 spec {spec_tps:.0} tok/s ({speedup:.2}x)  acceptance {:.1}%  \
+                 ttft p50 {spec_p50:.2}ms p99 {spec_p99:.2}ms",
+                bits.width(),
+                acceptance * 100.0
+            );
+            tiers.push(Json::obj(vec![
+                ("draft_bits", Json::num(bits.width() as f64)),
+                ("concurrent_sessions", Json::num(concurrency as f64)),
+                ("max_tokens", Json::num(MAX_TOKENS as f64)),
+                ("plain_tokens_per_s", Json::num(plain_tps)),
+                ("spec_tokens_per_s", Json::num(spec_tps)),
+                ("speedup", Json::num(speedup)),
+                ("acceptance_rate", Json::num(acceptance)),
+                ("plain_ttft_p50_ms", Json::num(plain_p50)),
+                ("plain_ttft_p99_ms", Json::num(plain_p99)),
+                ("spec_ttft_p50_ms", Json::num(spec_p50)),
+                ("spec_ttft_p99_ms", Json::num(spec_p99)),
+                ("drafted", Json::num(drafted as f64)),
+                ("accepted", Json::num(accepted as f64)),
+            ]));
+        }
+    }
+    splitquant::obs::set_enabled(was_enabled);
+    (tiers, int4_specdec_speedup)
 }

@@ -32,13 +32,6 @@ use crate::{log_debug, log_error, log_info};
 
 use anyhow::{Context, Result};
 
-/// Deprecated alias for the unified engine selector: the pipeline-side
-/// enum merged into [`crate::runtime::EngineKind`] (one PR's grace
-/// period, then this alias goes away). `EngineKind::parse_cpu` replaces
-/// the old `ExecEngine::parse` (which rejected `pjrt` too).
-#[deprecated(note = "use crate::runtime::EngineKind")]
-pub type ExecEngine = EngineKind;
-
 /// One arm of the experiment grid.
 #[derive(Clone, Debug)]
 pub struct Arm {

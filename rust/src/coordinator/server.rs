@@ -66,10 +66,11 @@ use std::time::{Duration, Instant};
 
 use crate::data::McqProblem;
 use crate::eval::{self, nan_safe_argmax, PhaseTimes, ProblemResult, ScoreBuffers};
-use crate::kernels::KernelImpl;
+use crate::kernels::{KernelImpl, KernelScratch};
 use crate::model::decode::{DecodeState, KvArena, PrefixCache};
 use crate::model::forward::{self, CkOps, ForwardOps, Workspace};
 use crate::model::packed::PackedModel;
+use crate::model::specdec::{self, SpecConfig, SpecSession};
 use crate::model::quantized::QuantizedModel;
 use crate::model::{Checkpoint, PicoLlamaConfig};
 use crate::obs;
@@ -220,10 +221,6 @@ impl ScoreResponse {
         self.timing.total()
     }
 }
-
-/// Pre-split name for the scoring response.
-#[deprecated(note = "use ScoreResponse")]
-pub type Response = ScoreResponse;
 
 /// A streaming generation request: greedy-decode up to `max_tokens`
 /// new tokens after `prompt`, optionally bounded by a deadline
@@ -420,6 +417,16 @@ pub struct ServerConfig {
     pub default_deadline: Option<Duration>,
     /// Per-request token budget: `max_tokens` is clamped to this.
     pub max_new_tokens: usize,
+    /// Speculative decoding: a low-bit draft model (same checkpoint,
+    /// same geometry — [`specdec::check_draft_compat`]) that proposes
+    /// tokens each decode step for the target backend to verify in one
+    /// batched extend (`--speculative`; DESIGN.md §11). `None` decodes
+    /// plainly. Output is bit-identical either way.
+    pub draft: Option<Arc<PackedModel>>,
+    /// Maximum draft tokens per speculative round (`--draft-k`);
+    /// adapted downward per session when acceptance is poor. Ignored
+    /// without a `draft`.
+    pub draft_k: usize,
 }
 
 impl Default for ServerConfig {
@@ -439,6 +446,8 @@ impl Default for ServerConfig {
             queue_cap: 1024,
             default_deadline: None,
             max_new_tokens: 256,
+            draft: None,
+            draft_k: 4,
         }
     }
 }
@@ -468,6 +477,9 @@ impl ServerConfig {
         }
         if self.max_new_tokens == 0 {
             bail!("max_new_tokens must be at least 1");
+        }
+        if self.draft.is_some() && self.draft_k == 0 {
+            bail!("draft_k must be at least 1 when a draft model is configured");
         }
         if let Some(d) = self.default_deadline {
             if d < self.max_wait {
@@ -575,6 +587,14 @@ impl ServerConfigBuilder {
         self.config.max_new_tokens = v;
         self
     }
+    pub fn draft(mut self, v: Option<Arc<PackedModel>>) -> Self {
+        self.config.draft = v;
+        self
+    }
+    pub fn draft_k(mut self, v: usize) -> Self {
+        self.config.draft_k = v;
+        self
+    }
 
     pub fn build(self) -> Result<ServerConfig> {
         self.config.validate()?;
@@ -588,6 +608,12 @@ impl Server {
     /// through a handshake channel.
     pub fn start(backend: Backend, config: ServerConfig) -> Result<Server> {
         config.validate()?;
+        if let Some(draft) = &config.draft {
+            let Some(cfg) = backend.model_config() else {
+                bail!("speculative decoding needs a CPU backend (pjrt serves scoring only)");
+            };
+            specdec::check_draft_compat(&draft.config, cfg)?;
+        }
         // The arena outlives the loop thread so the handle can report
         // occupancy; PJRT (scoring-only) serves without one.
         let arena = backend
@@ -634,11 +660,13 @@ impl Server {
                             Mutex::new(b)
                         })
                         .collect();
+                    let draft = DraftEngine::build(&config, pool.size(), row_pool.as_ref());
                     Executor::Packed {
                         pm,
                         pool,
                         cache: Mutex::new(PrefixCache::new(config.prefix_cache)),
                         bufs,
+                        draft,
                     }
                 }
                 Backend::Reference(ck) => {
@@ -646,11 +674,13 @@ impl Server {
                     let bufs = (0..pool.size())
                         .map(|_| Mutex::new(ScoreBuffers::new(&ck.config, ck.config.max_seq)))
                         .collect();
+                    let draft = DraftEngine::build(&config, pool.size(), None);
                     Executor::Reference {
                         ck,
                         pool,
                         cache: Mutex::new(PrefixCache::new(config.prefix_cache)),
                         bufs,
+                        draft,
                     }
                 }
             };
@@ -765,13 +795,44 @@ enum Executor {
         pool: Pool,
         cache: Mutex<PrefixCache>,
         bufs: Vec<Mutex<ScoreBuffers>>,
+        draft: Option<DraftEngine>,
     },
     Reference {
         ck: Box<Checkpoint>,
         pool: Pool,
         cache: Mutex<PrefixCache>,
         bufs: Vec<Mutex<ScoreBuffers>>,
+        draft: Option<DraftEngine>,
     },
+}
+
+/// The serve loop's shared draft engine for speculative decoding: the
+/// low-bit packed model plus one loop-lifetime kernel scratch per pool
+/// worker (checked out alongside the worker's [`ScoreBuffers`] slot by
+/// the same ticket, so the speculative hot path allocates nothing per
+/// step). Per-*session* speculative state (the draft's paged K/V, the
+/// adaptive-`k` controller) lives in [`GenSession::spec`].
+struct DraftEngine {
+    pm: Arc<PackedModel>,
+    k: usize,
+    scratches: Vec<Mutex<KernelScratch>>,
+}
+
+impl DraftEngine {
+    fn build(config: &ServerConfig, workers: usize, row_pool: Option<&Arc<Pool>>) -> Option<DraftEngine> {
+        config.draft.as_ref().map(|pm| DraftEngine {
+            pm: Arc::clone(pm),
+            k: config.draft_k,
+            scratches: (0..workers)
+                .map(|_| {
+                    let mut s = pm.prewarmed_scratch();
+                    s.set_kernel_impl(config.kernel_impl);
+                    s.set_row_pool(row_pool.cloned());
+                    Mutex::new(s)
+                })
+                .collect(),
+        })
+    }
 }
 
 /// Shard one work list across the executor pool: every sweep worker
@@ -870,6 +931,7 @@ impl Executor {
                 pool,
                 cache,
                 bufs,
+                ..
             } => {
                 let pm: &PackedModel = pm;
                 let cache: &Mutex<PrefixCache> = cache;
@@ -898,6 +960,7 @@ impl Executor {
                 pool,
                 cache,
                 bufs,
+                ..
             } => {
                 let ck: &Checkpoint = ck;
                 let cache: &Mutex<PrefixCache> = cache;
@@ -922,23 +985,36 @@ impl Executor {
 
     /// One decode step for every live session, sharded across the pool
     /// exactly like a scoring batch. Each session advances by one token
-    /// on its own paged state; token emission stays on the serve loop
-    /// (the event `Sender` is not `Sync`).
+    /// — or, with a draft engine configured, by one speculative round
+    /// (≥ 1 token) — on its own paged state; token emission stays on
+    /// the serve loop (the event `Sender` is not `Sync`).
     fn step_sessions(&self, sessions: &[Mutex<GenSession>]) -> Vec<Result<()>> {
         match self {
-            Executor::Packed { pm, pool, bufs, .. } => {
+            Executor::Packed { pm, pool, bufs, draft, .. } => {
                 let pm: &PackedModel = pm;
-                shard_batch(pool, bufs, sessions, |bufs, slot| {
-                    let ScoreBuffers { ws, scratch, .. } = bufs;
-                    slot.lock().unwrap().advance(&mut pm.ops(scratch), ws)
-                })
+                match draft {
+                    None => shard_batch(pool, bufs, sessions, |bufs, slot| {
+                        let ScoreBuffers { ws, scratch, .. } = bufs;
+                        slot.lock().unwrap().advance(&mut pm.ops(scratch), ws)
+                    }),
+                    Some(d) => shard_batch_spec(pool, bufs, d, sessions, |bufs, ds, slot| {
+                        let ScoreBuffers { ws, scratch, .. } = bufs;
+                        slot.lock().unwrap().advance_spec(&mut pm.ops(scratch), &d.pm, ds, ws)
+                    }),
+                }
             }
-            Executor::Reference { ck, pool, bufs, .. } => {
+            Executor::Reference { ck, pool, bufs, draft, .. } => {
                 let ck: &Checkpoint = ck;
-                shard_batch(pool, bufs, sessions, |bufs, slot| {
-                    let mut ops = CkOps::new(ck);
-                    slot.lock().unwrap().advance(&mut ops, &mut bufs.ws)
-                })
+                match draft {
+                    None => shard_batch(pool, bufs, sessions, |bufs, slot| {
+                        let mut ops = CkOps::new(ck);
+                        slot.lock().unwrap().advance(&mut ops, &mut bufs.ws)
+                    }),
+                    Some(d) => shard_batch_spec(pool, bufs, d, sessions, |bufs, ds, slot| {
+                        let mut ops = CkOps::new(ck);
+                        slot.lock().unwrap().advance_spec(&mut ops, &d.pm, ds, &mut bufs.ws)
+                    }),
+                }
             }
             // Admission rejects every generation request on PJRT.
             Executor::Pjrt { .. } => unreachable!("pjrt sessions are rejected at admission"),
@@ -946,11 +1022,44 @@ impl Executor {
     }
 }
 
+/// [`shard_batch`] with a second checkout: speculative decode steps
+/// also need the worker's draft kernel scratch, claimed by the same
+/// ticket so buffer slot `i` and draft scratch `i` always travel
+/// together (both vectors are pool-sized, so neither lock blocks).
+fn shard_batch_spec<T, R, F>(
+    pool: &Pool,
+    bufs: &[Mutex<ScoreBuffers>],
+    draft: &DraftEngine,
+    items: &[T],
+    work_one: F,
+) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&mut ScoreBuffers, &mut KernelScratch, &T) -> R + Sync,
+{
+    let ticket = AtomicUsize::new(0);
+    pool.parallel_map_init(
+        items.len(),
+        || {
+            let i = ticket.fetch_add(1, Ordering::Relaxed);
+            (
+                bufs[i % bufs.len()].lock().unwrap(),
+                draft.scratches[i % draft.scratches.len()].lock().unwrap(),
+            )
+        },
+        |(bufs, ds), i| work_one(bufs, ds, &items[i]),
+    )
+}
+
 /// One live generation session. Its decode replays
 /// `generate_greedy_ops`'s exact call sequence — one prompt pass, then
 /// one single-position extend per token, greedy argmax between — on a
 /// paged [`DecodeState`], which is what makes continuous-batched output
-/// bit-identical to sequential greedy decoding.
+/// bit-identical to sequential greedy decoding. With a draft engine
+/// configured the session instead steps by speculative rounds
+/// ([`GenSession::advance_spec`]), whose greedy verification preserves
+/// the same bit-identity guarantee.
 struct GenSession {
     prompt: Vec<usize>,
     /// Effective budget (the request's `max_tokens` clamped to the
@@ -965,6 +1074,17 @@ struct GenSession {
     prefill: Duration,
     decode: Duration,
     prefilled: bool,
+    /// Tokens already streamed to the client — trails `tokens.len()`
+    /// by the latest step's emission count (speculative steps append
+    /// several tokens at once).
+    emitted: usize,
+    /// Speculative per-session state (draft K/V + adaptive-`k`
+    /// controller + acceptance stats); `None` decodes plainly.
+    spec: Option<SpecSession>,
+    /// Wall-clock of the previous decode step — the deadline-proximity
+    /// signal that caps the draft length (a long speculative round is
+    /// wasted work if the deadline expires mid-round).
+    last_step: Duration,
 }
 
 impl GenSession {
@@ -989,6 +1109,75 @@ impl GenSession {
             row
         };
         self.tokens.push(forward::greedy_token(&row));
+        Ok(())
+    }
+
+    /// Speculative advance: prefill behaves exactly like [`advance`]
+    /// (plus resetting the draft state), then each decode step runs one
+    /// [`specdec::spec_round`] — draft `m` tokens, verify them in one
+    /// batched target extend, emit the accepted prefix + bonus token
+    /// (≥ 1 token per step, bit-identical to plain decoding).
+    ///
+    /// `m` is the session's adaptive-`k` proposal, capped by the
+    /// remaining budget (a round may emit `m + 1` tokens) and dropped
+    /// to `0` — a pure target step — when the deadline is within two
+    /// steps' wall-clock. Both caps change speed only, never output.
+    ///
+    /// [`advance`]: GenSession::advance
+    fn advance_spec<O: ForwardOps>(
+        &mut self,
+        ops: &mut O,
+        draft: &PackedModel,
+        draft_scratch: &mut KernelScratch,
+        ws: &mut Workspace,
+    ) -> Result<()> {
+        let spec = self.spec.as_mut().expect("speculative advance without a spec session");
+        if !self.prefilled {
+            let _span = crate::span!("prefill");
+            let t0 = Instant::now();
+            let row = forward::prompt_pass(ops, &self.prompt, ws, &mut self.state)?;
+            spec.dstate.reset();
+            self.prefill = t0.elapsed();
+            self.prefilled = true;
+            self.tokens.push(forward::greedy_token(&row));
+            spec.stats.emitted += 1;
+            return Ok(());
+        }
+        let _span = crate::span!("specdec_step");
+        let t0 = Instant::now();
+        // Same budget arithmetic as `generate_greedy_spec_ops`: a round
+        // emits up to m + 1 tokens, so cap m one short of the remainder
+        // (admission guarantees prompt.len() < max_seq, and the session
+        // is retired before remaining hits 0).
+        let total = self.max_tokens.min(self.max_seq - self.prompt.len());
+        let remaining = total - self.tokens.len();
+        let mut m = spec.ctrl.propose().min(remaining - 1);
+        if let Some(d) = self.deadline {
+            if d.saturating_duration_since(t0) < self.last_step * 2 {
+                m = 0;
+            }
+        }
+        let mut seq = Vec::with_capacity(self.prompt.len() + self.tokens.len());
+        seq.extend_from_slice(&self.prompt);
+        seq.extend_from_slice(&self.tokens);
+        let out = specdec::spec_round(
+            ops,
+            draft,
+            draft_scratch,
+            &seq,
+            m,
+            ws,
+            &mut self.state,
+            &mut spec.dstate,
+        )?;
+        spec.ctrl.update(out.drafted, out.accepted);
+        spec.stats.drafted += out.drafted as u64;
+        spec.stats.accepted += out.accepted as u64;
+        spec.stats.rounds += (out.drafted > 0) as u64;
+        spec.stats.emitted += out.tokens.len() as u64;
+        self.tokens.extend_from_slice(&out.tokens);
+        self.last_step = t0.elapsed();
+        self.decode += self.last_step;
         Ok(())
     }
 
@@ -1218,8 +1407,11 @@ fn admit(
     let arena = arena.expect("cpu backends always serve with an arena");
     // Conservative reservation: rent the worst-case block count now so
     // an admitted session can never hit arena exhaustion mid-decode.
+    // A speculative session carries a second (draft) K/V state of the
+    // same worst-case footprint, rented from the same arena.
     let need = (job.spec.prompt.len() + max_tokens).min(cfg.max_seq);
-    if arena.blocks_for(need) > arena.total_blocks() {
+    let states = if config.draft.is_some() { 2 } else { 1 };
+    if states * arena.blocks_for(need) > arena.total_blocks() {
         job.shed(ServeError::KvExhausted, pending);
         return None;
     }
@@ -1232,6 +1424,21 @@ fn admit(
         // returns any partial rental. Retry as sessions retire.
         return Some(job);
     }
+    let spec = match &config.draft {
+        None => None,
+        Some(_) => {
+            let mut dstate = DecodeState::paged(cfg, Arc::clone(arena));
+            if dstate.reserve(need).is_err() {
+                // Same retry path; dropping both states returns the
+                // target's rental too — admission is all-or-nothing.
+                return Some(job);
+            }
+            Some(SpecSession::new(
+                &SpecConfig { k: config.draft_k, adaptive: true },
+                dstate,
+            ))
+        }
+    };
     sessions.push(Mutex::new(GenSession {
         prompt: job.spec.prompt,
         max_tokens,
@@ -1244,6 +1451,9 @@ fn admit(
         prefill: Duration::ZERO,
         decode: Duration::ZERO,
         prefilled: false,
+        emitted: 0,
+        spec,
+        last_step: Duration::ZERO,
     }));
     serve_metrics().admissions.inc();
     None
@@ -1266,9 +1476,11 @@ fn shed_expired(sessions: &mut Vec<Mutex<GenSession>>, pending: &AtomicUsize) {
     });
 }
 
-/// Emit this step's token for every session and retire the finished,
+/// Emit this step's tokens for every session and retire the finished,
 /// failed, and cancelled ones (a dropped [`TokenStream`] turns the
-/// emit into a send error — that is the cancellation signal).
+/// emit into a send error — that is the cancellation signal). A plain
+/// step emits exactly one token; a speculative step emits every token
+/// its round produced (accepted drafts + bonus), in order.
 fn retire_and_emit(
     sessions: &mut Vec<Mutex<GenSession>>,
     results: Vec<Result<()>>,
@@ -1276,7 +1488,7 @@ fn retire_and_emit(
 ) {
     let mut keep = Vec::with_capacity(sessions.len());
     for (slot, res) in std::mem::take(sessions).into_iter().zip(results) {
-        let s = slot.into_inner().unwrap();
+        let mut s = slot.into_inner().unwrap();
         match res {
             Err(e) => {
                 let err = ServeError::Internal(format!("{e:#}"));
@@ -1285,10 +1497,18 @@ fn retire_and_emit(
                 pending.fetch_sub(1, Ordering::SeqCst);
             }
             Ok(()) => {
-                let index = s.tokens.len() - 1;
-                let token = s.tokens[index];
-                if s.events.send(TokenEvent::Token { index, token }).is_err() {
-                    // Receiver dropped → cancelled; free the blocks now.
+                let mut cancelled = false;
+                for index in s.emitted..s.tokens.len() {
+                    let token = s.tokens[index];
+                    if s.events.send(TokenEvent::Token { index, token }).is_err() {
+                        // Receiver dropped → cancelled; free the blocks
+                        // now (any tokens left this step die with it).
+                        cancelled = true;
+                        break;
+                    }
+                }
+                s.emitted = s.tokens.len();
+                if cancelled {
                     pending.fetch_sub(1, Ordering::SeqCst);
                 } else if let Some(finish) = s.finish_reason() {
                     let timing = s.timing();
@@ -1296,15 +1516,18 @@ fn retire_and_emit(
                         events,
                         tokens,
                         state,
+                        spec,
                         ..
                     } = s;
                     let m = serve_metrics();
                     m.observe_timing(&timing);
                     m.tokens.add(tokens.len() as u64);
-                    // Blocks return to the arena *before* Done is
-                    // visible, so a client that observed the terminal
-                    // event sees occupancy already released.
+                    // Blocks (target *and* draft) return to the arena
+                    // *before* Done is visible, so a client that
+                    // observed the terminal event sees occupancy
+                    // already released.
                     drop(state);
+                    drop(spec);
                     let _ = events.send(TokenEvent::Done(GenerateResponse {
                         tokens,
                         timing,
@@ -1484,6 +1707,45 @@ mod tests {
             .default_deadline(Some(Duration::from_millis(10)))
             .build()
             .is_err());
+    }
+
+    #[test]
+    fn speculative_config_and_start_validation() {
+        let (qm, _) = setup();
+        let pm = Arc::new(PackedModel::from_qmodel(&qm).unwrap());
+        // draft_k = 0 with a draft configured is rejected at build time.
+        assert!(ServerConfig::builder()
+            .draft(Some(Arc::clone(&pm)))
+            .draft_k(0)
+            .build()
+            .is_err());
+        // ...but draft_k is ignored without a draft.
+        assert!(ServerConfig::builder().draft_k(0).build().is_ok());
+        // PJRT serves scoring only; a draft model is rejected at start.
+        let err = Server::start(
+            Backend::Pjrt {
+                artifacts_dir: PathBuf::from("/nonexistent"),
+                weight_args: BTreeMap::new(),
+            },
+            ServerConfig {
+                draft: Some(Arc::clone(&pm)),
+                ..Default::default()
+            },
+        );
+        assert!(err.is_err());
+        // Geometry mismatch between draft and target is rejected too.
+        let mut other_cfg = PicoLlamaConfig::test();
+        other_cfg.vocab = qm.config.vocab;
+        other_cfg.d_model *= 2;
+        let other = Checkpoint::random_init(&other_cfg, 5);
+        let err = Server::start(
+            Backend::Reference(Box::new(other)),
+            ServerConfig {
+                draft: Some(pm),
+                ..Default::default()
+            },
+        );
+        assert!(err.is_err());
     }
 
     fn setup() -> (crate::model::quantized::QuantizedModel, Vec<McqProblem>) {

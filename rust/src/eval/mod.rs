@@ -34,14 +34,37 @@ use anyhow::{bail, Result};
 /// an all-NaN (or empty... callers guarantee non-empty) slice yields 0.
 /// The scoring paths use this instead of
 /// `max_by(partial_cmp().unwrap())`, which panics the thread on any NaN
-/// logprob. Exact ties break toward the **last** maximal index — the
-/// same answer `Iterator::max_by` gives — so the argmax choice on
-/// degenerate (all-equal) logits matches the seed scoring rule.
+/// logprob.
+///
+/// **Tie-break contract: exact ties break toward the LOWEST index**
+/// (strict `>` comparison). Every sampling site in the crate — MCQ
+/// option choice, `forward::greedy_token` (and through it the draft,
+/// verify, and `generate_greedy_ops` paths plus the serving step loop),
+/// and the PJRT result decoder — resolves argmax through this one rule,
+/// so greedy choices can never drift on ties between engines. The
+/// speculative decoder's bit-identity guarantee
+/// (`model::specdec`) depends on draft, verify, and target-only decode
+/// all agreeing here. The strict `>` is also what makes NaN safe with
+/// no extra branch: `NaN > x` is false, so NaN entries never win.
 pub fn nan_safe_argmax(xs: &[f64]) -> usize {
     let mut best = 0;
     let mut best_v = f64::NEG_INFINITY;
     for (i, &v) in xs.iter().enumerate() {
-        if v >= best_v {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best
+}
+
+/// `f32` twin of [`nan_safe_argmax`] for logits rows — same contract:
+/// NaN ranks as −∞, exact ties break toward the lowest index.
+pub fn nan_safe_argmax_f32(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > best_v {
             best_v = v;
             best = i;
         }
@@ -676,19 +699,29 @@ mod tests {
     }
 
     #[test]
-    fn nan_safe_argmax_breaks_ties_like_max_by() {
-        // Exact ties pick the LAST maximal index — the seed's
-        // `Iterator::max_by` behavior — so degenerate (all-equal)
-        // logits score the same choice as the original rule.
-        for xs in [vec![-1.0, -1.0, -1.0], vec![-2.0, -1.0, -1.0], vec![0.0, 0.0]] {
-            let want = xs
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(i, _)| i)
-                .unwrap();
-            assert_eq!(nan_safe_argmax(&xs), want, "{xs:?}");
-        }
+    fn nan_safe_argmax_breaks_ties_toward_lowest_index() {
+        // The crate-wide tie-break contract: exact ties pick the
+        // LOWEST maximal index. Draft, verify, and target-only decode
+        // must all agree here or the speculative bit-identity proof
+        // (`model::specdec`) falls apart on degenerate logits.
+        assert_eq!(nan_safe_argmax(&[-1.0, -1.0, -1.0]), 0);
+        assert_eq!(nan_safe_argmax(&[-2.0, -1.0, -1.0]), 1);
+        assert_eq!(nan_safe_argmax(&[0.0, 0.0]), 0);
+        // On distinct values it agrees with `Iterator::max_by`.
+        let xs = [0.4, -2.0, 3.5, 1.1];
+        let want = xs
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        assert_eq!(nan_safe_argmax(&xs), want);
+        // The f32 twin follows the same contract.
+        assert_eq!(nan_safe_argmax_f32(&[1.0, 1.0, 0.0]), 0);
+        assert_eq!(nan_safe_argmax_f32(&[0.0, 2.0, 2.0]), 1);
+        assert_eq!(nan_safe_argmax_f32(&[f32::NAN, 0.5]), 1);
+        assert_eq!(nan_safe_argmax_f32(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(nan_safe_argmax_f32(&[]), 0);
     }
 
     #[test]

@@ -50,6 +50,9 @@ fn app() -> App {
                 .flag("runtime", "score through PJRT instead of the CPU reference")
                 .opt("engine", "reference", "CPU engine for quantized arms: packed|reference")
                 .opt("kernel-impl", "auto", "packed kernel inner loops: auto|simd|lut|scalar")
+                .flag("speculative", "also run a speculative-vs-plain greedy decode check")
+                .opt("draft-bits", "2", "draft bit width for --speculative (2|4)")
+                .opt("draft-k", "4", "max draft tokens per speculative round")
                 .opt("export-dir", "", "also export packed arms to this dir")
                 .opt("threads", "0", "pipeline worker threads (0 = all cores)")
                 .opt("metrics-json", "", "write a final telemetry snapshot JSON to this path")
@@ -71,6 +74,9 @@ fn app() -> App {
                 .opt("prefix-cache", "32", "prompt-prefix LRU capacity (0 = disabled)")
                 .flag("full-recompute", "score via full prompt+option recompute (baseline)")
                 .flag("stream", "streaming generation instead of MCQ scoring (CPU engines)")
+                .flag("speculative", "speculative decoding: low-bit draft + batched verify (stream mode)")
+                .opt("draft-bits", "2", "draft model bit width (2|4)")
+                .opt("draft-k", "4", "max draft tokens per speculative round")
                 .opt("max-sessions", "64", "concurrent generation sessions (stream mode)")
                 .opt("kv-blocks", "0", "KV arena blocks (0 = auto for max-sessions)")
                 .opt("max-new-tokens", "8", "tokens to generate per request (stream mode)")
@@ -95,6 +101,17 @@ fn app() -> App {
 
 fn parse_bits(m: &Matches) -> Result<Bits> {
     Bits::from_width(m.get_usize("bits")?)
+}
+
+/// `--draft-bits` for the speculative paths: the draft must be one of
+/// the *low* widths (the whole point is a cheaper engine than the
+/// target).
+fn parse_draft_bits(m: &Matches) -> Result<Bits> {
+    match m.get_usize("draft-bits")? {
+        2 => Ok(Bits::Int2),
+        4 => Ok(Bits::Int4),
+        other => bail!("--draft-bits must be 2 or 4 (got {other})"),
+    }
 }
 
 /// Telemetry lifecycle shared by the subcommands that support it:
@@ -244,8 +261,117 @@ fn cmd_eval(m: &Matches) -> Result<()> {
         ]);
     }
     println!("{}", table.render());
+    if m.flag("speculative") {
+        eval_speculative(
+            &ck,
+            spec.engine,
+            parse_draft_bits(m)?,
+            m.get_usize("draft-k")?,
+            &problems,
+        )?;
+    }
     println!("--- stage profile ---\n{}", coord.profiler.report());
     telemetry.finish()
+}
+
+/// `eval --speculative`: decode a handful of problem prompts plainly
+/// and speculatively on the chosen CPU engine (packed INT8 target or
+/// the f32 reference), assert the streams are bit-identical, and print
+/// the acceptance rate plus the wall-clock speedup.
+fn eval_speculative(
+    ck: &splitquant::model::Checkpoint,
+    engine: EngineKind,
+    draft_bits: Bits,
+    draft_k: usize,
+    problems: &[splitquant::data::McqProblem],
+) -> Result<()> {
+    use splitquant::model::decode::DecodeState;
+    use splitquant::model::forward::{generate_greedy, Workspace};
+    use splitquant::model::packed::PackedModel;
+    use splitquant::model::quantized::quantize_model;
+    use splitquant::model::specdec::{SpecConfig, SpecDecoder, SpecStats};
+    use std::time::Instant;
+
+    let cfg = &ck.config;
+    let dec = SpecDecoder::from_checkpoint(ck, draft_bits, SpecConfig { k: draft_k, adaptive: true })?;
+    let mut ws = Workspace::new(cfg, cfg.max_seq);
+    let mut dscratch = dec.draft_model().prewarmed_scratch();
+    let n_new = 16usize;
+    let prompts: Vec<&[usize]> = problems.iter().take(8).map(|p| p.prompt.as_slice()).collect();
+    if prompts.is_empty() {
+        bail!("--speculative needs at least one problem prompt");
+    }
+    let mut stats = SpecStats::default();
+    let mut tokens = 0usize;
+    let (plain_dur, spec_dur, target_name) = match engine {
+        EngineKind::Packed => {
+            let qm = quantize_model(ck, Bits::Int8, &Method::SplitQuant(SplitConfig::default()))?;
+            let target = PackedModel::from_qmodel(&qm)?;
+            let mut tscratch = target.prewarmed_scratch();
+            let t0 = Instant::now();
+            let mut plain = Vec::with_capacity(prompts.len());
+            for p in &prompts {
+                let mut st = DecodeState::new(cfg);
+                plain.push(target.generate_greedy(p, n_new, &mut ws, &mut tscratch, &mut st)?);
+            }
+            let plain_dur = t0.elapsed();
+            let t1 = Instant::now();
+            for (p, want) in prompts.iter().zip(&plain) {
+                let mut ts = DecodeState::new(cfg);
+                let mut ds = DecodeState::new(cfg);
+                let (got, s) = dec.generate_packed(
+                    &target, p, n_new, &mut ws, &mut tscratch, &mut dscratch, &mut ts, &mut ds,
+                )?;
+                if &got != want {
+                    bail!("speculative decode diverged from plain greedy (packed target)");
+                }
+                tokens += got.len();
+                stats.merge(&s);
+            }
+            (plain_dur, t1.elapsed(), "INT8 packed")
+        }
+        EngineKind::Reference => {
+            let t0 = Instant::now();
+            let mut plain = Vec::with_capacity(prompts.len());
+            for p in &prompts {
+                plain.push(generate_greedy(ck, p, n_new, &mut ws)?);
+            }
+            let plain_dur = t0.elapsed();
+            let t1 = Instant::now();
+            for (p, want) in prompts.iter().zip(&plain) {
+                let mut ts = DecodeState::new(cfg);
+                let mut ds = DecodeState::new(cfg);
+                let (got, s) =
+                    dec.generate_reference(ck, p, n_new, &mut ws, &mut dscratch, &mut ts, &mut ds)?;
+                if &got != want {
+                    bail!("speculative decode diverged from plain greedy (reference target)");
+                }
+                tokens += got.len();
+                stats.merge(&s);
+            }
+            (plain_dur, t1.elapsed(), "f32 reference")
+        }
+        EngineKind::Pjrt => bail!("--speculative needs a CPU engine (packed|reference)"),
+    };
+    let plain_tps = tokens as f64 / plain_dur.as_secs_f64();
+    let spec_tps = tokens as f64 / spec_dur.as_secs_f64();
+    println!(
+        "--- speculative check [{} draft, k={draft_k}, {target_name} target] ---",
+        draft_bits.name()
+    );
+    println!(
+        "{} prompts x {n_new} tokens: bit-identical  acceptance {:.1}% ({}/{} drafted, {} rounds)",
+        prompts.len(),
+        100.0 * stats.acceptance_rate(),
+        stats.accepted,
+        stats.drafted,
+        stats.rounds
+    );
+    println!(
+        "plain {plain_tps:.0} tok/s -> speculative {spec_tps:.0} tok/s  ({:.2}x)",
+        spec_tps / plain_tps
+    );
+    Ok(())
 }
 
 fn cmd_serve(m: &Matches) -> Result<()> {
@@ -269,8 +395,27 @@ fn cmd_serve(m: &Matches) -> Result<()> {
 
     let kind = EngineKind::parse(m.get("engine")?)?;
     let backend = Backend::from_kind(kind, &qm, Some(Path::new(m.get("artifacts")?)))?;
+    // Speculative decoding: pack a second, lower-bit draft of the same
+    // checkpoint; the server verifies its proposals each decode step
+    // (output stays bit-identical — DESIGN.md §11).
+    let draft = if m.flag("speculative") {
+        let draft_bits = parse_draft_bits(m)?;
+        let dqm = engine.quantize_model(&ck, draft_bits, &Method::SplitQuant(SplitConfig::default()))?;
+        log_info!(
+            "speculative decoding on: {} draft, k = {}",
+            draft_bits.name(),
+            m.get("draft-k")?
+        );
+        Some(std::sync::Arc::new(
+            splitquant::model::packed::PackedModel::from_qmodel(&dqm)?,
+        ))
+    } else {
+        None
+    };
     let deadline = m.get_ms("deadline-ms")?;
     let config = ServerConfig::builder()
+        .draft(draft)
+        .draft_k(m.get_usize("draft-k")?)
         .max_wait(m.get_ms("max-wait-ms")?)
         .max_batch(m.get_usize("max-batch")?)
         .workers(m.get_usize("workers")?)
@@ -376,6 +521,23 @@ fn serve_stream_demo(
         server.kv_blocks_in_use()
     );
     println!("sample generation: {sample:?}");
+    // With telemetry on, the speculative counters tell us how much of
+    // the stream came from accepted draft tokens.
+    if splitquant::obs::enabled() {
+        let snap = splitquant::obs::snapshot();
+        let drafted = snap
+            .counter(splitquant::obs::names::SPECDEC_DRAFT_TOKENS)
+            .unwrap_or(0);
+        let accepted = snap
+            .counter(splitquant::obs::names::SPECDEC_ACCEPTED_TOKENS)
+            .unwrap_or(0);
+        if drafted > 0 {
+            println!(
+                "speculative acceptance {:.1}%  ({accepted}/{drafted} draft tokens)",
+                100.0 * accepted as f64 / drafted as f64
+            );
+        }
+    }
     Ok(())
 }
 

@@ -543,21 +543,18 @@ pub fn continuation_logprob(
 }
 
 /// Greedy argmax over one logits row: highest logit wins, ties broken
-/// toward the higher index (the `Iterator::max_by` convention the
-/// original decode loop used). Every greedy decoder in the crate — the
-/// sequential loops below, the packed engine's, and the continuous-
-/// batching server's per-session step — picks tokens through this one
-/// function, so their choices cannot drift on ties.
+/// toward the **lowest** index, NaN ranking as −∞ — a delegation to
+/// [`crate::eval::nan_safe_argmax_f32`], the crate's single argmax
+/// rule. Every greedy decoder in the crate — the sequential loops
+/// below, the packed engine's, the continuous-batching server's
+/// per-session step, and the speculative decoder's draft *and* verify
+/// sides ([`crate::model::specdec`]) — picks tokens through this one
+/// function, so their choices cannot drift on ties. That shared
+/// tie-break is a correctness requirement, not a convenience: the
+/// speculative bit-identity proof compares draft proposals against
+/// target argmaxes token by token.
 pub fn greedy_token(logits_row: &[f32]) -> usize {
-    let mut best = 0usize;
-    let mut best_v = f32::NEG_INFINITY;
-    for (i, &v) in logits_row.iter().enumerate() {
-        if v >= best_v {
-            best = i;
-            best_v = v;
-        }
-    }
-    best
+    crate::eval::nan_safe_argmax_f32(logits_row)
 }
 
 /// The shared greedy decode loop: one prompt pass, then one
@@ -815,12 +812,16 @@ mod tests {
     }
 
     #[test]
-    fn greedy_token_matches_max_by_convention() {
-        // Last-max tie-break, exactly like `Iterator::max_by`.
-        assert_eq!(greedy_token(&[0.0, 3.0, 3.0, 1.0]), 2);
+    fn greedy_token_breaks_ties_toward_lowest_index() {
+        // The crate-wide tie-break: exact ties pick the LOWEST maximal
+        // index (see `eval::nan_safe_argmax`). The speculative decoder
+        // compares draft and target argmaxes token by token, so every
+        // greedy site must resolve ties identically.
+        assert_eq!(greedy_token(&[0.0, 3.0, 3.0, 1.0]), 1);
         assert_eq!(greedy_token(&[5.0]), 0);
-        assert_eq!(greedy_token(&[-1.0, -3.0, -1.0]), 2);
-        let row = [0.3f32, 9.1, -2.0, 9.1, 4.4];
+        assert_eq!(greedy_token(&[-1.0, -3.0, -1.0]), 0);
+        // On distinct values it agrees with `Iterator::max_by`.
+        let row = [0.3f32, 9.1, -2.0, 7.6, 4.4];
         let via_max_by = row
             .iter()
             .enumerate()
@@ -828,6 +829,14 @@ mod tests {
             .map(|(i, _)| i)
             .unwrap();
         assert_eq!(greedy_token(&row), via_max_by);
+        // NaN never wins; an all-NaN row defaults to index 0.
+        assert_eq!(greedy_token(&[f32::NAN, 1.0, f32::NAN]), 1);
+        assert_eq!(greedy_token(&[f32::NAN, f32::NAN]), 0);
+        // And it is exactly the eval-side rule.
+        assert_eq!(
+            greedy_token(&[2.0, 8.0, 8.0]),
+            crate::eval::nan_safe_argmax_f32(&[2.0, 8.0, 8.0])
+        );
     }
 
     #[test]

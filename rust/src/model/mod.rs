@@ -13,6 +13,7 @@ pub mod decode;
 pub mod forward;
 pub mod packed;
 pub mod quantized;
+pub mod specdec;
 
 use std::collections::BTreeMap;
 

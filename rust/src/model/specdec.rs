@@ -1,0 +1,561 @@
+//! Self-speculative decoding across the repo's own bit-widths:
+//! a cheap INT2/INT4 **draft** engine proposes `k` greedy tokens, the
+//! INT8/reference **target** engine verifies all of them in one batched
+//! `forward_extend`, and the longest matching greedy prefix is
+//! accepted (DESIGN.md §11).
+//!
+//! SplitQuantV2's core asset — one checkpoint packed at multiple
+//! bit-widths with identical structure — is exactly what speculative
+//! decoding needs: the draft and target share the vocabulary, the
+//! tokenization, and the `DecodeState` geometry, so the only extra
+//! machinery is a second (cheap) K/V cache and an O(1) `truncate`
+//! rollback on mismatch.
+//!
+//! ## The draft/verify round
+//!
+//! State invariant between rounds: the target state caches every
+//! position of `prompt + generated` **except the last generated token**
+//! (`last`), which is decided but not yet fed — the same invariant the
+//! plain greedy loop (`forward::generate_greedy_ops`) maintains. One
+//! round:
+//!
+//! 1. **Catch-up + draft.** The draft state may lag the target (it is
+//!    never rolled *forward* speculatively-wrong tokens). Feed it the
+//!    known suffix it has not seen — ending with `last` — in one
+//!    multi-token extend, then greedily propose `d₁ … dₘ`, each costing
+//!    one single-position draft extend.
+//! 2. **Batched verify.** One target `forward_extend` of the chunk
+//!    `[last, d₁ … dₘ]` yields `m+1` logits rows. Row `i` is exactly
+//!    the row target-only decoding would produce after
+//!    `prompt + … + last + d₁ … dᵢ`.
+//! 3. **Accept + bonus.** Accept `dᵢ` while the target's greedy choice
+//!    for row `i-1` equals it; the first mismatching row (or the final
+//!    row on full acceptance) contributes one **bonus** token — the
+//!    target's own choice — so every round emits ≥ 1 token and the
+//!    emitted stream is the target's greedy stream, token for token.
+//! 4. **Rollback.** Truncate the target to the accepted prefix
+//!    (`O(1)`) and the draft to the positions whose tokens are in the
+//!    true output.
+//!
+//! ## Why the output is bit-for-bit identical
+//!
+//! Verification is *greedy*: a draft token is accepted iff it equals
+//! [`greedy_token`](crate::model::forward::greedy_token) of the
+//! target's logits at that position, and those
+//! logits are computed by the same `forward_extend` the target-only
+//! loop uses (chunked ≡ full is already property-tested per engine).
+//! Every argmax — draft, verify, and plain decode — goes through
+//! `eval::nan_safe_argmax`'s lowest-index tie-break, so there is no
+//! row on which the two procedures can disagree. The property tests in
+//! `rust/tests/specdec.rs` pin speculative ≡ target-only across draft
+//! widths, `k`, and both CPU target engines.
+//!
+//! ## Adaptive `k`
+//!
+//! [`AdaptiveK`] shrinks the draft length when acceptance is poor
+//! (halve below 50% acceptance) and recovers one step per fully
+//! accepted round, capped at the configured `k`. The serving layer
+//! additionally caps `k` when a session's deadline is near (a long
+//! speculative chunk is wasted work if the deadline expires mid-round).
+//! `k` only changes *speed*, never output: any `m ≥ 0` yields the same
+//! tokens.
+
+use std::sync::OnceLock;
+
+use crate::kernels::KernelScratch;
+use crate::model::decode::DecodeState;
+use crate::model::forward::{
+    forward_extend, greedy_token, prompt_pass, CkOps, ForwardOps, Workspace,
+};
+use crate::model::packed::PackedModel;
+use crate::model::quantized::{quantize_model, Method};
+use crate::model::{Checkpoint, PicoLlamaConfig};
+use crate::obs;
+use crate::quant::Bits;
+use crate::split::SplitConfig;
+
+use anyhow::{anyhow, Result};
+
+/// Telemetry handles for the speculative decoder, looked up once.
+struct SpecMetrics {
+    drafted: obs::Counter,
+    accepted: obs::Counter,
+    rounds: obs::Counter,
+    accept_len: obs::Histogram,
+}
+
+fn metrics() -> &'static SpecMetrics {
+    static M: OnceLock<SpecMetrics> = OnceLock::new();
+    M.get_or_init(|| SpecMetrics {
+        drafted: obs::counter(obs::names::SPECDEC_DRAFT_TOKENS),
+        accepted: obs::counter(obs::names::SPECDEC_ACCEPTED_TOKENS),
+        rounds: obs::counter(obs::names::SPECDEC_ROUNDS),
+        accept_len: obs::histogram(obs::names::SPECDEC_ACCEPT_LEN),
+    })
+}
+
+/// Speculative-decoding policy knobs (`--draft-k` on the CLI).
+#[derive(Clone, Debug)]
+pub struct SpecConfig {
+    /// Maximum draft tokens proposed per round (`k ≥ 1`).
+    pub k: usize,
+    /// Shrink `k` on low acceptance, recover on full acceptance.
+    pub adaptive: bool,
+}
+
+impl Default for SpecConfig {
+    fn default() -> Self {
+        SpecConfig { k: 4, adaptive: true }
+    }
+}
+
+impl SpecConfig {
+    /// A fixed-`k` policy (adaptation off) — what the property tests
+    /// use to sweep `k` deterministically.
+    pub fn fixed(k: usize) -> Self {
+        SpecConfig { k, adaptive: false }
+    }
+}
+
+/// Acceptance accounting for one decode (merged across rounds).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpecStats {
+    /// Draft tokens proposed.
+    pub drafted: u64,
+    /// Draft tokens accepted by the verify pass.
+    pub accepted: u64,
+    /// Draft/verify rounds executed (rounds with `m == 0` — pure
+    /// target steps — are not counted).
+    pub rounds: u64,
+    /// Tokens emitted (accepted + bonus tokens).
+    pub emitted: u64,
+}
+
+impl SpecStats {
+    /// Accepted / drafted (1.0 when nothing was drafted, so a pure
+    /// target-step decode does not read as "0% acceptance").
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            1.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+
+    /// Fold another decode's stats into this one.
+    pub fn merge(&mut self, other: &SpecStats) {
+        self.drafted += other.drafted;
+        self.accepted += other.accepted;
+        self.rounds += other.rounds;
+        self.emitted += other.emitted;
+    }
+}
+
+/// Shrink-on-miss / recover-on-hit controller for the draft length.
+///
+/// `propose()` is the `m` for the next round; `update(drafted,
+/// accepted)` halves it when fewer than half the proposals survived
+/// verification and grows it by one (capped at the configured `k`)
+/// when every proposal survived. With `adaptive: false` it always
+/// proposes the configured `k`.
+#[derive(Clone, Debug)]
+pub struct AdaptiveK {
+    cur: usize,
+    cap: usize,
+    adaptive: bool,
+}
+
+impl AdaptiveK {
+    pub fn new(cfg: &SpecConfig) -> AdaptiveK {
+        let k = cfg.k.max(1);
+        AdaptiveK { cur: k, cap: k, adaptive: cfg.adaptive }
+    }
+
+    /// Draft length for the next round.
+    pub fn propose(&self) -> usize {
+        self.cur
+    }
+
+    /// Feed one round's outcome back into the controller.
+    pub fn update(&mut self, drafted: usize, accepted: usize) {
+        if !self.adaptive || drafted == 0 {
+            return;
+        }
+        if accepted == drafted {
+            self.cur = (self.cur + 1).min(self.cap);
+        } else if accepted * 2 < drafted {
+            self.cur = (self.cur / 2).max(1);
+        }
+    }
+}
+
+/// Result of one draft/verify round.
+#[derive(Clone, Debug)]
+pub(crate) struct RoundOutcome {
+    /// Tokens to append to the output: the accepted draft prefix plus
+    /// the verify pass's bonus token — always ≥ 1 token.
+    pub tokens: Vec<usize>,
+    /// Draft tokens accepted (`tokens.len() - 1`).
+    pub accepted: usize,
+    /// Draft tokens proposed this round (`m`).
+    pub drafted: usize,
+}
+
+/// One draft/verify/accept/rollback round (module doc, steps 1–4).
+///
+/// `seq` is `prompt + generated so far`; its final element is the
+/// pending token — decided but not yet fed to the target. On entry the
+/// target state caches exactly `seq.len() - 1` positions and the draft
+/// state caches a (possibly shorter) prefix of the same sequence. On
+/// exit both invariants are restored with `outcome.tokens` appended to
+/// the logical sequence.
+///
+/// `m == 0` degenerates to a plain single-token target step (the draft
+/// engine is not touched), which is how the decode loop finishes a
+/// budget whose remainder is a single token.
+pub(crate) fn spec_round<O: ForwardOps>(
+    target: &mut O,
+    draft: &PackedModel,
+    draft_scratch: &mut KernelScratch,
+    seq: &[usize],
+    m: usize,
+    ws: &mut Workspace,
+    tstate: &mut DecodeState,
+    dstate: &mut DecodeState,
+) -> Result<RoundOutcome> {
+    let p = tstate.len();
+    debug_assert_eq!(p + 1, seq.len(), "target state must cache seq minus the pending token");
+    debug_assert!(dstate.len() <= p, "draft state ahead of target");
+    let last = *seq.last().expect("seq holds at least the pending token");
+
+    // 1. Catch-up + draft: feed the draft the suffix it has not seen
+    // (ending with `last`), then propose m tokens one extend at a time.
+    let mut drafts = Vec::with_capacity(m);
+    if m > 0 {
+        let start = dstate.len();
+        let mut logits = draft.forward_extend(&seq[start..], start, ws, draft_scratch, dstate)?;
+        loop {
+            let d = greedy_token(logits.row(logits.shape()[0] - 1));
+            drafts.push(d);
+            if drafts.len() == m {
+                break;
+            }
+            logits = draft.forward_extend(&[d], dstate.len(), ws, draft_scratch, dstate)?;
+        }
+    }
+
+    // 2. Batched verify: one target extend over [last, d1..dm].
+    let mut chunk = Vec::with_capacity(m + 1);
+    chunk.push(last);
+    chunk.extend_from_slice(&drafts);
+    let verify = forward_extend(target, &chunk, p, ws, tstate)?;
+
+    // 3. Accept the longest greedy-matching prefix + the bonus token.
+    let mut accepted = 0;
+    while accepted < m && greedy_token(verify.row(accepted)) == drafts[accepted] {
+        accepted += 1;
+    }
+    let bonus = greedy_token(verify.row(accepted));
+    let mut tokens = drafts;
+    tokens.truncate(accepted);
+    tokens.push(bonus);
+
+    // 4. Rollback: the target keeps prefix + last + accepted drafts
+    // (the bonus token becomes the next round's pending token); the
+    // draft keeps only positions whose tokens are in the true output.
+    tstate.truncate(p + 1 + accepted);
+    dstate.truncate(dstate.len().min(p + 1 + accepted));
+
+    if m > 0 {
+        let sm = metrics();
+        sm.drafted.add(m as u64);
+        sm.accepted.add(accepted as u64);
+        sm.rounds.inc();
+        sm.accept_len.record(accepted as u64);
+    }
+    Ok(RoundOutcome { tokens, accepted, drafted: m })
+}
+
+/// Speculative twin of `forward::generate_greedy_ops`: same prompt
+/// handling, same stop conditions, same tokens — proven bit-for-bit in
+/// `rust/tests/specdec.rs` — but decoded in draft/verify rounds.
+///
+/// The caller owns both decode states (paged or owned; the serving
+/// path rents both from the same `KvArena`) and the draft's kernel
+/// scratch; `ws` is shared between the engines because draft and
+/// target forwards never interleave within a round step.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn generate_greedy_spec_ops<O: ForwardOps>(
+    target: &mut O,
+    draft: &PackedModel,
+    draft_scratch: &mut KernelScratch,
+    prompt: &[usize],
+    n_new: usize,
+    ctrl: &mut AdaptiveK,
+    ws: &mut Workspace,
+    tstate: &mut DecodeState,
+    dstate: &mut DecodeState,
+    stats: &mut SpecStats,
+) -> Result<Vec<usize>> {
+    let max_seq = target.config().max_seq;
+    if n_new == 0 || prompt.len() >= max_seq {
+        return Ok(Vec::new());
+    }
+    // Exactly the plain loop's stop conditions, folded into one bound.
+    let total = n_new.min(max_seq - prompt.len());
+    let row = prompt_pass(target, prompt, ws, tstate)?;
+    dstate.reset();
+    let mut seq = prompt.to_vec();
+    seq.push(greedy_token(&row));
+    stats.emitted += 1;
+    let mut produced = 1;
+    while produced < total {
+        // A round emits up to m+1 tokens; cap m so it never overshoots
+        // the budget (which also keeps every speculative position
+        // strictly inside max_seq).
+        let m = ctrl.propose().min(total - produced - 1);
+        let out = spec_round(target, draft, draft_scratch, &seq, m, ws, tstate, dstate)?;
+        ctrl.update(out.drafted, out.accepted);
+        stats.drafted += out.drafted as u64;
+        stats.accepted += out.accepted as u64;
+        stats.rounds += (out.drafted > 0) as u64;
+        stats.emitted += out.tokens.len() as u64;
+        produced += out.tokens.len();
+        seq.extend_from_slice(&out.tokens);
+    }
+    Ok(seq.split_off(prompt.len()))
+}
+
+/// Require identical model geometry between draft and target — the
+/// precondition for sharing prompts, positions, and the verify chunk.
+pub fn check_draft_compat(draft: &PicoLlamaConfig, target: &PicoLlamaConfig) -> Result<()> {
+    let same = draft.vocab == target.vocab
+        && draft.d_model == target.d_model
+        && draft.n_layers == target.n_layers
+        && draft.n_heads == target.n_heads
+        && draft.n_kv_heads == target.n_kv_heads
+        && draft.d_ff == target.d_ff
+        && draft.max_seq == target.max_seq;
+    if same {
+        Ok(())
+    } else {
+        Err(anyhow!(
+            "draft/target model geometry mismatch: draft {draft:?} vs target {target:?}"
+        ))
+    }
+}
+
+/// A draft engine plus policy: the user-facing entry point for
+/// speculative generation outside the server (benches, `eval
+/// --speculative`, examples). The serving path reuses the same
+/// `spec_round` core per continuous-batching step instead.
+#[derive(Clone, Debug)]
+pub struct SpecDecoder {
+    draft: PackedModel,
+    cfg: SpecConfig,
+}
+
+impl SpecDecoder {
+    /// Wrap an already-packed draft model.
+    pub fn new(draft: PackedModel, cfg: SpecConfig) -> Result<SpecDecoder> {
+        if cfg.k == 0 {
+            return Err(anyhow!("draft k must be ≥ 1"));
+        }
+        Ok(SpecDecoder { draft, cfg })
+    }
+
+    /// Quantize a draft at `bits` (SplitQuantV2 planes) from the same
+    /// checkpoint the target was built from — the "self-speculative"
+    /// construction: one model, two bit-widths.
+    pub fn from_checkpoint(ck: &Checkpoint, bits: Bits, cfg: SpecConfig) -> Result<SpecDecoder> {
+        let qm = quantize_model(ck, bits, &Method::SplitQuant(SplitConfig::default()))?;
+        SpecDecoder::new(PackedModel::from_qmodel(&qm)?, cfg)
+    }
+
+    pub fn draft_model(&self) -> &PackedModel {
+        &self.draft
+    }
+
+    pub fn config(&self) -> &SpecConfig {
+        &self.cfg
+    }
+
+    /// Speculative greedy generation against a **packed** target
+    /// (e.g. INT8). Returns the generated tokens — bit-identical to
+    /// `target.generate_greedy` — plus the acceptance stats.
+    #[allow(clippy::too_many_arguments)]
+    pub fn generate_packed(
+        &self,
+        target: &PackedModel,
+        prompt: &[usize],
+        n_new: usize,
+        ws: &mut Workspace,
+        target_scratch: &mut KernelScratch,
+        draft_scratch: &mut KernelScratch,
+        tstate: &mut DecodeState,
+        dstate: &mut DecodeState,
+    ) -> Result<(Vec<usize>, SpecStats)> {
+        check_draft_compat(&self.draft.config, &target.config)?;
+        let mut ctrl = AdaptiveK::new(&self.cfg);
+        let mut stats = SpecStats::default();
+        let mut ops = target.ops(target_scratch);
+        let toks = generate_greedy_spec_ops(
+            &mut ops,
+            &self.draft,
+            draft_scratch,
+            prompt,
+            n_new,
+            &mut ctrl,
+            ws,
+            tstate,
+            dstate,
+            &mut stats,
+        )?;
+        Ok((toks, stats))
+    }
+
+    /// Speculative greedy generation against the **reference** f32
+    /// target — bit-identical to `forward::generate_greedy` on `ck`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn generate_reference(
+        &self,
+        ck: &Checkpoint,
+        prompt: &[usize],
+        n_new: usize,
+        ws: &mut Workspace,
+        draft_scratch: &mut KernelScratch,
+        tstate: &mut DecodeState,
+        dstate: &mut DecodeState,
+    ) -> Result<(Vec<usize>, SpecStats)> {
+        check_draft_compat(&self.draft.config, &ck.config)?;
+        let mut ctrl = AdaptiveK::new(&self.cfg);
+        let mut stats = SpecStats::default();
+        let mut ops = CkOps::new(ck);
+        let toks = generate_greedy_spec_ops(
+            &mut ops,
+            &self.draft,
+            draft_scratch,
+            prompt,
+            n_new,
+            &mut ctrl,
+            ws,
+            tstate,
+            dstate,
+            &mut stats,
+        )?;
+        Ok((toks, stats))
+    }
+}
+
+/// Per-session speculative state for the continuous-batching server:
+/// the session's draft K/V (rented from the same arena as the target
+/// state), its adaptive-`k` controller, and its acceptance stats.
+#[derive(Debug)]
+pub(crate) struct SpecSession {
+    pub dstate: DecodeState,
+    pub ctrl: AdaptiveK,
+    pub stats: SpecStats,
+}
+
+impl SpecSession {
+    pub(crate) fn new(cfg: &SpecConfig, dstate: DecodeState) -> SpecSession {
+        SpecSession { dstate, ctrl: AdaptiveK::new(cfg), stats: SpecStats::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::forward::generate_greedy;
+    use crate::model::PicoLlamaConfig;
+
+    fn ck() -> Checkpoint {
+        let mut ck = Checkpoint::random_init(&PicoLlamaConfig::test(), 23);
+        ck.amplify_outliers(0.002, 8.0, 11);
+        ck
+    }
+
+    #[test]
+    fn adaptive_k_shrinks_and_recovers() {
+        let mut c = AdaptiveK::new(&SpecConfig { k: 8, adaptive: true });
+        assert_eq!(c.propose(), 8);
+        c.update(8, 1); // 12.5% acceptance → halve
+        assert_eq!(c.propose(), 4);
+        c.update(4, 0);
+        assert_eq!(c.propose(), 2);
+        c.update(2, 2); // full acceptance → +1
+        assert_eq!(c.propose(), 3);
+        for _ in 0..20 {
+            c.update(3, 3);
+        }
+        assert_eq!(c.propose(), 8, "recovery is capped at the configured k");
+        c.update(0, 0); // m == 0 rounds never adapt
+        assert_eq!(c.propose(), 8);
+        let mut fixed = AdaptiveK::new(&SpecConfig::fixed(4));
+        fixed.update(4, 0);
+        assert_eq!(fixed.propose(), 4, "fixed policy never adapts");
+    }
+
+    #[test]
+    fn reference_target_speculative_matches_plain_greedy() {
+        let ck = ck();
+        let dec = SpecDecoder::from_checkpoint(&ck, Bits::Int4, SpecConfig::default()).unwrap();
+        let mut ws = Workspace::new(&ck.config, ck.config.max_seq);
+        let mut dscratch = dec.draft_model().prewarmed_scratch();
+        for prompt in [vec![1usize, 5, 9], vec![2usize]] {
+            let want = generate_greedy(&ck, &prompt, 12, &mut ws).unwrap();
+            let mut ts = DecodeState::new(&ck.config);
+            let mut ds = DecodeState::new(&ck.config);
+            let (got, stats) = dec
+                .generate_reference(&ck, &prompt, 12, &mut ws, &mut dscratch, &mut ts, &mut ds)
+                .unwrap();
+            assert_eq!(got, want, "speculative diverged from target-only greedy");
+            assert_eq!(stats.emitted as usize, got.len());
+            assert!(stats.accepted <= stats.drafted);
+        }
+    }
+
+    #[test]
+    fn single_token_budget_never_drafts() {
+        let ck = ck();
+        let dec = SpecDecoder::from_checkpoint(&ck, Bits::Int4, SpecConfig::default()).unwrap();
+        let mut ws = Workspace::new(&ck.config, ck.config.max_seq);
+        let mut dscratch = dec.draft_model().prewarmed_scratch();
+        let mut ts = DecodeState::new(&ck.config);
+        let mut ds = DecodeState::new(&ck.config);
+        let (got, stats) = dec
+            .generate_reference(&ck, &[3, 1, 4], 1, &mut ws, &mut dscratch, &mut ts, &mut ds)
+            .unwrap();
+        assert_eq!(got, generate_greedy(&ck, &[3, 1, 4], 1, &mut ws).unwrap());
+        assert_eq!(stats.drafted, 0, "a 1-token budget is a pure target step");
+        assert_eq!(stats.rounds, 0);
+    }
+
+    #[test]
+    fn empty_and_overlong_prompts_mirror_plain_greedy() {
+        let ck = ck();
+        let dec = SpecDecoder::from_checkpoint(&ck, Bits::Int4, SpecConfig::default()).unwrap();
+        let mut ws = Workspace::new(&ck.config, ck.config.max_seq);
+        let mut dscratch = dec.draft_model().prewarmed_scratch();
+        let mut ts = DecodeState::new(&ck.config);
+        let mut ds = DecodeState::new(&ck.config);
+        let at_edge = vec![1usize; ck.config.max_seq];
+        let (got, _) = dec
+            .generate_reference(&ck, &at_edge, 4, &mut ws, &mut dscratch, &mut ts, &mut ds)
+            .unwrap();
+        assert!(got.is_empty(), "prompt at max_seq generates nothing");
+        let (none, _) = dec
+            .generate_reference(&ck, &[1, 2], 0, &mut ws, &mut dscratch, &mut ts, &mut ds)
+            .unwrap();
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn draft_compat_rejects_mismatched_geometry() {
+        let ck = ck();
+        let mut other = PicoLlamaConfig::test();
+        other.d_model *= 2;
+        assert!(check_draft_compat(&ck.config, &ck.config).is_ok());
+        assert!(check_draft_compat(&other, &ck.config).is_err());
+    }
+}

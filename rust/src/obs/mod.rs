@@ -91,6 +91,18 @@ pub mod names {
     pub const PIPELINE_STAGE_NS_TOTAL: &str = "pipeline_stage_ns_total";
     /// Counter: tensor units processed by the quantization pipeline.
     pub const PIPELINE_UNITS_TOTAL: &str = "pipeline_units_total";
+    /// Counter: tokens proposed by the speculative draft engine
+    /// (`model::specdec`). Acceptance rate =
+    /// `specdec_accepted_tokens_total / specdec_draft_tokens_total`.
+    pub const SPECDEC_DRAFT_TOKENS: &str = "specdec_draft_tokens_total";
+    /// Counter: draft tokens accepted by the target verify pass.
+    pub const SPECDEC_ACCEPTED_TOKENS: &str = "specdec_accepted_tokens_total";
+    /// Counter: draft/verify rounds executed (each emits ≥1 token).
+    pub const SPECDEC_ROUNDS: &str = "specdec_rounds_total";
+    /// Histogram: accepted-run length per round (0..=k draft tokens
+    /// accepted before the first mismatch; the bonus token from the
+    /// verify pass is not counted).
+    pub const SPECDEC_ACCEPT_LEN: &str = "specdec_accept_len";
 }
 
 // ---------------------------------------------------------------------

@@ -20,7 +20,7 @@ use splitquant::eval::{
     score_problem, score_problem_full, score_problem_packed, score_problem_packed_full,
     ScoreBuffers,
 };
-use splitquant::model::decode::DecodeState;
+use splitquant::model::decode::{DecodeState, KvArena};
 use splitquant::model::forward::{forward, forward_extend_ck, Workspace};
 use splitquant::model::packed::PackedModel;
 use splitquant::model::quantized::{quantize_model, Method};
@@ -28,6 +28,7 @@ use splitquant::model::{Checkpoint, PicoLlamaConfig};
 use splitquant::quant::Bits;
 use splitquant::split::SplitConfig;
 use splitquant::util::rng::Rng;
+use std::sync::Arc;
 use std::time::Duration;
 
 const TRIALS: u64 = 12;
@@ -143,6 +144,100 @@ fn prop_prefix_reuse_scoring_matches_full_recompute_both_engines() {
                 assert!((a - b).abs() < 1e-4, "seed {seed}: {a} vs {b} (packed)");
             }
         }
+    }
+}
+
+#[test]
+fn prop_speculative_rollback_cycles_balance_the_arena() {
+    // Speculative decoding's hot pattern on an arena-backed state:
+    // extend a chunk, accept a prefix, truncate back, re-extend — over
+    // and over. The arena must stay *exactly* balanced: the up-front
+    // reservation rents once, truncate/re-extend never rents or leaks,
+    // and `kv_reservation_failures_total` stays 0 below capacity.
+    splitquant::obs::set_enabled(true);
+    let reservation_failures = || {
+        splitquant::obs::snapshot()
+            .counter(splitquant::obs::names::KV_RESERVATION_FAILURES)
+            .unwrap_or(0)
+    };
+    for seed in 0..6u64 {
+        let mut r = Rng::new(4000 + seed);
+        let cfg = random_config(&mut r);
+        let mut ck = Checkpoint::random_init(&cfg, 17 * seed + 3);
+        ck.amplify_outliers(0.005, 6.0, seed);
+        let qm = quantize_model(&ck, Bits::Int4, &Method::SplitQuant(SplitConfig::default()))
+            .unwrap();
+        let pm = PackedModel::from_qmodel(&qm).unwrap();
+        let mut ws = Workspace::new(&cfg, cfg.max_seq);
+        let mut scratch = pm.prewarmed_scratch();
+        let block_positions = 4;
+        let per_state = cfg.max_seq.div_ceil(block_positions);
+        let arena = Arc::new(KvArena::new(&cfg, block_positions, 2 * per_state));
+        let f0 = reservation_failures();
+
+        let len = 12 + r.below(cfg.max_seq - 12);
+        let toks = random_tokens(&mut r, &cfg, len);
+        // Oracle rows: the whole-sequence forward, no rollbacks.
+        let full = pm.forward(&toks, &mut ws).unwrap();
+        {
+            let mut state = DecodeState::paged(&cfg, Arc::clone(&arena));
+            state.reserve(cfg.max_seq).unwrap();
+            let held = state.blocks_held();
+            assert_eq!(arena.blocks_in_use(), held, "reservation rents exactly once");
+            for cycle in 0..24 {
+                let cached = state.len();
+                if cached >= len {
+                    state.truncate(cached / 2);
+                    continue;
+                }
+                // Extend a speculative chunk and verify every row
+                // against the rollback-free oracle.
+                let c = 1 + r.below((len - cached).min(4));
+                let logits = pm
+                    .forward_extend(&toks[cached..cached + c], cached, &mut ws, &mut scratch, &mut state)
+                    .unwrap();
+                for i in 0..c {
+                    assert_eq!(
+                        logits.row(i),
+                        full.row(cached + i),
+                        "seed {seed} cycle {cycle}: re-extended row diverged after rollback"
+                    );
+                }
+                // Snapshots copy to owned storage — they must not pin
+                // or rent arena blocks.
+                if cycle % 5 == 0 {
+                    let snap = state.snapshot(state.len());
+                    assert_eq!(snap.blocks_held(), 0);
+                }
+                // Accept a random prefix of the chunk, roll back the rest.
+                let accepted = r.below(c + 1);
+                state.truncate(cached + accepted);
+                assert_eq!(
+                    arena.blocks_in_use(),
+                    held,
+                    "seed {seed} cycle {cycle}: truncate/extend must not rent or return blocks"
+                );
+            }
+            // A second full-context state (the speculative draft) still
+            // fits: reservation is all-or-nothing and the first state
+            // never over-rented.
+            let mut draft = DecodeState::paged(&cfg, Arc::clone(&arena));
+            draft.reserve(cfg.max_seq).unwrap();
+            assert_eq!(arena.blocks_in_use(), 2 * per_state);
+            assert_eq!(
+                reservation_failures() - f0,
+                0,
+                "seed {seed}: no reservation may fail below capacity"
+            );
+            // Over capacity the typed failure fires, the counter ticks,
+            // and the partial rental is kept (not leaked, not doubled).
+            let mut third = DecodeState::paged(&cfg, Arc::clone(&arena));
+            let err = third.reserve(1).unwrap_err();
+            assert!(err.requested >= 1);
+            assert_eq!(reservation_failures() - f0, 1);
+        }
+        // Dropping every state returns every block.
+        assert_eq!(arena.blocks_in_use(), 0, "seed {seed}: leaked arena blocks");
     }
 }
 

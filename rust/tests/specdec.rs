@@ -1,0 +1,331 @@
+//! Property suite for self-speculative decoding (DESIGN.md §11).
+//!
+//! The contract under test: speculative decoding is a pure *speed*
+//! transformation — its output must be **bit-for-bit identical** to
+//! target-only greedy decoding, across
+//!
+//! * draft widths {INT2, INT4} × draft lengths k ∈ {1, 2, 4, 8},
+//! * both CPU target engines (packed INT8 and the f32 reference),
+//! * owned and arena-paged decode states,
+//! * mid-stream rollbacks (the INT2 draft genuinely diverges), and
+//! * the continuous-batching server with mid-step admission.
+//!
+//! Resource hygiene rides along: every speculative session rents two
+//! K/V states from the same arena and must return both.
+
+use std::sync::Arc;
+
+use splitquant::coordinator::server::{
+    Backend, GenerateRequest, ServeError, Server, ServerConfig, TokenEvent,
+};
+use splitquant::data::{generate_problems, FactWorld, McqProblem};
+use splitquant::model::decode::{DecodeState, KvArena};
+use splitquant::model::forward::{generate_greedy, Workspace};
+use splitquant::model::packed::PackedModel;
+use splitquant::model::quantized::{quantize_model, Method};
+use splitquant::model::specdec::{SpecConfig, SpecDecoder, SpecStats};
+use splitquant::model::{Checkpoint, PicoLlamaConfig};
+use splitquant::quant::Bits;
+use splitquant::split::SplitConfig;
+
+/// Outlier-amplified checkpoint over the fact-world vocab: the
+/// amplified tails make the low-bit drafts *imperfect* (so acceptance
+/// is partial and rollbacks actually execute) without being useless.
+fn setup() -> (Checkpoint, Vec<McqProblem>) {
+    let world = FactWorld::generate(16, 4, 8, 1);
+    let mut cfg = PicoLlamaConfig::test();
+    cfg.vocab = world.vocab_size();
+    let mut ck = Checkpoint::random_init(&cfg, 7);
+    ck.amplify_outliers(0.002, 8.0, 11);
+    let problems = generate_problems(&world, 12, 5);
+    (ck, problems)
+}
+
+fn packed_target(ck: &Checkpoint) -> PackedModel {
+    let qm = quantize_model(ck, Bits::Int8, &Method::SplitQuant(SplitConfig::default())).unwrap();
+    PackedModel::from_qmodel(&qm).unwrap()
+}
+
+fn draft_packed(ck: &Checkpoint, bits: Bits) -> PackedModel {
+    let qm = quantize_model(ck, bits, &Method::SplitQuant(SplitConfig::default())).unwrap();
+    PackedModel::from_qmodel(&qm).unwrap()
+}
+
+/// Sequential greedy oracle on the packed target.
+fn packed_oracle(pm: &PackedModel, prompt: &[usize], n_new: usize) -> Vec<usize> {
+    let mut ws = Workspace::new(&pm.config, pm.config.max_seq);
+    let mut scratch = pm.prewarmed_scratch();
+    let mut state = DecodeState::new(&pm.config);
+    pm.generate_greedy(prompt, n_new, &mut ws, &mut scratch, &mut state)
+        .unwrap()
+}
+
+#[test]
+fn speculative_matches_plain_greedy_across_widths_k_and_engines() {
+    let (ck, problems) = setup();
+    let target = packed_target(&ck);
+    let cfg = &ck.config;
+    let mut ws = Workspace::new(cfg, cfg.max_seq);
+    let mut tscratch = target.prewarmed_scratch();
+    let prompts: Vec<Vec<usize>> = problems.iter().take(3).map(|p| p.prompt.clone()).collect();
+    for bits in [Bits::Int2, Bits::Int4] {
+        let mut stats = SpecStats::default();
+        for k in [1usize, 2, 4, 8] {
+            let dec = SpecDecoder::from_checkpoint(&ck, bits, SpecConfig::fixed(k)).unwrap();
+            let mut dscratch = dec.draft_model().prewarmed_scratch();
+            for p in &prompts {
+                // Budget past the context edge: exercises the max_seq
+                // clamp inside the speculative loop too.
+                let n_new = cfg.max_seq;
+                let mut st = DecodeState::new(cfg);
+                let want = target
+                    .generate_greedy(p, n_new, &mut ws, &mut tscratch, &mut st)
+                    .unwrap();
+                let mut ts = DecodeState::new(cfg);
+                let mut ds = DecodeState::new(cfg);
+                let (got, s) = dec
+                    .generate_packed(
+                        &target,
+                        p,
+                        n_new,
+                        &mut ws,
+                        &mut tscratch,
+                        &mut dscratch,
+                        &mut ts,
+                        &mut ds,
+                    )
+                    .unwrap();
+                assert_eq!(got, want, "packed target, {bits:?} draft, k={k}");
+                assert_eq!(s.emitted as usize, got.len());
+                stats.merge(&s);
+
+                let want_ref = generate_greedy(&ck, p, n_new, &mut ws).unwrap();
+                let mut ts = DecodeState::new(cfg);
+                let mut ds = DecodeState::new(cfg);
+                let (got_ref, s) = dec
+                    .generate_reference(&ck, p, n_new, &mut ws, &mut dscratch, &mut ts, &mut ds)
+                    .unwrap();
+                assert_eq!(got_ref, want_ref, "reference target, {bits:?} draft, k={k}");
+                stats.merge(&s);
+            }
+        }
+        assert!(stats.drafted > 0, "{bits:?}: drafts must have been proposed");
+        assert!(stats.accepted <= stats.drafted);
+        if bits == Bits::Int2 {
+            // The INT2 draft must genuinely diverge from the target
+            // mid-stream — otherwise this suite never exercises the
+            // rollback path it claims to test.
+            assert!(
+                stats.accepted < stats.drafted,
+                "expected partial acceptance (mid-stream rollbacks) with an INT2 draft"
+            );
+        }
+    }
+}
+
+#[test]
+fn speculative_on_paged_states_matches_owned_and_returns_blocks() {
+    let (ck, problems) = setup();
+    let target = packed_target(&ck);
+    let cfg = &ck.config;
+    let blocks_per_state = cfg.max_seq.div_ceil(4);
+    let arena = Arc::new(KvArena::new(cfg, 4, 2 * blocks_per_state));
+    let dec = SpecDecoder::from_checkpoint(&ck, Bits::Int4, SpecConfig::default()).unwrap();
+    let mut ws = Workspace::new(cfg, cfg.max_seq);
+    let mut tscratch = target.prewarmed_scratch();
+    let mut dscratch = dec.draft_model().prewarmed_scratch();
+    for p in problems.iter().take(3).map(|p| &p.prompt) {
+        let want = packed_oracle(&target, p, 10);
+        {
+            let mut ts = DecodeState::paged(cfg, Arc::clone(&arena));
+            let mut ds = DecodeState::paged(cfg, Arc::clone(&arena));
+            let (got, _) = dec
+                .generate_packed(&target, p, 10, &mut ws, &mut tscratch, &mut dscratch, &mut ts, &mut ds)
+                .unwrap();
+            assert_eq!(got, want, "paged speculative diverged from owned oracle");
+            assert!(arena.blocks_in_use() > 0, "both states rent from the arena");
+        }
+        // Dropping target + draft states returns every block — the
+        // arena is exactly balanced between decodes.
+        assert_eq!(arena.blocks_in_use(), 0, "leaked arena blocks");
+    }
+}
+
+/// Mid-step admission against a speculative server: the first stream
+/// is already decoding when the rest are submitted, so later sessions
+/// join a continuous batch whose members sit at different speculative
+/// offsets. Every stream must still match the sequential oracle and
+/// emit strictly in-order token indices.
+fn assert_spec_server_matches_oracle(
+    server: &Server,
+    prompts: &[Vec<usize>],
+    budgets: &[usize],
+    oracle: impl Fn(&[usize], usize) -> Vec<usize>,
+) {
+    let first = server
+        .submit_generate(GenerateRequest {
+            prompt: prompts[0].clone(),
+            max_tokens: budgets[0],
+            deadline: None,
+        })
+        .unwrap();
+    let first_event = first.recv().expect("first stream yields an event");
+    assert!(matches!(first_event, TokenEvent::Token { index: 0, .. }));
+    let rest: Vec<_> = prompts
+        .iter()
+        .zip(budgets)
+        .skip(1)
+        .map(|(p, &n)| {
+            server
+                .submit_generate(GenerateRequest {
+                    prompt: p.clone(),
+                    max_tokens: n,
+                    deadline: None,
+                })
+                .unwrap()
+        })
+        .collect();
+    let mut first_tokens = match first_event {
+        TokenEvent::Token { token, .. } => vec![token],
+        _ => unreachable!(),
+    };
+    for ev in first.iter() {
+        match ev {
+            TokenEvent::Token { index, token } => {
+                assert_eq!(index, first_tokens.len(), "in-order multi-token emission");
+                first_tokens.push(token);
+            }
+            TokenEvent::Done(resp) => {
+                assert_eq!(resp.tokens, first_tokens, "Done echoes the streamed tokens")
+            }
+            TokenEvent::Error(e) => panic!("stream 0 failed: {e}"),
+        }
+    }
+    assert_eq!(first_tokens, oracle(&prompts[0], budgets[0]));
+    for (i, s) in rest.into_iter().enumerate() {
+        let done = s.wait().unwrap();
+        assert_eq!(
+            done.tokens,
+            oracle(&prompts[i + 1], budgets[i + 1]),
+            "speculative stream {} diverged from sequential greedy",
+            i + 1
+        );
+    }
+    assert_eq!(server.kv_blocks_in_use(), 0, "target AND draft blocks returned");
+}
+
+fn gen_inputs(problems: &[McqProblem], cfg: &PicoLlamaConfig) -> (Vec<Vec<usize>>, Vec<usize>) {
+    let prompts: Vec<Vec<usize>> = problems.iter().take(6).map(|p| p.prompt.clone()).collect();
+    let budgets: Vec<usize> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| match i % 3 {
+            0 => 3 + i,
+            1 => cfg.max_seq - p.len(), // exactly to the context edge
+            _ => cfg.max_seq,           // clamped by max_seq mid-flight
+        })
+        .collect();
+    (prompts, budgets)
+}
+
+#[test]
+fn speculative_server_matches_sequential_greedy_packed_target() {
+    let (ck, problems) = setup();
+    let target = packed_target(&ck);
+    let (prompts, budgets) = gen_inputs(&problems, &target.config);
+    for bits in [Bits::Int2, Bits::Int4] {
+        let draft = Arc::new(draft_packed(&ck, bits));
+        let server = Server::start(
+            Backend::Packed(Box::new(target.clone())),
+            ServerConfig::builder()
+                .workers(4)
+                .kv_block_positions(4)
+                .draft(Some(draft))
+                .draft_k(4)
+                .build()
+                .unwrap(),
+        )
+        .unwrap();
+        assert_spec_server_matches_oracle(&server, &prompts, &budgets, |p, n| {
+            packed_oracle(&target, p, n)
+        });
+    }
+}
+
+#[test]
+fn speculative_server_matches_sequential_greedy_reference_target() {
+    let (ck, problems) = setup();
+    let (prompts, budgets) = gen_inputs(&problems, &ck.config);
+    let draft = Arc::new(draft_packed(&ck, Bits::Int4));
+    let server = Server::start(
+        Backend::Reference(Box::new(ck.clone())),
+        ServerConfig::builder()
+            .workers(4)
+            .kv_block_positions(4)
+            .draft(Some(draft))
+            .draft_k(4)
+            .build()
+            .unwrap(),
+    )
+    .unwrap();
+    assert_spec_server_matches_oracle(&server, &prompts, &budgets, |p, n| {
+        let mut ws = Workspace::new(&ck.config, ck.config.max_seq);
+        generate_greedy(&ck, p, n, &mut ws).unwrap()
+    });
+}
+
+#[test]
+fn speculative_sessions_reserve_double_and_shed_when_impossible() {
+    let (ck, problems) = setup();
+    let target = packed_target(&ck);
+    let cfg = target.config.clone();
+    let blocks_per_state = cfg.max_seq.div_ceil(4); // 8 with max_seq=32
+    let draft = Arc::new(draft_packed(&ck, Bits::Int4));
+    // Enough blocks for ONE full-context state but not two: a plain
+    // server admits this request, a speculative one must shed it with
+    // the typed KvExhausted (its worst case needs target + draft).
+    let arena_blocks = blocks_per_state + 1;
+    let plain = Server::start(
+        Backend::Packed(Box::new(target.clone())),
+        ServerConfig::builder()
+            .kv_block_positions(4)
+            .kv_blocks(arena_blocks)
+            .build()
+            .unwrap(),
+    )
+    .unwrap();
+    let spec = Server::start(
+        Backend::Packed(Box::new(target.clone())),
+        ServerConfig::builder()
+            .kv_block_positions(4)
+            .kv_blocks(arena_blocks)
+            .draft(Some(draft))
+            .build()
+            .unwrap(),
+    )
+    .unwrap();
+    let req = || GenerateRequest {
+        prompt: problems[0].prompt.clone(),
+        max_tokens: cfg.max_seq, // worst case: the full context
+        deadline: None,
+    };
+    let ok = plain.submit_generate(req()).unwrap().wait().unwrap();
+    assert!(!ok.tokens.is_empty());
+    let err = spec.submit_generate(req()).unwrap().wait().unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<ServeError>(),
+        Some(&ServeError::KvExhausted),
+        "a speculative session's worst case is two full K/V states"
+    );
+    // A request whose doubled footprint fits is still served — and
+    // bit-identically.
+    let short: Vec<usize> = problems[0].prompt.iter().take(4).copied().collect();
+    let small = GenerateRequest {
+        prompt: short.clone(),
+        max_tokens: 2,
+        deadline: None,
+    };
+    let done = spec.submit_generate(small).unwrap().wait().unwrap();
+    assert_eq!(done.tokens, packed_oracle(&target, &short, 2));
+    assert_eq!(spec.kv_blocks_in_use(), 0);
+}
