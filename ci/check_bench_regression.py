@@ -49,9 +49,19 @@ Two checks, both wired into the CI bench-smoke job:
    in a serving deployment. Reports from before the telemetry tier
    existed (no `metrics_overhead` field) are skipped with a notice.
 
+4. Failpoint overhead gate (same REPORT): the `failpoint_overhead`
+   object times the INT4 decode plain vs with a *disarmed* failpoint
+   evaluated per token — the cost every serving decode step pays for
+   the chaos harness when no fault plan is armed (one relaxed atomic
+   load, DESIGN.md §12). The gate fails if `overhead_frac` exceeds
+   --max-failpoint-overhead (default 0.01). Reports from before the
+   failpoint tier (no `failpoint_overhead` field) are skipped with a
+   notice.
+
 Usage:
   check_bench_regression.py BENCH_gemv.json [--min 1.5] [--min-simd 3.0]
                             [--max-metrics-overhead 0.03]
+                            [--max-failpoint-overhead 0.01]
                             [--serving BENCH_serving.json]
                             [--min-specdec-speedup 1.2]
 """
@@ -204,6 +214,37 @@ def check_metrics_overhead(report, path: str, max_overhead: float) -> int:
     return 0
 
 
+def check_failpoint_overhead(report, path: str, max_overhead: float) -> int:
+    """Gate the disarmed-failpoint overhead tier; SKIP (0) when the
+    report predates it, FAIL (1) on a non-finite or above-threshold
+    fraction."""
+    overhead = report.get("failpoint_overhead")
+    if overhead is None:
+        print("SKIP: report predates the failpoint tier (no 'failpoint_overhead')")
+        return 0
+    frac = overhead.get("overhead_frac") if isinstance(overhead, dict) else None
+    if not _finite(frac):
+        print(f"FAIL: {path} has non-finite 'failpoint_overhead.overhead_frac' ({frac!r})")
+        return 1
+    plain = overhead.get("plain_tokens_per_s")
+    off = overhead.get("off_tokens_per_s")
+    detail = ""
+    if _finite(plain) and _finite(off):
+        detail = f"  (plain {plain:.0f} vs failpoint-off {off:.0f} tok/s)"
+    print(
+        f"disarmed-failpoint overhead: {frac * 100.0:.2f}% of 1-token decode "
+        f"(ceiling {max_overhead * 100.0:.2f}%){detail}"
+    )
+    if frac > max_overhead:
+        print(
+            f"FAIL: disarmed-failpoint overhead {frac * 100.0:.2f}% exceeds "
+            f"the {max_overhead * 100.0:.2f}% ceiling"
+        )
+        return 1
+    print("OK: disarmed failpoints clear the overhead ceiling")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("report", help="path to BENCH_gemv.json")
@@ -231,6 +272,15 @@ def main(argv=None) -> int:
         help="maximum fraction of 1-token decode throughput telemetry "
         "recording may cost (default 0.03); skipped when the report "
         "predates the telemetry tier",
+    )
+    ap.add_argument(
+        "--max-failpoint-overhead",
+        type=float,
+        default=0.01,
+        dest="max_failpoint_overhead",
+        help="maximum fraction of 1-token decode throughput a *disarmed* "
+        "failpoint check may cost (default 0.01); skipped when the "
+        "report predates the failpoint tier",
     )
     ap.add_argument(
         "--serving",
@@ -302,6 +352,9 @@ def main(argv=None) -> int:
         print("OK: SIMD kernels clear the regression floor")
 
     if check_metrics_overhead(report, args.report, args.max_metrics_overhead):
+        return 1
+
+    if check_failpoint_overhead(report, args.report, args.max_failpoint_overhead):
         return 1
 
     if args.serving is not None:

@@ -30,6 +30,11 @@ def good_report(**overrides):
             "on_tokens_per_s": 990.0,
             "overhead_frac": 0.01,
         },
+        "failpoint_overhead": {
+            "plain_tokens_per_s": 1000.0,
+            "off_tokens_per_s": 997.0,
+            "overhead_frac": 0.003,
+        },
     }
     for key, value in overrides.items():
         if value is _ABSENT:
@@ -112,6 +117,44 @@ class GateTest(unittest.TestCase):
         )
         self.assertEqual(self.run_gate(report, ["--max-metrics-overhead", "0.10"]), 0)
         self.assertEqual(self.run_gate(report, ["--max-metrics-overhead", "0.02"]), 1)
+
+    def test_failpoint_overhead_missing_is_skipped(self):
+        # Reports from before the failpoint tier skip, not fail.
+        report = good_report(failpoint_overhead=_ABSENT)
+        self.assertEqual(self.run_gate(report), 0)
+
+    def test_failpoint_overhead_above_ceiling_fails(self):
+        report = good_report(
+            failpoint_overhead={
+                "plain_tokens_per_s": 1000.0,
+                "off_tokens_per_s": 975.0,
+                "overhead_frac": 0.025,
+            }
+        )
+        self.assertEqual(self.run_gate(report), 1)
+
+    def test_failpoint_overhead_below_ceiling_passes(self):
+        report = good_report(
+            failpoint_overhead={
+                "plain_tokens_per_s": 1000.0,
+                "off_tokens_per_s": 995.0,
+                "overhead_frac": 0.005,
+            }
+        )
+        self.assertEqual(self.run_gate(report), 0)
+
+    def test_failpoint_overhead_non_finite_fails(self):
+        report = good_report(
+            failpoint_overhead={"overhead_frac": float("inf")}
+        )
+        self.assertEqual(self.run_gate(report), 1)
+
+    def test_failpoint_overhead_custom_ceiling(self):
+        report = good_report(
+            failpoint_overhead={"overhead_frac": 0.02}
+        )
+        self.assertEqual(self.run_gate(report, ["--max-failpoint-overhead", "0.05"]), 0)
+        self.assertEqual(self.run_gate(report, ["--max-failpoint-overhead", "0.01"]), 1)
 
     def run_serving_gate(self, serving_report, extra_args=()):
         with tempfile.NamedTemporaryFile(

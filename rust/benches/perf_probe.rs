@@ -481,7 +481,7 @@ fn gemv_section(path: &str, fixed_iters: Option<usize>) {
     // serving deployment; `ci/check_bench_regression.py` fails the
     // smoke job if `overhead_frac` exceeds `--max-metrics-overhead`
     // (0.03 by default).
-    let mut ob = Bench::with_config("gemv.metrics", config);
+    let mut ob = Bench::with_config("gemv.metrics", config.clone());
     let was_enabled = splitquant::obs::enabled();
     let mut tok_per_s = [0.0f64; 2];
     for (slot, (label, on)) in [("off", false), ("on", true)].into_iter().enumerate() {
@@ -507,11 +507,49 @@ fn gemv_section(path: &str, fixed_iters: Option<usize>) {
         overhead_frac * 100.0
     );
 
+    // --- failpoint overhead tier: the same INT4 LUT 1-token extend,
+    // plain vs with a *disarmed* failpoint evaluated once per token —
+    // exactly what every serving decode step pays for fault injection
+    // when no plan is armed (one relaxed atomic load, DESIGN.md §12).
+    // `ci/check_bench_regression.py` fails the smoke job if this
+    // exceeds `--max-failpoint-overhead` (0.01 by default).
+    use splitquant::util::failpoint;
+    let mut fb = Bench::with_config("gemv.failpoint", config);
+    failpoint::clear();
+    let mut fp_tok_per_s = [0.0f64; 2];
+    for (slot, (label, check)) in [("plain", false), ("failpoint_off", true)]
+        .into_iter()
+        .enumerate()
+    {
+        let mut scratch = pm.prewarmed_scratch();
+        scratch.set_kernel_impl(KernelImpl::Lut);
+        let mut state = DecodeState::new(&cfg);
+        pm.prompt_pass(&prompt, &mut ws, &mut scratch, &mut state).expect("prompt pass");
+        let t = fb.run(&format!("forward_extend_1tok[lut,INT4,{label}]"), || {
+            if check && failpoint::trigger(failpoint::sites::WORKER_FORWARD).is_some() {
+                unreachable!("failpoints are disarmed in the perf probe");
+            }
+            let logits = pm
+                .forward_extend(&[7], prompt.len(), &mut ws, &mut scratch, &mut state)
+                .expect("extend");
+            black_box(logits.row(0)[0])
+        });
+        fp_tok_per_s[slot] = 1.0 / t.as_secs_f64().max(1e-12);
+    }
+    let (plain_tps, fp_off_tps) = (fp_tok_per_s[0], fp_tok_per_s[1]);
+    let fp_overhead_frac = (plain_tps - fp_off_tps).max(0.0) / plain_tps.max(1e-12);
+    println!(
+        "disarmed-failpoint overhead on 1-token decode: {:.2}%  \
+         (plain {plain_tps:.0} vs failpoint-off {fp_off_tps:.0} tok/s)",
+        fp_overhead_frac * 100.0
+    );
+
     let results: Vec<Json> = gb
         .results()
         .iter()
         .chain(eb.results().iter())
         .chain(ob.results().iter())
+        .chain(fb.results().iter())
         .map(|r| r.to_json())
         .collect();
     let report = Json::obj(vec![
@@ -530,6 +568,14 @@ fn gemv_section(path: &str, fixed_iters: Option<usize>) {
                 ("off_tokens_per_s", Json::num(off_tps)),
                 ("on_tokens_per_s", Json::num(on_tps)),
                 ("overhead_frac", Json::num(overhead_frac)),
+            ]),
+        ),
+        (
+            "failpoint_overhead",
+            Json::obj(vec![
+                ("plain_tokens_per_s", Json::num(plain_tps)),
+                ("off_tokens_per_s", Json::num(fp_off_tps)),
+                ("overhead_frac", Json::num(fp_overhead_frac)),
             ]),
         ),
         ("sections", Json::arr(sections)),

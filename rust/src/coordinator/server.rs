@@ -75,6 +75,7 @@ use crate::model::quantized::QuantizedModel;
 use crate::model::{Checkpoint, PicoLlamaConfig};
 use crate::obs;
 use crate::runtime::{ArgValue, Engine, EngineKind};
+use crate::util::failpoint::{self, sites as fp};
 use crate::util::pool::{thread_budget, Pool};
 
 use anyhow::{anyhow, bail, Result};
@@ -96,8 +97,12 @@ pub enum ServeError {
     Unsupported(String),
     /// The request failed validation (empty prompt, out-of-vocab token).
     Invalid(String),
-    /// An engine error surfaced mid-generation.
+    /// An engine error, contained worker panic, or watchdog
+    /// cancellation surfaced mid-request.
     Internal(String),
+    /// The server is draining: admissions are closed, and live sessions
+    /// past the drain deadline are cancelled with this error.
+    ShuttingDown,
 }
 
 impl std::fmt::Display for ServeError {
@@ -109,6 +114,7 @@ impl std::fmt::Display for ServeError {
             ServeError::Unsupported(what) => write!(f, "unsupported request: {what}"),
             ServeError::Invalid(why) => write!(f, "invalid request: {why}"),
             ServeError::Internal(why) => write!(f, "generation failed: {why}"),
+            ServeError::ShuttingDown => write!(f, "server shutting down: admissions closed"),
         }
     }
 }
@@ -133,6 +139,9 @@ struct ServeMetrics {
     shed_unsupported: obs::Counter,
     shed_invalid: obs::Counter,
     shed_internal: obs::Counter,
+    shed_shutting_down: obs::Counter,
+    panics: obs::Counter,
+    watchdog_cancellations: obs::Counter,
     ttft_ns: obs::Histogram,
     latency_ns: obs::Histogram,
     tokens: obs::Counter,
@@ -153,6 +162,9 @@ fn serve_metrics() -> &'static ServeMetrics {
             shed_unsupported: shed("unsupported"),
             shed_invalid: shed("invalid"),
             shed_internal: shed("internal"),
+            shed_shutting_down: shed("shutting_down"),
+            panics: obs::counter(obs::names::SERVER_PANICS_TOTAL),
+            watchdog_cancellations: obs::counter(obs::names::WATCHDOG_CANCELLATIONS_TOTAL),
             ttft_ns: obs::histogram(obs::names::SERVE_TTFT_NS),
             latency_ns: obs::histogram(obs::names::SERVE_LATENCY_NS),
             tokens: obs::counter(obs::names::SERVE_TOKENS_TOTAL),
@@ -173,6 +185,7 @@ impl ServeMetrics {
             ServeError::Unsupported(_) => self.shed_unsupported.inc(),
             ServeError::Invalid(_) => self.shed_invalid.inc(),
             ServeError::Internal(_) => self.shed_internal.inc(),
+            ServeError::ShuttingDown => self.shed_shutting_down.inc(),
         }
     }
 
@@ -310,6 +323,29 @@ pub enum Request {
         enqueued: Instant,
         deadline: Option<Instant>,
     },
+    /// Graceful drain ([`Server::drain`]): finish or deadline-cancel
+    /// live sessions, shed everything still queued, then report.
+    Drain {
+        /// Absolute cutoff; sessions still live past it are cancelled
+        /// with [`ServeError::ShuttingDown`]. `None` waits for all live
+        /// sessions to finish naturally.
+        deadline: Option<Instant>,
+        respond: mpsc::Sender<DrainReport>,
+    },
+}
+
+/// What [`Server::drain`] observed, measured on the serve-loop thread
+/// after the last session released its blocks.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DrainReport {
+    /// Sessions that finished naturally during the drain window.
+    pub completed: usize,
+    /// Sessions cancelled at the drain deadline (`ShuttingDown`).
+    pub cancelled: usize,
+    /// Queued/backlogged requests shed with `ShuttingDown`.
+    pub shed: usize,
+    /// Arena occupancy after the drain — 0 on a clean drain.
+    pub kv_blocks_in_use: usize,
 }
 
 /// Server handle: submit scoring or generation requests, join on drop.
@@ -322,6 +358,9 @@ pub struct Server {
     /// Generation requests submitted but not yet terminal — the bounded
     /// admission queue's synchronous backpressure counter.
     pending: Arc<AtomicUsize>,
+    /// Set by [`Server::drain`]: submissions shed synchronously with
+    /// [`ServeError::ShuttingDown`] without touching the queue.
+    draining: Arc<std::sync::atomic::AtomicBool>,
     config: ServerConfig,
 }
 
@@ -427,6 +466,10 @@ pub struct ServerConfig {
     /// adapted downward per session when acceptance is poor. Ignored
     /// without a `draft`.
     pub draft_k: usize,
+    /// Watchdog: cancel a session whose last decode step took longer
+    /// than this budget (`--watchdog-ms`), releasing its blocks and
+    /// shedding it as `internal`. `None` disables the watchdog.
+    pub watchdog_step_budget: Option<Duration>,
 }
 
 impl Default for ServerConfig {
@@ -448,6 +491,7 @@ impl Default for ServerConfig {
             max_new_tokens: 256,
             draft: None,
             draft_k: 4,
+            watchdog_step_budget: None,
         }
     }
 }
@@ -595,6 +639,10 @@ impl ServerConfigBuilder {
         self.config.draft_k = v;
         self
     }
+    pub fn watchdog_step_budget(mut self, v: Option<Duration>) -> Self {
+        self.config.watchdog_step_budget = v;
+        self
+    }
 
     pub fn build(self) -> Result<ServerConfig> {
         self.config.validate()?;
@@ -695,6 +743,7 @@ impl Server {
             worker: Some(worker),
             arena,
             pending,
+            draining: Arc::new(std::sync::atomic::AtomicBool::new(false)),
             config,
         })
     }
@@ -702,6 +751,11 @@ impl Server {
     /// Submit a scoring problem; returns a receiver for the response.
     pub fn submit(&self, problem: McqProblem) -> mpsc::Receiver<Result<ScoreResponse>> {
         let (rtx, rrx) = mpsc::channel();
+        if self.draining.load(Ordering::SeqCst) {
+            serve_metrics().shed(&ServeError::ShuttingDown);
+            let _ = rtx.send(Err(ServeError::ShuttingDown.into()));
+            return rrx;
+        }
         let req = Request::Score {
             problem,
             respond: rtx,
@@ -726,6 +780,10 @@ impl Server {
     /// Sheds synchronously with [`ServeError::Overloaded`] when more
     /// than `queue_cap` generation requests are already in flight.
     pub fn submit_generate(&self, spec: GenerateRequest) -> Result<TokenStream> {
+        if self.draining.load(Ordering::SeqCst) {
+            serve_metrics().shed(&ServeError::ShuttingDown);
+            return Err(ServeError::ShuttingDown.into());
+        }
         if self.pending.fetch_add(1, Ordering::SeqCst) >= self.config.queue_cap {
             self.pending.fetch_sub(1, Ordering::SeqCst);
             serve_metrics().shed(&ServeError::Overloaded);
@@ -767,6 +825,30 @@ impl Server {
     /// counter — safe to poll from any thread.
     pub fn kv_blocks_in_use(&self) -> usize {
         self.arena.as_ref().map_or(0, |a| a.blocks_in_use())
+    }
+
+    /// Gracefully drain the server: close admissions (every later
+    /// submit sheds synchronously with [`ServeError::ShuttingDown`]),
+    /// let live sessions finish — or cancel those still live once
+    /// `deadline` elapses — shed everything queued, and return once the
+    /// serve loop proves arena occupancy is back to 0.
+    ///
+    /// The server still answers occupancy queries afterwards and drops
+    /// cleanly; it just refuses new work. Draining twice is idempotent
+    /// (the second call reports an already-empty loop).
+    pub fn drain(&self, deadline: Option<Duration>) -> Result<DrainReport> {
+        self.draining.store(true, Ordering::SeqCst);
+        let (rtx, rrx) = mpsc::channel();
+        let req = Request::Drain {
+            deadline: deadline.map(|d| Instant::now() + d),
+            respond: rtx,
+        };
+        match &self.tx {
+            Some(tx) if tx.send(req).is_ok() => {
+                rrx.recv().map_err(|_| anyhow!("server stopped mid-drain"))
+            }
+            _ => Err(anyhow!("server stopped")),
+        }
     }
 }
 
@@ -851,9 +933,47 @@ where
     let ticket = AtomicUsize::new(0);
     pool.parallel_map_init(
         items.len(),
-        || bufs[ticket.fetch_add(1, Ordering::Relaxed) % bufs.len()].lock().unwrap(),
+        || {
+            bufs[ticket.fetch_add(1, Ordering::Relaxed) % bufs.len()]
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+        },
         |guard, i| work_one(guard, &items[i]),
     )
+}
+
+/// Run one unit of worker work (one scored problem, one session step)
+/// with panics contained to that unit: the payload becomes a typed
+/// [`ServeError::Internal`] and bumps `server_panics_total`, while the
+/// serve loop keeps serving every other request.
+///
+/// Unwind safety (DESIGN.md §12): the shared buffers a unit mutates —
+/// `Workspace` activations, `KernelScratch`, paged `DecodeState`
+/// appends — are write-before-read per forward call, and a state's
+/// logical length advances only after its rows are fully written. A
+/// half-finished unit therefore leaves buffers that the *next* unit
+/// overwrites from scratch, and the panicked session itself is retired
+/// (blocks released) by the serve loop, so `AssertUnwindSafe` is sound.
+fn contained<R>(f: impl FnOnce() -> Result<R>) -> Result<R> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(r) => r,
+        Err(payload) => {
+            serve_metrics().panics.inc();
+            Err(ServeError::Internal(format!("worker panicked: {}", panic_message(&payload))).into())
+        }
+    }
+}
+
+/// Best-effort human-readable panic payload (`&str` / `String` covers
+/// every `panic!` in this crate; anything else is labeled opaquely).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 impl Executor {
@@ -936,23 +1056,29 @@ impl Executor {
                 let pm: &PackedModel = pm;
                 let cache: &Mutex<PrefixCache> = cache;
                 Ok(shard_batch(pool, bufs, problems, |bufs, p| {
-                    eval::validate_problem(&pm.config, p)?;
-                    if config.reuse_prefix {
-                        let ScoreBuffers { ws, state, scratch } = bufs;
-                        eval::score_problem_session_timed(
-                            &mut pm.ops(scratch),
-                            p,
-                            ws,
-                            state,
-                            Some(cache),
-                        )
-                    } else {
-                        // Full recompute with the real prefill/decode
-                        // split: each option's prompt pass is prefill,
-                        // its extension is decode. Logprobs stay
-                        // bit-identical to the untimed oracle.
-                        eval::score_problem_packed_full_timed(pm, p, bufs)
-                    }
+                    contained(|| {
+                        if let Some(msg) = failpoint::trigger(fp::WORKER_FORWARD) {
+                            return Err(ServeError::Internal(msg).into());
+                        }
+                        eval::validate_problem(&pm.config, p)
+                            .map_err(|e| ServeError::Invalid(e.to_string()))?;
+                        if config.reuse_prefix {
+                            let ScoreBuffers { ws, state, scratch } = bufs;
+                            eval::score_problem_session_timed(
+                                &mut pm.ops(scratch),
+                                p,
+                                ws,
+                                state,
+                                Some(cache),
+                            )
+                        } else {
+                            // Full recompute with the real prefill/decode
+                            // split: each option's prompt pass is prefill,
+                            // its extension is decode. Logprobs stay
+                            // bit-identical to the untimed oracle.
+                            eval::score_problem_packed_full_timed(pm, p, bufs)
+                        }
+                    })
                 }))
             }
             Executor::Reference {
@@ -965,19 +1091,25 @@ impl Executor {
                 let ck: &Checkpoint = ck;
                 let cache: &Mutex<PrefixCache> = cache;
                 Ok(shard_batch(pool, bufs, problems, |bufs, p| {
-                    eval::validate_problem(&ck.config, p)?;
-                    if config.reuse_prefix {
-                        let mut ops = CkOps::new(ck);
-                        eval::score_problem_session_timed(
-                            &mut ops,
-                            p,
-                            &mut bufs.ws,
-                            &mut bufs.state,
-                            Some(cache),
-                        )
-                    } else {
-                        eval::score_problem_full_timed(ck, p, bufs)
-                    }
+                    contained(|| {
+                        if let Some(msg) = failpoint::trigger(fp::WORKER_FORWARD) {
+                            return Err(ServeError::Internal(msg).into());
+                        }
+                        eval::validate_problem(&ck.config, p)
+                            .map_err(|e| ServeError::Invalid(e.to_string()))?;
+                        if config.reuse_prefix {
+                            let mut ops = CkOps::new(ck);
+                            eval::score_problem_session_timed(
+                                &mut ops,
+                                p,
+                                &mut bufs.ws,
+                                &mut bufs.state,
+                                Some(cache),
+                            )
+                        } else {
+                            eval::score_problem_full_timed(ck, p, bufs)
+                        }
+                    })
                 }))
             }
         }
@@ -995,11 +1127,22 @@ impl Executor {
                 match draft {
                     None => shard_batch(pool, bufs, sessions, |bufs, slot| {
                         let ScoreBuffers { ws, scratch, .. } = bufs;
-                        slot.lock().unwrap().advance(&mut pm.ops(scratch), ws)
+                        let mut session = slot.lock().unwrap_or_else(|e| e.into_inner());
+                        // Timed around the whole contained unit so the
+                        // watchdog sees injected delays and panics too.
+                        let t0 = Instant::now();
+                        let r = contained(|| session.advance(&mut pm.ops(scratch), ws));
+                        session.last_step = t0.elapsed();
+                        r
                     }),
                     Some(d) => shard_batch_spec(pool, bufs, d, sessions, |bufs, ds, slot| {
                         let ScoreBuffers { ws, scratch, .. } = bufs;
-                        slot.lock().unwrap().advance_spec(&mut pm.ops(scratch), &d.pm, ds, ws)
+                        let mut session = slot.lock().unwrap_or_else(|e| e.into_inner());
+                        let t0 = Instant::now();
+                        let r =
+                            contained(|| session.advance_spec(&mut pm.ops(scratch), &d.pm, ds, ws));
+                        session.last_step = t0.elapsed();
+                        r
                     }),
                 }
             }
@@ -1008,11 +1151,20 @@ impl Executor {
                 match draft {
                     None => shard_batch(pool, bufs, sessions, |bufs, slot| {
                         let mut ops = CkOps::new(ck);
-                        slot.lock().unwrap().advance(&mut ops, &mut bufs.ws)
+                        let mut session = slot.lock().unwrap_or_else(|e| e.into_inner());
+                        let t0 = Instant::now();
+                        let r = contained(|| session.advance(&mut ops, &mut bufs.ws));
+                        session.last_step = t0.elapsed();
+                        r
                     }),
                     Some(d) => shard_batch_spec(pool, bufs, d, sessions, |bufs, ds, slot| {
                         let mut ops = CkOps::new(ck);
-                        slot.lock().unwrap().advance_spec(&mut ops, &d.pm, ds, &mut bufs.ws)
+                        let mut session = slot.lock().unwrap_or_else(|e| e.into_inner());
+                        let t0 = Instant::now();
+                        let r =
+                            contained(|| session.advance_spec(&mut ops, &d.pm, ds, &mut bufs.ws));
+                        session.last_step = t0.elapsed();
+                        r
                     }),
                 }
             }
@@ -1044,8 +1196,10 @@ where
         || {
             let i = ticket.fetch_add(1, Ordering::Relaxed);
             (
-                bufs[i % bufs.len()].lock().unwrap(),
-                draft.scratches[i % draft.scratches.len()].lock().unwrap(),
+                bufs[i % bufs.len()].lock().unwrap_or_else(|e| e.into_inner()),
+                draft.scratches[i % draft.scratches.len()]
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner()),
             )
         },
         |(bufs, ds), i| work_one(bufs, ds, &items[i]),
@@ -1092,6 +1246,9 @@ impl GenSession {
     /// comes straight from the prompt logits), a single-position extend
     /// afterwards.
     fn advance<O: ForwardOps>(&mut self, ops: &mut O, ws: &mut Workspace) -> Result<()> {
+        if let Some(msg) = failpoint::trigger(fp::WORKER_FORWARD) {
+            return Err(ServeError::Internal(msg).into());
+        }
         let row = if self.prefilled {
             let _span = crate::span!("decode_step");
             let t0 = Instant::now();
@@ -1131,6 +1288,9 @@ impl GenSession {
         draft_scratch: &mut KernelScratch,
         ws: &mut Workspace,
     ) -> Result<()> {
+        if let Some(msg) = failpoint::trigger(fp::WORKER_FORWARD) {
+            return Err(ServeError::Internal(msg).into());
+        }
         let spec = self.spec.as_mut().expect("speculative advance without a spec session");
         if !self.prefilled {
             let _span = crate::span!("prefill");
@@ -1258,30 +1418,36 @@ fn serve_loop(
     let mut sessions: Vec<Mutex<GenSession>> = Vec::new();
     let mut backlog: VecDeque<GenJob> = VecDeque::new();
     let mut closed = false;
+    // Drain mode ([`Server::drain`]): queued work sheds with
+    // `ShuttingDown`, admission closes, live sessions step to
+    // completion (or are cancelled at the drain deadline), and the
+    // report goes back once occupancy is provably 0.
+    let mut drain: Option<DrainState> = None;
     loop {
         let mut scores: Vec<ScoreJob> = Vec::new();
         let mut fresh: Vec<GenJob> = Vec::new();
-        if sessions.is_empty() && backlog.is_empty() {
+        let mut drains: Vec<(Option<Instant>, mpsc::Sender<DrainReport>)> = Vec::new();
+        if sessions.is_empty() && backlog.is_empty() && drain.is_none() {
             if closed {
                 return;
             }
             // Idle: block for the first request.
             match rx.recv() {
-                Ok(r) => route(r, &mut scores, &mut fresh),
+                Ok(r) => route(r, &mut scores, &mut fresh, &mut drains),
                 Err(_) => return,
             }
             // Legacy dynamic batching: a lone scoring request waits up
             // to max_wait for batch-mates — but only while no
-            // generation work is pending.
-            if fresh.is_empty() && !scores.is_empty() {
+            // generation (or drain) work is pending.
+            if fresh.is_empty() && !scores.is_empty() && drains.is_empty() {
                 let deadline = Instant::now() + config.max_wait;
-                while scores.len() < max_batch && fresh.is_empty() {
+                while scores.len() < max_batch && fresh.is_empty() && drains.is_empty() {
                     let now = Instant::now();
                     if now >= deadline {
                         break;
                     }
                     match rx.recv_timeout(deadline - now) {
-                        Ok(r) => route(r, &mut scores, &mut fresh),
+                        Ok(r) => route(r, &mut scores, &mut fresh, &mut drains),
                         Err(mpsc::RecvTimeoutError::Timeout) => break,
                         Err(mpsc::RecvTimeoutError::Disconnected) => {
                             closed = true;
@@ -1294,7 +1460,7 @@ fn serve_loop(
             // Step mode: admit whatever is queued, without blocking.
             loop {
                 match rx.try_recv() {
-                    Ok(r) => route(r, &mut scores, &mut fresh),
+                    Ok(r) => route(r, &mut scores, &mut fresh, &mut drains),
                     Err(mpsc::TryRecvError::Empty) => break,
                     Err(mpsc::TryRecvError::Disconnected) => {
                         closed = true;
@@ -1304,13 +1470,39 @@ fn serve_loop(
             }
         }
 
-        // Admission, FIFO: the backlog ahead of this iteration's
-        // arrivals. Jobs that still don't fit (sessions full, blocks
-        // temporarily rented out) go back to the backlog.
-        let candidates = std::mem::take(&mut backlog);
-        for job in candidates.into_iter().chain(fresh) {
-            if let Some(waiting) = admit(job, exec, config, arena, &mut sessions, pending) {
-                backlog.push_back(waiting);
+        // Register drain requests. Concurrent drains merge: the
+        // earliest deadline applies and every caller gets the report.
+        for (deadline, respond) in drains {
+            let d = drain.get_or_insert_with(DrainState::default);
+            d.deadline = match (d.deadline, deadline) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+            d.responders.push(respond);
+        }
+
+        if let Some(d) = &mut drain {
+            // Admissions are closed: everything queued — scoring
+            // requests, fresh generation requests, and the backlog —
+            // sheds with the typed `ShuttingDown` reason.
+            for job in scores.drain(..) {
+                serve_metrics().shed(&ServeError::ShuttingDown);
+                let _ = job.respond.send(Err(ServeError::ShuttingDown.into()));
+                d.report.shed += 1;
+            }
+            for job in backlog.drain(..).chain(fresh) {
+                job.shed(ServeError::ShuttingDown, pending);
+                d.report.shed += 1;
+            }
+        } else {
+            // Admission, FIFO: the backlog ahead of this iteration's
+            // arrivals. Jobs that still don't fit (sessions full,
+            // blocks temporarily rented out) go back to the backlog.
+            let candidates = std::mem::take(&mut backlog);
+            for job in candidates.into_iter().chain(fresh) {
+                if let Some(waiting) = admit(job, exec, config, arena, &mut sessions, pending) {
+                    backlog.push_back(waiting);
+                }
             }
         }
         serve_metrics().queue_depth.set(backlog.len() as i64);
@@ -1324,15 +1516,64 @@ fn serve_loop(
 
         // One decode step across all live sessions.
         shed_expired(&mut sessions, pending);
+        let before = sessions.len();
         if !sessions.is_empty() {
             let results = exec.step_sessions(&sessions);
             retire_and_emit(&mut sessions, results, pending);
+        }
+        // Completed = retired by the step itself; watchdog cancellations
+        // below are not completions and must not inflate the count.
+        let completed_this_step = before - sessions.len();
+        if let Some(budget) = config.watchdog_step_budget {
+            watchdog_cancel(&mut sessions, budget, pending);
+        }
+
+        if let Some(d) = &mut drain {
+            d.report.completed += completed_this_step;
+            if !sessions.is_empty() && d.deadline.is_some_and(|dl| Instant::now() >= dl) {
+                // Drain deadline: cancel every session still live,
+                // releasing its blocks before the terminal event.
+                for slot in sessions.drain(..) {
+                    let s = slot.into_inner().unwrap_or_else(|e| e.into_inner());
+                    serve_metrics().shed(&ServeError::ShuttingDown);
+                    let GenSession { events, state, spec, .. } = s;
+                    drop(state);
+                    drop(spec);
+                    let _ = events.send(TokenEvent::Error(ServeError::ShuttingDown));
+                    pending.fetch_sub(1, Ordering::SeqCst);
+                    d.report.cancelled += 1;
+                }
+            }
+            if sessions.is_empty() {
+                // Every session is terminal and every queued request is
+                // shed: measure occupancy (exactly 0 unless something
+                // outside the loop still rents blocks) and reply.
+                let mut report = d.report;
+                report.kv_blocks_in_use = arena.map_or(0, |a| a.blocks_in_use());
+                for r in d.responders.drain(..) {
+                    let _ = r.send(report);
+                }
+                drain = None;
+            }
         }
         serve_metrics().sessions_active.set(sessions.len() as i64);
     }
 }
 
-fn route(req: Request, scores: &mut Vec<ScoreJob>, fresh: &mut Vec<GenJob>) {
+/// Accumulated state of an in-progress drain.
+#[derive(Default)]
+struct DrainState {
+    deadline: Option<Instant>,
+    responders: Vec<mpsc::Sender<DrainReport>>,
+    report: DrainReport,
+}
+
+fn route(
+    req: Request,
+    scores: &mut Vec<ScoreJob>,
+    fresh: &mut Vec<GenJob>,
+    drains: &mut Vec<(Option<Instant>, mpsc::Sender<DrainReport>)>,
+) {
     match req {
         Request::Score {
             problem,
@@ -1356,7 +1597,36 @@ fn route(req: Request, scores: &mut Vec<ScoreJob>, fresh: &mut Vec<GenJob>) {
             enqueued,
             deadline,
         }),
+        Request::Drain { deadline, respond } => drains.push((deadline, respond)),
     }
+}
+
+/// Cancel sessions whose last decode step blew the watchdog budget:
+/// typed `Internal` error, blocks released before the terminal event,
+/// neighbors untouched. Runs after retirement, so a session that
+/// finished on its slow step still completes normally.
+fn watchdog_cancel(sessions: &mut Vec<Mutex<GenSession>>, budget: Duration, pending: &AtomicUsize) {
+    let mut keep = Vec::with_capacity(sessions.len());
+    for slot in std::mem::take(sessions) {
+        let s = slot.into_inner().unwrap_or_else(|e| e.into_inner());
+        if s.last_step > budget {
+            let m = serve_metrics();
+            m.watchdog_cancellations.inc();
+            let err = ServeError::Internal(format!(
+                "watchdog: decode step took {:?} (budget {budget:?})",
+                s.last_step
+            ));
+            m.shed(&err);
+            let GenSession { events, state, spec, .. } = s;
+            drop(state);
+            drop(spec);
+            let _ = events.send(TokenEvent::Error(err));
+            pending.fetch_sub(1, Ordering::SeqCst);
+        } else {
+            keep.push(Mutex::new(s));
+        }
+    }
+    *sessions = keep;
 }
 
 /// Try to admit one generation request. Terminal outcomes (validation
@@ -1371,6 +1641,13 @@ fn admit(
     sessions: &mut Vec<Mutex<GenSession>>,
     pending: &AtomicUsize,
 ) -> Option<GenJob> {
+    // Soft failpoint: this runs on the serve-loop thread, where a panic
+    // would kill the scheduler for everyone — injected panics degrade
+    // to a typed shed on this one request.
+    if let Some(msg) = failpoint::trigger_soft(fp::SERVER_ADMIT) {
+        job.shed(ServeError::Internal(msg), pending);
+        return None;
+    }
     if job.deadline.is_some_and(|d| Instant::now() >= d) {
         job.shed(ServeError::DeadlineExceeded, pending);
         return None;
@@ -1464,7 +1741,7 @@ fn admit(
 fn shed_expired(sessions: &mut Vec<Mutex<GenSession>>, pending: &AtomicUsize) {
     let now = Instant::now();
     sessions.retain(|slot| {
-        let s = slot.lock().unwrap();
+        let s = slot.lock().unwrap_or_else(|e| e.into_inner());
         if s.deadline.is_some_and(|d| now >= d) {
             serve_metrics().shed(&ServeError::DeadlineExceeded);
             let _ = s.events.send(TokenEvent::Error(ServeError::DeadlineExceeded));
@@ -1488,12 +1765,33 @@ fn retire_and_emit(
 ) {
     let mut keep = Vec::with_capacity(sessions.len());
     for (slot, res) in std::mem::take(sessions).into_iter().zip(results) {
-        let mut s = slot.into_inner().unwrap();
+        let mut s = slot.into_inner().unwrap_or_else(|e| e.into_inner());
+        // Soft failpoint on the serve-loop thread: an injected emit
+        // failure retires this session with a typed internal error.
+        let res = match res {
+            Ok(()) => match failpoint::trigger_soft(fp::STREAM_EMIT) {
+                Some(msg) => Err(ServeError::Internal(msg).into()),
+                None => Ok(()),
+            },
+            err => err,
+        };
         match res {
             Err(e) => {
-                let err = ServeError::Internal(format!("{e:#}"));
+                // Preserve the typed error when there is one (contained
+                // panics arrive as `Internal` already) instead of
+                // double-wrapping it.
+                let err = e
+                    .downcast_ref::<ServeError>()
+                    .cloned()
+                    .unwrap_or_else(|| ServeError::Internal(format!("{e:#}")));
                 serve_metrics().shed(&err);
-                let _ = s.events.send(TokenEvent::Error(err));
+                // Blocks (target *and* draft) return to the arena
+                // before the terminal event is visible — same contract
+                // as the Done path below.
+                let GenSession { events, state, spec, .. } = s;
+                drop(state);
+                drop(spec);
+                let _ = events.send(TokenEvent::Error(err));
                 pending.fetch_sub(1, Ordering::SeqCst);
             }
             Ok(()) => {
@@ -1564,15 +1862,28 @@ fn execute_score_batch(exec: &Executor, config: &ServerConfig, jobs: Vec<ScoreJo
     match exec.score(config, &problems) {
         Ok(results) => {
             for (job, result) in live.into_iter().zip(results) {
-                let resp = result.map(|(result, phases)| ScoreResponse {
-                    result,
-                    timing: RequestTiming {
-                        queue: started.duration_since(job.enqueued),
-                        prefill: phases.prefill,
-                        decode: phases.decode,
-                    },
-                    batch_size,
-                });
+                let resp = result
+                    .map(|(result, phases)| ScoreResponse {
+                        result,
+                        timing: RequestTiming {
+                            queue: started.duration_since(job.enqueued),
+                            prefill: phases.prefill,
+                            decode: phases.decode,
+                        },
+                        batch_size,
+                    })
+                    .map_err(|e| {
+                        // Per-problem failures shed typed like every
+                        // other error path, so the reason-labeled shed
+                        // counters keep summing to exactly the errors
+                        // clients observe.
+                        let err = e
+                            .downcast_ref::<ServeError>()
+                            .cloned()
+                            .unwrap_or_else(|| ServeError::Internal(format!("{e:#}")));
+                        serve_metrics().shed(&err);
+                        anyhow::Error::from(err)
+                    });
                 if let Ok(r) = &resp {
                     serve_metrics().observe_timing(&r.timing);
                 }
@@ -1581,7 +1892,9 @@ fn execute_score_batch(exec: &Executor, config: &ServerConfig, jobs: Vec<ScoreJo
         }
         Err(e) => {
             for job in live {
-                let _ = job.respond.send(Err(anyhow!("batch failed: {e}")));
+                let err = ServeError::Internal(format!("batch failed: {e}"));
+                serve_metrics().shed(&err);
+                let _ = job.respond.send(Err(err.into()));
             }
         }
     }

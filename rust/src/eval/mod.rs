@@ -26,6 +26,7 @@ use crate::model::forward::{
 };
 use crate::model::packed::PackedModel;
 use crate::model::{Checkpoint, PicoLlamaConfig};
+use crate::util::failpoint::{self, sites as fp};
 use crate::util::pool::{thread_budget, Pool};
 
 use anyhow::{bail, Result};
@@ -265,7 +266,20 @@ pub(crate) fn score_problem_session_timed<O: ForwardOps>(
     let prefill_started = Instant::now();
     let last_row = {
         let _span = crate::span!("prefill");
-        let cached = cache.and_then(|c| c.lock().unwrap().get(&problem.prompt));
+        // Both cache lock scopes recover from poison (`into_inner`): the
+        // LRU is only mutated while consistent, so a panic injected (or
+        // escaping) under the lock leaves valid contents behind. The
+        // failpoint fires *inside* the scope so an injected panic
+        // poisons the shared mutex — exactly the recovery being tested;
+        // an injected error degrades to a cache miss (recompute path,
+        // bit-identical output).
+        let cached = cache.and_then(|c| {
+            let mut guard = c.lock().unwrap_or_else(|e| e.into_inner());
+            if failpoint::trigger(fp::PREFIX_CACHE_LOCK).is_some() {
+                return None;
+            }
+            guard.get(&problem.prompt)
+        });
         match cached {
             Some(entry) => {
                 // Hit: restore the prompt's K/V into this worker's state
@@ -277,7 +291,10 @@ pub(crate) fn score_problem_session_timed<O: ForwardOps>(
                 let last = forward::prompt_pass(ops, &problem.prompt, ws, state)?;
                 if let Some(c) = cache {
                     let entry = PrefixEntry::new(state.snapshot(plen), last.clone());
-                    c.lock().unwrap().insert(problem.prompt.clone(), entry);
+                    let mut guard = c.lock().unwrap_or_else(|e| e.into_inner());
+                    if failpoint::trigger(fp::PREFIX_CACHE_LOCK).is_none() {
+                        guard.insert(problem.prompt.clone(), entry);
+                    }
                 }
                 last
             }

@@ -81,6 +81,12 @@ fn app() -> App {
                 .opt("kv-blocks", "0", "KV arena blocks (0 = auto for max-sessions)")
                 .opt("max-new-tokens", "8", "tokens to generate per request (stream mode)")
                 .opt("deadline-ms", "0", "per-request deadline in milliseconds (0 = none)")
+                .opt(
+                    "drain-deadline-ms",
+                    "0",
+                    "graceful-drain deadline at shutdown (0 = wait for live sessions)",
+                )
+                .opt("watchdog-ms", "0", "cancel sessions whose decode step exceeds this (0 = off)")
                 .opt("threads", "0", "pipeline worker threads (0 = all cores)")
                 .opt("metrics-addr", "", "serve live metrics on this address (e.g. 127.0.0.1:9100)")
                 .opt("metrics-json", "", "write a final telemetry snapshot JSON to this path")
@@ -412,7 +418,24 @@ fn cmd_serve(m: &Matches) -> Result<()> {
     } else {
         None
     };
+    // Deterministic fault injection for chaos demos: arm the failpoint
+    // plan from `SPLITQUANT_FAULTS` (seeded by `SPLITQUANT_FAULTS_SEED`)
+    // before the server starts, so admission/forward/emit faults hit
+    // from the first request.
+    match splitquant::util::failpoint::FaultPlan::from_env() {
+        Ok(Some(plan)) => {
+            log_info!(
+                "fault injection armed from SPLITQUANT_FAULTS: {} site(s), seed {}",
+                plan.faults.len(),
+                plan.seed
+            );
+            splitquant::util::failpoint::configure(plan);
+        }
+        Ok(None) => {}
+        Err(e) => anyhow::bail!("bad SPLITQUANT_FAULTS: {e}"),
+    }
     let deadline = m.get_ms("deadline-ms")?;
+    let watchdog = m.get_ms("watchdog-ms")?;
     let config = ServerConfig::builder()
         .draft(draft)
         .draft_k(m.get_usize("draft-k")?)
@@ -427,12 +450,15 @@ fn cmd_serve(m: &Matches) -> Result<()> {
         .kv_blocks(m.get_usize("kv-blocks")?)
         .max_new_tokens(m.get_usize("max-new-tokens")?.max(1))
         .default_deadline((!deadline.is_zero()).then_some(deadline))
+        .watchdog_step_budget((!watchdog.is_zero()).then_some(watchdog))
         .build()?;
     let max_new_tokens = config.max_new_tokens;
     let server = Server::start(backend, config)?;
+    let drain_deadline = m.get_ms("drain-deadline-ms")?;
 
     if m.flag("stream") {
         serve_stream_demo(&server, &problems, n_requests, max_new_tokens)?;
+        drain_and_report(&server, drain_deadline)?;
         return telemetry.finish();
     }
 
@@ -470,7 +496,23 @@ fn cmd_serve(m: &Matches) -> Result<()> {
         t.median,
         splitquant::util::stats::Summary::of(&batch_sizes).mean
     );
+    drain_and_report(&server, drain_deadline)?;
     telemetry.finish()
+}
+
+/// Gracefully drain the server and report what happened — the shutdown
+/// step of every `serve` run (`--drain-deadline-ms` bounds how long
+/// live sessions may keep decoding).
+fn drain_and_report(
+    server: &splitquant::coordinator::server::Server,
+    deadline: std::time::Duration,
+) -> Result<()> {
+    let report = server.drain((!deadline.is_zero()).then_some(deadline))?;
+    println!(
+        "drained: {} completed, {} cancelled, {} shed; kv blocks in use: {}",
+        report.completed, report.cancelled, report.shed, report.kv_blocks_in_use
+    );
+    Ok(())
 }
 
 /// `serve --stream`: fire one streaming generation per request (prompts

@@ -149,7 +149,12 @@ impl KvArena {
     /// Rent one block: recycle from the free list, else create lazily
     /// while under the cap. `None` means the pool is exhausted.
     fn alloc(&self) -> Option<Box<[f32]>> {
-        if let Some(b) = self.free.lock().unwrap().pop() {
+        if crate::util::failpoint::trigger(crate::util::failpoint::sites::ARENA_RESERVE).is_some() {
+            // Injected exhaustion: report it exactly like a full pool.
+            metrics().kv_failures.inc();
+            return None;
+        }
+        if let Some(b) = self.free.lock().unwrap_or_else(|e| e.into_inner()).pop() {
             self.in_use.fetch_add(1, Ordering::SeqCst);
             self.note_occupancy();
             return Some(b);
@@ -174,7 +179,12 @@ impl KvArena {
 
     /// Return a rented block to the free list.
     fn release(&self, block: Box<[f32]>) {
-        self.free.lock().unwrap().push(block);
+        // Runs from `Drop` (possibly mid-unwind): the failpoint is soft,
+        // an injected error is ignored, and only `delay` is observable.
+        // The occupancy decrement below is unconditional either way —
+        // a fault here must never leak accounting.
+        let _ = crate::util::failpoint::trigger_soft(crate::util::failpoint::sites::ARENA_RELEASE);
+        self.free.lock().unwrap_or_else(|e| e.into_inner()).push(block);
         self.in_use.fetch_sub(1, Ordering::SeqCst);
         self.note_occupancy();
     }

@@ -232,6 +232,11 @@ pub(crate) fn spec_round<O: ForwardOps>(
     // (ending with `last`), then propose m tokens one extend at a time.
     let mut drafts = Vec::with_capacity(m);
     if m > 0 {
+        if let Some(msg) =
+            crate::util::failpoint::trigger(crate::util::failpoint::sites::SPECDEC_CATCH_UP)
+        {
+            anyhow::bail!("{msg}");
+        }
         let start = dstate.len();
         let mut logits = draft.forward_extend(&seq[start..], start, ws, draft_scratch, dstate)?;
         loop {

@@ -25,6 +25,7 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use super::snapshot;
+use crate::util::failpoint;
 
 /// Handle to a running metrics endpoint; dropping it stops the
 /// listener thread.
@@ -68,7 +69,19 @@ pub fn serve(addr: &str) -> Result<MetricsServer> {
                     break;
                 }
                 if let Ok(stream) = conn {
-                    let _ = handle_conn(stream);
+                    // One bad connection (or an injected fault) must not
+                    // take the endpoint down: contain panics to this
+                    // scrape and keep listening.
+                    let contained = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        if let Some(msg) = failpoint::trigger(failpoint::sites::METRICS_ACCEPT) {
+                            let _ = respond_error(&stream, &msg);
+                            return;
+                        }
+                        let _ = handle_conn(stream);
+                    }));
+                    if contained.is_err() {
+                        crate::obs::counter("metrics_http_panics_total").inc();
+                    }
                 }
             }
         })
@@ -78,6 +91,17 @@ pub fn serve(addr: &str) -> Result<MetricsServer> {
         stop,
         handle: Some(handle),
     })
+}
+
+/// Answer a scrape with a 500 carrying the injected-fault message.
+fn respond_error(mut stream: &TcpStream, msg: &str) -> std::io::Result<()> {
+    let body = format!("{msg}\n");
+    let header = format!(
+        "HTTP/1.1 500 Internal Server Error\r\nContent-Type: text/plain\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(header.as_bytes())?;
+    stream.write_all(body.as_bytes())
 }
 
 fn handle_conn(mut stream: TcpStream) -> std::io::Result<()> {

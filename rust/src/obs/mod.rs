@@ -57,8 +57,14 @@ pub mod names {
     pub const SERVE_SCORE_REQUESTS_TOTAL: &str = "serve_score_requests_total";
     /// Counter (labeled `reason`): requests shed with a typed
     /// `ServeError` — `overloaded`, `deadline`, `kv_exhausted`,
-    /// `unsupported`, `invalid`, `internal`.
+    /// `unsupported`, `invalid`, `internal`, `shutting_down`.
     pub const SERVE_SHED_TOTAL: &str = "serve_shed_total";
+    /// Counter: worker panics contained by the serving core (each one
+    /// also sheds exactly one request as `internal`).
+    pub const SERVER_PANICS_TOTAL: &str = "server_panics_total";
+    /// Counter: sessions cancelled by the decode-step watchdog (each
+    /// one also sheds as `internal`).
+    pub const WATCHDOG_CANCELLATIONS_TOTAL: &str = "watchdog_cancellations_total";
     /// Histogram (ns): time to first token (queue + prefill).
     pub const SERVE_TTFT_NS: &str = "serve_ttft_ns";
     /// Histogram (ns): total request latency (queue + prefill + decode).
@@ -312,7 +318,10 @@ pub fn counter(name: &str) -> Counter {
 /// `counter_with(names::SERVE_SHED_TOTAL, &[("reason", "overloaded")])`.
 pub fn counter_with(name: &str, labels: &[(&str, &str)]) -> Counter {
     let key = (name.to_string(), labels_inner(labels));
-    let mut map = registry().counters.lock().unwrap();
+    // Registry locks recover from poison: entries are only inserted
+    // while consistent, so a panic under the lock (e.g. an injected
+    // fault unwinding through instrumentation) leaves a valid map.
+    let mut map = registry().counters.lock().unwrap_or_else(|e| e.into_inner());
     map.entry(key).or_insert_with(Counter::new).clone()
 }
 
@@ -324,7 +333,7 @@ pub fn gauge(name: &str) -> Gauge {
 /// Get or register a gauge with label pairs.
 pub fn gauge_with(name: &str, labels: &[(&str, &str)]) -> Gauge {
     let key = (name.to_string(), labels_inner(labels));
-    let mut map = registry().gauges.lock().unwrap();
+    let mut map = registry().gauges.lock().unwrap_or_else(|e| e.into_inner());
     map.entry(key).or_insert_with(Gauge::new).clone()
 }
 
@@ -337,7 +346,7 @@ pub fn histogram(name: &str) -> Histogram {
 /// Get or register a histogram with label pairs.
 pub fn histogram_with(name: &str, labels: &[(&str, &str)]) -> Histogram {
     let key = (name.to_string(), labels_inner(labels));
-    let mut map = registry().hists.lock().unwrap();
+    let mut map = registry().hists.lock().unwrap_or_else(|e| e.into_inner());
     map.entry(key).or_insert_with(Histogram::new).clone()
 }
 

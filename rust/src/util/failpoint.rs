@@ -1,0 +1,483 @@
+//! Deterministic, zero-dependency fault injection (failpoints).
+//!
+//! A failpoint is a named site in production code where a test (or a
+//! demo run via `SPLITQUANT_FAULTS`) can inject a fault: a panic, a
+//! typed error message, or a delay. Sites call [`trigger`] (or
+//! [`trigger_soft`] where a panic must never originate — scheduler
+//! threads and `Drop` paths) and act on the returned message.
+//!
+//! Design goals, in order:
+//!
+//! 1. **Near-free when disabled.** The fast path is a single relaxed
+//!    atomic load of a global `ARMED` flag; no site lookup, no lock,
+//!    no allocation. The serving hot loop pays one predictable branch.
+//! 2. **Deterministic.** Every injection decision is a pure function
+//!    of `(plan seed, site name, per-site hit index)` via a
+//!    SplitMix64-style mixer, so a chaos run with a fixed seed fails
+//!    (or passes) identically on every machine and every rerun —
+//!    probability without nondeterminism.
+//! 3. **Zero dependencies.** `std` only, like the rest of `util`.
+//!
+//! The registry is process-global (like `obs`): tests that arm real
+//! sites must serialize on a shared mutex within their binary. Arming
+//! fictitious site names is always safe — an armed registry returns
+//! `None` for any site not named in the plan.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+/// Canonical site names. Production code passes these to [`trigger`];
+/// plans reference them by the same strings.
+pub mod sites {
+    /// KV arena block allocation (`KvArena::alloc`). `error` makes the
+    /// allocation report exhaustion; reachable from admission reserve
+    /// and prefix-cache snapshot restore.
+    pub const ARENA_RESERVE: &str = "arena.reserve";
+    /// KV arena block release (`KvArena::release`). Runs inside `Drop`
+    /// during unwinds, so the site is soft: an injected panic is
+    /// downgraded to an (ignored) error and `delay` is the only
+    /// observable fault.
+    pub const ARENA_RELEASE: &str = "arena.release";
+    /// Prefix-cache lookup/insert, fired *inside* the cache lock scope
+    /// so an injected panic poisons the shared mutex — the recovery
+    /// path the server must survive.
+    pub const PREFIX_CACHE_LOCK: &str = "prefix_cache.lock";
+    /// Per-item worker forward pass: one scored problem or one decode
+    /// step of one session. The bread-and-butter chaos site.
+    pub const WORKER_FORWARD: &str = "worker.forward";
+    /// Speculative decoding draft catch-up, before the draft model
+    /// re-extends over accepted target tokens.
+    pub const SPECDEC_CATCH_UP: &str = "specdec.catch_up";
+    /// Admission control on the serve-loop thread (soft site).
+    pub const SERVER_ADMIT: &str = "server.admit";
+    /// Token event emission on the serve-loop thread (soft site).
+    pub const STREAM_EMIT: &str = "stream.emit";
+    /// Per-connection handling in the `/metrics` HTTP endpoint.
+    pub const METRICS_ACCEPT: &str = "metrics.accept";
+}
+
+/// What an armed site does when the deterministic coin lands on fire.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Panic with a message naming the site. Downgraded to an error
+    /// return at soft sites or while the thread is already panicking
+    /// (a panic inside `Drop` during unwind aborts the process).
+    Panic,
+    /// Return an error message for the site to convert into its typed
+    /// error path.
+    Error,
+    /// Sleep for the given duration, then proceed normally. Used to
+    /// exercise the watchdog and deadline paths.
+    Delay(Duration),
+}
+
+/// One armed site within a [`FaultPlan`].
+#[derive(Clone, Debug)]
+pub struct SiteFault {
+    /// Site name, matched exactly against [`trigger`] callers.
+    pub site: String,
+    /// The fault to inject when the coin fires.
+    pub kind: FaultKind,
+    /// Per-hit fire probability in `[0, 1]`. `1.0` fires every hit.
+    pub probability: f64,
+    /// Maximum number of fires; `0` means unlimited.
+    pub count: u64,
+}
+
+/// A seeded set of armed sites. Installed with [`configure`]; the
+/// seed makes every probabilistic decision reproducible.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Seed mixed into every per-hit fire decision.
+    pub seed: u64,
+    /// The armed sites. Sites absent from the plan never fire.
+    pub faults: Vec<SiteFault>,
+}
+
+impl FaultPlan {
+    /// Parse a plan from the `SPLITQUANT_FAULTS` syntax: `;`-separated
+    /// `site=kind` clauses where `kind` is `panic`, `error`, or
+    /// `delay:<millis>`, optionally suffixed with `@<probability>`
+    /// (default 1.0) and `x<count>` (default unlimited). Example:
+    ///
+    /// ```text
+    /// worker.forward=panic@0.5x3;arena.release=delay:10;server.admit=error@0.2
+    /// ```
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan, String> {
+        let mut faults = Vec::new();
+        for clause in spec.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+            let (site, rhs) = clause
+                .split_once('=')
+                .ok_or_else(|| format!("fault clause `{clause}` is missing `=`"))?;
+            let mut rest = rhs.trim();
+            let mut count = 0u64;
+            if let Some((head, n)) = rest.rsplit_once('x') {
+                if let Ok(n) = n.parse::<u64>() {
+                    count = n;
+                    rest = head;
+                }
+            }
+            let mut probability = 1.0f64;
+            if let Some((head, p)) = rest.rsplit_once('@') {
+                probability = p
+                    .parse::<f64>()
+                    .map_err(|_| format!("bad probability `{p}` in `{clause}`"))?;
+                if !(0.0..=1.0).contains(&probability) {
+                    return Err(format!("probability `{p}` outside [0, 1] in `{clause}`"));
+                }
+                rest = head;
+            }
+            let kind = match rest {
+                "panic" => FaultKind::Panic,
+                "error" => FaultKind::Error,
+                delay if delay.starts_with("delay") => {
+                    let ms = delay
+                        .strip_prefix("delay")
+                        .and_then(|s| s.strip_prefix(':'))
+                        .ok_or_else(|| format!("delay in `{clause}` needs `:millis`"))?
+                        .parse::<u64>()
+                        .map_err(|_| format!("bad delay millis in `{clause}`"))?;
+                    FaultKind::Delay(Duration::from_millis(ms))
+                }
+                other => return Err(format!("unknown fault kind `{other}` in `{clause}`")),
+            };
+            faults.push(SiteFault { site: site.trim().to_string(), kind, probability, count });
+        }
+        if faults.is_empty() {
+            return Err("fault plan is empty".to_string());
+        }
+        Ok(FaultPlan { seed, faults })
+    }
+
+    /// Build a plan from the `SPLITQUANT_FAULTS` env var (and
+    /// `SPLITQUANT_FAULTS_SEED`, default 0). `None` when the var is
+    /// unset or empty; `Err` on a malformed spec.
+    pub fn from_env() -> Result<Option<FaultPlan>, String> {
+        let spec = match std::env::var("SPLITQUANT_FAULTS") {
+            Ok(s) if !s.trim().is_empty() => s,
+            _ => return Ok(None),
+        };
+        let seed = std::env::var("SPLITQUANT_FAULTS_SEED")
+            .ok()
+            .and_then(|s| s.trim().parse::<u64>().ok())
+            .unwrap_or(0);
+        FaultPlan::parse(&spec, seed).map(Some)
+    }
+}
+
+struct SiteState {
+    fault: SiteFault,
+    hits: u64,
+    fired: u64,
+}
+
+/// Fast-path gate: a single relaxed load when no plan is installed.
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+struct Registry {
+    seed: u64,
+    sites: HashMap<String, SiteState>,
+}
+
+fn registry() -> &'static Mutex<Registry> {
+    static REGISTRY: OnceLock<Mutex<Registry>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Registry { seed: 0, sites: HashMap::new() }))
+}
+
+fn lock_registry() -> std::sync::MutexGuard<'static, Registry> {
+    // A panic injected at one site must not wedge the registry for
+    // every later trigger — recover from poison unconditionally.
+    registry().lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Install a fault plan and arm the failpoints. Replaces any previous
+/// plan and resets all hit/fire counters.
+pub fn configure(plan: FaultPlan) {
+    let mut reg = lock_registry();
+    reg.seed = plan.seed;
+    reg.sites = plan
+        .faults
+        .into_iter()
+        .map(|f| (f.site.clone(), SiteState { fault: f, hits: 0, fired: 0 }))
+        .collect();
+    ARMED.store(true, Ordering::SeqCst);
+}
+
+/// Disarm all failpoints and clear the plan. Counters from the last
+/// plan are discarded; read them with [`fired`] first.
+pub fn clear() {
+    ARMED.store(false, Ordering::SeqCst);
+    let mut reg = lock_registry();
+    reg.sites.clear();
+}
+
+/// Whether a plan is currently armed.
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// How many times `site` has fired under the current plan (0 if the
+/// site is unarmed). Fire = the coin landed and a fault was injected.
+pub fn fired(site: &str) -> u64 {
+    lock_registry().sites.get(site).map_or(0, |s| s.fired)
+}
+
+/// How many times `site` has been evaluated under the current plan.
+pub fn hits(site: &str) -> u64 {
+    lock_registry().sites.get(site).map_or(0, |s| s.hits)
+}
+
+/// Evaluate the failpoint at `site`.
+///
+/// Disabled (the common case): one relaxed atomic load, returns
+/// `None`. Armed: a [`FaultKind::Panic`] fault panics from this call
+/// (unless the thread is already panicking, which would abort the
+/// process — then it degrades to an error return), a
+/// [`FaultKind::Delay`] sleeps and returns `None`, and a
+/// [`FaultKind::Error`] returns `Some(message)` for the caller to
+/// convert into its typed error path.
+#[inline]
+pub fn trigger(site: &str) -> Option<String> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    trigger_slow(site, true)
+}
+
+/// Like [`trigger`], but never panics from this call: an injected
+/// [`FaultKind::Panic`] degrades to an error return. For sites on the
+/// serve-loop thread (where a panic would kill the scheduler for every
+/// session) and sites reachable from `Drop`.
+#[inline]
+pub fn trigger_soft(site: &str) -> Option<String> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    trigger_slow(site, false)
+}
+
+#[cold]
+fn trigger_slow(site: &str, may_panic: bool) -> Option<String> {
+    let decision = {
+        let mut reg = lock_registry();
+        let seed = reg.seed;
+        let state = reg.sites.get_mut(site)?;
+        let hit = state.hits;
+        state.hits += 1;
+        if state.fault.count != 0 && state.fired >= state.fault.count {
+            return None;
+        }
+        if !coin(seed, site, hit, state.fault.probability) {
+            return None;
+        }
+        state.fired += 1;
+        state.fault.kind.clone()
+        // Registry lock drops here: a panic or sleep below must not
+        // hold it, or concurrent triggers would poison/serialize.
+    };
+    match decision {
+        FaultKind::Panic => {
+            if may_panic && !std::thread::panicking() {
+                panic!("failpoint `{site}` injected panic");
+            }
+            Some(format!("failpoint `{site}` injected panic (downgraded to error)"))
+        }
+        FaultKind::Error => Some(format!("failpoint `{site}` injected error")),
+        FaultKind::Delay(d) => {
+            std::thread::sleep(d);
+            None
+        }
+    }
+}
+
+/// Deterministic fire decision for hit number `hit` at `site`:
+/// SplitMix64-mix the seed, an FNV-1a hash of the site name, and the
+/// hit index into 53 uniform bits, compared against `probability`.
+fn coin(seed: u64, site: &str, hit: u64, probability: f64) -> bool {
+    if probability >= 1.0 {
+        return true;
+    }
+    if probability <= 0.0 {
+        return false;
+    }
+    let h = mix(seed ^ fnv1a(site) ^ mix(hit.wrapping_add(0x9e3779b97f4a7c15)));
+    let unit = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+    unit < probability
+}
+
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global; every test that arms it must
+    // hold this (poison-tolerant) guard. Fictitious site names keep
+    // these tests from interfering with any other test in the binary.
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_is_none() {
+        let _g = guard();
+        clear();
+        assert!(!armed());
+        assert_eq!(trigger("test.nosuch"), None);
+        assert_eq!(trigger_soft("test.nosuch"), None);
+    }
+
+    #[test]
+    fn unarmed_site_is_none_even_when_armed() {
+        let _g = guard();
+        configure(FaultPlan {
+            seed: 1,
+            faults: vec![SiteFault {
+                site: "test.armed".into(),
+                kind: FaultKind::Error,
+                probability: 1.0,
+                count: 0,
+            }],
+        });
+        assert_eq!(trigger("test.other"), None);
+        assert!(trigger("test.armed").is_some());
+        clear();
+    }
+
+    #[test]
+    fn error_fires_and_counts() {
+        let _g = guard();
+        configure(FaultPlan {
+            seed: 7,
+            faults: vec![SiteFault {
+                site: "test.err".into(),
+                kind: FaultKind::Error,
+                probability: 1.0,
+                count: 2,
+            }],
+        });
+        assert!(trigger("test.err").is_some());
+        assert!(trigger("test.err").is_some());
+        // Count cap reached: further hits pass through.
+        assert_eq!(trigger("test.err"), None);
+        assert_eq!(fired("test.err"), 2);
+        assert_eq!(hits("test.err"), 3);
+        clear();
+    }
+
+    #[test]
+    fn probability_is_deterministic_per_seed() {
+        let _g = guard();
+        let plan = |seed| FaultPlan {
+            seed,
+            faults: vec![SiteFault {
+                site: "test.coin".into(),
+                kind: FaultKind::Error,
+                probability: 0.5,
+                count: 0,
+            }],
+        };
+        let sample = |seed| {
+            configure(plan(seed));
+            let fires: Vec<bool> = (0..64).map(|_| trigger("test.coin").is_some()).collect();
+            clear();
+            fires
+        };
+        let a = sample(42);
+        let b = sample(42);
+        let c = sample(43);
+        assert_eq!(a, b, "same seed must reproduce the same fire pattern");
+        assert_ne!(a, c, "different seeds should diverge");
+        let fires = a.iter().filter(|f| **f).count();
+        assert!(
+            (8..=56).contains(&fires),
+            "p=0.5 over 64 hits fired {fires} times — mixer looks degenerate"
+        );
+    }
+
+    #[test]
+    fn panic_kind_panics_hard_and_degrades_soft() {
+        let _g = guard();
+        configure(FaultPlan {
+            seed: 1,
+            faults: vec![SiteFault {
+                site: "test.boom".into(),
+                kind: FaultKind::Panic,
+                probability: 1.0,
+                count: 0,
+            }],
+        });
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let caught = std::panic::catch_unwind(|| trigger("test.boom"));
+        std::panic::set_hook(prev);
+        assert!(caught.is_err(), "hard trigger must panic");
+        let soft = trigger_soft("test.boom");
+        assert!(soft.is_some_and(|m| m.contains("downgraded")));
+        clear();
+    }
+
+    #[test]
+    fn delay_sleeps_then_passes() {
+        let _g = guard();
+        configure(FaultPlan {
+            seed: 1,
+            faults: vec![SiteFault {
+                site: "test.slow".into(),
+                kind: FaultKind::Delay(Duration::from_millis(20)),
+                probability: 1.0,
+                count: 1,
+            }],
+        });
+        let t0 = std::time::Instant::now();
+        assert_eq!(trigger("test.slow"), None);
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+        clear();
+    }
+
+    #[test]
+    fn parse_round_trips_the_env_syntax() {
+        let plan = FaultPlan::parse(
+            "worker.forward=panic@0.5x3; arena.release=delay:10;server.admit=error@0.2",
+            9,
+        )
+        .expect("parse");
+        assert_eq!(plan.seed, 9);
+        assert_eq!(plan.faults.len(), 3);
+        assert_eq!(plan.faults[0].site, "worker.forward");
+        assert_eq!(plan.faults[0].kind, FaultKind::Panic);
+        assert_eq!(plan.faults[0].probability, 0.5);
+        assert_eq!(plan.faults[0].count, 3);
+        assert_eq!(plan.faults[1].kind, FaultKind::Delay(Duration::from_millis(10)));
+        assert_eq!(plan.faults[1].probability, 1.0);
+        assert_eq!(plan.faults[1].count, 0);
+        assert_eq!(plan.faults[2].kind, FaultKind::Error);
+        assert_eq!(plan.faults[2].probability, 0.2);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(FaultPlan::parse("", 0).is_err());
+        assert!(FaultPlan::parse("noequals", 0).is_err());
+        assert!(FaultPlan::parse("s=explode", 0).is_err());
+        assert!(FaultPlan::parse("s=panic@1.5", 0).is_err());
+        assert!(FaultPlan::parse("s=delay", 0).is_err());
+        assert!(FaultPlan::parse("s=delay:abc", 0).is_err());
+    }
+}

@@ -4,6 +4,7 @@
 //! normally supply.
 
 pub mod cli;
+pub mod failpoint;
 pub mod fmt;
 pub mod json;
 pub mod logging;

@@ -42,7 +42,9 @@ impl Pool {
                 thread::Builder::new()
                     .name(format!("sq-worker-{i}"))
                     .spawn(move || loop {
-                        let msg = { rx.lock().unwrap().recv() };
+                        // Poison-tolerant: only `recv` ever runs under
+                        // this lock, so recovered state is always valid.
+                        let msg = { rx.lock().unwrap_or_else(|e| e.into_inner()).recv() };
                         match msg {
                             Ok(Msg::Run(job)) => job(),
                             Ok(Msg::Shutdown) | Err(_) => break,
@@ -134,7 +136,7 @@ impl Pool {
                             }
                             let v = f(&mut state, i);
                             // Short critical section: single slot store.
-                            let mut guard = slots.lock().unwrap();
+                            let mut guard = slots.lock().unwrap_or_else(|e| e.into_inner());
                             guard[i] = Some(v);
                         }
                     });
@@ -172,7 +174,7 @@ impl Pool {
         thread::scope(|s| {
             for _ in 0..workers {
                 s.spawn(|| loop {
-                    let next = queue.lock().unwrap().next();
+                    let next = queue.lock().unwrap_or_else(|e| e.into_inner()).next();
                     match next {
                         Some((i, c)) => f(i, c),
                         None => break,

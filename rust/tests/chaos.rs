@@ -1,0 +1,877 @@
+//! Deterministic chaos suite for fault-contained serving (DESIGN.md
+//! §12). Every test arms the process-global failpoint registry with a
+//! seeded [`FaultPlan`], drives mixed traffic through a real server,
+//! and asserts the containment invariants:
+//!
+//! 1. **No deadlock** — every stream and score receiver resolves and
+//!    the drain call returns (the tests terminate).
+//! 2. **Survivors are bit-identical** — requests that were not hit by
+//!    an injected fault produce exactly the fault-free oracle's output.
+//! 3. **Exact error accounting** — the reason-labeled shed counters
+//!    sum to exactly the typed errors clients observed, and the panic
+//!    counter matches the contained-panic errors among them.
+//! 4. **Occupancy is provably 0** — after the final drain the arena
+//!    rents no blocks (`DrainReport::kv_blocks_in_use == 0`).
+//!
+//! Chaos runs are reproducible: the default seed matrix is fixed, and
+//! `SPLITQUANT_CHAOS_SEED=<n>` pins a single seed (the CI chaos step
+//! runs four of them). The failpoint registry, the obs enabled flag,
+//! and the panic hook are process-global, so every test here holds one
+//! shared (poison-tolerant) lock.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use splitquant::coordinator::server::{
+    Backend, GenerateRequest, ServeError, Server, ServerConfig, TokenEvent,
+};
+use splitquant::data::{generate_problems, FactWorld, McqProblem};
+use splitquant::eval::ProblemResult;
+use splitquant::model::decode::DecodeState;
+use splitquant::model::forward::{generate_greedy, Workspace};
+use splitquant::model::packed::PackedModel;
+use splitquant::model::quantized::{quantize_model, Method, QuantizedModel};
+use splitquant::model::{Checkpoint, PicoLlamaConfig};
+use splitquant::obs;
+use splitquant::quant::Bits;
+use splitquant::split::SplitConfig;
+use splitquant::util::failpoint::{self, sites, FaultKind, FaultPlan, SiteFault};
+
+// ---------------------------------------------------------------------
+// Shared fixtures
+// ---------------------------------------------------------------------
+
+/// Serialize tests (global failpoint registry + obs flag + panic hook)
+/// and start from a disarmed registry with recording on.
+fn chaos_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    let g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    failpoint::clear();
+    obs::set_enabled(true);
+    g
+}
+
+/// Silence the panic hook while injected panics are expected; restores
+/// the default hook on drop (so real assertion failures stay visible).
+struct QuietPanics;
+
+impl QuietPanics {
+    fn new() -> QuietPanics {
+        std::panic::set_hook(Box::new(|_| {}));
+        QuietPanics
+    }
+}
+
+impl Drop for QuietPanics {
+    fn drop(&mut self) {
+        let _ = std::panic::take_hook();
+    }
+}
+
+/// The seeds a chaos test sweeps: `SPLITQUANT_CHAOS_SEED` pins one
+/// (the CI matrix), otherwise a fixed default set of four.
+fn chaos_seeds() -> Vec<u64> {
+    match std::env::var("SPLITQUANT_CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.trim().parse::<u64>().ok())
+    {
+        Some(seed) => vec![seed],
+        None => vec![11, 23, 37, 53],
+    }
+}
+
+fn setup() -> (QuantizedModel, Vec<McqProblem>) {
+    let world = FactWorld::generate(16, 4, 8, 1);
+    let mut cfg = PicoLlamaConfig::test();
+    cfg.vocab = world.vocab_size();
+    let ck = Checkpoint::random_init(&cfg, 7);
+    let qm = quantize_model(&ck, Bits::Int4, &Method::SplitQuant(SplitConfig::default())).unwrap();
+    let problems = generate_problems(&world, 16, 5);
+    (qm, problems)
+}
+
+fn packed_oracle(pm: &PackedModel, prompt: &[usize], n_new: usize) -> Vec<usize> {
+    let mut ws = Workspace::new(&pm.config, pm.config.max_seq);
+    let mut scratch = pm.prewarmed_scratch();
+    let mut state = DecodeState::new(&pm.config);
+    pm.generate_greedy(prompt, n_new, &mut ws, &mut scratch, &mut state)
+        .unwrap()
+}
+
+fn reference_oracle(ck: &Checkpoint, prompt: &[usize], n_new: usize) -> Vec<usize> {
+    let mut ws = Workspace::new(&ck.config, ck.config.max_seq);
+    generate_greedy(ck, prompt, n_new, &mut ws).unwrap()
+}
+
+fn fault(site: &str, kind: FaultKind, probability: f64, count: u64) -> SiteFault {
+    SiteFault {
+        site: site.to_string(),
+        kind,
+        probability,
+        count,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Error-accounting snapshots
+// ---------------------------------------------------------------------
+
+const SHED_REASONS: [&str; 7] = [
+    "overloaded",
+    "deadline",
+    "kv_exhausted",
+    "unsupported",
+    "invalid",
+    "internal",
+    "shutting_down",
+];
+
+/// Sum of every reason-labeled shed counter — the server's total count
+/// of typed errors handed to clients.
+fn shed_total() -> u64 {
+    SHED_REASONS
+        .iter()
+        .map(|r| obs::counter_with(obs::names::SERVE_SHED_TOTAL, &[("reason", r)]).value())
+        .sum()
+}
+
+fn panics_total() -> u64 {
+    obs::counter(obs::names::SERVER_PANICS_TOTAL).value()
+}
+
+fn watchdog_total() -> u64 {
+    obs::counter(obs::names::WATCHDOG_CANCELLATIONS_TOTAL).value()
+}
+
+/// Bit-exact comparison of scoring results (logprobs compared by bits,
+/// so a NaN regression cannot masquerade as equality).
+fn assert_scores_identical(got: &ProblemResult, want: &ProblemResult, ctx: &str) {
+    assert_eq!(got.chosen, want.chosen, "{ctx}: chosen diverged");
+    assert_eq!(got.correct, want.correct, "{ctx}: correct diverged");
+    let got_bits: Vec<u64> = got.logprobs.iter().map(|v| v.to_bits()).collect();
+    let want_bits: Vec<u64> = want.logprobs.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(got_bits, want_bits, "{ctx}: logprobs diverged");
+}
+
+// ---------------------------------------------------------------------
+// The seeded chaos matrix
+// ---------------------------------------------------------------------
+
+/// The standing chaos plan: a hard panic site in the workers, a
+/// poison/miss fault inside the prefix-cache lock, soft faults on the
+/// serve-loop thread, and a bounded arena-reserve fault (bounded so the
+/// admission retry path cannot livelock).
+fn chaos_plan(seed: u64) -> FaultPlan {
+    FaultPlan {
+        seed,
+        faults: vec![
+            fault(sites::WORKER_FORWARD, FaultKind::Panic, 0.2, 0),
+            fault(sites::PREFIX_CACHE_LOCK, FaultKind::Error, 0.3, 0),
+            fault(sites::SERVER_ADMIT, FaultKind::Error, 0.15, 2),
+            fault(sites::STREAM_EMIT, FaultKind::Error, 0.1, 2),
+            fault(sites::ARENA_RESERVE, FaultKind::Error, 0.2, 2),
+        ],
+    }
+}
+
+/// Drive mixed score + generate traffic through `server` under
+/// `chaos_plan(seed)` and assert every containment invariant. The
+/// oracles are computed fault-free before arming.
+fn run_chaos_matrix(
+    server: &Server,
+    problems: &[McqProblem],
+    seed: u64,
+    gen_oracle: impl Fn(&[usize], usize) -> Vec<usize>,
+) {
+    let n_scores = 8;
+    let n_gens = 6;
+    let max_tokens = 6;
+
+    // Fault-free scoring oracle through the *same* server (identical
+    // batching path), before any fault is armed.
+    let score_oracle: Vec<ProblemResult> = problems
+        .iter()
+        .take(n_scores)
+        .map(|p| server.score(p.clone()).unwrap().result)
+        .collect();
+    let gen_oracles: Vec<Vec<usize>> = problems
+        .iter()
+        .take(n_gens)
+        .map(|p| gen_oracle(&p.prompt, max_tokens))
+        .collect();
+
+    let shed0 = shed_total();
+    let panics0 = panics_total();
+
+    failpoint::configure(chaos_plan(seed));
+    let quiet = QuietPanics::new();
+    let score_rx: Vec<_> = problems
+        .iter()
+        .take(n_scores)
+        .map(|p| server.submit(p.clone()))
+        .collect();
+    let streams: Vec<_> = problems
+        .iter()
+        .take(n_gens)
+        .map(|p| {
+            server.submit_generate(GenerateRequest {
+                prompt: p.prompt.clone(),
+                max_tokens,
+                deadline: None,
+            })
+        })
+        .collect();
+
+    let mut client_errors = 0u64;
+    let mut panic_errors = 0u64;
+    for (i, rx) in score_rx.into_iter().enumerate() {
+        match rx.recv().expect("score channel resolves — no deadlock") {
+            Ok(resp) => {
+                assert_scores_identical(
+                    &resp.result,
+                    &score_oracle[i],
+                    &format!("seed {seed}, surviving score {i}"),
+                );
+            }
+            Err(e) => {
+                assert!(
+                    e.downcast_ref::<ServeError>().is_some(),
+                    "seed {seed}: score error must be typed, got: {e:#}"
+                );
+                if format!("{e:#}").contains("worker panicked") {
+                    panic_errors += 1;
+                }
+                client_errors += 1;
+            }
+        }
+    }
+    for (i, stream) in streams.into_iter().enumerate() {
+        match stream {
+            Err(e) => {
+                assert!(
+                    e.downcast_ref::<ServeError>().is_some(),
+                    "seed {seed}: sync shed must be typed, got: {e:#}"
+                );
+                client_errors += 1;
+            }
+            Ok(s) => match s.wait() {
+                Ok(done) => {
+                    assert_eq!(
+                        done.tokens, gen_oracles[i],
+                        "seed {seed}: surviving stream {i} diverged from the fault-free oracle"
+                    );
+                }
+                Err(e) => {
+                    assert!(
+                        e.downcast_ref::<ServeError>().is_some(),
+                        "seed {seed}: stream error must be typed, got: {e:#}"
+                    );
+                    if format!("{e:#}").contains("worker panicked") {
+                        panic_errors += 1;
+                    }
+                    client_errors += 1;
+                }
+            },
+        }
+    }
+    drop(quiet);
+    failpoint::clear();
+
+    // Exact accounting: every typed client error was shed-counted once,
+    // and the panic counter matches the contained-panic errors exactly.
+    assert_eq!(
+        shed_total() - shed0,
+        client_errors,
+        "seed {seed}: shed counters must sum to exactly the client-visible errors"
+    );
+    assert_eq!(
+        panics_total() - panics0,
+        panic_errors,
+        "seed {seed}: panic counter must match contained-panic client errors"
+    );
+
+    // The scheduler survived: fresh fault-free traffic still serves.
+    let done = server
+        .submit_generate(GenerateRequest {
+            prompt: problems[0].prompt.clone(),
+            max_tokens: 3,
+            deadline: None,
+        })
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(done.tokens, gen_oracle(&problems[0].prompt, 3));
+
+    // Occupancy is provably 0 at the end of the world.
+    let report = server.drain(Some(Duration::from_secs(30))).unwrap();
+    assert_eq!(
+        report.kv_blocks_in_use, 0,
+        "seed {seed}: drain must prove arena occupancy 0"
+    );
+    assert_eq!(server.kv_blocks_in_use(), 0);
+}
+
+#[test]
+fn chaos_matrix_packed() {
+    let _g = chaos_lock();
+    let (qm, problems) = setup();
+    for seed in chaos_seeds() {
+        let pm = PackedModel::from_qmodel(&qm).unwrap();
+        let server = Server::start(
+            Backend::Packed(Box::new(pm.clone())),
+            ServerConfig::builder()
+                .workers(2)
+                .kv_block_positions(4)
+                .build()
+                .unwrap(),
+        )
+        .unwrap();
+        run_chaos_matrix(&server, &problems, seed, |p, n| packed_oracle(&pm, p, n));
+    }
+}
+
+#[test]
+fn chaos_matrix_reference() {
+    let _g = chaos_lock();
+    let (qm, problems) = setup();
+    for seed in chaos_seeds() {
+        let ck = qm.effective_checkpoint();
+        let server = Server::start(
+            Backend::Reference(Box::new(ck.clone())),
+            ServerConfig::builder()
+                .workers(2)
+                .kv_block_positions(4)
+                .build()
+                .unwrap(),
+        )
+        .unwrap();
+        run_chaos_matrix(&server, &problems, seed, |p, n| reference_oracle(&ck, p, n));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Targeted containment tests
+// ---------------------------------------------------------------------
+
+/// A panic in one worker is confined to its session: exactly one typed
+/// `Internal` error, neighbors bit-identical, process alive.
+#[test]
+fn single_worker_panic_hits_exactly_one_session() {
+    let _g = chaos_lock();
+    let (qm, problems) = setup();
+    let pm = PackedModel::from_qmodel(&qm).unwrap();
+    let server = Server::start(
+        Backend::Packed(Box::new(pm.clone())),
+        ServerConfig::builder()
+            .workers(2)
+            .kv_block_positions(4)
+            .build()
+            .unwrap(),
+    )
+    .unwrap();
+    let panics0 = panics_total();
+    failpoint::configure(FaultPlan {
+        seed: 1,
+        faults: vec![fault(sites::WORKER_FORWARD, FaultKind::Panic, 1.0, 1)],
+    });
+    let quiet = QuietPanics::new();
+    let streams: Vec<_> = problems
+        .iter()
+        .take(3)
+        .map(|p| {
+            server
+                .submit_generate(GenerateRequest {
+                    prompt: p.prompt.clone(),
+                    max_tokens: 5,
+                    deadline: None,
+                })
+                .unwrap()
+        })
+        .collect();
+    let results: Vec<_> = streams.into_iter().map(|s| s.wait()).collect();
+    drop(quiet);
+    failpoint::clear();
+
+    let mut errors = 0;
+    for (p, r) in problems.iter().zip(&results) {
+        match r {
+            Err(e) => {
+                errors += 1;
+                match e.downcast_ref::<ServeError>() {
+                    Some(ServeError::Internal(msg)) => {
+                        assert!(msg.contains("worker panicked"), "got: {msg}")
+                    }
+                    other => panic!("expected Internal, got {other:?}"),
+                }
+            }
+            Ok(done) => assert_eq!(
+                done.tokens,
+                packed_oracle(&pm, &p.prompt, 5),
+                "neighbor of the panicked session diverged"
+            ),
+        }
+    }
+    assert_eq!(errors, 1, "the single injected panic must hit exactly one session");
+    assert_eq!(panics_total() - panics0, 1);
+    assert_eq!(server.kv_blocks_in_use(), 0, "the panicked session released its blocks");
+}
+
+/// A panic *inside the prefix-cache lock scope* poisons the shared
+/// mutex; later scorers must recover the guard and keep producing
+/// bit-identical results (the cache degrades to misses, not errors).
+#[test]
+fn poisoned_prefix_cache_recovers_bit_identically() {
+    let _g = chaos_lock();
+    let (qm, problems) = setup();
+    let pm = PackedModel::from_qmodel(&qm).unwrap();
+    let server = Server::start(
+        Backend::Packed(Box::new(pm)),
+        ServerConfig::builder().workers(2).build().unwrap(),
+    )
+    .unwrap();
+    let oracle: Vec<ProblemResult> = problems
+        .iter()
+        .take(6)
+        .map(|p| server.score(p.clone()).unwrap().result)
+        .collect();
+
+    failpoint::configure(FaultPlan {
+        seed: 2,
+        faults: vec![fault(sites::PREFIX_CACHE_LOCK, FaultKind::Panic, 1.0, 1)],
+    });
+    let quiet = QuietPanics::new();
+    let results: Vec<_> = problems
+        .iter()
+        .take(6)
+        .map(|p| server.score(p.clone()))
+        .collect();
+    drop(quiet);
+    failpoint::clear();
+
+    let mut errors = 0;
+    for (i, r) in results.into_iter().enumerate() {
+        match r {
+            Err(e) => {
+                errors += 1;
+                assert!(
+                    matches!(e.downcast_ref::<ServeError>(), Some(ServeError::Internal(_))),
+                    "got: {e:#}"
+                );
+            }
+            Ok(resp) => assert_scores_identical(&resp.result, &oracle[i], &format!("score {i}")),
+        }
+    }
+    assert_eq!(errors, 1, "one panic, one failed scoring request");
+    // The lock is poisoned but recovered: scoring still works and still
+    // matches the oracle bit for bit.
+    for (i, p) in problems.iter().take(6).enumerate() {
+        let resp = server.score(p.clone()).unwrap();
+        assert_scores_identical(&resp.result, &oracle[i], &format!("post-poison score {i}"));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Drain lifecycle
+// ---------------------------------------------------------------------
+
+#[test]
+fn drain_idle_server_reports_zero_and_closes_admissions() {
+    let _g = chaos_lock();
+    let (qm, problems) = setup();
+    let pm = PackedModel::from_qmodel(&qm).unwrap();
+    let server = Server::start(Backend::Packed(Box::new(pm)), ServerConfig::default()).unwrap();
+
+    let report = server.drain(None).unwrap();
+    assert_eq!(report.completed, 0);
+    assert_eq!(report.cancelled, 0);
+    assert_eq!(report.shed, 0);
+    assert_eq!(report.kv_blocks_in_use, 0);
+
+    // Admissions are closed for both request kinds, typed.
+    let err = server
+        .submit_generate(GenerateRequest {
+            prompt: problems[0].prompt.clone(),
+            max_tokens: 2,
+            deadline: None,
+        })
+        .map(|_| ())
+        .unwrap_err();
+    assert_eq!(err.downcast_ref::<ServeError>(), Some(&ServeError::ShuttingDown));
+    let err = server.score(problems[0].clone()).unwrap_err();
+    assert_eq!(err.downcast_ref::<ServeError>(), Some(&ServeError::ShuttingDown));
+
+    // Draining twice is idempotent.
+    let again = server.drain(Some(Duration::from_millis(1))).unwrap();
+    assert_eq!(again.kv_blocks_in_use, 0);
+}
+
+#[test]
+fn drain_completes_one_live_session() {
+    let _g = chaos_lock();
+    let (qm, problems) = setup();
+    let pm = PackedModel::from_qmodel(&qm).unwrap();
+    let server = Server::start(
+        Backend::Packed(Box::new(pm.clone())),
+        ServerConfig::builder().kv_block_positions(4).build().unwrap(),
+    )
+    .unwrap();
+    // Slow every decode step so the session is provably still live
+    // when the drain request lands (a Delay failpoint passes through
+    // normally afterwards — output stays bit-identical).
+    failpoint::configure(FaultPlan {
+        seed: 5,
+        faults: vec![fault(
+            sites::WORKER_FORWARD,
+            FaultKind::Delay(Duration::from_millis(5)),
+            1.0,
+            0,
+        )],
+    });
+    let stream = server
+        .submit_generate(GenerateRequest {
+            prompt: problems[0].prompt.clone(),
+            max_tokens: 8,
+            deadline: None,
+        })
+        .unwrap();
+    // The session is live before we drain.
+    assert!(matches!(stream.recv(), Some(TokenEvent::Token { .. })));
+    let report = server.drain(None).unwrap();
+    failpoint::clear();
+    assert_eq!(report.completed, 1, "the live session ran to completion");
+    assert_eq!(report.cancelled, 0);
+    assert_eq!(report.kv_blocks_in_use, 0);
+    let done = stream.wait().unwrap();
+    assert_eq!(done.tokens, packed_oracle(&pm, &problems[0].prompt, 8));
+}
+
+/// Many sessions: the live ones complete, the backlogged ones shed
+/// with `ShuttingDown`, and occupancy lands on exactly 0.
+#[test]
+fn drain_completes_live_sessions_and_sheds_backlog() {
+    let _g = chaos_lock();
+    let (qm, problems) = setup();
+    let pm = PackedModel::from_qmodel(&qm).unwrap();
+    let server = Server::start(
+        Backend::Packed(Box::new(pm.clone())),
+        ServerConfig::builder()
+            .max_sessions(2)
+            .kv_block_positions(4)
+            .build()
+            .unwrap(),
+    )
+    .unwrap();
+    // Slow the decode steps so the two live sessions cannot finish —
+    // and free backlog slots — before the drain request is routed.
+    failpoint::configure(FaultPlan {
+        seed: 6,
+        faults: vec![fault(
+            sites::WORKER_FORWARD,
+            FaultKind::Delay(Duration::from_millis(5)),
+            1.0,
+            0,
+        )],
+    });
+    let streams: Vec<_> = problems
+        .iter()
+        .take(5)
+        .map(|p| {
+            server
+                .submit_generate(GenerateRequest {
+                    prompt: p.prompt.clone(),
+                    max_tokens: 16,
+                    deadline: None,
+                })
+                .unwrap()
+        })
+        .collect();
+    // Two sessions are live (max_sessions), three sit in the backlog.
+    let report = server.drain(None).unwrap();
+    failpoint::clear();
+    assert_eq!(report.kv_blocks_in_use, 0);
+    let mut ok = 0;
+    let mut shed = 0;
+    for (p, s) in problems.iter().zip(streams) {
+        match s.wait() {
+            Ok(done) => {
+                assert_eq!(done.tokens, packed_oracle(&pm, &p.prompt, 16));
+                ok += 1;
+            }
+            Err(e) => {
+                assert_eq!(
+                    e.downcast_ref::<ServeError>(),
+                    Some(&ServeError::ShuttingDown),
+                    "got: {e:#}"
+                );
+                shed += 1;
+            }
+        }
+    }
+    assert_eq!((ok, shed), (2, 3), "live sessions complete, backlog sheds");
+    assert_eq!(report.completed, 2);
+    assert_eq!(report.shed, 3);
+    assert_eq!(server.kv_blocks_in_use(), 0);
+}
+
+/// Speculative sessions rent 2× blocks (target + draft K/V); drain
+/// must return every one of them.
+#[test]
+fn drain_returns_speculative_double_blocks() {
+    let _g = chaos_lock();
+    let (qm, problems) = setup();
+    let pm = PackedModel::from_qmodel(&qm).unwrap();
+    let draft = std::sync::Arc::new(pm.clone());
+    let server = Server::start(
+        Backend::Packed(Box::new(pm.clone())),
+        ServerConfig::builder()
+            .kv_block_positions(4)
+            .draft(Some(draft))
+            .draft_k(2)
+            .build()
+            .unwrap(),
+    )
+    .unwrap();
+    let streams: Vec<_> = problems
+        .iter()
+        .take(2)
+        .map(|p| {
+            server
+                .submit_generate(GenerateRequest {
+                    prompt: p.prompt.clone(),
+                    max_tokens: 8,
+                    deadline: None,
+                })
+                .unwrap()
+        })
+        .collect();
+    let report = server.drain(None).unwrap();
+    assert_eq!(report.kv_blocks_in_use, 0, "target AND draft blocks returned");
+    for (p, s) in problems.iter().zip(streams) {
+        match s.wait() {
+            // Speculative decoding preserves bit-identity with plain
+            // greedy, drain or no drain.
+            Ok(done) => assert_eq!(done.tokens, packed_oracle(&pm, &p.prompt, 8)),
+            Err(e) => assert_eq!(
+                e.downcast_ref::<ServeError>(),
+                Some(&ServeError::ShuttingDown),
+                "got: {e:#}"
+            ),
+        }
+    }
+    assert_eq!(server.kv_blocks_in_use(), 0);
+}
+
+/// A drain deadline cancels stragglers with the typed `ShuttingDown`
+/// and still proves occupancy 0.
+#[test]
+fn drain_deadline_cancels_stragglers() {
+    let _g = chaos_lock();
+    let (qm, problems) = setup();
+    let pm = PackedModel::from_qmodel(&qm).unwrap();
+    let server = Server::start(
+        Backend::Packed(Box::new(pm)),
+        ServerConfig::builder().kv_block_positions(2).build().unwrap(),
+    )
+    .unwrap();
+    let stream = server
+        .submit_generate(GenerateRequest {
+            prompt: problems[0].prompt.clone(),
+            max_tokens: 64, // long enough to still be running at the deadline
+            deadline: None,
+        })
+        .unwrap();
+    assert!(matches!(stream.recv(), Some(TokenEvent::Token { .. })));
+    let report = server.drain(Some(Duration::ZERO)).unwrap();
+    assert_eq!(report.cancelled, 1, "the straggler was deadline-cancelled");
+    assert_eq!(report.kv_blocks_in_use, 0);
+    let err = stream.wait().unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<ServeError>(),
+        Some(&ServeError::ShuttingDown),
+        "got: {err:#}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Watchdog
+// ---------------------------------------------------------------------
+
+/// An injected decode-step delay trips the watchdog on exactly one
+/// session; its neighbors finish bit-identically, and the cancellation
+/// is a typed `Internal` naming the watchdog.
+#[test]
+fn watchdog_cancels_slow_session_without_disturbing_neighbors() {
+    let _g = chaos_lock();
+    let (qm, problems) = setup();
+    let pm = PackedModel::from_qmodel(&qm).unwrap();
+    let server = Server::start(
+        Backend::Packed(Box::new(pm.clone())),
+        ServerConfig::builder()
+            .workers(2)
+            .kv_block_positions(4)
+            .watchdog_step_budget(Some(Duration::from_millis(50)))
+            .build()
+            .unwrap(),
+    )
+    .unwrap();
+    let watchdog0 = watchdog_total();
+    failpoint::configure(FaultPlan {
+        seed: 3,
+        faults: vec![fault(
+            sites::WORKER_FORWARD,
+            FaultKind::Delay(Duration::from_millis(200)),
+            1.0,
+            1,
+        )],
+    });
+    let streams: Vec<_> = problems
+        .iter()
+        .take(3)
+        .map(|p| {
+            server
+                .submit_generate(GenerateRequest {
+                    prompt: p.prompt.clone(),
+                    max_tokens: 6,
+                    deadline: None,
+                })
+                .unwrap()
+        })
+        .collect();
+    let results: Vec<_> = streams.into_iter().map(|s| s.wait()).collect();
+    failpoint::clear();
+
+    let mut cancelled = 0;
+    for (p, r) in problems.iter().zip(&results) {
+        match r {
+            Err(e) => {
+                cancelled += 1;
+                match e.downcast_ref::<ServeError>() {
+                    Some(ServeError::Internal(msg)) => {
+                        assert!(msg.contains("watchdog"), "got: {msg}")
+                    }
+                    other => panic!("expected Internal watchdog error, got {other:?}"),
+                }
+            }
+            Ok(done) => assert_eq!(
+                done.tokens,
+                packed_oracle(&pm, &p.prompt, 6),
+                "neighbor of the watchdog-cancelled session diverged"
+            ),
+        }
+    }
+    assert_eq!(cancelled, 1, "exactly the delayed session is cancelled");
+    assert_eq!(watchdog_total() - watchdog0, 1);
+    assert_eq!(server.kv_blocks_in_use(), 0, "cancellation released the blocks");
+}
+
+// ---------------------------------------------------------------------
+// Admission validation (satellite: typed vocab checks on both kinds)
+// ---------------------------------------------------------------------
+
+/// Out-of-vocab (and otherwise malformed) scoring requests come back
+/// as typed `Invalid` on both CPU engines — they never reach a
+/// worker's forward pass, where they would assert.
+#[test]
+fn invalid_score_requests_are_typed_on_both_engines() {
+    let _g = chaos_lock();
+    let (qm, problems) = setup();
+    let pm = PackedModel::from_qmodel(&qm).unwrap();
+    let ck = qm.effective_checkpoint();
+    let vocab = pm.config.vocab;
+    for backend in [
+        Backend::Packed(Box::new(pm)),
+        Backend::Reference(Box::new(ck)),
+    ] {
+        let server = Server::start(backend, ServerConfig::default()).unwrap();
+        let mut bad_token = problems[0].clone();
+        bad_token.prompt[0] = vocab + 3;
+        let mut bad_option = problems[1].clone();
+        bad_option.options[0] = vec![vocab + 1];
+        let mut empty_prompt = problems[2].clone();
+        empty_prompt.prompt.clear();
+        for bad in [bad_token, bad_option, empty_prompt] {
+            let err = server.score(bad).unwrap_err();
+            assert!(
+                matches!(err.downcast_ref::<ServeError>(), Some(ServeError::Invalid(_))),
+                "got: {err:#}"
+            );
+        }
+        // A well-formed problem on the same server still scores.
+        assert!(server.score(problems[3].clone()).is_ok());
+    }
+}
+
+/// The generation twin: out-of-vocab prompts shed as typed `Invalid`
+/// at admission on both engines.
+#[test]
+fn invalid_generate_requests_are_typed_on_both_engines() {
+    let _g = chaos_lock();
+    let (qm, problems) = setup();
+    let pm = PackedModel::from_qmodel(&qm).unwrap();
+    let ck = qm.effective_checkpoint();
+    let vocab = pm.config.vocab;
+    for backend in [
+        Backend::Packed(Box::new(pm)),
+        Backend::Reference(Box::new(ck)),
+    ] {
+        let server = Server::start(backend, ServerConfig::default()).unwrap();
+        for bad in [Vec::new(), vec![vocab], vec![1, 2, vocab + 7]] {
+            let err = server
+                .submit_generate(GenerateRequest {
+                    prompt: bad,
+                    max_tokens: 4,
+                    deadline: None,
+                })
+                .unwrap()
+                .wait()
+                .unwrap_err();
+            assert!(
+                matches!(err.downcast_ref::<ServeError>(), Some(ServeError::Invalid(_))),
+                "got: {err:#}"
+            );
+        }
+        let done = server
+            .submit_generate(GenerateRequest {
+                prompt: problems[0].prompt.clone(),
+                max_tokens: 2,
+                deadline: None,
+            })
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(done.tokens.len(), 2);
+        assert_eq!(server.kv_blocks_in_use(), 0);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Metrics endpoint containment
+// ---------------------------------------------------------------------
+
+/// An injected fault on a `/metrics` scrape answers 500 and the
+/// endpoint keeps serving the next scrape.
+#[test]
+fn metrics_endpoint_survives_injected_scrape_fault() {
+    use std::io::{Read as _, Write as _};
+    let _g = chaos_lock();
+    obs::counter("chaos_itest_probe_total").inc();
+    let srv = splitquant::obs::http::serve("127.0.0.1:0").unwrap();
+    let get = |path: &str| {
+        let mut s = std::net::TcpStream::connect(srv.addr()).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    };
+    failpoint::configure(FaultPlan {
+        seed: 4,
+        faults: vec![fault(sites::METRICS_ACCEPT, FaultKind::Error, 1.0, 1)],
+    });
+    let faulted = get("/metrics");
+    failpoint::clear();
+    assert!(faulted.starts_with("HTTP/1.1 500"), "got: {faulted}");
+    assert!(faulted.contains("injected error"));
+    let healthy = get("/metrics");
+    assert!(healthy.starts_with("HTTP/1.1 200 OK"), "got: {healthy}");
+    assert!(healthy.contains("chaos_itest_probe_total"));
+}
